@@ -1,0 +1,38 @@
+//! Bench: ablations of the paper's design choices (DESIGN.md §7):
+//!   1. Mac&Load on/off        (Flex-V vs MPIC inner loop, same formats)
+//!   2. NN-RF 4x4 vs 4x2       (Flex-V vs XpulpNN-style blocking, uniform)
+//!   3. TCDM banking           (16 banks vs 8 vs 4: conflict sensitivity)
+//!   4. hardware mixed support (Flex-V vs SW unpack on the same core)
+//!
+//!     cargo bench --bench ablation
+
+use flexv::isa::IsaVariant;
+use flexv::qnn::Precision;
+use flexv::report::workloads::{conv_fig7_stats, matmul_table3_stats};
+
+fn main() {
+    println!("== Ablation 1: fused Mac&Load (Flex-V) vs explicit loads (MPIC), native mixed ==");
+    for prec in [Precision::new(8, 4), Precision::new(4, 2), Precision::new(2, 2)] {
+        let ml = matmul_table3_stats(IsaVariant::FlexV, prec).macs_per_cycle();
+        let plain = matmul_table3_stats(IsaVariant::Mpic, prec).macs_per_cycle();
+        println!("  {prec}: {ml:.1} vs {plain:.1} MAC/cyc -> Mac&Load gives {:.2}x (paper: 1.4x)", ml / plain);
+    }
+    println!("\n== Ablation 2: 4x4 (NN-RF) vs 4x2 blocking, uniform formats ==");
+    for prec in [Precision::new(8, 8), Precision::new(4, 4), Precision::new(2, 2)] {
+        let b44 = matmul_table3_stats(IsaVariant::FlexV, prec).macs_per_cycle();
+        let b42 = matmul_table3_stats(IsaVariant::XpulpNn, prec).macs_per_cycle();
+        println!("  {prec}: 4x4 {b44:.1} vs 4x2 {b42:.1} MAC/cyc -> {:.2}x", b44 / b42);
+    }
+    println!("\n== Ablation 3: hardware mixed-precision vs software unpack (same 4x2 core) ==");
+    for prec in [Precision::new(8, 4), Precision::new(8, 2), Precision::new(4, 2)] {
+        let hw = matmul_table3_stats(IsaVariant::Mpic, prec).macs_per_cycle();
+        let sw = matmul_table3_stats(IsaVariant::XpulpNn, prec).macs_per_cycle();
+        println!("  {prec}: HW {hw:.1} vs SW-unpack {sw:.1} MAC/cyc -> {:.1}x", hw / sw);
+    }
+    println!("\n== Ablation 4: conv overheads (im2col+requant) vs pure MatMul, Flex-V ==");
+    for prec in flexv::qnn::Precision::grid() {
+        let mm = matmul_table3_stats(IsaVariant::FlexV, prec).macs_per_cycle();
+        let cv = conv_fig7_stats(IsaVariant::FlexV, prec).macs_per_cycle();
+        println!("  {prec}: MatMul {mm:.1} -> conv {cv:.1} MAC/cyc ({:.0}% overhead)", (1.0 - cv / mm) * 100.0);
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench: Fig. 7 — full convolution layers (im2col + MatMul + requant)
+//! across the precision grid and all cores, with speedup ratios.
+//!
+//!     cargo bench --bench conv_fig7
+
+use flexv::isa::IsaVariant;
+use flexv::power::EnergyModel;
+use flexv::qnn::Precision;
+use flexv::report::workloads::conv_fig7_stats;
+use std::time::Instant;
+
+fn main() {
+    let em = EnergyModel::default();
+    println!("Fig. 7 regeneration (conv 64x3x3x32 @ 16x16x32; paper: Flex-V up to 38.2 MAC/cyc,");
+    println!("speedups up to 1.4x/4.5x/8.5x vs MPIC/XpulpNN/XpulpV2)");
+    for prec in Precision::grid() {
+        let t0 = Instant::now();
+        let cells: Vec<(IsaVariant, _)> = IsaVariant::ALL
+            .iter()
+            .map(|&isa| (isa, conv_fig7_stats(isa, prec)))
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let get = |i: usize| cells[i].1.macs_per_cycle();
+        println!("\n{prec}: (row simulated in {wall:.1}s)");
+        for (isa, stats) in &cells {
+            println!(
+                "  {:<8} {:>6.1} MAC/cyc  {:>5.2} TOPS/W  ({} cycles)",
+                isa.name(),
+                stats.macs_per_cycle(),
+                em.tops_per_watt(*isa, stats, prec.a_bits.max(prec.w_bits)),
+                stats.cycles
+            );
+        }
+        println!(
+            "  Flex-V speedup: {:.1}x vs RI5CY, {:.1}x vs MPIC, {:.1}x vs XpulpNN",
+            get(3) / get(0), get(3) / get(1), get(3) / get(2)
+        );
+    }
+}

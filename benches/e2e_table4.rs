@@ -1,0 +1,35 @@
+//! Bench: Table IV — end-to-end networks through the DORY flow.
+//! Pass --full for 224x224 MobileNet inputs (default 96x96 quick mode).
+//!
+//!     cargo bench --bench e2e_table4 [-- --full]
+
+use flexv::isa::IsaVariant;
+use flexv::models::{mobilenet_v1, resnet20, Profile};
+use flexv::report::workloads::e2e_macs_per_cycle;
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let hw = if full { 224 } else { 96 };
+    println!("Table IV regeneration (MNV1 input {hw}x{hw}; paper Flex-V: 6.0 / 5.8 / 11.2)");
+    let nets = vec![
+        ("MNV1(8b)", mobilenet_v1(Profile::Uniform8, 0.75, hw, 11)),
+        ("MNV1(8b4b)", mobilenet_v1(Profile::Mixed8a4w, 0.75, hw, 11)),
+        ("ResNet20(4b2b)", resnet20(Profile::Mixed4a2w, 12)),
+    ];
+    println!("{:<16} {:>10} {:>10} {:>10} {:>10} {:>9}", "network", "RI5CY", "MPIC", "XpulpNN", "Flex-V", "wall[s]");
+    for (name, net) in &nets {
+        let t0 = Instant::now();
+        let vals: Vec<f64> = IsaVariant::ALL
+            .iter()
+            .map(|&isa| e2e_macs_per_cycle(isa, net))
+            .collect();
+        println!(
+            "{:<16} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>9.1}",
+            name, vals[0], vals[1], vals[2], vals[3],
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!("(paper rows: XpulpV2 5.6/3.2/4.8, XpulpNN 6.0/2.7/4.4, Flex-V 6.0/5.8/11.2,");
+    println!(" STM32H7 0.33/0.30/-; see EXPERIMENTS.md for the deviation discussion)");
+}

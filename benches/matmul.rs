@@ -1,0 +1,36 @@
+//! Bench: Table III — the MatMul kernel grid. Regenerates the paper's
+//! rows (MAC/cycle / TOPS/W per precision × core) and reports simulator
+//! wall-time per cell.
+//!
+//!     cargo bench --bench matmul
+
+use flexv::isa::IsaVariant;
+use flexv::power::EnergyModel;
+use flexv::qnn::Precision;
+use flexv::report::workloads::matmul_table3_stats;
+use std::time::Instant;
+
+fn main() {
+    let em = EnergyModel::default();
+    println!("Table III regeneration (paper values in brackets; Flex-V peak 91.5 / 3.26)");
+    println!("{:<6} {:<8} {:>10} {:>9} {:>12} {:>10}", "prec", "core", "MAC/cyc", "TOPS/W", "sim-cycles", "wall[ms]");
+    let paper_flexv = [(2, 2, 91.5, 3.26), (4, 2, 51.9, 1.87), (4, 4, 50.6, 1.71),
+                       (8, 2, 27.8, 1.01), (8, 4, 27.6, 0.96), (8, 8, 26.9, 0.87)];
+    for prec in Precision::grid() {
+        for isa in IsaVariant::ALL {
+            let t0 = Instant::now();
+            let stats = matmul_table3_stats(isa, prec);
+            let wall = t0.elapsed().as_secs_f64() * 1e3;
+            let eff = em.tops_per_watt(isa, &stats, prec.a_bits.max(prec.w_bits));
+            let paper = paper_flexv
+                .iter()
+                .find(|&&(a, w, _, _)| isa == IsaVariant::FlexV && a == prec.a_bits && w == prec.w_bits)
+                .map(|&(_, _, mc, ef)| format!("  [paper {mc} / {ef}]"))
+                .unwrap_or_default();
+            println!(
+                "{:<6} {:<8} {:>10.1} {:>9.2} {:>12} {:>10.1}{}",
+                prec.to_string(), isa.name(), stats.macs_per_cycle(), eff, stats.cycles, wall, paper
+            );
+        }
+    }
+}

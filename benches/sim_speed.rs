@@ -1,0 +1,28 @@
+//! Bench: simulator throughput (the §Perf L3 metric) — simulated
+//! instructions and cycles per wall-second on the Table III workload.
+//!
+//!     cargo bench --bench sim_speed
+
+use flexv::isa::IsaVariant;
+use flexv::qnn::Precision;
+use flexv::report::workloads::matmul_table3_stats;
+use std::time::Instant;
+
+fn main() {
+    // warmup + measure
+    let mut total_instr = 0u64;
+    let mut total_core_cycles = 0u64;
+    let t0 = Instant::now();
+    let mut reps = 0;
+    while t0.elapsed().as_secs_f64() < 3.0 {
+        let stats = matmul_table3_stats(IsaVariant::FlexV, Precision::new(8, 8));
+        total_instr += stats.total_instrs();
+        total_core_cycles += stats.cycles * stats.cores.len() as u64;
+        reps += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("simulated {reps} Table III a8w8 kernels in {wall:.2}s:");
+    println!("  {:>10.1} M instr/s", total_instr as f64 / wall / 1e6);
+    println!("  {:>10.1} M core-cycles/s", total_core_cycles as f64 / wall / 1e6);
+    println!("  (§Perf target: >= 50 M instr/s so Table IV regenerates in minutes)");
+}

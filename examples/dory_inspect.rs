@@ -1,0 +1,33 @@
+//! Inspect the DORY tiling decisions for MobileNetV1-8b4b: per layer,
+//! the solver's tile shape, L1 working set and DMA traffic.
+//!
+//!     cargo run --release --example dory_inspect
+
+use flexv::dory::deploy::deploy;
+use flexv::dory::MemBudget;
+use flexv::isa::IsaVariant;
+use flexv::models::{mobilenet_v1, Profile};
+
+fn main() {
+    let net = mobilenet_v1(Profile::Mixed8a4w, 0.75, 224, 11);
+    let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+    println!(
+        "{}: {:.0} kB weights, L2 used {:.0} kB",
+        net.name,
+        net.model_bytes() as f64 / 1024.0,
+        dep.l2_used as f64 / 1024.0
+    );
+    println!("{:<10} {:>6} {:>12} {:>14}", "layer", "tiles", "DMA-in [kB]", "DMA-out [kB]");
+    for plan in &dep.plans {
+        let dma_in: u64 = plan.tiles.iter().flat_map(|t| t.loads.iter()).map(|r| r.total_bytes()).sum();
+        let dma_out: u64 =
+            plan.tiles.iter().flat_map(|t| t.stores.iter()).map(|r| r.total_bytes()).sum();
+        println!(
+            "{:<10} {:>6} {:>12.1} {:>14.1}",
+            plan.name,
+            plan.tiles.len(),
+            dma_in as f64 / 1024.0,
+            dma_out as f64 / 1024.0
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! Sweep the paper's precision grid across all four cores — a miniature
+//! Table III + Fig. 7 in one run.
+//!
+//!     cargo run --release --example precision_sweep
+
+use flexv::isa::IsaVariant;
+use flexv::power::EnergyModel;
+use flexv::qnn::Precision;
+use flexv::report::workloads::{conv_fig7_stats, matmul_table3_stats};
+
+fn main() {
+    let em = EnergyModel::default();
+    println!("{:<6} {:>10} {:>22} {:>22}", "", "", "MatMul (Table III)", "conv (Fig. 7)");
+    println!("{:<6} {:>10} {:>11} {:>10} {:>11} {:>10}", "prec", "core", "MAC/cyc", "TOPS/W", "MAC/cyc", "TOPS/W");
+    for prec in Precision::grid() {
+        for isa in IsaVariant::ALL {
+            let mm = matmul_table3_stats(isa, prec);
+            let cv = conv_fig7_stats(isa, prec);
+            let bits = prec.a_bits.max(prec.w_bits);
+            println!(
+                "{:<6} {:>10} {:>11.1} {:>10.2} {:>11.1} {:>10.2}",
+                prec.to_string(),
+                isa.name(),
+                mm.macs_per_cycle(),
+                em.tops_per_watt(isa, &mm, bits),
+                cv.macs_per_cycle(),
+                em.tops_per_watt(isa, &cv, bits),
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,12 @@
+// quick profiling harness: separate setup cost from execution cost
+use flexv::isa::IsaVariant;
+use flexv::qnn::Precision;
+use std::time::Instant;
+fn main() {
+    // setup-only timing
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        let _ = flexv::report::workloads::matmul_table3_stats(IsaVariant::FlexV, Precision::new(8, 8));
+    }
+    println!("full (setup+run) x10: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,30 @@
+//! Quickstart: run one mixed-precision convolution on the simulated
+//! Flex-V cluster and print the paper's metrics.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Builds the Fig. 7 benchmark layer (64 filters of 3x3x32 on a 16x16x32
+//! input) at a8w4, executes it on the 8-core cluster, and reports
+//! MAC/cycle, utilization, and the energy model's TOPS/W.
+
+use flexv::isa::IsaVariant;
+use flexv::power::EnergyModel;
+use flexv::qnn::Precision;
+use flexv::report::workloads::conv_fig7_stats;
+
+fn main() {
+    let isa = IsaVariant::FlexV;
+    let prec = Precision::new(8, 4);
+    println!("running conv 64x3x3x32 @ 16x16x32, {prec} on {isa} (8 cores)...");
+    let stats = conv_fig7_stats(isa, prec);
+    let em = EnergyModel::default();
+    let peak = 8.0 * prec.macs_per_sdotp() as f64; // MACs/cycle at 1 sdotp/cycle/core
+    println!("  cycles:        {}", stats.cycles);
+    println!("  instructions:  {}", stats.total_instrs());
+    println!("  MACs:          {}", stats.total_macs());
+    println!("  MAC/cycle:     {:.1}  (peak {peak:.0}, utilization {:.0}%)",
+        stats.macs_per_cycle(), 100.0 * stats.utilization(peak));
+    println!("  energy eff.:   {:.2} TOPS/W", em.tops_per_watt(isa, &stats, prec.a_bits.max(prec.w_bits)));
+    let conflicts: u64 = stats.cores.iter().map(|c| c.conflict_stalls).sum();
+    println!("  TCDM conflicts: {conflicts} stall cycles across 8 cores");
+}

@@ -1,0 +1,68 @@
+"""AOT lowering: jit'd golden models -> HLO *text* -> artifacts/.
+
+HLO text (NOT `.serialize()`): the image's xla_extension 0.5.1 rejects
+jax>=0.5's 64-bit-instruction-id protos; the text parser reassigns ids
+(see /opt/xla-example/README.md). Each artifact gets a `.meta` sidecar
+(key=value) describing the baked shapes so the Rust validator can
+regenerate identical inputs.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import matmul_entry
+
+# The artifact grid: one MatMul per paper precision configuration, at a
+# shape small enough to compile fast but exercising multiple Pallas tiles.
+GRID = [(2, 2), (4, 2), (4, 4), (8, 2), (8, 4), (8, 8)]
+M, N, K = 16, 16, 64
+SHIFT, OUT_BITS = 8, 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_one(out_dir: str, a_bits: int, w_bits: int) -> str:
+    name = f"mpq_matmul_a{a_bits}w{w_bits}"
+    fn, args = matmul_entry(M, N, K, a_bits, w_bits, SHIFT, OUT_BITS)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    meta_path = os.path.join(out_dir, f"{name}.meta")
+    with open(meta_path, "w") as f:
+        f.write(
+            f"name={name}\nm={M}\nn={N}\nk={K}\n"
+            f"a_bits={a_bits}\nw_bits={w_bits}\n"
+            f"out_bits={OUT_BITS}\nshift={SHIFT}\n"
+        )
+    return hlo_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="also write a marker file")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for a_bits, w_bits in GRID:
+        path = build_one(args.out_dir, a_bits, w_bits)
+        print(f"wrote {path}")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""L1 — Pallas kernel: fine-grain mixed-precision quantized MatMul.
+
+The compute hot-spot of the paper — `out[m][n] = requant(sum_k a[m][k] *
+w[n][k])` with unsigned `a_bits` activations and signed `w_bits` weights
+packed sub-byte into 32-bit words — re-thought for a tiled scratchpad
+target (DESIGN.md §Hardware-Adaptation):
+
+- the paper's Mac&Load + MLC machinery keeps the dotp unit fed from the
+  TCDM scratchpad; here the `BlockSpec` grid expresses the same
+  HBM->VMEM schedule over (pixel-tile x channel-tile) output blocks;
+- the paper's MPC Slicer&Router becomes vectorized shift/mask sub-word
+  extraction of the packed weight words (bit-for-bit the little-endian
+  layout of `rust/src/qnn/packing.rs`);
+- the paper's `mix_skip` weight-reuse is the kernel's inner contraction
+  loop reusing each unpacked weight block across the whole pixel tile.
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; correctness is checked against `ref.py` by pytest and, after
+AOT lowering, against the Rust simulator (three-way, bit-exact).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output tile sizes (output pixels x output channels). VMEM footprint per
+# block = TM*K*4 + TN*ceil(K*w_bits/32)*4 + TM*TN*4 bytes — documented in
+# DESIGN.md §Perf.
+TM = 8
+TN = 8
+
+
+def _unpack_weights(w_words, w_bits, k):
+    """Slicer&Router: unpack `k` signed `w_bits` values from int32 words.
+
+    w_words: (TN, KW) int32, little-endian packed.
+    returns: (TN, k) int32, sign-extended.
+    """
+    lanes = 32 // w_bits
+    kk = jnp.arange(k)
+    word_idx = kk // lanes
+    bit_off = (kk % lanes) * w_bits
+    # gather the word for each k, shift and mask
+    words = w_words[:, word_idx]  # (TN, k)
+    raw = jnp.right_shift(words, bit_off[None, :]) & ((1 << w_bits) - 1)
+    # sign-extend from w_bits
+    sign = 1 << (w_bits - 1)
+    return jnp.where(raw >= sign, raw - (1 << w_bits), raw)
+
+
+def _kernel(a_ref, w_ref, mult_ref, bias_ref, o_ref, *, w_bits, k, shift, out_bits):
+    a = a_ref[...].astype(jnp.int32)  # (TM, K) unpacked activations
+    w = _unpack_weights(w_ref[...], w_bits, k)  # (TN, K) signed
+    acc = jax.lax.dot_general(
+        a,
+        w,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # (TM, TN)
+    # PULP-NN requantization: one MAC, one shift, one clip.
+    acc = acc + bias_ref[...][None, :]
+    scaled = jnp.right_shift(acc * mult_ref[...][None, :], shift)
+    o_ref[...] = jnp.clip(scaled, 0, (1 << out_bits) - 1)
+
+
+@partial(jax.jit, static_argnames=("a_bits", "w_bits", "shift", "out_bits"))
+def mpq_matmul(a, w_words, mult, bias, *, a_bits, w_bits, shift, out_bits):
+    """Mixed-precision quantized MatMul via a Pallas kernel.
+
+    a:        (M, K) int32, unpacked unsigned activations in [0, 2^a_bits)
+    w_words:  (N, KW) int32, packed signed weights (little-endian sub-words)
+    mult:     (N,) int32 per-channel multiplier
+    bias:     (N,) int32 per-channel bias
+    returns:  (M, N) int32 requantized outputs in [0, 2^out_bits)
+    """
+    del a_bits  # activations arrive unpacked; the width bounds their range
+    m, k = a.shape
+    n, kw = w_words.shape
+    assert m % TM == 0 and n % TN == 0, (m, n)
+    grid = (m // TM, n // TN)
+    return pl.pallas_call(
+        partial(_kernel, w_bits=w_bits, k=k, shift=shift, out_bits=out_bits),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((TN, kw), lambda i, j: (j, 0)),
+            pl.BlockSpec((TN,), lambda i, j: (j,)),
+            pl.BlockSpec((TN,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j: (i, j)),
+        interpret=True,
+    )(a, w_words, mult, bias)
+
+
+def pack_weights(w, w_bits):
+    """Pack signed (N, K) weights into little-endian int32 words (N, KW).
+
+    Must agree bit-for-bit with rust/src/qnn/packing.rs.
+    """
+    import numpy as np
+
+    w = np.asarray(w)
+    n, k = w.shape
+    lanes = 32 // w_bits
+    kw = -(-k // lanes)
+    words = np.zeros((n, kw), dtype=np.uint32)
+    mask = (1 << w_bits) - 1
+    for kk in range(k):
+        vals = (w[:, kk].astype(np.int64) & mask).astype(np.uint32)
+        words[:, kk // lanes] |= vals << ((kk % lanes) * w_bits)
+    return jnp.asarray(words.astype(np.int32))

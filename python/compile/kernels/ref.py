@@ -1,0 +1,27 @@
+"""Pure-jnp correctness oracle for the mixed-precision quantized MatMul.
+
+The simplest possible expression of the semantics — no packing, no tiling:
+`out = clip(((a @ w.T) + bias) * mult >> shift, 0, 2^out_bits - 1)`.
+"""
+
+import jax.numpy as jnp
+
+
+def mpq_matmul_ref(a, w, mult, bias, *, shift, out_bits):
+    """Reference mixed-precision quantized MatMul.
+
+    a:    (M, K) int32 unsigned activation values
+    w:    (N, K) int32 signed weight values (unpacked)
+    mult: (N,) int32
+    bias: (N,) int32
+    """
+    acc = a.astype(jnp.int32) @ w.astype(jnp.int32).T  # (M, N)
+    acc = acc + bias[None, :]
+    scaled = jnp.right_shift(acc * mult[None, :], shift)
+    return jnp.clip(scaled, 0, (1 << out_bits) - 1)
+
+
+def requant_ref(acc, mult, bias, *, shift, out_bits):
+    """Scalar requantization used by layer-level references."""
+    scaled = jnp.right_shift((acc + bias) * mult, shift)
+    return jnp.clip(scaled, 0, (1 << out_bits) - 1)

@@ -1,0 +1,85 @@
+"""L2 — JAX model: quantized convolution layers built on the L1 kernel.
+
+Mirrors the PULP-NN three-phase execution model (§II-B of the paper):
+im2col -> MatMul (the Pallas kernel) -> requantization. This is the golden
+compute graph that gets AOT-lowered to HLO text and executed from the Rust
+coordinator via PJRT to cross-validate the simulator's kernels.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mpq_matmul import mpq_matmul, TM, TN
+
+
+def im2col(x, kh, kw, stride, pad):
+    """HWC im2col: (H, W, C) -> (OH*OW, KH*KW*C), zero padding."""
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    rows = []
+    for oy in range(oh):
+        for ox in range(ow):
+            patch = jax.lax.dynamic_slice(
+                xp, (oy * stride, ox * stride, 0), (kh, kw, c)
+            )
+            rows.append(patch.reshape(-1))
+    return jnp.stack(rows)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "pad", "a_bits", "w_bits", "shift", "out_bits"),
+)
+def qconv2d(x, w_words, mult, bias, *, kh, kw, stride, pad, a_bits, w_bits, shift, out_bits):
+    """Quantized conv: x (H, W, C) int32 activations; w_words packed rows
+    (COUT, KW). Returns (OH, OW, COUT) int32."""
+    h, w, _c = x.shape
+    cout = w_words.shape[0]
+    a = im2col(x, kh, kw, stride, pad)  # (M, K)
+    m, _k = a.shape
+    # pad M/N up to the Pallas tile grid
+    m_pad = -(-m // TM) * TM
+    a = jnp.pad(a, ((0, m_pad - m), (0, 0)))
+    n_pad = -(-cout // TN) * TN
+    w_words = jnp.pad(w_words, ((0, n_pad - cout), (0, 0)))
+    mult = jnp.pad(mult, (0, n_pad - cout))
+    bias = jnp.pad(bias, (0, n_pad - cout))
+    out = mpq_matmul(
+        a, w_words, mult, bias, a_bits=a_bits, w_bits=w_bits, shift=shift, out_bits=out_bits
+    )
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    return out[:m, :cout].reshape(oh, ow, cout)
+
+
+def matmul_entry(m, n, k, a_bits, w_bits, shift, out_bits):
+    """Build the jittable (a, w_words, mult, bias) -> (out,) MatMul entry
+    point with static shapes, for AOT lowering. Returns (fn, example_args)."""
+    lanes = 32 // w_bits
+    kw = -(-k // lanes)
+
+    def fn(a, w_words, mult, bias):
+        return (
+            mpq_matmul(
+                a,
+                w_words,
+                mult,
+                bias,
+                a_bits=a_bits,
+                w_bits=w_bits,
+                shift=shift,
+                out_bits=out_bits,
+            ),
+        )
+
+    args = (
+        jax.ShapeDtypeStruct((m, k), jnp.int32),
+        jax.ShapeDtypeStruct((n, kw), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    return fn, args

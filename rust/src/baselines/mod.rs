@@ -1,0 +1,34 @@
+//! Reference cost models for the non-PULP comparison points of the
+//! evaluation (Table IV).
+//!
+//! The STM32H7 row reproduces Capotondi et al.'s CMix-NN results [12]:
+//! a Cortex-M7 at 480 MHz running mixed-precision CNN kernels with
+//! software packing/unpacking. We model it as published per-network
+//! MAC/cycle constants — re-simulating a Cortex-M7 pipeline would add
+//! nothing to the comparison, since the paper itself cites these numbers.
+
+/// STM32H7 (CMix-NN) end-to-end MAC/cycle for a MobileNetV1 profile.
+/// Returns `None` where the paper reports none (ResNet-20 was not run).
+pub fn stm32h7_macs_per_cycle(profile: crate::models::Profile) -> Option<f64> {
+    match profile {
+        crate::models::Profile::Uniform8 => Some(0.33),
+        crate::models::Profile::Mixed8a4w => Some(0.30),
+        crate::models::Profile::Mixed4a2w => None,
+    }
+}
+
+/// STM32H7 clock [MHz].
+pub const STM32H7_MHZ: f64 = 480.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Profile;
+
+    #[test]
+    fn table4_constants() {
+        assert_eq!(stm32h7_macs_per_cycle(Profile::Uniform8), Some(0.33));
+        assert_eq!(stm32h7_macs_per_cycle(Profile::Mixed8a4w), Some(0.30));
+        assert_eq!(stm32h7_macs_per_cycle(Profile::Mixed4a2w), None);
+    }
+}

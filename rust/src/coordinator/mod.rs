@@ -1,0 +1,387 @@
+//! The end-to-end inference coordinator.
+//!
+//! Executes a [`Deployment`] on the simulated cluster: preloads weights
+//! into L2, then replays every layer's tile sequence with DORY's
+//! double-buffering discipline — while the cores compute tile *i*, the DMA
+//! streams tile *i+1*'s inputs in and tile *i−1*'s outputs out (§IV: "the
+//! calls to the kernels are always overlapped with the asynchronous DMA
+//! calls"). Per-layer cycle/energy metrics are collected for Table IV.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+use crate::dory::deploy::Deployment;
+use crate::dory::{KernelCall, LayerPlan, TileExec};
+use crate::isa::{IsaVariant, Program};
+use crate::kernels::conv::gen_conv;
+use crate::kernels::layers::{gen_add, gen_avgpool, gen_dwconv, gen_linear, gen_maxpool};
+use crate::qnn::QTensor;
+use crate::sim::{Cluster, ClusterStats};
+
+/// Per-layer execution metrics.
+#[derive(Clone, Debug)]
+pub struct LayerMetrics {
+    pub name: String,
+    pub macs: u64,
+    pub stats: ClusterStats,
+    pub dotp_bits: u8,
+}
+
+impl LayerMetrics {
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.stats.cycles == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.stats.cycles as f64
+        }
+    }
+}
+
+/// Result of one end-to-end inference.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub layers: Vec<LayerMetrics>,
+    /// Raw packed bytes of the final node's output tensor.
+    pub output: Vec<u8>,
+    /// All node outputs (for layer-by-layer validation).
+    pub node_outputs: Vec<Vec<u8>>,
+}
+
+impl RunResult {
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.stats.cycles).sum()
+    }
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+    /// The paper's Table IV metric.
+    pub fn macs_per_cycle(&self) -> f64 {
+        self.total_macs() as f64 / self.total_cycles().max(1) as f64
+    }
+}
+
+/// Generate the per-core programs of one kernel call.
+pub fn programs_for(isa: IsaVariant, call: &KernelCall, n_cores: usize) -> Vec<Program> {
+    match call {
+        KernelCall::Conv(t) => (0..n_cores).map(|c| gen_conv(isa, t, c, n_cores)).collect(),
+        KernelCall::Dw(t) => (0..n_cores).map(|c| gen_dwconv(isa, t, c, n_cores)).collect(),
+        KernelCall::Linear { prec, cin, cout, in_base, w_base, w_pitch, out_base, quant } => {
+            (0..n_cores)
+                .map(|c| {
+                    gen_linear(
+                        isa, *prec, *cin, *cout, *in_base, *w_base, *w_pitch, *out_base,
+                        *quant, c, n_cores,
+                    )
+                })
+                .collect()
+        }
+        KernelCall::Add(t) => (0..n_cores).map(|c| gen_add(t, c, n_cores)).collect(),
+        KernelCall::AvgPool(t) => (0..n_cores).map(|c| gen_avgpool(t, c, n_cores)).collect(),
+        KernelCall::MaxPool(t) => (0..n_cores).map(|c| gen_maxpool(t, c, n_cores)).collect(),
+    }
+}
+
+/// The coordinator owns the cluster and drives deployments end-to-end.
+pub struct Coordinator {
+    pub cluster: Cluster,
+    /// Cross-layer memo for timing-only mode (ResNet's repeated blocks
+    /// share tile structures across layers).
+    memo: HashMap<u64, TileCost>,
+    /// Enable tile memoization: structurally identical tiles within a
+    /// layer are simulated once and their (data-independent) timing is
+    /// replayed (DESIGN.md §7). Functional outputs are still produced for
+    /// every tile.
+    pub memoize_tiles: bool,
+}
+
+impl Coordinator {
+    pub fn new(n_cores: usize) -> Self {
+        Coordinator { cluster: Cluster::new(n_cores), memo: HashMap::new(), memoize_tiles: false }
+    }
+
+    /// Run one inference. `input` must match the deployed network's input
+    /// shape/bits.
+    pub fn run(&mut self, dep: &Deployment, input: &QTensor) -> RunResult {
+        // Deployment-time preloads (weights, quant): not timed — they model
+        // the flash/L3 image already resident in L2.
+        for (addr, bytes) in &dep.preload {
+            self.cluster.mem.write_bytes(*addr, bytes);
+        }
+        self.cluster.mem.write_bytes(dep.input_addr, &input.data);
+
+        let n_cores = self.cluster.cores.len();
+        let mut layers = vec![];
+        for plan in &dep.plans {
+            let stats = self.run_layer(dep.isa, plan, n_cores);
+            layers.push(LayerMetrics {
+                name: plan.name.clone(),
+                macs: plan.macs,
+                stats,
+                dotp_bits: plan.dotp_bits,
+            });
+        }
+        let node_outputs: Vec<Vec<u8>> = dep
+            .node_out
+            .iter()
+            .enumerate()
+            .map(|(i, &addr)| {
+                let bytes = dep_plan_out_bytes(dep, i);
+                self.cluster.mem.read_bytes(addr, bytes)
+            })
+            .collect();
+        RunResult {
+            output: node_outputs.last().cloned().unwrap_or_default(),
+            node_outputs,
+            layers,
+        }
+    }
+
+    /// Execute one layer's tiles with double buffering; returns the
+    /// layer's cycle window.
+    fn run_layer(&mut self, isa: IsaVariant, plan: &LayerPlan, n_cores: usize) -> ClusterStats {
+        if self.memoize_tiles {
+            return self.run_layer_memoized(isa, plan, n_cores);
+        }
+        let mut total = ClusterStats::default();
+        let tiles = &plan.tiles;
+        if tiles.is_empty() {
+            return total;
+        }
+        // Prologue: stream tile 0's inputs.
+        for req in &tiles[0].loads {
+            self.cluster.dma.push(*req);
+        }
+        total.extend_serial(&self.cluster.run());
+        for i in 0..tiles.len() {
+            // Launch kernel i; prefetch tile i+1 while it runs.
+            let progs = programs_for(isa, &tiles[i].kernel, n_cores);
+            self.cluster.load_programs(progs);
+            if i + 1 < tiles.len() {
+                for req in &tiles[i + 1].loads {
+                    self.cluster.dma.push(*req);
+                }
+            }
+            let w = self.cluster.run();
+            total.extend_serial(&w);
+            // Stream out tile i's results (overlaps with kernel i+1).
+            for req in &tiles[i].stores {
+                self.cluster.dma.push(*req);
+            }
+        }
+        // Drain the last stores.
+        total.extend_serial(&self.cluster.run());
+        total
+    }
+}
+
+impl Coordinator {
+    /// Timing-only layer execution with **tile memoization** (DESIGN.md
+    /// §7): structurally identical tiles (same per-core instruction
+    /// streams, same DMA descriptors modulo the double-buffer parity that
+    /// the key includes via the L1 addresses) have identical,
+    /// data-independent cycle counts — kernels contain no data-dependent
+    /// control flow. Each distinct structure is simulated cycle-accurately
+    /// once; repeats replay its timing. The layer window is reconstructed
+    /// with DORY's double-buffer pipeline model:
+    ///
+    /// `cycles = load_0 + Σ_i max(kernel_i, load_{i+1} + store_{i-1}) + store_last`
+    ///
+    /// NOTE: repeated tiles are *not* functionally executed, so node
+    /// outputs are only valid for the measured representatives — use
+    /// `memoize_tiles = false` for numerical validation. The equivalence
+    /// of the reconstructed timing is asserted (<3%) by
+    /// `memoized_timing_matches_full` below.
+    fn run_layer_memoized(
+        &mut self,
+        isa: IsaVariant,
+        plan: &LayerPlan,
+        n_cores: usize,
+    ) -> ClusterStats {
+        let mut costs: Vec<TileCost> = Vec::with_capacity(plan.tiles.len());
+        for tile in &plan.tiles {
+            let key = tile_key(isa, tile, n_cores);
+            let cost = if let Some(c) = self.memo.get(&key) {
+                c.clone()
+            } else {
+                let progs = programs_for(isa, &tile.kernel, n_cores);
+                // Measure this structure in isolation (serial phases so the
+                // windows are attributable), with real functional effects.
+                for req in &tile.loads {
+                    self.cluster.dma.push(*req);
+                }
+                let ld = self.cluster.run();
+                self.cluster.load_programs(progs);
+                let ks = self.cluster.run();
+                for req in &tile.stores {
+                    self.cluster.dma.push(*req);
+                }
+                let st = self.cluster.run();
+                let c = TileCost {
+                    kernel: ks,
+                    load_cycles: ld.cycles,
+                    store_cycles: st.cycles,
+                };
+                self.memo.insert(key, c.clone());
+                c
+            };
+            costs.push(cost);
+        }
+        // Pipeline reconstruction.
+        let mut total = ClusterStats::default();
+        let n = costs.len();
+        for (i, c) in costs.iter().enumerate() {
+            let incoming = if i + 1 < n { costs[i + 1].load_cycles } else { 0 };
+            let outgoing = if i > 0 { costs[i - 1].store_cycles } else { 0 };
+            let window = c.kernel.cycles.max(incoming + outgoing);
+            total.cycles += window;
+            if total.cores.len() < c.kernel.cores.len() {
+                total.cores.resize(c.kernel.cores.len(), Default::default());
+            }
+            for (a, b) in total.cores.iter_mut().zip(&c.kernel.cores) {
+                a.add(b);
+            }
+            total.dma_busy_cycles += c.kernel.dma_busy_cycles;
+        }
+        if let Some(first) = costs.first() {
+            total.cycles += first.load_cycles;
+        }
+        if let Some(last) = costs.last() {
+            total.cycles += last.store_cycles;
+        }
+        total
+    }
+}
+
+/// Memoized per-tile timing (see `run_layer_memoized`).
+#[derive(Clone)]
+struct TileCost {
+    kernel: ClusterStats,
+    load_cycles: u64,
+    store_cycles: u64,
+}
+
+/// Structural key of a tile: the kernel-launch descriptor (program
+/// generation is a pure function of it, the ISA, and the core count) plus
+/// the DMA descriptors. L1 addresses are part of the descriptor, so the
+/// double-buffer parity — which shifts bank-conflict patterns — is
+/// captured.
+fn tile_key(isa: IsaVariant, tile: &TileExec, n_cores: usize) -> u64 {
+    let mut h = DefaultHasher::new();
+    (isa as u8).hash(&mut h);
+    n_cores.hash(&mut h);
+    tile.kernel.hash(&mut h);
+    // DMA timing depends on sizes, the TCDM-side layout (bank patterns)
+    // and strides — NOT on the L2-side address, which differs per tile
+    // without affecting a single cycle.
+    for r in tile.loads.iter().chain(tile.stores.iter()) {
+        (r.dir, r.loc, r.row_bytes, r.rows, r.loc_stride).hash(&mut h);
+    }
+    h.finish()
+}
+
+/// Output byte size of node `i` in a deployment (from the plan's stores).
+fn dep_plan_out_bytes(dep: &Deployment, node: usize) -> usize {
+    dep.plans
+        .iter()
+        .filter(|p| p.node == node)
+        .flat_map(|p| p.tiles.iter())
+        .flat_map(|t| t.stores.iter())
+        .map(|s| s.total_bytes() as usize)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dory::deploy::deploy;
+    use crate::dory::MemBudget;
+    use crate::models::Profile;
+    use crate::qnn::golden;
+    use crate::qnn::layer::{Layer, Network};
+    use crate::util::Prng;
+
+    /// A small two-conv network runs end-to-end and matches golden.
+    #[test]
+    fn small_chain_bit_exact_all_isas() {
+        let mut rng = Prng::new(77);
+        let mut net = Network::new("tiny", [10, 10, 8], 8);
+        net.push(Layer::conv("c1", [10, 10, 8], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        net.push(Layer::conv("c2", [10, 10, 16], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+        net.validate().unwrap();
+        let input = QTensor::random(&[10, 10, 8], 8, false, &mut rng);
+        let golden_outs = golden::run_network(&net, &input);
+
+        for isa in IsaVariant::ALL {
+            let dep = deploy(&net, isa, MemBudget::default());
+            let mut coord = Coordinator::new(4);
+            let res = coord.run(&dep, &input);
+            assert_eq!(
+                res.output,
+                golden_outs.last().unwrap().data,
+                "{isa:?} output mismatch"
+            );
+            assert!(res.total_cycles() > 0);
+            assert!(res.macs_per_cycle() > 0.1, "{isa:?} {}", res.macs_per_cycle());
+        }
+    }
+
+    /// A layer big enough to force row tiling still matches golden.
+    #[test]
+    fn tiled_layer_bit_exact() {
+        let mut rng = Prng::new(78);
+        let mut net = Network::new("tiled", [24, 24, 32], 8);
+        net.push(Layer::conv("big", [24, 24, 32], 32, 3, 3, 1, 1, 8, 8, 8, &mut rng));
+        // shrink L1 to force tiling
+        let budget = MemBudget { l1: 40 * 1024, l2: crate::L2_BYTES };
+        let dep = deploy(&net, IsaVariant::FlexV, budget);
+        assert!(
+            dep.plans[0].tiles.len() > 1,
+            "expected multiple tiles, got {}",
+            dep.plans[0].tiles.len()
+        );
+        let input = QTensor::random(&[24, 24, 32], 8, false, &mut rng);
+        let golden_outs = golden::run_network(&net, &input);
+        let mut coord = Coordinator::new(8);
+        let res = coord.run(&dep, &input);
+        assert_eq!(res.output, golden_outs.last().unwrap().data);
+    }
+
+    /// Memoized (timing-only) execution reproduces the full simulation's
+    /// cycle count within 3% (the pipeline-reconstruction error bound).
+    #[test]
+    fn memoized_timing_matches_full() {
+        let net = crate::models::resnet20(Profile::Mixed4a2w, 5);
+        let mut rng = Prng::new(80);
+        let input = QTensor::random(&[32, 32, 4], 8, false, &mut rng);
+        let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+        let mut full = Coordinator::new(8);
+        let rf = full.run(&dep, &input);
+        let mut memo = Coordinator::new(8);
+        memo.memoize_tiles = true;
+        let rm = memo.run(&dep, &input);
+        let (a, b) = (rf.total_cycles() as f64, rm.total_cycles() as f64);
+        let err = (a - b).abs() / a;
+        assert!(err < 0.03, "memoized {b} vs full {a}: {:.1}% error", err * 100.0);
+        // MAC counters must agree exactly (same per-tile stats replayed)
+        assert_eq!(rf.total_macs(), rm.total_macs());
+    }
+
+    /// ResNet-20 4b2b end-to-end on Flex-V matches the golden executor
+    /// (residual adds, mixed per-layer precisions, pooling, classifier).
+    #[test]
+    fn resnet20_e2e_bit_exact_flexv() {
+        let net = crate::models::resnet20(Profile::Mixed4a2w, 5);
+        let mut rng = Prng::new(79);
+        let input = QTensor::random(&[32, 32, 4], 8, false, &mut rng);
+        let golden_outs = golden::run_network(&net, &input);
+        let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+        let mut coord = Coordinator::new(8);
+        let res = coord.run(&dep, &input);
+        assert_eq!(res.output, golden_outs.last().unwrap().data, "ResNet20 output");
+        // every intermediate too
+        for (i, g) in golden_outs.iter().enumerate() {
+            assert_eq!(res.node_outputs[i], g.data, "node {i} ({})", net.nodes[i].layer.name);
+        }
+    }
+}

@@ -1,0 +1,610 @@
+//! Network → execution plan: the DORY code-generation step (§IV).
+//!
+//! Lays out weights and activations in L2, solves per-layer tiling, and
+//! produces the double-buffered [`TileExec`] sequences the coordinator
+//! replays on the simulated cluster. This is the analog of DORY's
+//! template-based C generation: instead of C files, we generate DMA
+//! descriptors plus kernel-launch records whose programs are emitted by
+//! [`crate::kernels`] at execution time.
+
+use super::tiler::{buf_bits, solve_conv_tiling, solve_dw_tiling};
+use super::{conv_tiles, l1_layout, load, store, KernelCall, LayerPlan, MemBudget, TileExec};
+use crate::isa::IsaVariant;
+use crate::kernels::conv::ConvTask;
+use crate::kernels::im2col::ConvGeom;
+use crate::kernels::layers::{AddTask, AvgPoolTask, DwConvTask, MaxPoolTask};
+use crate::kernels::requant::RequantCfg;
+use crate::qnn::layer::{Layer, LayerKind, Network, NET_INPUT};
+use crate::qnn::{Precision, QTensor};
+use crate::sim::dma::{DmaDir, DmaRequest};
+use crate::sim::L2_BASE;
+
+/// A deployed network: everything the coordinator needs.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub isa: IsaVariant,
+    pub plans: Vec<LayerPlan>,
+    /// (L2 address, bytes) preloads: serialized weights + quant params.
+    pub preload: Vec<(u32, Vec<u8>)>,
+    /// L2 address of the network input tensor.
+    pub input_addr: u32,
+    /// L2 address of every node's output tensor.
+    pub node_out: Vec<u32>,
+    /// Total L2 bytes used.
+    pub l2_used: usize,
+}
+
+/// Serialize conv weights `[cout, kh, kw, cin]` into padded GEMM rows.
+/// Returns (bytes, w_pitch).
+pub fn serialize_conv_weights(w: &QTensor, e_bits: u8) -> (Vec<u8>, u32) {
+    let cout = w.shape[0];
+    let k: usize = w.shape[1..].iter().product();
+    let w_bits = w.bits;
+    let pitch = w_row_pitch(k, e_bits, w_bits);
+    let mut out = vec![0u8; cout * pitch as usize];
+    for f in 0..cout {
+        let row: Vec<i32> = (0..k).map(|i| w.get_i(f * k + i)).collect();
+        let packed = crate::qnn::packing::pack_signed(&row, w_bits);
+        out[f * pitch as usize..f * pitch as usize + packed.len()].copy_from_slice(&packed);
+    }
+    (out, pitch)
+}
+
+/// Weight row pitch for contraction length `k` at kernel effective width
+/// `e_bits` (see the kernel generators: the inner loop reads one packed
+/// word per `e/w` chunks).
+pub fn w_row_pitch(k: usize, e_bits: u8, w_bits: u8) -> u32 {
+    let chunks = k.div_ceil(32 / e_bits as usize);
+    let u = (e_bits.max(w_bits) / w_bits) as usize;
+    (chunks.div_ceil(u) * 4) as u32
+}
+
+/// Serialize depthwise weights `[C, kh, kw, 1]` into deployment order
+/// `[kh, kw, C]` (tap-major, channels contiguous).
+pub fn serialize_dw_weights(w: &QTensor) -> Vec<u8> {
+    let (c, kh, kw) = (w.shape[0], w.shape[1], w.shape[2]);
+    let mut vals = vec![0i32; c * kh * kw];
+    for ch in 0..c {
+        for ky in 0..kh {
+            for kx in 0..kw {
+                vals[(ky * kw + kx) * c + ch] = w.get_i(w.flat(&[ch, ky, kx, 0]));
+            }
+        }
+    }
+    crate::qnn::packing::pack_signed(&vals, w.bits)
+}
+
+/// Serialize the quant arrays (mult then bias, i32 little-endian).
+pub fn serialize_quant(l: &Layer) -> Vec<u8> {
+    let mut out = Vec::with_capacity(l.quant.bytes());
+    for m in &l.quant.mult {
+        out.extend_from_slice(&m.to_le_bytes());
+    }
+    for b in &l.quant.bias {
+        out.extend_from_slice(&b.to_le_bytes());
+    }
+    out
+}
+
+struct L2Alloc {
+    cur: u32,
+    limit: u32,
+}
+
+impl L2Alloc {
+    fn new(budget: &MemBudget) -> Self {
+        L2Alloc { cur: L2_BASE, limit: L2_BASE + budget.l2 as u32 }
+    }
+    fn alloc(&mut self, bytes: usize) -> u32 {
+        let at = self.cur;
+        self.cur = (self.cur + bytes as u32).next_multiple_of(8);
+        assert!(self.cur <= self.limit, "L2 exhausted ({} B)", self.cur - L2_BASE);
+        at
+    }
+}
+
+/// Deploy a network for `isa`.
+pub fn deploy(net: &Network, isa: IsaVariant, budget: MemBudget) -> Deployment {
+    net.validate().expect("invalid network");
+    let mut l2 = L2Alloc::new(&budget);
+    let mut preload = vec![];
+    // Activations: input + one region per node output.
+    let in_bytes = {
+        let [h, w, c] = net.input_shape;
+        h * w * c * net.input_bits as usize / 8
+    };
+    let input_addr = l2.alloc(in_bytes);
+    let node_out: Vec<u32> = net
+        .nodes
+        .iter()
+        .map(|n| l2.alloc(n.layer.out_bytes()))
+        .collect();
+    let src_addr = |src: usize| if src == NET_INPUT { input_addr } else { node_out[src] };
+
+    let mut plans = vec![];
+    for (id, node) in net.nodes.iter().enumerate() {
+        let l = &node.layer;
+        let in_l2 = src_addr(node.inputs[0]);
+        let out_l2 = node_out[id];
+        let plan = match &l.kind {
+            LayerKind::Conv2d { kh, kw, stride, pad } => plan_conv(
+                isa, &budget, &mut l2, &mut preload, l, id, in_l2, out_l2, *kh, *kw, *stride, *pad,
+            ),
+            LayerKind::DwConv2d { kh, kw, stride, pad } => plan_dw(
+                &budget, &mut l2, &mut preload, l, id, in_l2, out_l2, *kh, *kw, *stride, *pad,
+            ),
+            LayerKind::Linear => {
+                plan_linear(isa, &budget, &mut l2, &mut preload, l, id, in_l2, out_l2)
+            }
+            LayerKind::MaxPool { k, stride } => plan_maxpool(&budget, l, id, in_l2, out_l2, *k, *stride),
+            LayerKind::AvgPool { k, stride } => plan_avgpool(
+                &budget, &mut l2, &mut preload, l, id, in_l2, out_l2, *k, *stride,
+            ),
+            LayerKind::Add { m1, m2 } => {
+                let in2_l2 = src_addr(node.inputs[1]);
+                plan_add(&budget, l, id, in_l2, in2_l2, out_l2, *m1, *m2)
+            }
+        };
+        plans.push(plan);
+    }
+    Deployment {
+        isa,
+        plans,
+        preload,
+        input_addr,
+        node_out,
+        l2_used: (l2.cur - L2_BASE) as usize,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plan_conv(
+    isa: IsaVariant,
+    budget: &MemBudget,
+    l2: &mut L2Alloc,
+    preload: &mut Vec<(u32, Vec<u8>)>,
+    l: &Layer,
+    id: usize,
+    in_l2: u32,
+    out_l2: u32,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> LayerPlan {
+    let [h, w, cin] = l.in_shape;
+    let cout = l.out_shape[2];
+    let geom = ConvGeom::square(h, w, cin, cout, kh, kw, stride, pad, l.a_bits);
+    let e_bits = buf_bits(&geom, isa);
+    let (wbytes, w_pitch) = serialize_conv_weights(l.weights.as_ref().unwrap(), e_bits);
+    let w_l2 = l2.alloc(wbytes.len());
+    preload.push((w_l2, wbytes));
+    let qbytes = serialize_quant(l);
+    let q_l2 = l2.alloc(qbytes.len());
+    preload.push((q_l2, qbytes));
+    let bias_l2 = q_l2 + 4 * cout as u32;
+
+    let out_bits = l.quant.out_bits;
+    let shape = solve_conv_tiling(&geom, isa, w_pitch as usize, out_bits, budget.l1)
+        .unwrap_or_else(|| panic!("layer {} does not tile into L1", l.name));
+    let tiles = conv_tiles(geom.out_h(), cout, shape, h, kh, stride, pad);
+    // L1 layout sized for the worst tile.
+    let tb = super::tiler::conv_tile_bytes(&geom, w_pitch as usize, out_bits, shape);
+    let scratch = crate::kernels::conv::scratch_bytes(
+        &ConvTask {
+            geom,
+            prec: Precision::new(l.a_bits, l.w_bits),
+            in_base: 0,
+            w_base: 0,
+            w_pitch,
+            out_base: 0,
+            scratch_base: 0,
+            quant: RequantCfg { mult_base: 0, bias_base: 0, shift: l.quant.shift, out_bits },
+        },
+        isa,
+        crate::CLUSTER_CORES,
+    );
+    let lay = l1_layout(
+        tb.input,
+        tb.weights + tb.quant,
+        tb.output,
+        0,
+        scratch,
+        budget.l1,
+    );
+
+    let in_row_bytes = (w * cin * l.a_bits as usize) / 8;
+    let out_px_bytes = (cout * out_bits as usize) / 8;
+    let mut execs = vec![];
+    for (i, t) in tiles.iter().enumerate() {
+        let b = i % 2;
+        let mut loads = vec![
+            // input strip (contiguous rows in HWC)
+            load(in_l2 + (t.in_r0 * in_row_bytes) as u32, lay.in_buf[b], t.in_rows * in_row_bytes),
+            // weight rows + quant slices into the weight buffer
+            load(w_l2 + t.c0 as u32 * w_pitch, lay.w_buf[b], t.chs * w_pitch as usize),
+        ];
+        let mult_l1 = lay.w_buf[b] + (t.chs as u32) * w_pitch;
+        let bias_l1 = mult_l1 + 4 * t.chs as u32;
+        loads.push(load(q_l2 + 4 * t.c0 as u32, mult_l1, 4 * t.chs));
+        loads.push(load(bias_l2 + 4 * t.c0 as u32, bias_l1, 4 * t.chs));
+
+        let tile_geom = ConvGeom {
+            h: t.in_rows,
+            w,
+            cin,
+            cout: t.chs,
+            kh,
+            kw,
+            stride,
+            pad_t: t.pad_t,
+            pad_b: t.pad_b,
+            pad_l: pad,
+            pad_r: pad,
+            a_bits: l.a_bits,
+        };
+        debug_assert_eq!(tile_geom.out_h(), t.rows, "{}: tile {t:?}", l.name);
+        let task = ConvTask {
+            geom: tile_geom,
+            prec: Precision::new(l.a_bits, l.w_bits),
+            in_base: lay.in_buf[b],
+            w_base: lay.w_buf[b],
+            w_pitch,
+            out_base: lay.out_buf[b],
+            scratch_base: lay.scratch,
+            quant: RequantCfg {
+                mult_base: mult_l1,
+                bias_base: bias_l1,
+                shift: l.quant.shift,
+                out_bits,
+            },
+        };
+        let ow = geom.out_w();
+        let tile_out_bytes = t.rows * ow * t.chs * out_bits as usize / 8;
+        let stores = if t.chs == cout {
+            vec![store(lay.out_buf[b], out_l2 + (t.r0 * ow * out_px_bytes) as u32, tile_out_bytes)]
+        } else {
+            // channel-sliced store: one row per output pixel
+            vec![DmaRequest {
+                dir: DmaDir::TcdmToL2,
+                ext: out_l2
+                    + (t.r0 * ow * out_px_bytes) as u32
+                    + (t.c0 * out_bits as usize / 8) as u32,
+                loc: lay.out_buf[b],
+                row_bytes: (t.chs * out_bits as usize / 8) as u32,
+                rows: (t.rows * ow) as u32,
+                ext_stride: out_px_bytes as u32,
+                loc_stride: (t.chs * out_bits as usize / 8) as u32,
+            }]
+        };
+        execs.push(TileExec { loads, kernel: KernelCall::Conv(task), stores });
+    }
+    LayerPlan {
+        name: l.name.clone(),
+        node: id,
+        tiles: execs,
+        macs: l.macs(),
+        dotp_bits: l.a_bits.max(l.w_bits),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plan_dw(
+    budget: &MemBudget,
+    l2: &mut L2Alloc,
+    preload: &mut Vec<(u32, Vec<u8>)>,
+    l: &Layer,
+    id: usize,
+    in_l2: u32,
+    out_l2: u32,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> LayerPlan {
+    let [h, w, c] = l.in_shape;
+    let out_bits = l.quant.out_bits;
+    let wbytes = serialize_dw_weights(l.weights.as_ref().unwrap());
+    let w_l2 = l2.alloc(wbytes.len());
+    let w_len = wbytes.len();
+    preload.push((w_l2, wbytes));
+    let qbytes = serialize_quant(l);
+    let q_l2 = l2.alloc(qbytes.len());
+    preload.push((q_l2, qbytes));
+
+    let oh = l.out_shape[0];
+    let rows =
+        solve_dw_tiling(h, w, c, kh, stride, l.a_bits, l.w_bits, out_bits, oh, budget.l1)
+            .unwrap_or_else(|| panic!("dw layer {} does not tile", l.name));
+    let tiles = conv_tiles(oh, c, super::TileShape { rows, chs: c }, h, kh, stride, pad);
+    let in_rows_max = (rows - 1) * stride + kh;
+    let in_row_bytes = w * c * l.a_bits as usize / 8;
+    let out_row_bytes = l.out_shape[1] * c * out_bits as usize / 8;
+    let lay = l1_layout(
+        in_rows_max * in_row_bytes,
+        w_len + l.quant.bytes(),
+        rows * out_row_bytes,
+        0,
+        0,
+        budget.l1,
+    );
+    let mult_l1 = lay.w_buf[0] + w_len as u32;
+    let bias_l1 = mult_l1 + 4 * c as u32;
+    let mut execs = vec![];
+    for (i, t) in tiles.iter().enumerate() {
+        let b = i % 2;
+        let mut loads =
+            vec![load(in_l2 + (t.in_r0 * in_row_bytes) as u32, lay.in_buf[b], t.in_rows * in_row_bytes)];
+        if i == 0 {
+            // weights + quant are layer-constant: loaded once, buffer 0
+            loads.push(load(w_l2, lay.w_buf[0], w_len));
+            loads.push(load(q_l2, mult_l1, 4 * c));
+            loads.push(load(q_l2 + 4 * c as u32, bias_l1, 4 * c));
+        }
+        let task = DwConvTask {
+            h: t.in_rows,
+            w,
+            c,
+            kh,
+            kw,
+            stride,
+            pad_t: t.pad_t,
+            pad_b: t.pad_b,
+            pad_l: pad,
+            pad_r: pad,
+            w_bits: l.w_bits,
+            in_base: lay.in_buf[b],
+            w_base: lay.w_buf[0],
+            out_base: lay.out_buf[b],
+            quant: RequantCfg { mult_base: mult_l1, bias_base: bias_l1, shift: l.quant.shift, out_bits },
+        };
+        debug_assert_eq!(task.out_h(), t.rows);
+        let stores = vec![store(
+            lay.out_buf[b],
+            out_l2 + (t.r0 * out_row_bytes) as u32,
+            t.rows * out_row_bytes,
+        )];
+        execs.push(TileExec { loads, kernel: KernelCall::Dw(task), stores });
+    }
+    LayerPlan {
+        name: l.name.clone(),
+        node: id,
+        tiles: execs,
+        macs: l.macs(),
+        dotp_bits: l.a_bits.max(l.w_bits),
+    }
+}
+
+fn plan_linear(
+    isa: IsaVariant,
+    budget: &MemBudget,
+    l2: &mut L2Alloc,
+    preload: &mut Vec<(u32, Vec<u8>)>,
+    l: &Layer,
+    id: usize,
+    in_l2: u32,
+    out_l2: u32,
+) -> LayerPlan {
+    let cin: usize = l.in_shape.iter().product();
+    let cout = l.out_shape[2];
+    let prec = Precision::new(l.a_bits, l.w_bits);
+    let geom_e = if isa.native_fmts().contains(&crate::isa::SimdFmt::from_bits(l.a_bits)) {
+        l.a_bits
+    } else {
+        8
+    };
+    let (wbytes, w_pitch) = serialize_conv_weights(l.weights.as_ref().unwrap(), geom_e);
+    let w_l2 = l2.alloc(wbytes.len());
+    preload.push((w_l2, wbytes));
+    let qbytes = serialize_quant(l);
+    let q_l2 = l2.alloc(qbytes.len());
+    preload.push((q_l2, qbytes));
+    let out_bits = l.quant.out_bits;
+
+    let in_bytes = cin * l.a_bits as usize / 8;
+    // channel tile: as many output channels as fit (weights dominate)
+    let mut chs = cout;
+    while chs > 4 {
+        let need =
+            2 * (chs * w_pitch as usize + chs * 8 + chs * out_bits as usize / 8 + in_bytes) + 64;
+        if need <= budget.l1 && chs * out_bits as usize % 8 == 0 {
+            break;
+        }
+        chs -= 4;
+    }
+    let lay = l1_layout(
+        in_bytes,
+        chs * w_pitch as usize + chs * 8,
+        chs * out_bits as usize / 8,
+        0,
+        0,
+        budget.l1,
+    );
+    let mut execs = vec![];
+    let mut c0 = 0;
+    let mut i = 0;
+    while c0 < cout {
+        let cc = chs.min(cout - c0);
+        let b = i % 2;
+        let mut loads = vec![];
+        if i == 0 {
+            loads.push(load(in_l2, lay.in_buf[0], in_bytes));
+        }
+        loads.push(load(w_l2 + c0 as u32 * w_pitch, lay.w_buf[b], cc * w_pitch as usize));
+        let mult_l1 = lay.w_buf[b] + (cc as u32) * w_pitch;
+        let bias_l1 = mult_l1 + 4 * cc as u32;
+        loads.push(load(q_l2 + 4 * c0 as u32, mult_l1, 4 * cc));
+        loads.push(load(q_l2 + 4 * (cout + c0) as u32, bias_l1, 4 * cc));
+        let kernel = KernelCall::Linear {
+            prec,
+            cin,
+            cout: cc,
+            in_base: lay.in_buf[0],
+            w_base: lay.w_buf[b],
+            w_pitch,
+            out_base: lay.out_buf[b],
+            quant: RequantCfg { mult_base: mult_l1, bias_base: bias_l1, shift: l.quant.shift, out_bits },
+        };
+        let stores = vec![store(
+            lay.out_buf[b],
+            out_l2 + (c0 * out_bits as usize / 8) as u32,
+            cc * out_bits as usize / 8,
+        )];
+        execs.push(TileExec { loads, kernel, stores });
+        c0 += cc;
+        i += 1;
+    }
+    LayerPlan {
+        name: l.name.clone(),
+        node: id,
+        tiles: execs,
+        macs: l.macs(),
+        dotp_bits: l.a_bits.max(l.w_bits),
+    }
+}
+
+fn plan_maxpool(
+    budget: &MemBudget,
+    l: &Layer,
+    id: usize,
+    in_l2: u32,
+    out_l2: u32,
+    k: usize,
+    stride: usize,
+) -> LayerPlan {
+    let [h, w, c] = l.in_shape;
+    let in_bytes = h * w * c * l.a_bits as usize / 8;
+    let out_bytes = l.out_bytes();
+    let lay = l1_layout(in_bytes, 0, out_bytes, 0, 0, budget.l1);
+    let task = MaxPoolTask {
+        h,
+        w,
+        c,
+        k,
+        stride,
+        in_base: lay.in_buf[0],
+        out_base: lay.out_buf[0],
+    };
+    LayerPlan {
+        name: l.name.clone(),
+        node: id,
+        tiles: vec![TileExec {
+            loads: vec![load(in_l2, lay.in_buf[0], in_bytes)],
+            kernel: KernelCall::MaxPool(task),
+            stores: vec![store(lay.out_buf[0], out_l2, out_bytes)],
+        }],
+        macs: 0,
+        dotp_bits: 8,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plan_avgpool(
+    budget: &MemBudget,
+    l2: &mut L2Alloc,
+    preload: &mut Vec<(u32, Vec<u8>)>,
+    l: &Layer,
+    id: usize,
+    in_l2: u32,
+    out_l2: u32,
+    k: usize,
+    stride: usize,
+) -> LayerPlan {
+    let [h, w, c] = l.in_shape;
+    let qbytes = serialize_quant(l);
+    let q_l2 = l2.alloc(qbytes.len());
+    preload.push((q_l2, qbytes));
+    let in_bytes = h * w * c * l.a_bits as usize / 8;
+    let out_bytes = l.out_bytes();
+    let lay = l1_layout(in_bytes, l.quant.bytes(), out_bytes, 0, 0, budget.l1);
+    let bias_l1 = lay.w_buf[0] + 4 * c as u32;
+    let task = AvgPoolTask {
+        h,
+        w,
+        c,
+        k,
+        stride,
+        bits: l.a_bits,
+        in_base: lay.in_buf[0],
+        out_base: lay.out_buf[0],
+        quant: RequantCfg {
+            mult_base: lay.w_buf[0],
+            bias_base: bias_l1,
+            shift: l.quant.shift,
+            out_bits: l.quant.out_bits,
+        },
+    };
+    LayerPlan {
+        name: l.name.clone(),
+        node: id,
+        tiles: vec![TileExec {
+            loads: vec![
+                load(in_l2, lay.in_buf[0], in_bytes),
+                load(q_l2, lay.w_buf[0], 4 * c),
+                load(q_l2 + 4 * c as u32, bias_l1, 4 * c),
+            ],
+            kernel: KernelCall::AvgPool(task),
+            stores: vec![store(lay.out_buf[0], out_l2, out_bytes)],
+        }],
+        macs: 0,
+        dotp_bits: 8,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plan_add(
+    budget: &MemBudget,
+    l: &Layer,
+    id: usize,
+    in1_l2: u32,
+    in2_l2: u32,
+    out_l2: u32,
+    m1: i32,
+    m2: i32,
+) -> LayerPlan {
+    let n: usize = l.in_shape.iter().product();
+    let bits = l.a_bits;
+    let bytes = n * bits as usize / 8;
+    // element-range tiles sized to L1 (three buffers, double buffered)
+    let max_chunk = (budget.l1 / 6).min(bytes).max(1);
+    let lanes = 8 / bits as usize;
+    let chunk_bytes = (max_chunk / 4 * 4).max(lanes.max(4));
+    let lay = l1_layout(2 * chunk_bytes, 0, chunk_bytes, 0, 0, budget.l1);
+    let mut execs = vec![];
+    let mut off = 0usize;
+    let mut i = 0;
+    while off < bytes {
+        let cb = chunk_bytes.min(bytes - off);
+        let b = i % 2;
+        let x1_l1 = lay.in_buf[b];
+        let x2_l1 = lay.in_buf[b] + chunk_bytes as u32;
+        let task = AddTask {
+            n: cb * lanes,
+            bits,
+            out_bits: l.quant.out_bits,
+            m1,
+            m2,
+            shift: l.quant.shift,
+            x1_base: x1_l1,
+            x2_base: x2_l1,
+            out_base: lay.out_buf[b],
+        };
+        execs.push(TileExec {
+            loads: vec![
+                load(in1_l2 + off as u32, x1_l1, cb),
+                load(in2_l2 + off as u32, x2_l1, cb),
+            ],
+            kernel: KernelCall::Add(task),
+            stores: vec![store(lay.out_buf[b], out_l2 + off as u32, cb)],
+        });
+        off += cb;
+        i += 1;
+    }
+    LayerPlan {
+        name: l.name.clone(),
+        node: id,
+        tiles: execs,
+        macs: 0,
+        dotp_bits: 8,
+    }
+}

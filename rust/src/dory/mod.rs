@@ -1,0 +1,238 @@
+//! DORY-style memory-aware deployment flow (§IV).
+//!
+//! Extends the open-source DORY tool's approach to sub-byte tensors exactly
+//! as the paper describes: a Constraint-Programming-flavoured **tiling
+//! solver** splits every layer into tiles whose working set fits L1, under
+//! the new sub-byte constraints (innermost tensor dimensions byte-aligned,
+//! channel tiles multiples of 4); the produced **plan** carries, per tile,
+//! the double-buffered DMA transfers and the kernel launch descriptor the
+//! coordinator executes on the simulated cluster. CSR setup common to all
+//! tiles is hoisted into the kernel programs (the "templates").
+//!
+//! Loop order per layer: output-row strips outermost, output-channel tiles
+//! inner; the input strip is loaded once per row strip, weight tiles are
+//! streamed per channel tile, everything ping-pongs between two L1 buffers.
+
+pub mod deploy;
+pub mod tiler;
+
+pub use tiler::{solve_conv_tiling, solve_dw_tiling, TileShape};
+
+use crate::kernels::conv::ConvTask;
+use crate::kernels::layers::{AddTask, AvgPoolTask, DwConvTask, MaxPoolTask};
+use crate::kernels::requant::RequantCfg;
+use crate::qnn::Precision;
+use crate::sim::dma::{DmaDir, DmaRequest};
+
+/// Memory budgets of the deployment target.
+#[derive(Clone, Copy, Debug)]
+pub struct MemBudget {
+    /// Usable L1 (TCDM) bytes for tile buffers (the rest is stack/runtime).
+    pub l1: usize,
+    /// L2 bytes for weights + ping-pong activations.
+    pub l2: usize,
+}
+
+impl Default for MemBudget {
+    fn default() -> Self {
+        MemBudget { l1: 110 * 1024, l2: crate::L2_BYTES }
+    }
+}
+
+/// A kernel launch on the cluster (L1 addresses already resolved).
+#[derive(Clone, Hash, PartialEq, Eq, Debug)]
+pub enum KernelCall {
+    Conv(ConvTask),
+    Dw(DwConvTask),
+    Linear {
+        prec: Precision,
+        cin: usize,
+        cout: usize,
+        in_base: u32,
+        w_base: u32,
+        w_pitch: u32,
+        out_base: u32,
+        quant: RequantCfg,
+    },
+    Add(AddTask),
+    AvgPool(AvgPoolTask),
+    MaxPool(MaxPoolTask),
+}
+
+/// One tile: loads to issue before compute, the kernel, stores after.
+#[derive(Clone, Debug)]
+pub struct TileExec {
+    pub loads: Vec<DmaRequest>,
+    pub kernel: KernelCall,
+    pub stores: Vec<DmaRequest>,
+}
+
+/// Execution plan of one layer.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub name: String,
+    pub node: usize,
+    pub tiles: Vec<TileExec>,
+    /// MACs of the layer (for per-layer MAC/cycle reporting).
+    pub macs: u64,
+    /// The dotp element width for the energy model.
+    pub dotp_bits: u8,
+}
+
+/// L1 double-buffer allocator: lays out the per-layer tile buffers.
+/// Returns base offsets inside TCDM for (in[2], w[2], out[2], quant, scratch).
+pub struct L1Layout {
+    pub in_buf: [u32; 2],
+    pub w_buf: [u32; 2],
+    pub out_buf: [u32; 2],
+    pub quant: u32,
+    pub scratch: u32,
+    pub total: usize,
+}
+
+/// Compute the double-buffered layout; panics if over budget (the tiler
+/// guarantees it fits).
+pub fn l1_layout(
+    in_bytes: usize,
+    w_bytes: usize,
+    out_bytes: usize,
+    quant_bytes: usize,
+    scratch_bytes: usize,
+    budget: usize,
+) -> L1Layout {
+    let base = crate::sim::TCDM_BASE;
+    let mut cur = 0usize;
+    let mut alloc = |sz: usize| {
+        let at = cur;
+        cur = (cur + sz).next_multiple_of(8);
+        base + at as u32
+    };
+    let l = L1Layout {
+        in_buf: [alloc(in_bytes), alloc(in_bytes)],
+        w_buf: [alloc(w_bytes), alloc(w_bytes)],
+        out_buf: [alloc(out_bytes), alloc(out_bytes)],
+        quant: alloc(quant_bytes),
+        scratch: alloc(scratch_bytes),
+        total: 0,
+    };
+    assert!(cur <= budget, "L1 layout {cur} exceeds budget {budget}");
+    L1Layout { total: cur, ..l }
+}
+
+/// Helper: a 1-D L2→L1 load.
+pub fn load(l2: u32, l1: u32, bytes: usize) -> DmaRequest {
+    DmaRequest::linear(DmaDir::L2ToTcdm, l2, l1, bytes as u32)
+}
+
+/// Helper: a 1-D L1→L2 store.
+pub fn store(l1: u32, l2: u32, bytes: usize) -> DmaRequest {
+    DmaRequest::linear(DmaDir::TcdmToL2, l2, l1, bytes as u32)
+}
+
+/// Tile descriptor for a row-strip × channel-tile of a convolution.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvTile {
+    /// First output row and row count of this tile.
+    pub r0: usize,
+    pub rows: usize,
+    /// First output channel and channel count.
+    pub c0: usize,
+    pub chs: usize,
+    /// Input rows [in_r0, in_r0+in_rows) needed from L2.
+    pub in_r0: usize,
+    pub in_rows: usize,
+    /// Vertical padding seen by this tile.
+    pub pad_t: usize,
+    pub pad_b: usize,
+}
+
+/// Enumerate the tiles of a (out_h, cout) layer for a tile shape.
+pub fn conv_tiles(
+    oh: usize,
+    cout: usize,
+    shape: TileShape,
+    h: usize,
+    kh: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<ConvTile> {
+    let mut tiles = vec![];
+    let mut r0 = 0;
+    while r0 < oh {
+        let rows = shape.rows.min(oh - r0);
+        let top = r0 * stride;
+        let in_r0 = top.saturating_sub(pad);
+        let pad_t = pad.saturating_sub(top);
+        let need_bot = (r0 + rows - 1) * stride + kh; // exclusive, padded coords
+        let in_end = (need_bot.saturating_sub(pad)).min(h);
+        let pad_b = need_bot.saturating_sub(pad).saturating_sub(h);
+        let mut c0 = 0;
+        while c0 < cout {
+            let chs = shape.chs.min(cout - c0);
+            tiles.push(ConvTile {
+                r0,
+                rows,
+                c0,
+                chs,
+                in_r0,
+                in_rows: in_end - in_r0,
+                pad_t,
+                pad_b,
+            });
+            c0 += chs;
+        }
+        r0 += rows;
+    }
+    tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_tiles_cover_layer_exactly() {
+        // 16x16 output, 64 channels, 3x3/s1/p1 conv on 16 input rows
+        let tiles = conv_tiles(16, 64, TileShape { rows: 5, chs: 16 }, 16, 3, 1, 1);
+        let mut covered = vec![vec![false; 64]; 16];
+        for t in &tiles {
+            for r in t.r0..t.r0 + t.rows {
+                for c in t.c0..t.c0 + t.chs {
+                    assert!(!covered[r][c], "tile overlap at ({r},{c})");
+                    covered[r][c] = true;
+                }
+            }
+            // input rows must cover the receptive field
+            assert!(t.in_r0 + t.in_rows <= 16);
+            assert_eq!(t.in_rows + t.pad_t + t.pad_b, (t.rows - 1) + 3);
+        }
+        assert!(covered.iter().all(|r| r.iter().all(|&c| c)));
+    }
+
+    #[test]
+    fn conv_tiles_strided_padding() {
+        // 8x8 in, 3x3/s2/p1 -> 4x4 out, strips of 2 rows
+        let tiles = conv_tiles(4, 4, TileShape { rows: 2, chs: 4 }, 8, 3, 2, 1);
+        assert_eq!(tiles.len(), 2);
+        assert_eq!((tiles[0].pad_t, tiles[0].pad_b), (1, 0));
+        assert_eq!((tiles[1].pad_t, tiles[1].pad_b), (0, 0));
+        // strip 2: rows 2..4 -> input rows 3..8
+        assert_eq!(tiles[1].in_r0, 3);
+        assert_eq!(tiles[1].in_rows, 5);
+    }
+
+    #[test]
+    fn l1_layout_fits_and_aligns() {
+        let l = l1_layout(1000, 2000, 500, 64, 4096, 110 * 1024);
+        assert_eq!(l.in_buf[0] % 8, 0);
+        assert!(l.total <= 110 * 1024);
+        assert!(l.w_buf[0] > l.in_buf[1]);
+        assert!(l.scratch > l.quant);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds budget")]
+    fn l1_layout_rejects_over_budget() {
+        l1_layout(60 * 1024, 10 * 1024, 10 * 1024, 64, 0, 110 * 1024);
+    }
+}

@@ -1,0 +1,204 @@
+//! Disassembler: renders the instruction IR in the paper's assembly
+//! notation (Fig. 5) — `pv.mlsdotusp.b s1, aw, ...`, `csrwi simd_fmt`,
+//! `lp.setup` — so generated kernels can be inspected side-by-side with
+//! the listing in the paper.
+
+use super::instr::{AluOp, Cond, Csr, Instr, MlChannel, MlUpdate, SimdFmt};
+use super::Program;
+
+fn fmt_suffix(f: SimdFmt) -> &'static str {
+    match f {
+        SimdFmt::Half => "h",
+        SimdFmt::Byte => "b",
+        SimdFmt::Nibble => "n",
+        SimdFmt::Crumb => "c",
+    }
+}
+
+fn csr_name(c: Csr) -> &'static str {
+    match c {
+        Csr::SimdFmt => "simd_fmt",
+        Csr::MixSkip => "mix_skip",
+        Csr::SbLegacy => "sb_legacy",
+        Csr::AStride => "a_stride",
+        Csr::WStride => "w_stride",
+        Csr::ARollback => "a_rollback",
+        Csr::WRollback => "w_rollback",
+        Csr::ASkip => "a_skip",
+        Csr::WSkip => "w_skip",
+        Csr::ABase => "a_csr",
+        Csr::WBase => "w_csr",
+    }
+}
+
+fn nn_slot(s: u8) -> String {
+    if s < 4 { format!("w{s}") } else { format!("a{}", s - 4) }
+}
+
+/// Render one instruction.
+pub fn disasm(i: &Instr) -> String {
+    match *i {
+        Instr::Li { rd, imm } => format!("li      x{rd}, {imm:#x}"),
+        Instr::Alu { op, rd, rs1, rs2 } => {
+            format!("{:<7} x{rd}, x{rs1}, x{rs2}", alu_name(op))
+        }
+        Instr::AluI { op, rd, rs1, imm } => {
+            format!("{:<7} x{rd}, x{rs1}, {imm}", format!("{}i", alu_name(op)))
+        }
+        Instr::ExtractU { rd, rs1, off, len } => {
+            format!("p.extractu x{rd}, x{rs1}, {len}, {off}")
+        }
+        Instr::Extract { rd, rs1, off, len } => {
+            format!("p.extract x{rd}, x{rs1}, {len}, {off}")
+        }
+        Instr::Insert { rd, rs1, off, len } => {
+            format!("p.insert x{rd}, x{rs1}, {len}, {off}")
+        }
+        Instr::Lw { rd, base, off, post_inc } => {
+            if post_inc != 0 {
+                format!("p.lw    x{rd}, {post_inc}(x{base}!)")
+            } else {
+                format!("lw      x{rd}, {off}(x{base})")
+            }
+        }
+        Instr::Lbu { rd, base, off, post_inc } => {
+            if post_inc != 0 {
+                format!("p.lbu   x{rd}, {post_inc}(x{base}!)")
+            } else {
+                format!("lbu     x{rd}, {off}(x{base})")
+            }
+        }
+        Instr::Sw { rs, base, off, post_inc } => {
+            if post_inc != 0 {
+                format!("p.sw    x{rs}, {post_inc}(x{base}!)")
+            } else {
+                format!("sw      x{rs}, {off}(x{base})")
+            }
+        }
+        Instr::Sb { rs, base, off, post_inc } => {
+            if post_inc != 0 {
+                format!("p.sb    x{rs}, {post_inc}(x{base}!)")
+            } else {
+                format!("sb      x{rs}, {off}(x{base})")
+            }
+        }
+        Instr::Mac { rd, rs1, rs2 } => format!("p.mac   x{rd}, x{rs1}, x{rs2}"),
+        Instr::Clipu { rd, rs1, bits } => format!("p.clipu x{rd}, x{rs1}, {bits}"),
+        Instr::Sdotp { rd, ra, rw, a_fmt, w_fmt, sub } => {
+            if a_fmt == w_fmt {
+                format!("pv.sdotusp.{} x{rd}, x{ra}, x{rw}", fmt_suffix(a_fmt))
+            } else {
+                format!(
+                    "pv.sdotusp.{}{} x{rd}, x{ra}, x{rw}  # mpc_cnt={sub}",
+                    fmt_suffix(a_fmt),
+                    fmt_suffix(w_fmt)
+                )
+            }
+        }
+        Instr::MlSdotp { acc, a_slot, w_slot, a_fmt, w_fmt, sub, upd } => {
+            let upd_s = match upd {
+                MlUpdate::None => String::new(),
+                MlUpdate::Load { ch, slot } => format!(
+                    "  # wb-load {} <- {}",
+                    nn_slot(slot),
+                    match ch {
+                        MlChannel::Act => "a_ch",
+                        MlChannel::Wgt => "w_ch",
+                    }
+                ),
+            };
+            let mix = if a_fmt == w_fmt {
+                fmt_suffix(a_fmt).to_string()
+            } else {
+                format!("{}{} (sub={sub})", fmt_suffix(a_fmt), fmt_suffix(w_fmt))
+            };
+            format!(
+                "pv.mlsdotusp.{mix} x{acc}, {}, {}{upd_s}",
+                nn_slot(a_slot),
+                nn_slot(w_slot)
+            )
+        }
+        Instr::NnLoad { ch, slot } => format!(
+            "p.nnload {}, {}",
+            nn_slot(slot),
+            match ch {
+                MlChannel::Act => "a_ch",
+                MlChannel::Wgt => "w_ch",
+            }
+        ),
+        Instr::CsrW { csr, imm } => format!("csrwi   {}, {imm:#x}", csr_name(csr)),
+        Instr::LpSetup { l, count, len } => {
+            format!("lp.setup l{l}, {count}, +{len}")
+        }
+        Instr::Branch { cond, rs1, rs2, off } => {
+            let c = match cond {
+                Cond::Eq => "beq",
+                Cond::Ne => "bne",
+                Cond::Lt => "blt",
+                Cond::Ge => "bge",
+            };
+            format!("{c}     x{rs1}, x{rs2}, {off:+}")
+        }
+        Instr::Barrier => "p.barrier".into(),
+        Instr::Halt => "halt".into(),
+    }
+}
+
+fn alu_name(op: AluOp) -> &'static str {
+    match op {
+        AluOp::Add => "add",
+        AluOp::Sub => "sub",
+        AluOp::And => "and",
+        AluOp::Or => "or",
+        AluOp::Xor => "xor",
+        AluOp::Sll => "sll",
+        AluOp::Srl => "srl",
+        AluOp::Sra => "sra",
+        AluOp::Mul => "mul",
+        AluOp::Min => "min",
+        AluOp::Max => "max",
+    }
+}
+
+/// Render a whole program with addresses.
+pub fn disasm_program(p: &Program) -> String {
+    let mut out = format!("# {} ({} instructions)\n", p.label, p.len());
+    for (pc, i) in p.instrs.iter().enumerate() {
+        out.push_str(&format!("{pc:5}:  {}\n", disasm(i)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+
+    #[test]
+    fn fig5_style_rendering() {
+        let ml = Instr::MlSdotp {
+            acc: 1,
+            a_slot: 4,
+            w_slot: 0,
+            a_fmt: SimdFmt::Byte,
+            w_fmt: SimdFmt::Nibble,
+            sub: 1,
+            upd: MlUpdate::Load { ch: MlChannel::Wgt, slot: 2 },
+        };
+        let s = disasm(&ml);
+        assert!(s.contains("pv.mlsdotusp.bn"), "{s}");
+        assert!(s.contains("a0") && s.contains("w0") && s.contains("w2"), "{s}");
+        assert_eq!(disasm(&Instr::CsrW { csr: Csr::MixSkip, imm: 2 }), "csrwi   mix_skip, 0x2");
+        assert!(disasm(&Instr::LpSetup { l: 0, count: 70, len: 17 }).contains("lp.setup"));
+    }
+
+    #[test]
+    fn program_listing_has_every_instruction() {
+        let mut p = Program::new("demo");
+        p.push(Instr::Li { rd: 1, imm: 0 });
+        p.push(Instr::Halt);
+        let listing = disasm_program(&p);
+        assert_eq!(listing.lines().count(), 3);
+        assert!(listing.contains("halt"));
+    }
+}

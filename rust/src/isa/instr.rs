@@ -1,0 +1,349 @@
+//! The instruction IR.
+
+/// General-purpose register index (x0..x31, x0 hardwired to zero).
+pub type Reg = u8;
+
+/// NN register-file slot (Flex-V has six 32-bit NN-RF registers:
+/// four weight slots W0-W3 and two activation slots A0-A1, §III).
+pub type NnSlot = u8;
+
+/// Number of NN-RF slots.
+pub const NN_RF_SLOTS: usize = 6;
+/// NN-RF slot indices for the four weight registers.
+pub const NN_W0: NnSlot = 0;
+/// NN-RF slot indices for the two activation registers.
+pub const NN_A0: NnSlot = 4;
+
+/// SIMD element format of one operand of a dot-product instruction.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum SimdFmt {
+    /// 16-bit halves (2 per word) — XpulpV2 `pv.sdotp.h`.
+    Half,
+    /// 8-bit bytes (4 per word) — XpulpV2 `pv.sdotp.b`.
+    Byte,
+    /// 4-bit nibbles (8 per word) — XpulpNN `pv.sdotp.n`.
+    Nibble,
+    /// 2-bit crumbs (16 per word) — XpulpNN `pv.sdotp.c`.
+    Crumb,
+}
+
+impl SimdFmt {
+    pub fn bits(self) -> u8 {
+        match self {
+            SimdFmt::Half => 16,
+            SimdFmt::Byte => 8,
+            SimdFmt::Nibble => 4,
+            SimdFmt::Crumb => 2,
+        }
+    }
+
+    pub fn from_bits(bits: u8) -> SimdFmt {
+        match bits {
+            16 => SimdFmt::Half,
+            8 => SimdFmt::Byte,
+            4 => SimdFmt::Nibble,
+            2 => SimdFmt::Crumb,
+            _ => panic!("no SIMD format for {bits} bits"),
+        }
+    }
+
+    /// Elements per 32-bit word.
+    pub fn lanes(self) -> usize {
+        32 / self.bits() as usize
+    }
+}
+
+/// Scalar ALU operations (subset used by the kernels).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum AluOp {
+    Add,
+    Sub,
+    And,
+    Or,
+    Xor,
+    Sll,
+    Srl,
+    Sra,
+    Mul,
+    Min,
+    Max,
+}
+
+/// Branch conditions.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+}
+
+/// Control-status registers of the Flex-V / MPIC extensions (§III).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Csr {
+    /// Encoded activation+weight SIMD precision (MPC input).
+    SimdFmt,
+    /// Weight-reuse factor for mixed precision (MPC input).
+    MixSkip,
+    /// XpulpNN-compatible legacy Mac&Load mode.
+    SbLegacy,
+    /// MLC channel parameters (activation / weight): innermost stride,
+    AStride,
+    WStride,
+    /// rollback applied at the end of an innermost sweep,
+    ARollback,
+    WRollback,
+    /// number of innermost iterations between rollbacks,
+    ASkip,
+    WSkip,
+    /// and channel base addresses.
+    ABase,
+    WBase,
+}
+
+/// Which MLC address channel an operation targets.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum MlChannel {
+    Act,
+    Wgt,
+}
+
+/// Write-back-stage update performed by a fused Mac&Load instruction:
+/// load a 32-bit word from the MLC-generated address of the given channel
+/// into an NN-RF slot.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum MlUpdate {
+    /// No WB load (plain sdotp through the Mac&Load datapath).
+    None,
+    /// Load next word of the channel into NN-RF slot.
+    Load { ch: MlChannel, slot: NnSlot },
+}
+
+/// One instruction of the semantic IR. Cycle costs are assigned by the ISS
+/// ([`crate::sim::core`]); this enum captures *what* executes.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Instr {
+    /// Load immediate (lui+addi pair or c.li — costed as one issue slot).
+    Li { rd: Reg, imm: i32 },
+    /// Register-register ALU op.
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    /// Register-immediate ALU op.
+    AluI { op: AluOp, rd: Reg, rs1: Reg, imm: i32 },
+    /// XpulpV2 `p.extractu rd, rs1, len, off` — unsigned bit-field extract.
+    ExtractU { rd: Reg, rs1: Reg, off: u8, len: u8 },
+    /// XpulpV2 `p.extract` — sign-extending bit-field extract.
+    Extract { rd: Reg, rs1: Reg, off: u8, len: u8 },
+    /// XpulpV2 `p.insert rd, rs1, len, off` — bit-field insert into rd.
+    Insert { rd: Reg, rs1: Reg, off: u8, len: u8 },
+    /// Word load; `post_inc != 0` is the XpulpV2 post-modified `p.lw`.
+    Lw { rd: Reg, base: Reg, off: i32, post_inc: i32 },
+    /// Unsigned byte load (post-modified if `post_inc != 0`).
+    Lbu { rd: Reg, base: Reg, off: i32, post_inc: i32 },
+    /// Word store (post-modified if `post_inc != 0`).
+    Sw { rs: Reg, base: Reg, off: i32, post_inc: i32 },
+    /// Byte store (post-modified if `post_inc != 0`).
+    Sb { rs: Reg, base: Reg, off: i32, post_inc: i32 },
+    /// XpulpV2 `p.mac rd, rs1, rs2`: rd += rs1 * rs2 (32-bit).
+    Mac { rd: Reg, rs1: Reg, rs2: Reg },
+    /// XpulpV2 `p.clipu`: clip rd to `[0, 2^bits - 1]`.
+    Clipu { rd: Reg, rs1: Reg, bits: u8 },
+    /// SIMD sum-of-dot-product `rd += dot(a, w)`.
+    ///
+    /// `a_fmt`/`w_fmt` are the (CSR-resolved) element formats; when they
+    /// differ this is a *mixed-precision* sdotp (MPIC / Flex-V only) and
+    /// `sub` selects which subgroup of the narrower operand's word the
+    /// MPC slicer routes into the dotp unit (Fig. 2b).
+    Sdotp {
+        rd: Reg,
+        ra: Reg,
+        rw: Reg,
+        a_fmt: SimdFmt,
+        w_fmt: SimdFmt,
+        /// Subgroup of the narrower operand selected by MPC_CNT.
+        sub: u8,
+    },
+    /// Fused Mac&Load `pv.mlsdot{u}sp` (§III): a SIMD sdotp whose operands
+    /// come from the NN-RF, plus an optional WB-stage load from an
+    /// MLC-generated address into an NN-RF slot.
+    MlSdotp {
+        /// Accumulator in the GP-RF.
+        acc: Reg,
+        /// NN-RF slot holding the activation word.
+        a_slot: NnSlot,
+        /// NN-RF slot holding the (packed) weight word.
+        w_slot: NnSlot,
+        a_fmt: SimdFmt,
+        w_fmt: SimdFmt,
+        /// Subgroup of the narrower operand (MPC_CNT).
+        sub: u8,
+        /// The fused write-back load.
+        upd: MlUpdate,
+    },
+    /// Explicit NN-RF fill through the MLC channel pointer (used in the
+    /// kernel prologue: "four weights and one activation are loaded
+    /// explicitly to fill the NN-RF").
+    NnLoad { ch: MlChannel, slot: NnSlot },
+    /// CSR write (immediate form; kernels configure MLC/MPC before loops).
+    CsrW { csr: Csr, imm: u32 },
+    /// XpulpV2 hardware loop: execute the next `len` instructions `count`
+    /// times with zero branch overhead. Two nesting levels (`l` ∈ {0,1}).
+    LpSetup { l: u8, count: u32, len: u16 },
+    /// Conditional branch by instruction offset (rarely used: hw loops
+    /// cover kernel control flow; epilogues are generated statically).
+    Branch { cond: Cond, rs1: Reg, rs2: Reg, off: i32 },
+    /// Cluster barrier (hardware synchronization unit).
+    Barrier,
+    /// End of stream for this core.
+    Halt,
+}
+
+impl Instr {
+    /// True if the instruction performs a TCDM data access in its EX/WB
+    /// stage (participates in bank arbitration).
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self,
+            Instr::Lw { .. }
+                | Instr::Lbu { .. }
+                | Instr::Sw { .. }
+                | Instr::Sb { .. }
+                | Instr::NnLoad { .. }
+                | Instr::MlSdotp { upd: MlUpdate::Load { .. }, .. }
+        )
+    }
+
+    /// MAC operations this instruction contributes (for MAC/cycle metrics).
+    pub fn macs(&self) -> usize {
+        match self {
+            Instr::Sdotp { a_fmt, w_fmt, .. }
+            | Instr::MlSdotp { a_fmt, w_fmt, .. } => {
+                32 / a_fmt.bits().max(w_fmt.bits()) as usize
+            }
+            Instr::Mac { .. } => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// A per-core instruction stream plus entry metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    /// Human-readable label for traces.
+    pub label: String,
+}
+
+impl Program {
+    pub fn new(label: impl Into<String>) -> Self {
+        Program { instrs: vec![], label: label.into() }
+    }
+
+    pub fn push(&mut self, i: Instr) -> &mut Self {
+        self.instrs.push(i);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Static MAC count of one full execution (resolving hardware loops).
+    /// Used to sanity-check generators against layer geometry.
+    pub fn static_macs(&self) -> u64 {
+        // simulate loop structure without executing
+        fn count(instrs: &[Instr], start: usize, end: usize) -> u64 {
+            let mut total = 0u64;
+            let mut pc = start;
+            while pc < end {
+                match instrs[pc] {
+                    Instr::LpSetup { count: c, len, .. } => {
+                        let body = count(instrs, pc + 1, pc + 1 + len as usize);
+                        total += body * c as u64;
+                        pc += 1 + len as usize;
+                    }
+                    ref i => {
+                        total += i.macs() as u64;
+                        pc += 1;
+                    }
+                }
+            }
+            total
+        }
+        count(&self.instrs, 0, self.instrs.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simd_fmt_lanes() {
+        assert_eq!(SimdFmt::Byte.lanes(), 4);
+        assert_eq!(SimdFmt::Nibble.lanes(), 8);
+        assert_eq!(SimdFmt::Crumb.lanes(), 16);
+        assert_eq!(SimdFmt::Half.lanes(), 2);
+    }
+
+    #[test]
+    fn sdotp_mac_count_is_wider_operand() {
+        let i = Instr::Sdotp {
+            rd: 1,
+            ra: 2,
+            rw: 3,
+            a_fmt: SimdFmt::Byte,
+            w_fmt: SimdFmt::Nibble,
+            sub: 0,
+        };
+        // a8w4: 4 MACs (wider operand = 8 bit, 4 lanes)
+        assert_eq!(i.macs(), 4);
+    }
+
+    #[test]
+    fn mem_classification() {
+        assert!(Instr::Lw { rd: 1, base: 2, off: 0, post_inc: 4 }.is_mem());
+        assert!(!Instr::Li { rd: 1, imm: 3 }.is_mem());
+        let ml_none = Instr::MlSdotp {
+            acc: 1,
+            a_slot: 4,
+            w_slot: 0,
+            a_fmt: SimdFmt::Byte,
+            w_fmt: SimdFmt::Byte,
+            sub: 0,
+            upd: MlUpdate::None,
+        };
+        assert!(!ml_none.is_mem());
+        let ml_load = Instr::MlSdotp {
+            acc: 1,
+            a_slot: 4,
+            w_slot: 0,
+            a_fmt: SimdFmt::Byte,
+            w_fmt: SimdFmt::Byte,
+            sub: 0,
+            upd: MlUpdate::Load { ch: MlChannel::Act, slot: 5 },
+        };
+        assert!(ml_load.is_mem());
+    }
+
+    #[test]
+    fn static_macs_resolves_nested_loops() {
+        let mut p = Program::new("t");
+        // outer loop 3x { inner loop 5x { sdotp(16 macs) } }
+        p.push(Instr::LpSetup { l: 1, count: 3, len: 2 });
+        p.push(Instr::LpSetup { l: 0, count: 5, len: 1 });
+        p.push(Instr::Sdotp {
+            rd: 1,
+            ra: 2,
+            rw: 3,
+            a_fmt: SimdFmt::Crumb,
+            w_fmt: SimdFmt::Crumb,
+            sub: 0,
+        });
+        p.push(Instr::Halt);
+        assert_eq!(p.static_macs(), 3 * 5 * 16);
+    }
+}

@@ -1,0 +1,28 @@
+//! Instruction-set definitions.
+//!
+//! The four cores compared in the paper share the RV32IMC + XpulpV2 base
+//! (hardware loops, post-increment load/store, 16/8-bit SIMD) and differ in
+//! their QNN extensions:
+//!
+//! | core    | SIMD formats        | mixed-precision | Mac&Load | NN-RF + MLC | max unroll |
+//! |---------|---------------------|-----------------|----------|-------------|-----------|
+//! | RI5CY   | 16/8-bit            | no (SW unpack)  | no       | no          | 4×2       |
+//! | MPIC    | 16/8/4/2, CSR-coded | **yes**         | no       | no          | 4×2       |
+//! | XpulpNN | 16/8/4/2 uniform    | no (SW unpack)  | yes (GP) | no          | 4×2       |
+//! | Flex-V  | 16/8/4/2, CSR-coded | **yes**         | **yes**  | **yes**     | **4×4**   |
+//!
+//! Instructions are represented as a semantic IR, not encoded words: the
+//! kernel generators ([`crate::kernels`]) emit exactly the instruction
+//! *sequences* of the paper's assembly (Fig. 5), and the ISS costs them with
+//! RI5CY pipeline rules. *Virtual* SIMD instructions (§III, Fig. 3) carry
+//! their CSR-resolved format inline — the resolution a real Flex-V decoder
+//! performs from `simd_fmt`/`mix_skip` status bits is static per kernel, so
+//! the generator bakes it in; the MLC address generation, which is genuinely
+//! stateful, *is* simulated (see [`crate::sim::mlc`]).
+
+pub mod disasm;
+pub mod instr;
+pub mod variant;
+
+pub use instr::{AluOp, Cond, Csr, Instr, MlChannel, MlUpdate, NnSlot, Program, Reg, SimdFmt};
+pub use variant::{IsaVariant, UnrollShape};

@@ -1,0 +1,171 @@
+//! The ISA capability matrix for the four cores the paper compares
+//! (§V-B, Table III) plus helpers the kernel generators query to decide
+//! which instruction sequences are legal on each core.
+
+use super::instr::SimdFmt;
+use crate::qnn::Precision;
+
+/// Matrix-multiplication register-blocking shape (§III: RI5CY saturates the
+/// GP-RF at 4×2; the Flex-V NN-RF extends it to 4×4).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct UnrollShape {
+    /// Filters (output channels) per inner loop.
+    pub filters: usize,
+    /// im2col buffers (output pixels) per inner loop.
+    pub buffers: usize,
+}
+
+impl UnrollShape {
+    pub const fn new(filters: usize, buffers: usize) -> Self {
+        UnrollShape { filters, buffers }
+    }
+
+    /// Accumulators this shape keeps live in the GP-RF.
+    pub fn accumulators(&self) -> usize {
+        self.filters * self.buffers
+    }
+}
+
+/// The four evaluated cores.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum IsaVariant {
+    /// RI5CY with XpulpV2: 16/8-bit SIMD, hw loops, post-inc ld/st.
+    Ri5cy,
+    /// MPIC (Ottavi et al.): + dynamic bit-scalable mixed-precision sdotp.
+    Mpic,
+    /// XpulpNN (Garofalo et al.): + uniform 4/2-bit sdotp and Mac&Load.
+    XpulpNn,
+    /// Flex-V (this paper): + fully-flexible mixed-precision Mac&Load,
+    /// NN-RF, MLC.
+    FlexV,
+}
+
+impl IsaVariant {
+    pub const ALL: [IsaVariant; 4] =
+        [IsaVariant::Ri5cy, IsaVariant::Mpic, IsaVariant::XpulpNn, IsaVariant::FlexV];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IsaVariant::Ri5cy => "RI5CY",
+            IsaVariant::Mpic => "MPIC",
+            IsaVariant::XpulpNn => "XpulpNN",
+            IsaVariant::FlexV => "Flex-V",
+        }
+    }
+
+    /// SIMD dot-product formats the core executes natively.
+    pub fn native_fmts(&self) -> &'static [SimdFmt] {
+        match self {
+            IsaVariant::Ri5cy => &[SimdFmt::Half, SimdFmt::Byte],
+            IsaVariant::Mpic | IsaVariant::XpulpNn | IsaVariant::FlexV => {
+                &[SimdFmt::Half, SimdFmt::Byte, SimdFmt::Nibble, SimdFmt::Crumb]
+            }
+        }
+    }
+
+    /// Can one sdotp take operands of *different* formats (MPC present)?
+    pub fn mixed_precision(&self) -> bool {
+        matches!(self, IsaVariant::Mpic | IsaVariant::FlexV)
+    }
+
+    /// Fused Mac&Load available?
+    pub fn mac_load(&self) -> bool {
+        matches!(self, IsaVariant::XpulpNn | IsaVariant::FlexV)
+    }
+
+    /// Dedicated NN register file + MLC address generation?
+    pub fn nn_rf(&self) -> bool {
+        matches!(self, IsaVariant::FlexV)
+    }
+
+    /// Register-blocking shape used by the optimized MatMul on this core.
+    /// Flex-V's NN-RF frees GP registers, enabling 4×4 (§III); all others
+    /// saturate the GP-RF at 4×2 (PULP-NN's design point).
+    pub fn unroll(&self) -> UnrollShape {
+        if self.nn_rf() {
+            UnrollShape::new(4, 4)
+        } else {
+            UnrollShape::new(4, 2)
+        }
+    }
+
+    /// True if `p` needs *no* software pack/unpack on this core: either the
+    /// formats are equal and natively supported, or the core has hardware
+    /// mixed-precision support.
+    pub fn supports_natively(&self, p: Precision) -> bool {
+        let a = SimdFmt::from_bits(p.a_bits);
+        let w = SimdFmt::from_bits(p.w_bits);
+        let native = self.native_fmts();
+        if !native.contains(&a) || !native.contains(&w) {
+            return false;
+        }
+        p.uniform() || self.mixed_precision()
+    }
+
+    /// Bit-width the weights must be *software-converted to* before the
+    /// MatMul inner loop when `p` is not natively supported: the narrower
+    /// operand is unpacked to the wider operand's width (the paper §I:
+    /// "massive software overhead necessary for packing and unpacking
+    /// data"). Returns `None` when no conversion is needed.
+    pub fn sw_unpack_target(&self, p: Precision) -> Option<u8> {
+        if self.supports_natively(p) {
+            None
+        } else {
+            Some(p.a_bits.max(p.w_bits))
+        }
+    }
+}
+
+impl std::fmt::Display for IsaVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capability_matrix_matches_paper() {
+        use IsaVariant::*;
+        // Table III structure: RI5CY cannot run sub-byte natively.
+        assert!(!Ri5cy.supports_natively(Precision::new(4, 4)));
+        assert!(Ri5cy.supports_natively(Precision::new(8, 8)));
+        assert!(!Ri5cy.supports_natively(Precision::new(8, 4)));
+        // MPIC handles the whole mixed grid natively but has no Mac&Load.
+        for p in Precision::grid() {
+            assert!(Mpic.supports_natively(p), "MPIC should support {p}");
+        }
+        assert!(!Mpic.mac_load());
+        // XpulpNN: uniform sub-byte yes, mixed no.
+        assert!(XpulpNn.supports_natively(Precision::new(2, 2)));
+        assert!(XpulpNn.supports_natively(Precision::new(4, 4)));
+        assert!(!XpulpNn.supports_natively(Precision::new(4, 2)));
+        assert!(!XpulpNn.supports_natively(Precision::new(8, 2)));
+        // Flex-V: everything.
+        for p in Precision::grid() {
+            assert!(FlexV.supports_natively(p), "Flex-V should support {p}");
+        }
+        assert!(FlexV.mac_load() && FlexV.nn_rf());
+    }
+
+    #[test]
+    fn unroll_shapes() {
+        assert_eq!(IsaVariant::Ri5cy.unroll(), UnrollShape::new(4, 2));
+        assert_eq!(IsaVariant::FlexV.unroll(), UnrollShape::new(4, 4));
+        assert_eq!(IsaVariant::FlexV.unroll().accumulators(), 16);
+    }
+
+    #[test]
+    fn sw_unpack_targets() {
+        // XpulpNN on a8w2 must blow weights up to 8 bit in software.
+        assert_eq!(IsaVariant::XpulpNn.sw_unpack_target(Precision::new(8, 2)), Some(8));
+        // RI5CY on a8w4 likewise.
+        assert_eq!(IsaVariant::Ri5cy.sw_unpack_target(Precision::new(8, 4)), Some(8));
+        // Flex-V never unpacks in software.
+        for p in Precision::grid() {
+            assert_eq!(IsaVariant::FlexV.sw_unpack_target(p), None);
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Full convolution kernels: im2col + MatMul + requantization, parallelized
+//! over output pixels across the cluster (the workload of Fig. 7).
+//!
+//! Each core owns a contiguous range of output pixels. Per block of up to
+//! `unroll.buffers` pixels it (1) builds the im2col buffers in its private
+//! TCDM scratch region, then (2) runs the MatMul phase over all filter
+//! blocks — reusing exactly the per-ISA inner loops of [`super::matmul`].
+//! The quantization phase is fused into the MatMul blocks (§II-B).
+
+use super::im2col::{emit_im2col_pixel, emit_zero, ConvGeom};
+use super::matmul::{emit_matmul, row_range, MatMulTask};
+use super::requant::RequantCfg;
+use crate::isa::{Instr, IsaVariant, Program, SimdFmt};
+use crate::qnn::Precision;
+
+/// A convolution work item in TCDM.
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+pub struct ConvTask {
+    pub geom: ConvGeom,
+    pub prec: Precision,
+    /// Input activations (HWC, packed) base address.
+    pub in_base: u32,
+    /// Weights `[cout, k]` rows, `w_pitch` bytes apart, zero-padded.
+    pub w_base: u32,
+    pub w_pitch: u32,
+    /// Output (HWC, packed at `quant.out_bits`).
+    pub out_base: u32,
+    /// Per-core im2col scratch: core i uses
+    /// `scratch_base + i * buffers * buf_pitch`.
+    pub scratch_base: u32,
+    pub quant: RequantCfg,
+}
+
+impl ConvTask {
+    /// Buffer element width: activations are expanded to 8 bit when the
+    /// ISA cannot consume the packed format (see [`super::im2col`]).
+    pub fn buf_bits(&self, isa: IsaVariant) -> u8 {
+        let native_a = isa
+            .native_fmts()
+            .contains(&SimdFmt::from_bits(self.prec.a_bits));
+        if native_a {
+            self.prec.a_bits
+        } else {
+            8
+        }
+    }
+
+    /// im2col buffer pitch in bytes (word-aligned).
+    pub fn buf_pitch(&self, isa: IsaVariant) -> u32 {
+        let bits = self.buf_bits(isa) as usize;
+        ((self.geom.k() * bits).div_ceil(32) * 4) as u32
+    }
+
+    /// Effective precision seen by the MatMul phase.
+    pub fn mm_prec(&self, isa: IsaVariant) -> Precision {
+        Precision::new(self.buf_bits(isa), self.prec.w_bits)
+    }
+
+    /// Total MACs (the paper's metric for Fig. 7).
+    pub fn macs(&self) -> u64 {
+        (self.geom.out_h() * self.geom.out_w() * self.geom.cout * self.geom.k()) as u64
+    }
+
+    /// Output byte address of pixel index `pix`, channel 0.
+    pub fn out_pitch(&self) -> u32 {
+        (self.geom.cout * self.quant.out_bits as usize / 8) as u32
+    }
+}
+
+/// Generate the per-core convolution program.
+pub fn gen_conv(isa: IsaVariant, t: &ConvTask, core: usize, n_cores: usize) -> Program {
+    let g = &t.geom;
+    assert!(g.cout % 4 == 0, "cout must be padded to a multiple of 4");
+    let m = g.out_h() * g.out_w();
+    let (lo, hi) = row_range(m, core, n_cores);
+    let mut p = Program::new(format!("conv-{}-{}-c{core}", isa.name(), t.prec));
+    if lo >= hi {
+        p.push(Instr::Barrier);
+        p.push(Instr::Halt);
+        return p;
+    }
+    let nb_max = isa.unroll().buffers;
+    let buf_pitch = t.buf_pitch(isa);
+    let my_scratch = t.scratch_base + (core * nb_max) as u32 * buf_pitch;
+    let mm_prec = t.mm_prec(isa);
+
+    // Pointwise fast path: a 1x1/s1 convolution needs no im2col at all --
+    // the input rows *are* the GEMM rows (PULP-NN does the same). Only
+    // valid when the packed input row is word-aligned and the format is
+    // directly consumable.
+    let row_bytes = g.cin * g.a_bits as usize / 8;
+    if g.kh == 1
+        && g.kw == 1
+        && g.stride == 1
+        && g.pad_t + g.pad_b + g.pad_l + g.pad_r == 0
+        && t.buf_bits(isa) == g.a_bits
+        && row_bytes % 4 == 0
+    {
+        let mm = MatMulTask {
+            m,
+            n: g.cout,
+            k: g.cin,
+            prec: t.prec,
+            a_base: t.in_base,
+            a_pitch: row_bytes as u32,
+            w_base: t.w_base,
+            w_pitch: t.w_pitch,
+            out_base: t.out_base,
+            out_pitch: t.out_pitch(),
+            quant: t.quant,
+        };
+        emit_matmul(&mut p, isa, &mm, lo, hi);
+        p.push(Instr::Barrier);
+        p.push(Instr::Halt);
+        return p;
+    }
+
+    // Zero the scratch tails once (k*bits .. pitch stays zero forever).
+    let used = g.k() * t.buf_bits(isa) as usize / 8;
+    for b in 0..nb_max {
+        let row = my_scratch + b as u32 * buf_pitch;
+        emit_zero(&mut p, row + used as u32, buf_pitch as usize - used);
+    }
+
+    let mut pix = lo;
+    while pix < hi {
+        let nb = nb_max.min(hi - pix);
+        let nb = if nb >= nb_max { nb_max } else if nb >= 2 { 2 } else { 1 };
+        // Phase 1: im2col the nb pixels into the scratch rows.
+        for b in 0..nb {
+            let (oy, ox) = ((pix + b) / g.out_w(), (pix + b) % g.out_w());
+            emit_im2col_pixel(
+                &mut p,
+                g,
+                t.in_base,
+                my_scratch + b as u32 * buf_pitch,
+                oy,
+                ox,
+                t.buf_bits(isa),
+            );
+        }
+        // Phase 2+3: MatMul + requant over all filter blocks.
+        let mm = MatMulTask {
+            m: nb,
+            n: g.cout,
+            k: g.k(),
+            prec: mm_prec,
+            a_base: my_scratch,
+            a_pitch: buf_pitch,
+            w_base: t.w_base,
+            w_pitch: t.w_pitch,
+            out_base: t.out_base + pix as u32 * t.out_pitch(),
+            out_pitch: t.out_pitch(),
+            quant: t.quant,
+        };
+        emit_matmul(&mut p, isa, &mm, 0, nb);
+        pix += nb;
+    }
+    p.push(Instr::Barrier);
+    p.push(Instr::Halt);
+    p
+}
+
+/// TCDM bytes required for the per-core scratch regions of `n_cores`.
+pub fn scratch_bytes(t: &ConvTask, isa: IsaVariant, n_cores: usize) -> usize {
+    (n_cores * isa.unroll().buffers) * t.buf_pitch(isa) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::{golden, QTensor, QuantParams};
+    use crate::sim::{Cluster, TCDM_BASE};
+    use crate::util::Prng;
+
+    /// End-to-end conv check against the golden executor for every ISA.
+    fn check_conv(isa: IsaVariant, prec: Precision, geom: ConvGeom, seed: u64) {
+        let mut rng = Prng::new(seed);
+        let g = geom;
+        let k = g.k();
+        let x = QTensor::random(&[g.h, g.w, g.cin], prec.a_bits, false, &mut rng);
+        // Weight rows padded to the pitch every ISA can over-read safely.
+        let words_needed = (k * 8usize).div_ceil(32).max((k * prec.w_bits as usize).div_ceil(32));
+        let w_pitch = (words_needed * 4) as u32;
+        let kw_pad = w_pitch as usize * 8 / prec.w_bits as usize;
+        let mut w = QTensor::random(&[g.cout, kw_pad], prec.w_bits, true, &mut rng);
+        // zero the pad tail so every unpack path sees zeros
+        for f in 0..g.cout {
+            for kk in k..kw_pad {
+                w.set_i(f * kw_pad + kk, 0);
+            }
+        }
+        let out_bits = 8u8;
+        let q = QuantParams {
+            mult: (0..g.cout).map(|_| rng.range_i64(1, 6) as i32).collect(),
+            shift: 7,
+            bias: (0..g.cout).map(|_| rng.range_i64(-128, 128) as i32).collect(),
+            out_bits,
+        };
+
+        let in_base = TCDM_BASE;
+        let w_base = in_base + x.bytes() as u32 + 64;
+        let mult_base = w_base + (g.cout as u32) * w_pitch;
+        let bias_base = mult_base + 4 * g.cout as u32;
+        let out_base = bias_base + 4 * g.cout as u32;
+        let m = g.out_h() * g.out_w();
+        let scratch_base = out_base + (m * g.cout * out_bits as usize / 8) as u32 + 64;
+
+        let task = ConvTask {
+            geom: g,
+            prec,
+            in_base,
+            w_base,
+            w_pitch,
+            out_base,
+            scratch_base,
+            quant: RequantCfg { mult_base, bias_base, shift: q.shift, out_bits },
+        };
+        let n_cores = 4;
+        let mut cl = Cluster::new(n_cores);
+        cl.mem.write_bytes(in_base, &x.data);
+        cl.mem.write_bytes(w_base, &w.data);
+        for ch in 0..g.cout {
+            cl.mem.store_u32(mult_base + 4 * ch as u32, q.mult[ch] as u32);
+            cl.mem.store_u32(bias_base + 4 * ch as u32, q.bias[ch] as u32);
+        }
+        cl.load_programs((0..n_cores).map(|c| gen_conv(isa, &task, c, n_cores)).collect());
+        let stats = cl.run();
+        assert!(stats.total_macs() >= task.macs());
+
+        // Golden conv2d expects weights [cout, kh, kw, cin] — rebuild from
+        // the padded rows.
+        let wvals: Vec<i32> = (0..g.cout)
+            .flat_map(|f| (0..k).map(move |kk| (f, kk)))
+            .map(|(f, kk)| w.get_i(f * kw_pad + kk))
+            .collect();
+        let wt = QTensor::from_signed(&[g.cout, g.kh, g.kw, g.cin], prec.w_bits, &wvals);
+        let want = golden::conv2d(&x, &wt, &q, g.kh, g.kw, g.stride, g.pad_t);
+        let got_bytes = cl.mem.read_bytes(out_base, want.bytes());
+        assert_eq!(
+            got_bytes, want.data,
+            "{isa:?} {prec} conv mismatch (geom {g:?})"
+        );
+    }
+
+    fn small_geom(cin: usize, cout: usize, a_bits: u8) -> ConvGeom {
+        ConvGeom::square(5, 5, cin, cout, 3, 3, 1, 1, a_bits)
+    }
+
+    #[test]
+    fn flexv_conv_all_precisions() {
+        for prec in Precision::grid() {
+            let cin = (32 / prec.a_bits as usize).max(4);
+            check_conv(IsaVariant::FlexV, prec, small_geom(cin, 8, prec.a_bits), 21);
+        }
+    }
+
+    #[test]
+    fn all_isas_conv_a8w4() {
+        let prec = Precision::new(8, 4);
+        for isa in IsaVariant::ALL {
+            check_conv(isa, prec, small_geom(4, 4, 8), 22);
+        }
+    }
+
+    #[test]
+    fn all_isas_conv_a4w4_subbyte_activations() {
+        let prec = Precision::new(4, 4);
+        for isa in IsaVariant::ALL {
+            check_conv(isa, prec, small_geom(8, 4, 4), 23);
+        }
+    }
+
+    #[test]
+    fn strided_conv_and_no_padding() {
+        let g = ConvGeom::square(8, 8, 4, 4, 2, 2, 2, 0, 8);
+        check_conv(IsaVariant::FlexV, Precision::new(8, 8), g, 24);
+        check_conv(IsaVariant::Ri5cy, Precision::new(8, 8), g, 25);
+    }
+
+    #[test]
+    fn pointwise_conv_1x1() {
+        let g = ConvGeom::square(4, 4, 16, 8, 1, 1, 1, 0, 8);
+        check_conv(IsaVariant::FlexV, Precision::new(8, 4), g, 26);
+        check_conv(IsaVariant::XpulpNn, Precision::new(8, 8), g, 27);
+    }
+}

@@ -1,0 +1,316 @@
+//! im2col phase generator (§II-B).
+//!
+//! For a given output pixel, the 3-D HWC input receptive field is
+//! re-arranged into a 1-D buffer along (ky, kx, cin) — zero-filled where
+//! the field hangs over the padding. Because the layout is HWC, the
+//! `kw × cin` elements of one field row are contiguous in the input, so the
+//! copy runs word-by-word (`p.lw`/`p.sw` with post-increment); ragged
+//! byte tails fall back to byte copies.
+//!
+//! On cores whose SIMD unit cannot consume the activation format
+//! (RI5CY with sub-byte activations), the im2col additionally *expands*
+//! activations to 8 bit (the strategy of the PULP-NN mixed library [13]):
+//! the buffer is then `u8` and only weights need in-loop unpacking.
+
+use super::regalloc as ra;
+use super::unpack;
+use crate::isa::{AluOp, Instr, Program};
+
+/// Convolution geometry (one layer or one DORY tile). Padding is
+/// per-side: a row-strip tile in the middle of a feature map has no
+/// vertical padding while the first/last strips keep the layer's.
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+pub struct ConvGeom {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad_t: usize,
+    pub pad_b: usize,
+    pub pad_l: usize,
+    pub pad_r: usize,
+    pub a_bits: u8,
+}
+
+impl ConvGeom {
+    /// Uniform-padding constructor (whole layers).
+    #[allow(clippy::too_many_arguments)]
+    pub fn square(
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        a_bits: u8,
+    ) -> Self {
+        ConvGeom { h, w, cin, cout, kh, kw, stride, pad_t: pad, pad_b: pad, pad_l: pad, pad_r: pad, a_bits }
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.h + self.pad_t + self.pad_b - self.kh) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.w + self.pad_l + self.pad_r - self.kw) / self.stride + 1
+    }
+    /// im2col contraction length in elements.
+    pub fn k(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+    /// Bytes of one input row of `kw*cin` elements at the *buffer* width.
+    pub fn field_row_bytes(&self, buf_bits: u8) -> usize {
+        self.kw * self.cin * buf_bits as usize / 8
+    }
+    /// Input byte address of element (y, x, 0).
+    pub fn in_addr(&self, base: u32, y: usize, x: usize) -> u32 {
+        base + ((y * self.w + x) * self.cin * self.a_bits as usize / 8) as u32
+    }
+}
+
+/// Emit a bulk copy of `bytes` from `src` to `dst` (word loop + byte tail).
+/// Uses A_PTR/A_REG scratch registers (dead outside the MatMul inner loop).
+pub fn emit_copy(p: &mut Program, src: u32, dst: u32, bytes: usize) {
+    if bytes == 0 {
+        return;
+    }
+    let words = bytes / 4;
+    p.push(Instr::Li { rd: ra::A_PTR[0], imm: src as i32 });
+    p.push(Instr::Li { rd: ra::A_PTR[1], imm: dst as i32 });
+    if words > 0 {
+        if words > 1 {
+            p.push(Instr::LpSetup { l: 0, count: words as u32, len: 2 });
+        }
+        p.push(Instr::Lw { rd: ra::A_REG[0], base: ra::A_PTR[0], off: 0, post_inc: 4 });
+        p.push(Instr::Sw { rs: ra::A_REG[0], base: ra::A_PTR[1], off: 0, post_inc: 4 });
+    }
+    for _ in 0..bytes % 4 {
+        p.push(Instr::Lbu { rd: ra::A_REG[0], base: ra::A_PTR[0], off: 0, post_inc: 1 });
+        p.push(Instr::Sb { rs: ra::A_REG[0], base: ra::A_PTR[1], off: 0, post_inc: 1 });
+    }
+}
+
+/// Emit a zero fill of `bytes` at `dst`.
+pub fn emit_zero(p: &mut Program, dst: u32, bytes: usize) {
+    if bytes == 0 {
+        return;
+    }
+    let words = bytes / 4;
+    p.push(Instr::Li { rd: ra::A_PTR[1], imm: dst as i32 });
+    if words > 0 {
+        if words > 1 {
+            p.push(Instr::LpSetup { l: 0, count: words as u32, len: 1 });
+        }
+        p.push(Instr::Sw { rs: 0, base: ra::A_PTR[1], off: 0, post_inc: 4 });
+    }
+    for _ in 0..bytes % 4 {
+        p.push(Instr::Sb { rs: 0, base: ra::A_PTR[1], off: 0, post_inc: 1 });
+    }
+}
+
+/// Emit a copy that expands packed `src_bits` activations to 8-bit
+/// unsigned at `dst` (`n_elems` elements). Word-at-a-time: one packed load
+/// feeds `8/src_bits` expanded words.
+pub fn emit_copy_expand(p: &mut Program, src: u32, dst: u32, n_elems: usize, src_bits: u8) {
+    if n_elems == 0 {
+        return;
+    }
+    let per_word = 32 / src_bits as usize;
+    p.push(Instr::Li { rd: ra::A_PTR[0], imm: src as i32 });
+    p.push(Instr::Li { rd: ra::A_PTR[1], imm: dst as i32 });
+    let groups = per_word / 4; // expanded words per packed word
+    let full_words = n_elems / per_word;
+    if full_words > 0 {
+        let setup_at = p.len();
+        if full_words > 1 {
+            p.push(Instr::LpSetup { l: 0, count: full_words as u32, len: 0 });
+        }
+        let body_start = p.len();
+        p.push(Instr::Lw { rd: ra::A_REG[0], base: ra::A_PTR[0], off: 0, post_inc: 4 });
+        for g in 0..groups {
+            unpack::emit_unpack_unsigned(p, ra::A_REG[1], ra::A_REG[0], src_bits, 8, g as u8);
+            p.push(Instr::Sw { rs: ra::A_REG[1], base: ra::A_PTR[1], off: 0, post_inc: 4 });
+        }
+        if full_words > 1 {
+            let len = (p.len() - body_start) as u16;
+            if let Instr::LpSetup { len: l, .. } = &mut p.instrs[setup_at] {
+                *l = len;
+            }
+        }
+    }
+    // Ragged tail: element-by-element.
+    let rem = n_elems % per_word;
+    if rem > 0 {
+        p.push(Instr::Lw { rd: ra::A_REG[0], base: ra::A_PTR[0], off: 0, post_inc: 4 });
+        for e in 0..rem {
+            p.push(Instr::ExtractU {
+                rd: ra::A_REG[1],
+                rs1: ra::A_REG[0],
+                off: (e * src_bits as usize) as u8,
+                len: src_bits,
+            });
+            p.push(Instr::Sb { rs: ra::A_REG[1], base: ra::A_PTR[1], off: 0, post_inc: 1 });
+        }
+    }
+}
+
+/// Emit the im2col of one output pixel `(oy, ox)` into the buffer row at
+/// `buf`. `buf_bits` is the buffer element width (8 when expanding).
+#[allow(clippy::too_many_arguments)]
+pub fn emit_im2col_pixel(
+    p: &mut Program,
+    g: &ConvGeom,
+    in_base: u32,
+    buf: u32,
+    oy: usize,
+    ox: usize,
+    buf_bits: u8,
+) {
+    let expand = buf_bits != g.a_bits;
+    assert!(!expand || buf_bits == 8, "expansion targets 8-bit buffers");
+    let elem_row = g.kw * g.cin; // elements per field row
+    let row_bytes = elem_row * buf_bits as usize / 8;
+    for ky in 0..g.kh {
+        let iy = (oy * g.stride + ky) as isize - g.pad_t as isize;
+        let dst = buf + (ky * row_bytes) as u32;
+        if iy < 0 || iy >= g.h as isize {
+            emit_zero(p, dst, row_bytes);
+            continue;
+        }
+        // x range of the field: [x0, x0 + kw)
+        let x0 = (ox * g.stride) as isize - g.pad_l as isize;
+        let lead = (-x0).clamp(0, g.kw as isize) as usize; // left padding pixels
+        let x_hi = ((g.w as isize - x0).clamp(0, g.kw as isize)) as usize; // first kw-index past data
+        let body = x_hi - lead;
+        let tail = g.kw - x_hi;
+        let cb = g.cin * buf_bits as usize / 8; // buffer bytes per pixel
+        if lead > 0 {
+            emit_zero(p, dst, lead * cb);
+        }
+        if body > 0 {
+            let src = g.in_addr(in_base, iy as usize, (x0 + lead as isize) as usize);
+            if expand {
+                emit_copy_expand(p, src, dst + (lead * cb) as u32, body * g.cin, g.a_bits);
+            } else {
+                emit_copy(p, src, dst + (lead * cb) as u32, body * g.cin * g.a_bits as usize / 8);
+            }
+        }
+        if tail > 0 {
+            emit_zero(p, dst + ((lead + body) * cb) as u32, tail * cb);
+        }
+    }
+    // Note: the zero padding of the buffer tail (k .. pitch) is emitted
+    // once per core by the conv kernel prologue, not per pixel.
+    let _ = AluOp::Add; // (silence unused import when cfg'd out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::QTensor;
+    use crate::sim::{ClusterMem, Core, TCDM_BASE};
+    use crate::util::Prng;
+
+    fn run(p: Program, mem: &mut ClusterMem) {
+        let mut c = Core::new(0);
+        c.load_program(p);
+        while !c.halted() {
+            let g = c.mem_request().is_some();
+            c.tick(mem, g);
+        }
+    }
+
+    #[test]
+    fn copy_and_zero() {
+        let mut mem = ClusterMem::new();
+        mem.write_bytes(TCDM_BASE, &(0..23u8).collect::<Vec<_>>());
+        let mut p = Program::new("t");
+        emit_copy(&mut p, TCDM_BASE, TCDM_BASE + 100, 23);
+        emit_zero(&mut p, TCDM_BASE + 100, 5);
+        p.push(Instr::Halt);
+        run(p, &mut mem);
+        let got = mem.read_bytes(TCDM_BASE + 100, 23);
+        let mut want: Vec<u8> = (0..23).collect();
+        for b in want.iter_mut().take(5) {
+            *b = 0;
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn copy_expand_matches_unpack() {
+        let mut mem = ClusterMem::new();
+        let mut rng = Prng::new(3);
+        let vals: Vec<u32> = (0..40).map(|_| rng.bits_unsigned(4)).collect();
+        let packed = crate::qnn::packing::pack_unsigned(&vals, 4);
+        mem.write_bytes(TCDM_BASE, &packed);
+        let mut p = Program::new("t");
+        emit_copy_expand(&mut p, TCDM_BASE, TCDM_BASE + 512, 40, 4);
+        p.push(Instr::Halt);
+        run(p, &mut mem);
+        let got = mem.read_bytes(TCDM_BASE + 512, 40);
+        assert_eq!(got, vals.iter().map(|&v| v as u8).collect::<Vec<_>>());
+    }
+
+    /// Reference im2col for the test.
+    fn golden_im2col(g: &ConvGeom, x: &QTensor, oy: usize, ox: usize) -> Vec<u32> {
+        let mut out = vec![];
+        for ky in 0..g.kh {
+            let iy = (oy * g.stride + ky) as isize - g.pad_t as isize;
+            for kx in 0..g.kw {
+                let ix = (ox * g.stride + kx) as isize - g.pad_l as isize;
+                for c in 0..g.cin {
+                    if iy < 0 || iy >= g.h as isize || ix < 0 || ix >= g.w as isize {
+                        out.push(0);
+                    } else {
+                        out.push(x.get_u(x.flat(&[iy as usize, ix as usize, c])));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn im2col_pixel_matches_golden_with_padding() {
+        let mut rng = Prng::new(7);
+        for (a_bits, cin) in [(8u8, 4usize), (4, 8), (2, 16)] {
+            let g = ConvGeom::square(6, 6, cin, 4, 3, 3, 1, 1, a_bits);
+            let x = QTensor::random(&[g.h, g.w, g.cin], a_bits, false, &mut rng);
+            let mut mem = ClusterMem::new();
+            mem.write_bytes(TCDM_BASE, &x.data);
+            let buf = TCDM_BASE + 4096;
+            for (oy, ox) in [(0, 0), (0, 3), (5, 5), (2, 2)] {
+                let mut p = Program::new("t");
+                emit_im2col_pixel(&mut p, &g, TCDM_BASE, buf, oy, ox, a_bits);
+                p.push(Instr::Halt);
+                run(p, &mut mem);
+                let want = golden_im2col(&g, &x, oy, ox);
+                let got_bytes = mem.read_bytes(buf, g.k() * a_bits as usize / 8);
+                let got = crate::qnn::packing::unpack_unsigned(&got_bytes, a_bits, g.k());
+                assert_eq!(got, want, "a{a_bits} pixel ({oy},{ox})");
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_pixel_expanding_subbyte() {
+        let mut rng = Prng::new(9);
+        let g = ConvGeom::square(5, 5, 8, 4, 3, 3, 2, 1, 4);
+        let x = QTensor::random(&[g.h, g.w, g.cin], 4, false, &mut rng);
+        let mut mem = ClusterMem::new();
+        mem.write_bytes(TCDM_BASE, &x.data);
+        let buf = TCDM_BASE + 4096;
+        let mut p = Program::new("t");
+        emit_im2col_pixel(&mut p, &g, TCDM_BASE, buf, 1, 1, 8);
+        p.push(Instr::Halt);
+        run(p, &mut mem);
+        let want = golden_im2col(&g, &x, 1, 1);
+        let got = mem.read_bytes(buf, g.k());
+        assert_eq!(got.iter().map(|&b| b as u32).collect::<Vec<_>>(), want);
+    }
+}

@@ -1,0 +1,603 @@
+//! Kernels for the non-GEMM operators of the end-to-end networks
+//! (Table IV): depthwise convolution, max/avg pooling, residual add,
+//! and the fully-connected wrapper.
+//!
+//! These follow PULP-NN's HWC strategies: depthwise processes groups of
+//! four channels with two-pixel unrolling (weights reordered to
+//! `[kh, kw, C]` at deployment so a tap's channel group is contiguous);
+//! pooling and add are element-wise sweeps parallelized over rows.
+
+use super::matmul::{gen_matmul, MatMulTask};
+use super::regalloc as ra;
+use super::requant::{emit_requant_block, RequantCfg};
+use crate::isa::{AluOp, Instr, IsaVariant, Program};
+use crate::qnn::Precision;
+
+/// Depthwise convolution task. Activations 8-bit (the evaluation networks
+/// use depthwise only in MobileNetV1, a8); weights 2/4/8-bit signed in
+/// deployment order `[kh, kw, C]`.
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+pub struct DwConvTask {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad_t: usize,
+    pub pad_b: usize,
+    pub pad_l: usize,
+    pub pad_r: usize,
+    pub w_bits: u8,
+    pub in_base: u32,
+    pub w_base: u32,
+    pub out_base: u32,
+    pub quant: RequantCfg,
+}
+
+impl DwConvTask {
+    pub fn out_h(&self) -> usize {
+        (self.h + self.pad_t + self.pad_b - self.kh) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.w + self.pad_l + self.pad_r - self.kw) / self.stride + 1
+    }
+    pub fn macs(&self) -> u64 {
+        (self.out_h() * self.out_w() * self.c * self.kh * self.kw) as u64
+    }
+    fn in_addr(&self, y: usize, x: usize, ch: usize) -> u32 {
+        self.in_base + ((y * self.w + x) * self.c + ch) as u32
+    }
+    fn w_addr(&self, ky: usize, kx: usize, ch: usize) -> u32 {
+        self.w_base + (((ky * self.kw + kx) * self.c + ch) * self.w_bits as usize / 8) as u32
+    }
+    fn out_addr(&self, pix: usize, ch: usize) -> u32 {
+        self.out_base + (pix * self.c + ch) as u32 * self.quant.out_bits as u32 / 8
+    }
+}
+
+/// Generate the per-core depthwise program: output pixels split across
+/// cores, channels processed in groups of 4 with the taps unrolled.
+pub fn gen_dwconv(_isa: IsaVariant, t: &DwConvTask, core: usize, n_cores: usize) -> Program {
+    assert!(t.c % 4 == 0, "depthwise channels must be a multiple of 4");
+    let m = t.out_h() * t.out_w();
+    let (lo, hi) = super::matmul::row_range(m, core, n_cores);
+    let mut p = Program::new(format!("dwconv-c{core}"));
+    for pix in lo..hi {
+        let (oy, ox) = (pix / t.out_w(), pix % t.out_w());
+        for ch in (0..t.c).step_by(4) {
+            // acc(f) for f in 0..4 = the four channels of the group
+            for f in 0..4 {
+                p.push(Instr::Li { rd: ra::acc(f), imm: 0 });
+            }
+            for ky in 0..t.kh {
+                let iy = (oy * t.stride + ky) as isize - t.pad_t as isize;
+                if iy < 0 || iy >= t.h as isize {
+                    continue; // zero padding contributes nothing
+                }
+                for kx in 0..t.kw {
+                    let ix = (ox * t.stride + kx) as isize - t.pad_l as isize;
+                    if ix < 0 || ix >= t.w as isize {
+                        continue;
+                    }
+                    // activation word: 4 channels of (iy, ix)
+                    p.push(Instr::Li {
+                        rd: ra::A_PTR[0],
+                        imm: t.in_addr(iy as usize, ix as usize, ch) as i32,
+                    });
+                    p.push(Instr::Lw { rd: ra::A_REG[0], base: ra::A_PTR[0], off: 0, post_inc: 0 });
+                    // weight group: 4 channels of tap (ky, kx), packed
+                    p.push(Instr::Li { rd: ra::A_PTR[1], imm: t.w_addr(ky, kx, ch) as i32 });
+                    match t.w_bits {
+                        8 => {
+                            p.push(Instr::Lw {
+                                rd: ra::W_REG[0],
+                                base: ra::A_PTR[1],
+                                off: 0,
+                                post_inc: 0,
+                            });
+                        }
+                        _ => {
+                            // 4 channels * w_bits <= 16 bits: byte loads
+                            let bytes = (4 * t.w_bits as usize).div_ceil(8);
+                            p.push(Instr::Lbu {
+                                rd: ra::W_REG[0],
+                                base: ra::A_PTR[1],
+                                off: 0,
+                                post_inc: 0,
+                            });
+                            if bytes == 2 {
+                                p.push(Instr::Lbu {
+                                    rd: ra::TMP[3],
+                                    base: ra::A_PTR[1],
+                                    off: 1,
+                                    post_inc: 0,
+                                });
+                                p.push(Instr::AluI {
+                                    op: AluOp::Sll,
+                                    rd: ra::TMP[3],
+                                    rs1: ra::TMP[3],
+                                    imm: 8,
+                                });
+                                p.push(Instr::Alu {
+                                    op: AluOp::Or,
+                                    rd: ra::W_REG[0],
+                                    rs1: ra::W_REG[0],
+                                    rs2: ra::TMP[3],
+                                });
+                            }
+                        }
+                    }
+                    // per-channel extract + MAC
+                    for f in 0..4u8 {
+                        p.push(Instr::ExtractU {
+                            rd: ra::TMP[0],
+                            rs1: ra::A_REG[0],
+                            off: 8 * f,
+                            len: 8,
+                        });
+                        p.push(Instr::Extract {
+                            rd: ra::TMP[1],
+                            rs1: ra::W_REG[0],
+                            off: t.w_bits * f,
+                            len: t.w_bits,
+                        });
+                        p.push(Instr::Mac { rd: ra::acc(f as usize), rs1: ra::TMP[0], rs2: ra::TMP[1] });
+                    }
+                }
+            }
+            emit_requant_block(&mut p, &t.quant, ch, 4, 1, |_| t.out_addr(pix, ch));
+        }
+    }
+    p.push(Instr::Barrier);
+    p.push(Instr::Halt);
+    p
+}
+
+/// Fully-connected layer: a 1-row MatMul.
+#[allow(clippy::too_many_arguments)]
+pub fn gen_linear(
+    isa: IsaVariant,
+    prec: Precision,
+    cin: usize,
+    cout: usize,
+    in_base: u32,
+    w_base: u32,
+    w_pitch: u32,
+    out_base: u32,
+    quant: RequantCfg,
+    core: usize,
+    n_cores: usize,
+) -> Program {
+    // Parallelize over output-channel groups by splitting the single GEMM
+    // row across cores is useless; instead give each core a slice of
+    // channels via a per-core sub-task.
+    assert!(cout % 4 == 0);
+    let groups = cout / 4;
+    let per = groups.div_ceil(n_cores);
+    let g_lo = (core * per).min(groups);
+    let g_hi = ((core + 1) * per).min(groups);
+    let lanes = 32 / prec.a_bits as usize;
+    let t = MatMulTask {
+        m: 1,
+        n: (g_hi - g_lo) * 4,
+        k: cin,
+        prec,
+        a_base: in_base,
+        a_pitch: (cin.div_ceil(lanes) * 4) as u32,
+        w_base: w_base + (g_lo * 4) as u32 * w_pitch,
+        w_pitch,
+        out_base: out_base + ((g_lo * 4) * quant.out_bits as usize / 8) as u32,
+        out_pitch: (cout * quant.out_bits as usize / 8) as u32,
+        quant: RequantCfg {
+            mult_base: quant.mult_base + (g_lo * 16) as u32,
+            bias_base: quant.bias_base + (g_lo * 16) as u32,
+            ..quant
+        },
+    };
+    if g_hi > g_lo {
+        gen_matmul(isa, &t, 0, 1)
+    } else {
+        let mut p = Program::new(format!("linear-idle-c{core}"));
+        p.push(Instr::Barrier);
+        p.push(Instr::Halt);
+        p
+    }
+}
+
+/// Element-wise residual add: `out = clip((x1*m1 + x2*m2) >> shift)`,
+/// 8-/4-bit unsigned operands, rows split across cores.
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+pub struct AddTask {
+    /// Total elements (H*W*C).
+    pub n: usize,
+    pub bits: u8,
+    pub out_bits: u8,
+    pub m1: i32,
+    pub m2: i32,
+    pub shift: u8,
+    pub x1_base: u32,
+    pub x2_base: u32,
+    pub out_base: u32,
+}
+
+pub fn gen_add(t: &AddTask, core: usize, n_cores: usize) -> Program {
+    let lanes = 8 / t.bits as usize; // elements per byte
+    let bytes = t.n / lanes;
+    let per = (bytes.div_ceil(n_cores)).next_multiple_of(1);
+    let lo = (core * per).min(bytes);
+    let hi = ((core + 1) * per).min(bytes);
+    let mut p = Program::new(format!("add-c{core}"));
+    if hi > lo {
+        p.push(Instr::Li { rd: ra::A_PTR[0], imm: (t.x1_base + lo as u32) as i32 });
+        p.push(Instr::Li { rd: ra::A_PTR[1], imm: (t.x2_base + lo as u32) as i32 });
+        p.push(Instr::Li { rd: ra::OUT_PTR, imm: (t.out_base + lo as u32) as i32 });
+        p.push(Instr::Li { rd: ra::W_REG[0], imm: t.m1 });
+        p.push(Instr::Li { rd: ra::W_REG[1], imm: t.m2 });
+        let body_at = p.len();
+        p.push(Instr::LpSetup { l: 0, count: (hi - lo) as u32, len: 0 });
+        let start = p.len();
+        p.push(Instr::Lbu { rd: ra::A_REG[0], base: ra::A_PTR[0], off: 0, post_inc: 1 });
+        p.push(Instr::Lbu { rd: ra::A_REG[1], base: ra::A_PTR[1], off: 0, post_inc: 1 });
+        let out_reg = ra::TMP[2];
+        p.push(Instr::Li { rd: out_reg, imm: 0 });
+        for e in 0..lanes {
+            let off = (e * t.bits as usize) as u8;
+            p.push(Instr::ExtractU { rd: ra::TMP[0], rs1: ra::A_REG[0], off, len: t.bits });
+            p.push(Instr::ExtractU { rd: ra::TMP[1], rs1: ra::A_REG[1], off, len: t.bits });
+            // acc = x1*m1 + x2*m2 via two MACs into TMP[3]
+            p.push(Instr::Li { rd: ra::TMP[3], imm: 0 });
+            p.push(Instr::Mac { rd: ra::TMP[3], rs1: ra::TMP[0], rs2: ra::W_REG[0] });
+            p.push(Instr::Mac { rd: ra::TMP[3], rs1: ra::TMP[1], rs2: ra::W_REG[1] });
+            p.push(Instr::AluI { op: AluOp::Sra, rd: ra::TMP[3], rs1: ra::TMP[3], imm: t.shift as i32 });
+            p.push(Instr::Clipu { rd: ra::TMP[3], rs1: ra::TMP[3], bits: t.out_bits });
+            let out_off = (e * t.out_bits as usize) as u8;
+            p.push(Instr::Insert { rd: out_reg, rs1: ra::TMP[3], off: out_off, len: t.out_bits });
+        }
+        // out_bits may differ from bits; store the produced bytes
+        let out_bytes = lanes * t.out_bits as usize / 8;
+        for byt in 0..out_bytes {
+            if byt == 0 {
+                p.push(Instr::Sb { rs: out_reg, base: ra::OUT_PTR, off: 0, post_inc: 0 });
+            } else {
+                p.push(Instr::AluI { op: AluOp::Srl, rd: ra::TMP[0], rs1: out_reg, imm: 8 * byt as i32 });
+                p.push(Instr::Sb { rs: ra::TMP[0], base: ra::OUT_PTR, off: byt as i32, post_inc: 0 });
+            }
+        }
+        p.push(Instr::AluI { op: AluOp::Add, rd: ra::OUT_PTR, rs1: ra::OUT_PTR, imm: out_bytes as i32 });
+        let len = (p.len() - start) as u16;
+        if let Instr::LpSetup { len: l, .. } = &mut p.instrs[body_at] {
+            *l = len;
+        }
+    }
+    p.push(Instr::Barrier);
+    p.push(Instr::Halt);
+    p
+}
+
+/// Average pooling over a full feature map window (global or strided),
+/// requantized. Channels split across cores (channel groups of 4 at 8 bit).
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+pub struct AvgPoolTask {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub bits: u8,
+    pub in_base: u32,
+    pub out_base: u32,
+    pub quant: RequantCfg,
+}
+
+pub fn gen_avgpool(t: &AvgPoolTask, core: usize, n_cores: usize) -> Program {
+    let oh = (t.h - t.k) / t.stride + 1;
+    let ow = (t.w - t.k) / t.stride + 1;
+    let (c_lo, c_hi) = super::matmul::row_range(t.c, core, n_cores);
+    let mut p = Program::new(format!("avgpool-c{core}"));
+    let lanes = 8 / t.bits as usize;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in c_lo..c_hi {
+                p.push(Instr::Li { rd: ra::acc(0), imm: 0 });
+                for ky in 0..t.k {
+                    for kx in 0..t.k {
+                        let (iy, ix) = (oy * t.stride + ky, ox * t.stride + kx);
+                        let elem = (iy * t.w + ix) * t.c + ch;
+                        let addr = t.in_base + (elem / lanes) as u32;
+                        p.push(Instr::Li { rd: ra::A_PTR[0], imm: addr as i32 });
+                        p.push(Instr::Lbu { rd: ra::A_REG[0], base: ra::A_PTR[0], off: 0, post_inc: 0 });
+                        p.push(Instr::ExtractU {
+                            rd: ra::TMP[0],
+                            rs1: ra::A_REG[0],
+                            off: ((elem % lanes) * t.bits as usize) as u8,
+                            len: t.bits,
+                        });
+                        p.push(Instr::Alu { op: AluOp::Add, rd: ra::acc(0), rs1: ra::acc(0), rs2: ra::TMP[0] });
+                    }
+                }
+                // requant: (acc + bias) * mult >> shift, clip
+                p.push(Instr::Li { rd: ra::Q_PTR, imm: (t.quant.mult_base + 4 * ch as u32) as i32 });
+                p.push(Instr::Lw { rd: ra::TMP[1], base: ra::Q_PTR, off: 0, post_inc: 0 });
+                p.push(Instr::Li { rd: ra::Q_PTR, imm: (t.quant.bias_base + 4 * ch as u32) as i32 });
+                p.push(Instr::Lw { rd: ra::TMP[2], base: ra::Q_PTR, off: 0, post_inc: 0 });
+                p.push(Instr::Alu { op: AluOp::Add, rd: ra::acc(0), rs1: ra::acc(0), rs2: ra::TMP[2] });
+                p.push(Instr::Alu { op: AluOp::Mul, rd: ra::acc(0), rs1: ra::acc(0), rs2: ra::TMP[1] });
+                p.push(Instr::AluI { op: AluOp::Sra, rd: ra::acc(0), rs1: ra::acc(0), imm: t.quant.shift as i32 });
+                p.push(Instr::Clipu { rd: ra::acc(0), rs1: ra::acc(0), bits: t.quant.out_bits });
+                // store (read-modify-write byte for sub-byte outputs)
+                let out_lanes = 8 / t.quant.out_bits as usize;
+                let oelem = (oy * ow + ox) * t.c + ch;
+                let oaddr = t.out_base + (oelem / out_lanes) as u32;
+                p.push(Instr::Li { rd: ra::OUT_PTR, imm: oaddr as i32 });
+                if out_lanes == 1 {
+                    p.push(Instr::Sb { rs: ra::acc(0), base: ra::OUT_PTR, off: 0, post_inc: 0 });
+                } else {
+                    p.push(Instr::Lbu { rd: ra::TMP[0], base: ra::OUT_PTR, off: 0, post_inc: 0 });
+                    p.push(Instr::Insert {
+                        rd: ra::TMP[0],
+                        rs1: ra::acc(0),
+                        off: ((oelem % out_lanes) * t.quant.out_bits as usize) as u8,
+                        len: t.quant.out_bits,
+                    });
+                    p.push(Instr::Sb { rs: ra::TMP[0], base: ra::OUT_PTR, off: 0, post_inc: 0 });
+                }
+            }
+        }
+    }
+    p.push(Instr::Barrier);
+    p.push(Instr::Halt);
+    p
+}
+
+/// Max pooling (8-bit activations), rows split across cores.
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+pub struct MaxPoolTask {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub in_base: u32,
+    pub out_base: u32,
+}
+
+pub fn gen_maxpool(t: &MaxPoolTask, core: usize, n_cores: usize) -> Program {
+    let oh = (t.h - t.k) / t.stride + 1;
+    let ow = (t.w - t.k) / t.stride + 1;
+    let m = oh * ow;
+    let (lo, hi) = super::matmul::row_range(m, core, n_cores);
+    let mut p = Program::new(format!("maxpool-c{core}"));
+    for pix in lo..hi {
+        let (oy, ox) = (pix / ow, pix % ow);
+        for ch in 0..t.c {
+            p.push(Instr::Li { rd: ra::acc(0), imm: 0 });
+            for ky in 0..t.k {
+                for kx in 0..t.k {
+                    let (iy, ix) = (oy * t.stride + ky, ox * t.stride + kx);
+                    let addr = t.in_base + ((iy * t.w + ix) * t.c + ch) as u32;
+                    p.push(Instr::Li { rd: ra::A_PTR[0], imm: addr as i32 });
+                    p.push(Instr::Lbu { rd: ra::A_REG[0], base: ra::A_PTR[0], off: 0, post_inc: 0 });
+                    p.push(Instr::Alu { op: AluOp::Max, rd: ra::acc(0), rs1: ra::acc(0), rs2: ra::A_REG[0] });
+                }
+            }
+            let oaddr = t.out_base + ((oy * ow + ox) * t.c + ch) as u32;
+            p.push(Instr::Li { rd: ra::OUT_PTR, imm: oaddr as i32 });
+            p.push(Instr::Sb { rs: ra::acc(0), base: ra::OUT_PTR, off: 0, post_inc: 0 });
+        }
+    }
+    p.push(Instr::Barrier);
+    p.push(Instr::Halt);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::{golden, QTensor, QuantParams};
+    use crate::sim::{Cluster, TCDM_BASE};
+    use crate::util::Prng;
+
+    #[test]
+    fn dwconv_matches_golden() {
+        let mut rng = Prng::new(31);
+        let (h, w, c) = (5, 5, 8);
+        for w_bits in [8u8, 4] {
+            let x = QTensor::random(&[h, w, c], 8, false, &mut rng);
+            // weights in layer order [C, kh, kw, 1]
+            let wt = QTensor::random(&[c, 3, 3, 1], w_bits, true, &mut rng);
+            let q = QuantParams {
+                mult: (0..c).map(|_| rng.range_i64(1, 4) as i32).collect(),
+                shift: 5,
+                bias: (0..c).map(|_| rng.range_i64(-32, 32) as i32).collect(),
+                out_bits: 8,
+            };
+            // deployment order [kh, kw, C]
+            let mut dep = vec![0i32; c * 9];
+            for ch in 0..c {
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        dep[(ky * 3 + kx) * c + ch] = wt.get_i(wt.flat(&[ch, ky, kx, 0]));
+                    }
+                }
+            }
+            let dep_t = QTensor::from_signed(&[9, c], w_bits, &dep);
+            let in_base = TCDM_BASE;
+            let w_base = in_base + 2048;
+            let mult_base = w_base + 1024;
+            let bias_base = mult_base + 256;
+            let out_base = bias_base + 256;
+            let t = DwConvTask {
+                h,
+                w,
+                c,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad_t: 1,
+                pad_b: 1,
+                pad_l: 1,
+                pad_r: 1,
+                w_bits,
+                in_base,
+                w_base,
+                out_base,
+                quant: RequantCfg { mult_base, bias_base, shift: q.shift, out_bits: 8 },
+            };
+            let mut cl = Cluster::new(4);
+            cl.mem.write_bytes(in_base, &x.data);
+            cl.mem.write_bytes(w_base, &dep_t.data);
+            for ch in 0..c {
+                cl.mem.store_u32(mult_base + 4 * ch as u32, q.mult[ch] as u32);
+                cl.mem.store_u32(bias_base + 4 * ch as u32, q.bias[ch] as u32);
+            }
+            cl.load_programs((0..4).map(|i| gen_dwconv(IsaVariant::FlexV, &t, i, 4)).collect());
+            let stats = cl.run();
+            assert_eq!(stats.total_macs(), t.macs() - padding_macs(&t, &x), "w{w_bits}");
+            let want = golden::dwconv2d(&x, &wt, &q, 3, 3, 1, 1);
+            assert_eq!(cl.mem.read_bytes(out_base, want.bytes()), want.data, "w{w_bits}");
+        }
+    }
+
+    /// MACs skipped because the receptive field hangs over the padding
+    /// (the kernel skips zero taps; golden counts only real MACs too).
+    fn padding_macs(t: &DwConvTask, _x: &QTensor) -> u64 {
+        let mut skipped = 0u64;
+        for oy in 0..t.out_h() {
+            for ox in 0..t.out_w() {
+                for ky in 0..t.kh {
+                    for kx in 0..t.kw {
+                        let iy = (oy * t.stride + ky) as isize - t.pad_t as isize;
+                        let ix = (ox * t.stride + kx) as isize - t.pad_l as isize;
+                        if iy < 0 || iy >= t.h as isize || ix < 0 || ix >= t.w as isize {
+                            skipped += t.c as u64;
+                        }
+                    }
+                }
+            }
+        }
+        skipped
+    }
+
+    #[test]
+    fn add_matches_golden() {
+        let mut rng = Prng::new(33);
+        for bits in [8u8, 4] {
+            let n = 64usize;
+            let x1 = QTensor::random(&[n], bits, false, &mut rng);
+            let x2 = QTensor::random(&[n], bits, false, &mut rng);
+            let (m1, m2, shift) = (3, 2, 2u8);
+            let t = AddTask {
+                n,
+                bits,
+                out_bits: bits,
+                m1,
+                m2,
+                shift,
+                x1_base: TCDM_BASE,
+                x2_base: TCDM_BASE + 256,
+                out_base: TCDM_BASE + 512,
+            };
+            let mut cl = Cluster::new(3);
+            cl.mem.write_bytes(t.x1_base, &x1.data);
+            cl.mem.write_bytes(t.x2_base, &x2.data);
+            cl.load_programs((0..3).map(|i| gen_add(&t, i, 3)).collect());
+            cl.run();
+            let q = QuantParams::scalar(1, shift, 0, bits, 1);
+            let want = golden::run_add(&x1, &x2, m1, m2, &q);
+            assert_eq!(cl.mem.read_bytes(t.out_base, want.bytes()), want.data, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn avgpool_matches_golden() {
+        let mut rng = Prng::new(35);
+        let (h, w, c, k) = (4, 4, 8, 4);
+        let x = QTensor::random(&[h, w, c], 8, false, &mut rng);
+        let q = QuantParams::scalar(1, 4, 0, 8, c); // /16 = >>4
+        let t = AvgPoolTask {
+            h,
+            w,
+            c,
+            k,
+            stride: k,
+            bits: 8,
+            in_base: TCDM_BASE,
+            out_base: TCDM_BASE + 1024,
+            quant: RequantCfg {
+                mult_base: TCDM_BASE + 2048,
+                bias_base: TCDM_BASE + 2304,
+                shift: 4,
+                out_bits: 8,
+            },
+        };
+        let mut cl = Cluster::new(4);
+        cl.mem.write_bytes(t.in_base, &x.data);
+        for ch in 0..c {
+            cl.mem.store_u32(t.quant.mult_base + 4 * ch as u32, 1);
+            cl.mem.store_u32(t.quant.bias_base + 4 * ch as u32, 0);
+        }
+        cl.load_programs((0..4).map(|i| gen_avgpool(&t, i, 4)).collect());
+        cl.run();
+        let want = golden::avgpool(&x, &q, k, k);
+        assert_eq!(cl.mem.read_bytes(t.out_base, want.bytes()), want.data);
+    }
+
+    #[test]
+    fn maxpool_matches_golden() {
+        let mut rng = Prng::new(37);
+        let (h, w, c) = (6, 6, 4);
+        let x = QTensor::random(&[h, w, c], 8, false, &mut rng);
+        let t = MaxPoolTask {
+            h,
+            w,
+            c,
+            k: 2,
+            stride: 2,
+            in_base: TCDM_BASE,
+            out_base: TCDM_BASE + 1024,
+        };
+        let mut cl = Cluster::new(2);
+        cl.mem.write_bytes(t.in_base, &x.data);
+        cl.load_programs((0..2).map(|i| gen_maxpool(&t, i, 2)).collect());
+        cl.run();
+        let want = golden::maxpool(&x, 2, 2);
+        assert_eq!(cl.mem.read_bytes(t.out_base, want.bytes()), want.data);
+    }
+
+    #[test]
+    fn linear_matches_golden() {
+        let mut rng = Prng::new(39);
+        let (cin, cout) = (32usize, 8usize);
+        let prec = Precision::new(8, 8);
+        let x = QTensor::random(&[1, 1, cin], 8, false, &mut rng);
+        let wt = QTensor::random(&[cout, cin], 8, true, &mut rng);
+        let q = QuantParams {
+            mult: (0..cout).map(|_| rng.range_i64(1, 4) as i32).collect(),
+            shift: 8,
+            bias: (0..cout).map(|_| rng.range_i64(-64, 64) as i32).collect(),
+            out_bits: 8,
+        };
+        let in_base = TCDM_BASE;
+        let w_base = TCDM_BASE + 256;
+        let mult_base = w_base + 2048;
+        let bias_base = mult_base + 128;
+        let out_base = bias_base + 128;
+        let mut cl = Cluster::new(3);
+        cl.mem.write_bytes(in_base, &x.data);
+        cl.mem.write_bytes(w_base, &wt.data);
+        for ch in 0..cout {
+            cl.mem.store_u32(mult_base + 4 * ch as u32, q.mult[ch] as u32);
+            cl.mem.store_u32(bias_base + 4 * ch as u32, q.bias[ch] as u32);
+        }
+        let quant = RequantCfg { mult_base, bias_base, shift: q.shift, out_bits: 8 };
+        cl.load_programs(
+            (0..3)
+                .map(|i| gen_linear(IsaVariant::FlexV, prec, cin, cout, in_base, w_base, cin as u32, out_base, quant, i, 3))
+                .collect(),
+        );
+        cl.run();
+        let want = golden::linear(&x, &wt, &q);
+        assert_eq!(cl.mem.read_bytes(out_base, want.bytes()), want.data);
+    }
+}

@@ -1,0 +1,86 @@
+//! The optimized QNN kernel library ("PULP-NN-Flex").
+//!
+//! Generators that emit, per ISA variant × precision configuration, the
+//! instruction streams of the paper's optimized kernels:
+//!
+//! - [`matmul`] — the MatMul phase (§II-B) with the per-core register
+//!   blocking of each ISA: non-Mac&Load "4×2" (RI5CY / MPIC, PULP-NN
+//!   style), Mac&Load "4×2" (XpulpNN uniform), and the Flex-V Mac&Load
+//!   "4×4" of Fig. 5 with MLC-generated addressing;
+//! - [`unpack`] — the software pack/unpack sequences (p.extract/p.insert)
+//!   that ISAs *without* native support must insert (§I: "massive software
+//!   overhead"), reproducing the XpulpNN/RI5CY collapse on mixed precision;
+//! - [`requant`] — the Quantization phase: one MAC, one shift, one clip per
+//!   output plus sub-byte repacking;
+//! - [`im2col`] — the im2col phase building per-output-pixel buffers;
+//! - [`conv`] — full convolution kernels (im2col + MatMul + requant),
+//!   parallelized over output pixels across the 8 cores;
+//! - [`layers`] — the remaining operators of the end-to-end networks
+//!   (depthwise conv, linear, max/avg pool, residual add).
+//!
+//! Every generator returns plain [`Program`]s executed by
+//! [`crate::sim::Cluster`]; outputs are validated bit-exactly against
+//! [`crate::qnn::golden`].
+
+pub mod conv;
+pub mod im2col;
+pub mod layers;
+pub mod matmul;
+pub mod regalloc;
+pub mod requant;
+pub mod unpack;
+
+pub use conv::ConvTask;
+pub use matmul::MatMulTask;
+pub use requant::RequantCfg;
+
+use crate::isa::IsaVariant;
+use crate::qnn::Precision;
+
+/// How a given (ISA, precision) pair executes the MatMul inner loop —
+/// the qualitative story of Table III.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum InnerLoopKind {
+    /// Flex-V: mixed-precision Mac&Load, 4×4 blocking, MLC addressing.
+    MacLoad4x4,
+    /// XpulpNN on uniform formats: Mac&Load, 4×2 blocking.
+    MacLoad4x2,
+    /// MPIC (and uniform-native cases without Mac&Load): explicit loads,
+    /// 4×2 blocking, hardware mixed-precision sdotp.
+    Plain4x2,
+    /// Software weight-unpacking before each sdotp (RI5CY sub-byte,
+    /// XpulpNN mixed): the collapse cases of Table III.
+    SwUnpack4x2,
+}
+
+/// Classify the inner loop used for `(isa, prec)`.
+pub fn inner_loop_kind(isa: IsaVariant, prec: Precision) -> InnerLoopKind {
+    if isa.supports_natively(prec) {
+        match isa {
+            IsaVariant::FlexV => InnerLoopKind::MacLoad4x4,
+            IsaVariant::XpulpNn => InnerLoopKind::MacLoad4x2,
+            _ => InnerLoopKind::Plain4x2,
+        }
+    } else {
+        InnerLoopKind::SwUnpack4x2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inner_loop_classification_matches_paper_story() {
+        use IsaVariant::*;
+        let a8w8 = Precision::new(8, 8);
+        let a8w4 = Precision::new(8, 4);
+        let a2w2 = Precision::new(2, 2);
+        assert_eq!(inner_loop_kind(FlexV, a8w4), InnerLoopKind::MacLoad4x4);
+        assert_eq!(inner_loop_kind(XpulpNn, a2w2), InnerLoopKind::MacLoad4x2);
+        assert_eq!(inner_loop_kind(XpulpNn, a8w4), InnerLoopKind::SwUnpack4x2);
+        assert_eq!(inner_loop_kind(Mpic, a8w4), InnerLoopKind::Plain4x2);
+        assert_eq!(inner_loop_kind(Ri5cy, a8w8), InnerLoopKind::Plain4x2);
+        assert_eq!(inner_loop_kind(Ri5cy, a8w4), InnerLoopKind::SwUnpack4x2);
+    }
+}

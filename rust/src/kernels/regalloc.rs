@@ -1,0 +1,29 @@
+//! Register-file allocation convention shared by all kernel generators.
+//!
+//! RI5CY's GP-RF has 32 registers; the paper's point is precisely that the
+//! "4×2" blocking of PULP-NN saturates it, while Flex-V's NN-RF frees
+//! enough registers for "4×4" (§III). The map below mirrors the PULP-NN
+//! allocation with the accumulators front and center.
+
+use crate::isa::Reg;
+
+/// Accumulators: x1..x16 (up to 16 for the Flex-V 4×4 block).
+pub fn acc(i: usize) -> Reg {
+    debug_assert!(i < 16);
+    (1 + i) as Reg
+}
+
+/// Activation words for non-Mac&Load kernels (two im2col buffers).
+pub const A_REG: [Reg; 2] = [17, 18];
+/// Packed weight words (four filters).
+pub const W_REG: [Reg; 4] = [19, 20, 21, 22];
+/// im2col buffer pointers.
+pub const A_PTR: [Reg; 2] = [23, 24];
+/// Weight pointer.
+pub const W_PTR: Reg = 25;
+/// Scratch temporaries (software unpack, requant).
+pub const TMP: [Reg; 4] = [26, 27, 28, 29];
+/// Requant: per-filter multipliers live in W_REG, biases in TMP after the
+/// K-loop retires; these two extra pointers address quant arrays / output.
+pub const OUT_PTR: Reg = 30;
+pub const Q_PTR: Reg = 31;

@@ -1,0 +1,203 @@
+//! Generator for the Quantization phase (§II-B): bring a block of 32-bit
+//! accumulators back to the low-bitwidth output format with one MAC-class
+//! op, one shift and one clip per output, then repack sub-byte outputs.
+
+use super::regalloc as ra;
+use crate::isa::{AluOp, Instr, Program, Reg};
+
+/// Requantization configuration of a MatMul/conv kernel.
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+pub struct RequantCfg {
+    /// TCDM base of the per-channel i32 multiplier array.
+    pub mult_base: u32,
+    /// TCDM base of the per-channel i32 bias array.
+    pub bias_base: u32,
+    /// Arithmetic right shift.
+    pub shift: u8,
+    /// Output bit-width (2/4/8, unsigned).
+    pub out_bits: u8,
+}
+
+/// Emit the requant + store sequence for a block of `nb` rows × `nf`
+/// filter outputs whose accumulators sit in `ra::acc(f*nb + b)`.
+///
+/// `out_addr(b)` gives the TCDM byte address of output element
+/// `(row b, channel n_base)`; channels `n_base..n_base+nf` are consecutive
+/// in HWC so the `nf` outputs of one row pack into `nf*out_bits` bits.
+/// Requires `nf*out_bits % 8 == 0` (byte-aligned stores, the DORY
+/// invariant) and `nf <= 4`.
+pub fn emit_requant_block(
+    p: &mut Program,
+    cfg: &RequantCfg,
+    n_base: usize,
+    nf: usize,
+    nb: usize,
+    out_addr: impl Fn(usize) -> u32,
+) {
+    assert!(nf <= 4 && nf * cfg.out_bits as usize % 8 == 0);
+    // Per-filter multiplier/bias loads (hoisted; W/A regs are dead here).
+    // mult_f -> W_REG[f], bias_f -> TMP[f].
+    for f in 0..nf {
+        p.push(Instr::Li {
+            rd: ra::Q_PTR,
+            imm: (cfg.mult_base + 4 * (n_base + f) as u32) as i32,
+        });
+        p.push(Instr::Lw { rd: ra::W_REG[f], base: ra::Q_PTR, off: 0, post_inc: 0 });
+        p.push(Instr::Li {
+            rd: ra::Q_PTR,
+            imm: (cfg.bias_base + 4 * (n_base + f) as u32) as i32,
+        });
+        p.push(Instr::Lw { rd: ra::TMP[f], base: ra::Q_PTR, off: 0, post_inc: 0 });
+    }
+    for b in 0..nb {
+        // Requantize the nf outputs of row b in place (accumulator regs).
+        for f in 0..nf {
+            let a: Reg = ra::acc(f * nb + b);
+            // acc += bias  (the "one MAC" of the paper folds bias+scale;
+            // we cost the same three ops: add/mul, shift, clip)
+            p.push(Instr::Alu { op: AluOp::Add, rd: a, rs1: a, rs2: ra::TMP[f] });
+            p.push(Instr::Alu { op: AluOp::Mul, rd: a, rs1: a, rs2: ra::W_REG[f] });
+            p.push(Instr::AluI { op: AluOp::Sra, rd: a, rs1: a, imm: cfg.shift as i32 });
+            p.push(Instr::Clipu { rd: a, rs1: a, bits: cfg.out_bits });
+        }
+        // Pack the nf outputs of row b into one word via p.insert.
+        let pack: Reg = ra::A_REG[0]; // dead after the K-loop
+        for f in 0..nf {
+            if f == 0 {
+                // first insert also clears the word: mov via ALU
+                p.push(Instr::Alu {
+                    op: AluOp::Add,
+                    rd: pack,
+                    rs1: ra::acc(b), // f == 0
+                    rs2: 0,
+                });
+            } else {
+                p.push(Instr::Insert {
+                    rd: pack,
+                    rs1: ra::acc(f * nb + b),
+                    off: (f * cfg.out_bits as usize) as u8,
+                    len: cfg.out_bits,
+                });
+            }
+        }
+        // Store the packed bits (byte-aligned by the assertion above).
+        let bytes = nf * cfg.out_bits as usize / 8;
+        p.push(Instr::Li { rd: ra::OUT_PTR, imm: out_addr(b) as i32 });
+        match bytes {
+            4 => {
+                p.push(Instr::Sw { rs: pack, base: ra::OUT_PTR, off: 0, post_inc: 0 });
+            }
+            _ => {
+                // store byte by byte (1 or 2 bytes)
+                let shreg: Reg = ra::A_REG[1];
+                for byte in 0..bytes {
+                    if byte == 0 {
+                        p.push(Instr::Sb { rs: pack, base: ra::OUT_PTR, off: 0, post_inc: 0 });
+                    } else {
+                        p.push(Instr::AluI {
+                            op: AluOp::Srl,
+                            rd: shreg,
+                            rs1: pack,
+                            imm: 8 * byte as i32,
+                        });
+                        p.push(Instr::Sb {
+                            rs: shreg,
+                            base: ra::OUT_PTR,
+                            off: byte as i32,
+                            post_inc: 0,
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+    use crate::sim::{ClusterMem, Core, TCDM_BASE};
+
+    fn run(prog: Program, mem: &mut ClusterMem, setup: impl FnOnce(&mut Core)) -> Core {
+        let mut c = Core::new(0);
+        c.load_program(prog);
+        setup(&mut c);
+        while !c.halted() {
+            let granted = c.mem_request().is_some();
+            c.tick(mem, granted);
+        }
+        c
+    }
+
+    #[test]
+    fn requant_block_matches_reference() {
+        // 4 filters x 2 rows; acc(f*2+b) preset; mult/bias in TCDM.
+        let mut mem = ClusterMem::new();
+        let mult_base = TCDM_BASE;
+        let bias_base = TCDM_BASE + 64;
+        let out_base = TCDM_BASE + 128;
+        let mults = [3i32, 5, 7, 11];
+        let biases = [100i32, -50, 0, 25];
+        for f in 0..4 {
+            mem.store_u32(mult_base + 4 * f as u32, mults[f] as u32);
+            mem.store_u32(bias_base + 4 * f as u32, biases[f] as u32);
+        }
+        let cfg = RequantCfg { mult_base, bias_base, shift: 6, out_bits: 8 };
+        let accs: [[i32; 2]; 4] = [[500, -200], [1000, 40], [77, 3000], [-5, 9999]];
+
+        let mut p = Program::new("rq");
+        emit_requant_block(&mut p, &cfg, 0, 4, 2, |b| out_base + 4 * b as u32);
+        p.push(Instr::Halt);
+        run(p, &mut mem, |c| {
+            for f in 0..4 {
+                for b in 0..2 {
+                    c.regs[ra::acc(f * 2 + b) as usize] = accs[f][b] as u32;
+                }
+            }
+        });
+
+        let q = crate::qnn::QuantParams {
+            mult: mults.to_vec(),
+            shift: 6,
+            bias: biases.to_vec(),
+            out_bits: 8,
+        };
+        for b in 0..2 {
+            let word = mem.load_u32(out_base + 4 * b as u32);
+            for f in 0..4 {
+                let got = (word >> (8 * f)) & 0xFF;
+                let want = q.requant(accs[f][b], f);
+                assert_eq!(got, want, "f={f} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn requant_subbyte_packing() {
+        // out_bits=2: 4 filter outputs pack into one byte.
+        let mut mem = ClusterMem::new();
+        let cfg = RequantCfg {
+            mult_base: TCDM_BASE,
+            bias_base: TCDM_BASE + 16,
+            shift: 0,
+            out_bits: 2,
+        };
+        for f in 0..4u32 {
+            mem.store_u32(TCDM_BASE + 4 * f, 1);
+            mem.store_u32(TCDM_BASE + 16 + 4 * f, 0);
+        }
+        let mut p = Program::new("rq2");
+        emit_requant_block(&mut p, &cfg, 0, 4, 1, |_| TCDM_BASE + 64);
+        p.push(Instr::Halt);
+        run(p, &mut mem, |c| {
+            // accs 1, 2, 3, 99(clips to 3)
+            c.regs[ra::acc(0) as usize] = 1;
+            c.regs[ra::acc(1) as usize] = 2;
+            c.regs[ra::acc(2) as usize] = 3;
+            c.regs[ra::acc(3) as usize] = 99;
+        });
+        // packed little-endian: 1 | 2<<2 | 3<<4 | 3<<6 = 0b11_11_10_01
+        assert_eq!(mem.load_u8(TCDM_BASE + 64), 0b1111_1001);
+    }
+}

@@ -1,0 +1,158 @@
+//! Software pack/unpack sequences for ISAs without native sub-byte or
+//! mixed-precision support (§I, §V-B).
+//!
+//! When a core must execute a dot product whose weight format is narrower
+//! than what its SIMD unit accepts, the kernel expands a slice of the
+//! packed weight word into a full SIMD word of the wider format using the
+//! XpulpV2 bit-manipulation instructions (`p.extract` sign-extending +
+//! `p.insert`). This is the "massive software overhead" that collapses
+//! XpulpNN and RI5CY on mixed-precision kernels (Table III: a8w2 drops to
+//! ~6 MAC/cycle) — reproduced here instruction by instruction.
+
+use crate::isa::{Instr, Program, Reg};
+
+/// Emit the expansion of subgroup `sub` of a packed `src_bits` word in
+/// `src` into a word of `dst_bits` elements in `dst` (sign-extending, for
+/// weights). Produces `32/dst_bits` elements = `2*(dst_bits/src_bits)`
+/// instructions (one extract + one insert per element).
+///
+/// Returns the number of instructions emitted.
+pub fn emit_unpack_signed(
+    p: &mut Program,
+    dst: Reg,
+    src: Reg,
+    src_bits: u8,
+    dst_bits: u8,
+    sub: u8,
+) -> usize {
+    assert!(src_bits < dst_bits, "unpack requires narrower source");
+    let lanes = 32 / dst_bits as usize;
+    let before = p.len();
+    for e in 0..lanes {
+        let src_off = (sub as usize * lanes + e) * src_bits as usize;
+        // sign-extending extract into dst's lane position via insert
+        p.push(Instr::Extract {
+            rd: crate::kernels::regalloc::TMP[3],
+            rs1: src,
+            off: src_off as u8,
+            len: src_bits,
+        });
+        p.push(Instr::Insert {
+            rd: dst,
+            rs1: crate::kernels::regalloc::TMP[3],
+            off: (e * dst_bits as usize) as u8,
+            len: dst_bits,
+        });
+    }
+    p.len() - before
+}
+
+/// Same for unsigned (activations expanded during pre-pass / im2col).
+pub fn emit_unpack_unsigned(
+    p: &mut Program,
+    dst: Reg,
+    src: Reg,
+    src_bits: u8,
+    dst_bits: u8,
+    sub: u8,
+) -> usize {
+    assert!(src_bits < dst_bits);
+    let lanes = 32 / dst_bits as usize;
+    let before = p.len();
+    for e in 0..lanes {
+        let src_off = (sub as usize * lanes + e) * src_bits as usize;
+        p.push(Instr::ExtractU {
+            rd: crate::kernels::regalloc::TMP[3],
+            rs1: src,
+            off: src_off as u8,
+            len: src_bits,
+        });
+        p.push(Instr::Insert {
+            rd: dst,
+            rs1: crate::kernels::regalloc::TMP[3],
+            off: (e * dst_bits as usize) as u8,
+            len: dst_bits,
+        });
+    }
+    p.len() - before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::packing;
+    use crate::sim::{ClusterMem, Core};
+    use crate::util::{proptest, Prng};
+
+    fn run_unpack(src_word: u32, src_bits: u8, dst_bits: u8, sub: u8, signed: bool) -> u32 {
+        let mut p = Program::new("u");
+        if signed {
+            emit_unpack_signed(&mut p, 5, 6, src_bits, dst_bits, sub);
+        } else {
+            emit_unpack_unsigned(&mut p, 5, 6, src_bits, dst_bits, sub);
+        }
+        p.push(Instr::Halt);
+        let mut c = Core::new(0);
+        c.load_program(p);
+        c.regs[6] = src_word;
+        let mut mem = ClusterMem::new();
+        while !c.halted() {
+            let g = c.mem_request().is_some();
+            c.tick(&mut mem, g);
+        }
+        c.regs[5]
+    }
+
+    #[test]
+    fn unpack_w4_to_w8_signed() {
+        // nibbles [1, -1, 7, -8] (sub 0) and [2, -2, 3, -3] (sub 1)
+        let vals = [1i32, -1, 7, -8, 2, -2, 3, -3];
+        let packed_bytes = packing::pack_signed(&vals, 4);
+        let word = u32::from_le_bytes([
+            packed_bytes[0],
+            packed_bytes[1],
+            packed_bytes[2],
+            packed_bytes[3],
+        ]);
+        let out0 = run_unpack(word, 4, 8, 0, true);
+        let got0: Vec<i32> = (0..4)
+            .map(|i| (((out0 >> (8 * i)) & 0xFF) as u8 as i8) as i32)
+            .collect();
+        assert_eq!(got0, vec![1, -1, 7, -8]);
+        let out1 = run_unpack(word, 4, 8, 1, true);
+        let got1: Vec<i32> = (0..4)
+            .map(|i| (((out1 >> (8 * i)) & 0xFF) as u8 as i8) as i32)
+            .collect();
+        assert_eq!(got1, vec![2, -2, 3, -3]);
+    }
+
+    #[test]
+    fn prop_unpack_matches_packing_roundtrip() {
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let (src_bits, dst_bits) = *rng.pick(&[(2u8, 8u8), (4, 8), (2, 4)]);
+                let word = rng.next_u32();
+                let reuse = dst_bits / src_bits;
+                let sub = rng.range(0, reuse as usize) as u8;
+                (src_bits, dst_bits, word, sub)
+            },
+            |&(src_bits, dst_bits, word, sub)| {
+                let out = run_unpack(word, src_bits, dst_bits, sub, true);
+                let lanes = 32 / dst_bits as usize;
+                for e in 0..lanes {
+                    let src_off = (sub as usize * lanes + e) * src_bits as usize;
+                    let raw = (word >> src_off) & ((1 << src_bits) - 1);
+                    let sh = 32 - src_bits as u32;
+                    let want = ((raw << sh) as i32) >> sh;
+                    let got_raw = (out >> (e * dst_bits as usize)) & ((1u32 << dst_bits) - 1);
+                    let sh2 = 32 - dst_bits as u32;
+                    let got = ((got_raw << sh2) as i32) >> sh2;
+                    if got != want {
+                        return Err(format!("lane {e}: got {got} want {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! # Flex-V — mixed-precision QNN inference on a RISC-V parallel cluster
+//!
+//! Reproduction of *"A 3 TOPS/W RISC-V Parallel Cluster for Inference of
+//! Fine-Grain Mixed-Precision Quantized Neural Networks"* (Nadalini et al.,
+//! cs.AR 2023).
+//!
+//! The paper's contribution is a hardware/software stack: the **Flex-V**
+//! RISC-V core (fused Mac&Load mixed-precision dot-product instructions,
+//! CSR-encoded operand formats, a Mac&Load address-generation controller and
+//! a dedicated NN register file), an 8-core PULP cluster integrating it, a
+//! PULP-NN-derived kernel library and a DORY-based memory-aware deployment
+//! flow. Since the paper's artifact is silicon (GF22FDX), this crate builds
+//! the whole system as a **cycle-approximate instruction-set simulator** plus
+//! the full software stack on top of it (see DESIGN.md §2 for the
+//! substitution table):
+//!
+//! - [`isa`] — instruction IR: RV32IMC + XpulpV2 + XpulpNN + MPIC + Flex-V
+//!   extensions, CSR map, ISA capability matrix.
+//! - [`sim`] — the PULP cluster model: RI5CY-style 4-stage core timing,
+//!   SIMD/mixed-precision Dotp unit + MPC, Mac&Load controller + NN-RF,
+//!   16-bank TCDM with cycle-true conflict arbitration, cluster DMA,
+//!   hardware synchronization.
+//! - [`qnn`] — quantized-NN substrate: sub-byte packed tensors, PULP-NN
+//!   integer quantization math, layer/graph definitions and a golden
+//!   (reference) integer executor.
+//! - [`kernels`] — the optimized kernel library: per-ISA × per-precision
+//!   MatMul / convolution instruction-stream generators reproducing the
+//!   paper's assembly (Fig. 5), plus im2col and requantization phases.
+//! - [`dory`] — the deployment flow: tiling solver with byte-alignment
+//!   constraints, L3/L2/L1 memory manager, double-buffered DMA schedule.
+//! - [`models`] — the end-to-end network zoo of the evaluation
+//!   (MobileNetV1 8b / 8b4b, ResNet-20 4b2b).
+//! - [`power`] — GF22FDX area/power/energy model calibrated to Table II.
+//! - [`baselines`] — STM32H7 (CMix-NN) reference cost model.
+//! - [`runtime`] — PJRT runtime loading AOT-lowered JAX/Pallas golden
+//!   models (HLO text) for cross-validation of every simulated kernel.
+//! - [`coordinator`] — end-to-end inference driver: executes a DORY plan
+//!   (DMA + kernel dispatch) on the simulated cluster and collects metrics.
+//! - [`report`] — regenerates every table and figure of the paper's
+//!   evaluation section (Tables I-IV, Fig. 7).
+
+pub mod baselines;
+pub mod coordinator;
+pub mod dory;
+pub mod isa;
+pub mod kernels;
+pub mod models;
+pub mod power;
+pub mod qnn;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Number of cores in the PULP cluster evaluated by the paper.
+pub const CLUSTER_CORES: usize = 8;
+/// TCDM (L1) size in bytes: 128 kB shared data scratchpad.
+pub const TCDM_BYTES: usize = 128 * 1024;
+/// Number of TCDM banks behind the logarithmic interconnect.
+pub const TCDM_BANKS: usize = 16;
+/// Fabric-controller-side memory size in bytes. The physical chip has a
+/// 1.5 MB L2 backed by external L3 RAM; our DMA model folds L3→L2
+/// streaming into one level (DESIGN.md §2), so this region is sized to
+/// hold a whole network's weights + ping-pong activations.
+pub const L2_BYTES: usize = 8 * 1024 * 1024;

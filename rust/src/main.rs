@@ -1,0 +1,201 @@
+//! Flex-V CLI — the leader entrypoint.
+//!
+//! Subcommands regenerate the paper's evaluation artifacts (Tables I-IV,
+//! Fig. 7), run single kernels or full networks on the simulated cluster,
+//! and cross-validate the simulator against the AOT JAX/Pallas golden
+//! models through PJRT.
+
+use flexv::isa::IsaVariant;
+use flexv::qnn::Precision;
+use flexv::report;
+
+fn usage() -> ! {
+    eprintln!(
+        "flexv — RISC-V mixed-precision QNN cluster simulator (paper reproduction)
+
+USAGE: flexv <command> [options]
+
+COMMANDS:
+  table1            Table I   platform landscape (This-Work row measured)
+  table2            Table II  area / fmax / power model
+  table3            Table III MatMul kernel grid (MAC/cycle, TOPS/W)
+  fig7              Fig. 7    conv-layer grid + speedup ratios
+  table4 [--quick]  Table IV  end-to-end networks (use --quick for 96x96)
+  all [--quick]     everything above, in order
+  run-layer <isa> <aXwY>   run the benchmark conv on one ISA/precision
+  dump-kernel <isa> <aXwY> [n]  disassemble the generated MatMul kernel
+                           (first n instructions, default 60; cf. Fig. 5)
+  run-net <isa> <mnv1-8b|mnv1-8b4b|resnet20-4b2b> [--quick]
+  validate [dir]    cross-check simulator vs AOT golden artifacts (PJRT)
+
+ISAs: ri5cy | mpic | xpulpnn | flexv"
+    );
+    std::process::exit(2);
+}
+
+fn parse_isa(s: &str) -> IsaVariant {
+    match s.to_lowercase().as_str() {
+        "ri5cy" | "xpulpv2" => IsaVariant::Ri5cy,
+        "mpic" => IsaVariant::Mpic,
+        "xpulpnn" => IsaVariant::XpulpNn,
+        "flexv" | "flex-v" => IsaVariant::FlexV,
+        other => {
+            eprintln!("unknown ISA '{other}'");
+            usage()
+        }
+    }
+}
+
+fn parse_prec(s: &str) -> Precision {
+    let s = s.trim_start_matches('a');
+    let parts: Vec<&str> = s.split('w').collect();
+    if parts.len() == 2 {
+        if let (Ok(a), Ok(w)) = (parts[0].parse(), parts[1].parse()) {
+            return Precision::new(a, w);
+        }
+    }
+    eprintln!("bad precision '{s}', expected e.g. a8w4");
+    usage()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    match args.first().map(|s| s.as_str()) {
+        Some("table1") => print!("{}", report::table1()),
+        Some("table2") => print!("{}", report::table2()),
+        Some("table3") => print!("{}", report::table3()),
+        Some("fig7") => print!("{}", report::fig7()),
+        Some("table4") => print!("{}", report::table4(quick)),
+        Some("all") => {
+            print!("{}", report::table1());
+            println!();
+            print!("{}", report::table2());
+            println!();
+            print!("{}", report::table3());
+            println!();
+            print!("{}", report::fig7());
+            println!();
+            print!("{}", report::table4(quick));
+        }
+        Some("run-layer") => {
+            if args.len() < 3 {
+                usage();
+            }
+            let isa = parse_isa(&args[1]);
+            let prec = parse_prec(&args[2]);
+            let stats = report::workloads::conv_fig7_stats(isa, prec);
+            let em = flexv::power::EnergyModel::default();
+            println!(
+                "{} {} conv 64x3x3x32 @16x16x32: {:.1} MAC/cycle, {:.2} TOPS/W, {} cycles, {} instrs",
+                isa,
+                prec,
+                stats.macs_per_cycle(),
+                em.tops_per_watt(isa, &stats, prec.a_bits.max(prec.w_bits)),
+                stats.cycles,
+                stats.total_instrs(),
+            );
+        }
+        Some("run-net") => {
+            if args.len() < 3 {
+                usage();
+            }
+            let isa = parse_isa(&args[1]);
+            use flexv::models::{mobilenet_v1, resnet20, Profile};
+            let hw = if quick { 96 } else { 224 };
+            let net = match args[2].as_str() {
+                "mnv1-8b" => mobilenet_v1(Profile::Uniform8, 0.75, hw, 11),
+                "mnv1-8b4b" => mobilenet_v1(Profile::Mixed8a4w, 0.75, hw, 11),
+                "resnet20-4b2b" => resnet20(Profile::Mixed4a2w, 12),
+                other => {
+                    eprintln!("unknown network '{other}'");
+                    usage()
+                }
+            };
+            run_net_verbose(isa, &net);
+        }
+        Some("dump-kernel") => {
+            if args.len() < 3 {
+                usage();
+            }
+            let isa = parse_isa(&args[1]);
+            let prec = parse_prec(&args[2]);
+            let n: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(60);
+            use flexv::kernels::matmul::{gen_matmul, MatMulTask};
+            use flexv::kernels::requant::RequantCfg;
+            let task = MatMulTask {
+                m: 8,
+                n: 8,
+                k: 32,
+                prec,
+                a_base: flexv::sim::TCDM_BASE,
+                a_pitch: (32usize.div_ceil(32 / prec.a_bits as usize) * 4) as u32,
+                w_base: flexv::sim::TCDM_BASE + 4096,
+                w_pitch: 16,
+                out_base: flexv::sim::TCDM_BASE + 8192,
+                out_pitch: 8,
+                quant: RequantCfg {
+                    mult_base: flexv::sim::TCDM_BASE + 12288,
+                    bias_base: flexv::sim::TCDM_BASE + 12544,
+                    shift: 8,
+                    out_bits: 8,
+                },
+            };
+            let prog = gen_matmul(isa, &task, 0, 1);
+            let listing = flexv::isa::disasm::disasm_program(&prog);
+            for line in listing.lines().take(n + 1) {
+                println!("{line}");
+            }
+            if prog.len() > n {
+                println!("  ... ({} more instructions)", prog.len() - n);
+            }
+        }
+        Some("validate") => {
+            let dir = args.get(1).map(|s| s.as_str()).unwrap_or("artifacts");
+            match flexv::runtime::validate_artifacts(dir) {
+                Ok(n) => println!("validate: {n} artifact checks passed (sim == XLA golden)"),
+                Err(e) => {
+                    eprintln!("validate failed: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => usage(),
+    }
+}
+
+fn run_net_verbose(isa: IsaVariant, net: &flexv::qnn::Network) {
+    use flexv::coordinator::Coordinator;
+    use flexv::dory::deploy::deploy;
+    use flexv::dory::MemBudget;
+    use flexv::qnn::QTensor;
+    use flexv::util::Prng;
+    println!("network: {} ({} nodes, {:.1} MMAC, {:.0} kB weights)",
+        net.name, net.nodes.len(), net.total_macs() as f64 / 1e6,
+        net.model_bytes() as f64 / 1024.0);
+    let dep = deploy(net, isa, MemBudget::default());
+    let mut coord = Coordinator::new(flexv::CLUSTER_CORES);
+    coord.memoize_tiles = true;
+    let mut rng = Prng::new(0xE2E);
+    let input = QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng);
+    let t0 = std::time::Instant::now();
+    let res = coord.run(&dep, &input);
+    let wall = t0.elapsed();
+    println!("{:<12} {:>12} {:>12} {:>10}", "layer", "cycles", "MACs", "MAC/cyc");
+    for l in &res.layers {
+        println!(
+            "{:<12} {:>12} {:>12} {:>10.2}",
+            l.name,
+            l.stats.cycles,
+            l.macs,
+            l.macs_per_cycle()
+        );
+    }
+    println!(
+        "TOTAL: {} cycles, {} MACs, {:.2} MAC/cycle  (sim wall time {:.1}s)",
+        res.total_cycles(),
+        res.total_macs(),
+        res.macs_per_cycle(),
+        wall.as_secs_f64()
+    );
+}

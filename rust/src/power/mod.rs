@@ -1,0 +1,239 @@
+//! GF22FDX area / timing / energy model (§V-A, Table II).
+//!
+//! The paper's silicon numbers are the calibration anchors; our simulator
+//! supplies the per-instruction-class activity. The model is deliberately
+//! simple and fully documented:
+//!
+//! - **Area & fmax**: taken directly from Table II for RI5CY and Flex-V;
+//!   MPIC and XpulpNN cores are placed between them using the overheads
+//!   their own papers report (MPIC ~+11% vs RI5CY, XpulpNN ~+19%).
+//! - **Energy**: `E_cycle = E_static + Σ_class E_class · activity_class`,
+//!   with per-class energies fitted once so that (a) the 8-bit MatMul
+//!   cluster power matches Table II (12.3→12.6 mW at 250 MHz typical) and
+//!   (b) the Flex-V efficiency column of Table III is approached at the
+//!   paper's efficiency corner. The same class energies are used for all
+//!   four cores — variant differences come from their instruction mixes
+//!   plus the small leakage deltas of Table II.
+//!
+//! TOPS/W for a kernel = `2 · MAC/cycle / E_cycle`, frequency-independent
+//! apart from the leakage share, evaluated at the efficiency corner.
+
+use crate::isa::IsaVariant;
+use crate::sim::ClusterStats;
+
+/// Table II anchors and derived constants for one core variant.
+#[derive(Clone, Copy, Debug)]
+pub struct VariantPhys {
+    /// Max cluster frequency [MHz] (worst-case corner).
+    pub fmax_mhz: f64,
+    /// Core area [µm²].
+    pub core_area_um2: f64,
+    /// Cluster area [µm²] (8 cores + memories + interconnect).
+    pub cluster_area_um2: f64,
+    /// Cluster leakage power [mW].
+    pub leak_mw: f64,
+}
+
+/// Baseline (RI5CY) cluster area minus its 8 cores = shared logic+SRAM.
+const SHARED_AREA_UM2: f64 = 518_227.0 - 8.0 * 13_721.0;
+
+/// Physical constants per variant.
+pub fn phys(v: IsaVariant) -> VariantPhys {
+    let (fmax, core, leak) = match v {
+        // Table II, measured columns.
+        IsaVariant::Ri5cy => (472.0, 13_721.0, 0.613),
+        IsaVariant::FlexV => (463.0, 17_816.0, 0.710),
+        // Interpolated from the MPIC [15] and XpulpNN [14] papers' reported
+        // overheads over RI5CY (see DESIGN.md §2).
+        IsaVariant::Mpic => (468.0, 15_230.0, 0.650),
+        IsaVariant::XpulpNn => (466.0, 16_330.0, 0.680),
+    };
+    // Flex-V's cluster area is a measured Table II value (547211 µm²,
+    // +5.59%); synthesis absorbs part of the core growth at cluster level,
+    // so derived variants scale the core delta by the same absorption
+    // factor observed between the two measured points.
+    let absorption = (547_211.0 - 518_227.0) / (8.0 * (17_816.0 - 13_721.0));
+    let cluster = match v {
+        IsaVariant::Ri5cy => 518_227.0,
+        IsaVariant::FlexV => 547_211.0,
+        _ => SHARED_AREA_UM2 + 8.0 * 13_721.0 + 8.0 * (core - 13_721.0) * absorption,
+    };
+    VariantPhys {
+        fmax_mhz: fmax,
+        core_area_um2: core,
+        cluster_area_um2: cluster,
+        leak_mw: leak,
+    }
+}
+
+/// Per-instruction-class energies [pJ], cluster-wide shared overheads
+/// included via `shared_pj_per_cycle`. Fitted to the Table II / Table III
+/// anchors (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// Core issue/fetch/decode/RF per active cycle [pJ].
+    pub base_pj: f64,
+    /// Extra energy of a SIMD dotp by element width of the wider operand.
+    pub dotp8_pj: f64,
+    pub dotp4_pj: f64,
+    pub dotp2_pj: f64,
+    /// TCDM access (interconnect + bank) [pJ].
+    pub mem_pj: f64,
+    /// Mac&Load WB-load adder [pJ].
+    pub macload_pj: f64,
+    /// Shared cluster logic (icache, interconnect clocking, FC share) per
+    /// cycle [pJ].
+    pub shared_pj_per_cycle: f64,
+    /// Clock-gated (barrier/idle) core cycle [pJ].
+    pub gated_pj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // Fit notes: with the Flex-V a8w8 MatMul mix (≈0.80 dotp/cycle/core,
+        // ≈0.33 TCDM access/cycle/core) the cluster at 250 MHz must draw
+        // ≈12.6 mW ⇒ ≈50 pJ/cycle; the sub-byte dotp energies then set the
+        // Table III efficiency spread.
+        EnergyModel {
+            base_pj: 2.1,
+            dotp8_pj: 2.6,
+            dotp4_pj: 2.0,
+            dotp2_pj: 1.6,
+            mem_pj: 2.6,
+            macload_pj: 0.5,
+            shared_pj_per_cycle: 8.0,
+            gated_pj: 0.25,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Energy of one simulated window [pJ], activity-based.
+    pub fn energy_pj(&self, v: IsaVariant, stats: &ClusterStats, dotp_bits: u8) -> f64 {
+        let dotp_pj = match dotp_bits {
+            8 => self.dotp8_pj,
+            4 => self.dotp4_pj,
+            2 => self.dotp2_pj,
+            16 => self.dotp8_pj * 1.6,
+            _ => self.dotp8_pj,
+        };
+        let mut e = stats.cycles as f64 * self.shared_pj_per_cycle;
+        for c in &stats.cores {
+            let active = c.cycles.saturating_sub(c.barrier_cycles) as f64;
+            e += active * self.base_pj;
+            e += c.barrier_cycles as f64 * self.gated_pj;
+            e += c.dotp_instrs as f64 * dotp_pj;
+            e += c.tcdm_accesses as f64 * self.mem_pj;
+            e += c.macload_instrs as f64 * self.macload_pj;
+        }
+        // Leakage share at the 250 MHz typical corner.
+        let leak_pj_per_cycle = phys(v).leak_mw * 1e-3 / 250e6 * 1e12;
+        e += stats.cycles as f64 * leak_pj_per_cycle;
+        e
+    }
+
+    /// Average cluster power [mW] at frequency `f_mhz` for a window.
+    pub fn power_mw(&self, v: IsaVariant, stats: &ClusterStats, dotp_bits: u8, f_mhz: f64) -> f64 {
+        let e_per_cycle = self.energy_pj(v, stats, dotp_bits) / stats.cycles.max(1) as f64;
+        e_per_cycle * 1e-12 * f_mhz * 1e6 * 1e3
+    }
+
+    /// Energy efficiency [TOPS/W] = ops per joule (1 MAC = 2 ops).
+    /// Frequency-independent except the leakage term already folded in.
+    pub fn tops_per_watt(&self, v: IsaVariant, stats: &ClusterStats, dotp_bits: u8) -> f64 {
+        let ops = 2.0 * stats.total_macs() as f64;
+        let e_j = self.energy_pj(v, stats, dotp_bits) * 1e-12;
+        ops / e_j / 1e12
+    }
+}
+
+/// GOP/s of a kernel window at `f_mhz`.
+pub fn gops(stats: &ClusterStats, f_mhz: f64) -> f64 {
+    2.0 * stats.macs_per_cycle() * f_mhz * 1e6 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::CoreStats;
+
+    fn synthetic_stats(dotp_per_core: u64, cycles: u64) -> ClusterStats {
+        ClusterStats {
+            cycles,
+            cores: vec![
+                CoreStats {
+                    cycles,
+                    instrs: cycles,
+                    macs: dotp_per_core * 4,
+                    dotp_instrs: dotp_per_core,
+                    macload_instrs: dotp_per_core / 2,
+                    tcdm_accesses: cycles / 3,
+                    ..Default::default()
+                };
+                8
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn area_overheads_match_table2() {
+        let r = phys(IsaVariant::Ri5cy);
+        let f = phys(IsaVariant::FlexV);
+        let core_ovh = (f.core_area_um2 - r.core_area_um2) / r.core_area_um2;
+        assert!((core_ovh - 0.298).abs() < 0.01, "core overhead {core_ovh}");
+        let cl_ovh = (f.cluster_area_um2 - r.cluster_area_um2) / r.cluster_area_um2;
+        assert!((cl_ovh - 0.0559).abs() < 0.005, "cluster overhead {cl_ovh}");
+        // fmax degradation ≈ 2%
+        assert!((1.0 - f.fmax_mhz / r.fmax_mhz - 0.019).abs() < 0.01);
+    }
+
+    #[test]
+    fn cluster_power_8b_matmul_near_table2() {
+        // ~0.8 dotp/cycle/core on the 8b kernel.
+        let stats = synthetic_stats(800, 1000);
+        let m = EnergyModel::default();
+        let p = m.power_mw(IsaVariant::FlexV, &stats, 8, 250.0);
+        assert!(
+            (10.0..16.0).contains(&p),
+            "8b MatMul cluster power {p:.1} mW should be near Table II's 12.6"
+        );
+        // Flex-V draws slightly more than RI5CY (leakage delta)
+        let pr = m.power_mw(IsaVariant::Ri5cy, &stats, 8, 250.0);
+        assert!(p > pr && (p - pr) / pr < 0.05, "{p} vs {pr}");
+    }
+
+    #[test]
+    fn efficiency_increases_with_narrower_formats() {
+        let m = EnergyModel::default();
+        let stats2 = {
+            let mut s = synthetic_stats(900, 1000);
+            for c in &mut s.cores {
+                c.macs = c.dotp_instrs * 16; // a2w2: 16 MACs per sdotp
+            }
+            s
+        };
+        let stats8 = synthetic_stats(900, 1000);
+        let e2 = m.tops_per_watt(IsaVariant::FlexV, &stats2, 2);
+        let e8 = m.tops_per_watt(IsaVariant::FlexV, &stats8, 8);
+        assert!(e2 > 2.0 * e8, "a2w2 {e2} should dwarf a8w8 {e8}");
+        assert!(e2 > 2.0 && e2 < 6.0, "a2w2 eff {e2} out of plausible range");
+    }
+
+    #[test]
+    fn barrier_cycles_cost_less_than_active() {
+        let m = EnergyModel::default();
+        let mut idle = synthetic_stats(0, 1000);
+        for c in &mut idle.cores {
+            c.tcdm_accesses = 0;
+            c.barrier_cycles = 900;
+        }
+        let mut busy = synthetic_stats(0, 1000);
+        for c in &mut busy.cores {
+            c.tcdm_accesses = 0;
+        }
+        let ei = m.energy_pj(IsaVariant::FlexV, &idle, 8);
+        let eb = m.energy_pj(IsaVariant::FlexV, &busy, 8);
+        assert!(ei < eb);
+    }
+}

@@ -1,0 +1,317 @@
+//! Golden (reference) integer executor.
+//!
+//! Straightforward, obviously-correct nested-loop implementations of every
+//! operator. This is the correctness oracle for (a) the kernel library
+//! running on the simulated cluster and (b) the AOT-lowered JAX/Pallas
+//! golden models executed through PJRT — all three must agree bit-exactly,
+//! because quantized inference is exact integer arithmetic.
+
+use super::layer::{Layer, LayerKind, Network, NET_INPUT};
+use super::{QTensor, QuantParams};
+
+/// Execute one layer on an input tensor (HWC).
+pub fn run_layer(layer: &Layer, input: &QTensor) -> QTensor {
+    match &layer.kind {
+        LayerKind::Conv2d { kh, kw, stride, pad } => {
+            conv2d(input, layer.weights.as_ref().unwrap(), &layer.quant, *kh, *kw, *stride, *pad)
+        }
+        LayerKind::DwConv2d { kh, kw, stride, pad } => {
+            dwconv2d(input, layer.weights.as_ref().unwrap(), &layer.quant, *kh, *kw, *stride, *pad)
+        }
+        LayerKind::Linear => linear(input, layer.weights.as_ref().unwrap(), &layer.quant),
+        LayerKind::MaxPool { k, stride } => maxpool(input, *k, *stride),
+        LayerKind::AvgPool { k, stride } => avgpool(input, &layer.quant, *k, *stride),
+        LayerKind::Add { m1, m2 } => panic!(
+            "Add needs two inputs, use run_add (m1={m1}, m2={m2})"
+        ),
+    }
+}
+
+/// Execute a whole network on an input, returning every node's output
+/// (needed both for residual edges and for layer-by-layer validation).
+pub fn run_network(net: &Network, input: &QTensor) -> Vec<QTensor> {
+    net.validate().expect("invalid network");
+    let mut outs: Vec<QTensor> = Vec::with_capacity(net.nodes.len());
+    for node in &net.nodes {
+        let fetch = |src: usize| -> &QTensor {
+            if src == NET_INPUT {
+                input
+            } else {
+                &outs[src]
+            }
+        };
+        let out = match &node.layer.kind {
+            LayerKind::Add { m1, m2 } => run_add(
+                fetch(node.inputs[0]),
+                fetch(node.inputs[1]),
+                *m1,
+                *m2,
+                &node.layer.quant,
+            ),
+            _ => run_layer(&node.layer, fetch(node.inputs[0])),
+        };
+        debug_assert_eq!(
+            out.shape,
+            node.layer.out_shape.to_vec(),
+            "layer {} produced wrong shape",
+            node.layer.name
+        );
+        outs.push(out);
+    }
+    outs
+}
+
+/// Standard convolution: activations HWC unsigned, weights `[Cout,Kh,Kw,Cin]`
+/// signed, zero padding, 32-bit accumulation, PULP-NN requantization.
+pub fn conv2d(
+    x: &QTensor,
+    w: &QTensor,
+    q: &QuantParams,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> QTensor {
+    let (h, wi, cin) = (x.shape[0], x.shape[1], x.shape[2]);
+    let cout = w.shape[0];
+    assert_eq!(w.shape, vec![cout, kh, kw, cin]);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wi + 2 * pad - kw) / stride + 1;
+    let mut out = QTensor::zeros(&[oh, ow, cout], q.out_bits, false);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for oc in 0..cout {
+                let mut acc: i32 = 0;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        for ic in 0..cin {
+                            let a = x.get_u(x.flat(&[iy as usize, ix as usize, ic])) as i32;
+                            let wv = w.get_i(w.flat(&[oc, ky, kx, ic]));
+                            acc = acc.wrapping_add(a.wrapping_mul(wv));
+                        }
+                    }
+                }
+                let o = q.requant(acc, oc);
+                let idx = out.flat(&[oy, ox, oc]);
+                out.set_u(idx, o);
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise convolution: weights `[C, Kh, Kw, 1]`.
+pub fn dwconv2d(
+    x: &QTensor,
+    w: &QTensor,
+    q: &QuantParams,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> QTensor {
+    let (h, wi, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    assert_eq!(w.shape, vec![c, kh, kw, 1]);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wi + 2 * pad - kw) / stride + 1;
+    let mut out = QTensor::zeros(&[oh, ow, c], q.out_bits, false);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut acc: i32 = 0;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= wi as isize {
+                            continue;
+                        }
+                        let a = x.get_u(x.flat(&[iy as usize, ix as usize, ch])) as i32;
+                        let wv = w.get_i(w.flat(&[ch, ky, kx, 0]));
+                        acc = acc.wrapping_add(a.wrapping_mul(wv));
+                    }
+                }
+                let o = q.requant(acc, ch);
+                let idx = out.flat(&[oy, ox, ch]);
+                out.set_u(idx, o);
+            }
+        }
+    }
+    out
+}
+
+/// Fully connected over the flattened input; weights `[Cout, Cin]`.
+pub fn linear(x: &QTensor, w: &QTensor, q: &QuantParams) -> QTensor {
+    let cin = x.len();
+    let cout = w.shape[0];
+    assert_eq!(w.shape[1], cin, "linear weight shape mismatch");
+    let mut out = QTensor::zeros(&[1, 1, cout], q.out_bits, false);
+    for oc in 0..cout {
+        let mut acc: i32 = 0;
+        for ic in 0..cin {
+            let a = x.get_u(ic) as i32;
+            let wv = w.get_i(oc * cin + ic);
+            acc = acc.wrapping_add(a.wrapping_mul(wv));
+        }
+        out.set_u(oc, q.requant(acc, oc));
+    }
+    out
+}
+
+/// Max pooling over unsigned activations.
+pub fn maxpool(x: &QTensor, k: usize, stride: usize) -> QTensor {
+    let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = QTensor::zeros(&[oh, ow, c], x.bits, false);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut m = 0u32;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        m = m.max(x.get_u(x.flat(&[oy * stride + ky, ox * stride + kx, ch])));
+                    }
+                }
+                let idx = out.flat(&[oy, ox, ch]);
+                out.set_u(idx, m);
+            }
+        }
+    }
+    out
+}
+
+/// Average pooling: sum then requantize (the multiplier/shift encode 1/k²).
+pub fn avgpool(x: &QTensor, q: &QuantParams, k: usize, stride: usize) -> QTensor {
+    let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = QTensor::zeros(&[oh, ow, c], q.out_bits, false);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut acc = 0i32;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        acc += x.get_u(x.flat(&[oy * stride + ky, ox * stride + kx, ch])) as i32;
+                    }
+                }
+                let idx = out.flat(&[oy, ox, ch]);
+                out.set_u(idx, q.requant(acc, ch));
+            }
+        }
+    }
+    out
+}
+
+/// Residual add with independent input scales:
+/// `out = clip((x1*m1 + x2*m2) >> shift)`.
+pub fn run_add(x1: &QTensor, x2: &QTensor, m1: i32, m2: i32, q: &QuantParams) -> QTensor {
+    assert_eq!(x1.shape, x2.shape);
+    let mut out = QTensor::zeros(&x1.shape, q.out_bits, false);
+    for i in 0..x1.len() {
+        let acc = (x1.get_u(i) as i64 * m1 as i64 + x2.get_u(i) as i64 * m2 as i64)
+            >> q.shift;
+        out.set_u(i, acc.clamp(0, q.clip_hi() as i64) as u32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity-ish weights: w[oc][0][0][ic] = 1 if oc==ic.
+        let x = QTensor::from_unsigned(&[2, 2, 4], 8, &(0..16).collect::<Vec<u32>>());
+        let mut wvals = vec![0i32; 4 * 4];
+        for i in 0..4 {
+            wvals[i * 4 + i] = 1;
+        }
+        let w = QTensor::from_signed(&[4, 1, 1, 4], 8, &wvals);
+        let q = QuantParams::scalar(1, 0, 0, 8, 4);
+        let y = conv2d(&x, &w, &q, 1, 1, 1, 0);
+        assert_eq!(y.to_vec_i32(), x.to_vec_i32());
+    }
+
+    #[test]
+    fn conv_padding_zeroes_border() {
+        // all-ones 3x3 kernel over all-ones 3x3 single-channel input:
+        // center sees 9, corners see 4 (padding contributes 0).
+        let x = QTensor::from_unsigned(&[3, 3, 1], 8, &[1; 9]);
+        let w = QTensor::from_signed(&[1, 3, 3, 1], 8, &[1; 9]);
+        let q = QuantParams::scalar(1, 0, 0, 8, 1);
+        let y = conv2d(&x, &w, &q, 3, 3, 1, 1);
+        let v = y.to_vec_i32();
+        assert_eq!(v[4], 9); // center
+        assert_eq!(v[0], 4); // corner
+        assert_eq!(v[1], 6); // edge
+    }
+
+    #[test]
+    fn conv_stride_2_shape() {
+        let mut rng = Prng::new(5);
+        let x = QTensor::random(&[8, 8, 8], 8, false, &mut rng);
+        let w = QTensor::random(&[16, 3, 3, 8], 4, true, &mut rng);
+        let q = QuantParams::scalar(1, 8, 0, 8, 16);
+        let y = conv2d(&x, &w, &q, 3, 3, 2, 1);
+        assert_eq!(y.shape, vec![4, 4, 16]);
+    }
+
+    #[test]
+    fn dwconv_channelwise() {
+        // Each channel convolved independently: channel c scaled by (c+1).
+        let x = QTensor::from_unsigned(&[2, 2, 2], 8, &[1, 1, 1, 1, 1, 1, 1, 1]);
+        let w = QTensor::from_signed(&[2, 1, 1, 1], 8, &[1, 2]);
+        let q = QuantParams::scalar(1, 0, 0, 8, 2);
+        let y = dwconv2d(&x, &w, &q, 1, 1, 1, 0);
+        assert_eq!(y.to_vec_i32(), vec![1, 2, 1, 2, 1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        let x = QTensor::from_unsigned(&[2, 2, 1], 8, &[1, 7, 3, 5]);
+        let y = maxpool(&x, 2, 2);
+        assert_eq!(y.to_vec_i32(), vec![7]);
+    }
+
+    #[test]
+    fn avgpool_via_requant() {
+        // 4 values summing to 16, multiplier 1 shift 2 -> 4 (exact /4)
+        let x = QTensor::from_unsigned(&[2, 2, 1], 8, &[4, 4, 4, 4]);
+        let q = QuantParams::scalar(1, 2, 0, 8, 1);
+        let y = avgpool(&x, &q, 2, 2);
+        assert_eq!(y.to_vec_i32(), vec![4]);
+    }
+
+    #[test]
+    fn add_scales_and_clips() {
+        let a = QTensor::from_unsigned(&[1, 1, 4], 8, &[10, 200, 0, 255]);
+        let b = QTensor::from_unsigned(&[1, 1, 4], 8, &[5, 200, 0, 255]);
+        let q = QuantParams::scalar(1, 1, 0, 8, 4);
+        let y = run_add(&a, &b, 1, 1, &q);
+        assert_eq!(y.to_vec_i32(), vec![7, 200, 0, 255]);
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        let x = QTensor::from_unsigned(&[1, 1, 4], 8, &[1, 2, 3, 4]);
+        let w = QTensor::from_signed(&[2, 4], 8, &[1, 1, 1, 1, -1, 0, 0, 1]);
+        let q = QuantParams::scalar(1, 0, 0, 8, 2);
+        let y = linear(&x, &w, &q);
+        assert_eq!(y.to_vec_i32(), vec![10, 3]);
+    }
+}

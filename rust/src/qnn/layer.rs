@@ -1,0 +1,278 @@
+//! Layer and network-graph definitions.
+//!
+//! A [`Network`] is a DAG of [`Layer`] nodes (chains plus residual adds —
+//! enough to express the paper's benchmark networks: MobileNetV1 variants
+//! and ResNet-20). Every layer carries its own precision configuration,
+//! which is the whole point of *fine-grain mixed-precision* deployment:
+//! DORY sizes tiles and transfers per-layer from these formats.
+
+use super::{QTensor, QuantParams};
+use crate::util::Prng;
+
+/// The operator kinds needed by the paper's evaluation networks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    /// Standard convolution, weights `[Cout, Kh, Kw, Cin]`.
+    Conv2d { kh: usize, kw: usize, stride: usize, pad: usize },
+    /// Depthwise convolution, weights `[C, Kh, Kw, 1]`.
+    DwConv2d { kh: usize, kw: usize, stride: usize, pad: usize },
+    /// Fully connected, weights `[Cout, Cin]` over flattened input.
+    Linear,
+    /// Max pooling (no weights).
+    MaxPool { k: usize, stride: usize },
+    /// Average pooling (no weights); result requantized via `quant`.
+    AvgPool { k: usize, stride: usize },
+    /// Residual add of two inputs with independent scale factors:
+    /// `out = clip((x1*m1 + x2*m2) >> shift)`.
+    Add { m1: i32, m2: i32 },
+}
+
+/// One node of the network graph.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input activation shape `[H, W, C]`.
+    pub in_shape: [usize; 3],
+    /// Output activation shape `[H, W, C]`.
+    pub out_shape: [usize; 3],
+    /// Input activation bit-width (unsigned).
+    pub a_bits: u8,
+    /// Weight bit-width (signed); meaningless for pool/add.
+    pub w_bits: u8,
+    /// Weights, packed; `None` for weight-less ops.
+    pub weights: Option<QTensor>,
+    /// Requantization parameters producing `quant.out_bits` outputs.
+    pub quant: QuantParams,
+}
+
+impl Layer {
+    /// Multiply-accumulate count of this layer (the paper's op metric:
+    /// 1 MAC = 2 ops).
+    pub fn macs(&self) -> u64 {
+        let [oh, ow, oc] = self.out_shape;
+        let [_, _, ic] = self.in_shape;
+        match &self.kind {
+            LayerKind::Conv2d { kh, kw, .. } => (oh * ow * oc * kh * kw * ic) as u64,
+            LayerKind::DwConv2d { kh, kw, .. } => (oh * ow * oc * kh * kw) as u64,
+            LayerKind::Linear => {
+                let cin: usize = self.in_shape.iter().product();
+                (oc * cin) as u64
+            }
+            // pooling/add contribute no MACs in the paper's accounting
+            LayerKind::MaxPool { .. } | LayerKind::AvgPool { .. } | LayerKind::Add { .. } => 0,
+        }
+    }
+
+    /// Packed weight bytes (+ quantization parameter bytes).
+    pub fn weight_bytes(&self) -> usize {
+        self.weights.as_ref().map(|w| w.bytes()).unwrap_or(0) + self.quant.bytes()
+    }
+
+    /// Packed input activation bytes.
+    pub fn in_bytes(&self) -> usize {
+        let [h, w, c] = self.in_shape;
+        h * w * c * self.a_bits as usize / 8
+    }
+
+    /// Packed output activation bytes.
+    pub fn out_bytes(&self) -> usize {
+        let [h, w, c] = self.out_shape;
+        h * w * c * self.quant.out_bits as usize / 8
+    }
+
+    /// Convenience: build a conv layer with random weights and benign
+    /// requantization parameters (used by tests/benches).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        in_shape: [usize; 3],
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        a_bits: u8,
+        w_bits: u8,
+        out_bits: u8,
+        rng: &mut Prng,
+    ) -> Layer {
+        let [h, w, cin] = in_shape;
+        let oh = (h + 2 * pad - kh) / stride + 1;
+        let ow = (w + 2 * pad - kw) / stride + 1;
+        let weights = QTensor::random(&[cout, kh, kw, cin], w_bits, true, rng);
+        // A multiplier/shift pair that keeps outputs well-distributed:
+        // sum of k*cin products of (a < 2^a) * (|w| < 2^(w-1)).
+        let acc_bits =
+            (a_bits as u32 + w_bits as u32 - 1) + (kh * kw * cin).next_power_of_two().trailing_zeros();
+        let shift = (acc_bits as i32 - out_bits as i32).clamp(0, 31) as u8;
+        let quant = QuantParams::scalar(1, shift, 0, out_bits, cout);
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv2d { kh, kw, stride, pad },
+            in_shape,
+            out_shape: [oh, ow, cout],
+            a_bits,
+            w_bits,
+            weights: Some(weights),
+            quant,
+        }
+    }
+}
+
+/// One node in the DAG: a layer plus the indices of its producer nodes.
+/// Index 0 refers to the network input for the first node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub layer: Layer,
+    /// Producer node ids; `usize::MAX` denotes the network input.
+    pub inputs: Vec<usize>,
+}
+
+/// The network input sentinel.
+pub const NET_INPUT: usize = usize::MAX;
+
+/// A DAG of layers in topological order.
+#[derive(Clone, Debug, Default)]
+pub struct Network {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Network input shape `[H, W, C]`.
+    pub input_shape: [usize; 3],
+    /// Network input bit-width.
+    pub input_bits: u8,
+}
+
+impl Network {
+    pub fn new(name: &str, input_shape: [usize; 3], input_bits: u8) -> Self {
+        Network { name: name.into(), nodes: vec![], input_shape, input_bits }
+    }
+
+    /// Append a node consuming the previous node's output (or the network
+    /// input if it is the first). Returns its id.
+    pub fn push(&mut self, layer: Layer) -> usize {
+        let prev = if self.nodes.is_empty() { NET_INPUT } else { self.nodes.len() - 1 };
+        self.push_with_inputs(layer, vec![prev])
+    }
+
+    /// Append a node with explicit producers. Returns its id.
+    pub fn push_with_inputs(&mut self, layer: Layer, inputs: Vec<usize>) -> usize {
+        for &i in &inputs {
+            assert!(i == NET_INPUT || i < self.nodes.len(), "input {i} not yet defined");
+        }
+        self.nodes.push(Node { layer, inputs });
+        self.nodes.len() - 1
+    }
+
+    /// Total MAC count (the paper's complexity metric).
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.layer.macs()).sum()
+    }
+
+    /// Total packed weight footprint in bytes — the paper's "model size".
+    pub fn model_bytes(&self) -> usize {
+        self.nodes.iter().map(|n| n.layer.weight_bytes()).sum()
+    }
+
+    /// Sanity-check graph shape consistency; returns a description of the
+    /// first inconsistency, if any.
+    pub fn validate(&self) -> Result<(), String> {
+        for (id, node) in self.nodes.iter().enumerate() {
+            for &src in &node.inputs {
+                let (shape, bits) = if src == NET_INPUT {
+                    (self.input_shape, self.input_bits)
+                } else {
+                    if src >= id {
+                        return Err(format!("node {id} consumes later node {src}"));
+                    }
+                    (self.nodes[src].layer.out_shape, self.nodes[src].layer.quant.out_bits)
+                };
+                if shape != node.layer.in_shape {
+                    return Err(format!(
+                        "node {id} ({}) in_shape {:?} != producer out_shape {:?}",
+                        node.layer.name, node.layer.in_shape, shape
+                    ));
+                }
+                if bits != node.layer.a_bits {
+                    return Err(format!(
+                        "node {id} ({}) a_bits {} != producer out_bits {}",
+                        node.layer.name, node.layer.a_bits, bits
+                    ));
+                }
+            }
+            let want_inputs = match node.layer.kind {
+                LayerKind::Add { .. } => 2,
+                _ => 1,
+            };
+            if node.inputs.len() != want_inputs {
+                return Err(format!(
+                    "node {id} ({}) has {} inputs, wants {want_inputs}",
+                    node.layer.name,
+                    node.inputs.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_conv(rng: &mut Prng) -> Layer {
+        Layer::conv("c", [16, 16, 32], 64, 3, 3, 1, 1, 8, 4, 8, rng)
+    }
+
+    #[test]
+    fn conv_shapes_and_macs() {
+        let mut rng = Prng::new(1);
+        let l = mk_conv(&mut rng);
+        assert_eq!(l.out_shape, [16, 16, 64]);
+        assert_eq!(l.macs(), 16 * 16 * 64 * 3 * 3 * 32);
+        // 4-bit weights: 64*3*3*32 / 2 bytes + quant params
+        assert_eq!(l.weight_bytes(), 64 * 3 * 3 * 32 / 2 + 64 * 8);
+    }
+
+    #[test]
+    fn network_chain_validates() {
+        let mut rng = Prng::new(2);
+        let mut net = Network::new("t", [16, 16, 32], 8);
+        let l1 = mk_conv(&mut rng);
+        let mut l2 = Layer::conv("c2", [16, 16, 64], 32, 1, 1, 1, 0, 8, 4, 8, &mut rng);
+        l2.a_bits = 8;
+        net.push(l1);
+        net.push(l2);
+        assert!(net.validate().is_ok(), "{:?}", net.validate());
+        assert!(net.total_macs() > 0);
+    }
+
+    #[test]
+    fn network_detects_shape_mismatch() {
+        let mut rng = Prng::new(3);
+        let mut net = Network::new("t", [16, 16, 32], 8);
+        net.push(mk_conv(&mut rng));
+        // wrong input shape on purpose
+        net.push(Layer::conv("bad", [8, 8, 64], 32, 1, 1, 1, 0, 8, 4, 8, &mut rng));
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn add_requires_two_inputs() {
+        let mut rng = Prng::new(4);
+        let mut net = Network::new("t", [16, 16, 32], 8);
+        let c = net.push(mk_conv(&mut rng));
+        let add = Layer {
+            name: "add".into(),
+            kind: LayerKind::Add { m1: 1, m2: 1 },
+            in_shape: [16, 16, 64],
+            out_shape: [16, 16, 64],
+            a_bits: 8,
+            w_bits: 8,
+            weights: None,
+            quant: QuantParams::scalar(1, 0, 0, 8, 64),
+        };
+        net.push_with_inputs(add, vec![c]); // only one input: invalid
+        assert!(net.validate().is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Quantized-NN substrate: the data formats and integer arithmetic the whole
+//! stack is built on.
+//!
+//! The paper (§II-B) adopts the PULP-NN execution model: HWC data layout,
+//! unsigned low-bitwidth activations (2/4/8-bit), signed low-bitwidth weights
+//! (2/4/8-bit), 32-bit accumulation, and a normalization/quantization step
+//! (one MAC, one shift, one clip) that brings accumulators back to the
+//! low-bitwidth output format. Sub-byte elements are packed densely into
+//! bytes/words (little-endian within the word), which is exactly what the
+//! Flex-V Slicer&Router consumes in hardware.
+
+pub mod golden;
+pub mod layer;
+pub mod packing;
+pub mod quant;
+pub mod tensor;
+
+pub use layer::{Layer, LayerKind, Network};
+pub use packing::{pack_signed, pack_unsigned, unpack_signed, unpack_unsigned};
+pub use quant::QuantParams;
+pub use tensor::QTensor;
+
+/// Supported element bit-widths (the paper's grid: 2-, 4-, 8-bit).
+pub const SUPPORTED_BITS: [u8; 3] = [2, 4, 8];
+
+/// Check that a bit-width is one the hardware supports.
+pub fn check_bits(bits: u8) -> bool {
+    SUPPORTED_BITS.contains(&bits)
+}
+
+/// A (activation-bits, weight-bits) precision configuration, e.g. `a8w4`.
+/// The paper's evaluation grid always has `a_bits >= w_bits`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Precision {
+    pub a_bits: u8,
+    pub w_bits: u8,
+}
+
+impl Precision {
+    pub const fn new(a_bits: u8, w_bits: u8) -> Self {
+        Precision { a_bits, w_bits }
+    }
+
+    /// True if activations and weights share the same width.
+    pub fn uniform(&self) -> bool {
+        self.a_bits == self.w_bits
+    }
+
+    /// Elements of the *wider* operand per 32-bit word = MACs per sdotp.
+    pub fn macs_per_sdotp(&self) -> usize {
+        32 / self.a_bits.max(self.w_bits) as usize
+    }
+
+    /// How many sdotp instructions one 32-bit word of the *narrower* operand
+    /// feeds (the paper's weight-reuse factor, CSR `mix_skip`).
+    pub fn narrow_reuse(&self) -> usize {
+        (self.a_bits.max(self.w_bits) / self.a_bits.min(self.w_bits)) as usize
+    }
+
+    /// The paper's Table III / Fig. 7 grid.
+    pub fn grid() -> Vec<Precision> {
+        vec![
+            Precision::new(2, 2),
+            Precision::new(4, 2),
+            Precision::new(4, 4),
+            Precision::new(8, 2),
+            Precision::new(8, 4),
+            Precision::new(8, 8),
+        ]
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a{}w{}", self.a_bits, self.w_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_grid_matches_paper() {
+        let g = Precision::grid();
+        assert_eq!(g.len(), 6);
+        for p in &g {
+            assert!(p.a_bits >= p.w_bits, "{p}: paper grid has a_bits >= w_bits");
+            assert!(check_bits(p.a_bits) && check_bits(p.w_bits));
+        }
+    }
+
+    #[test]
+    fn macs_per_sdotp() {
+        assert_eq!(Precision::new(2, 2).macs_per_sdotp(), 16);
+        assert_eq!(Precision::new(4, 2).macs_per_sdotp(), 8);
+        assert_eq!(Precision::new(8, 2).macs_per_sdotp(), 4);
+        assert_eq!(Precision::new(8, 8).macs_per_sdotp(), 4);
+    }
+
+    #[test]
+    fn narrow_reuse_matches_mix_skip() {
+        // a8w2: a weight word (16 crumbs) feeds 4 sdotp of 4 MACs each.
+        assert_eq!(Precision::new(8, 2).narrow_reuse(), 4);
+        assert_eq!(Precision::new(8, 4).narrow_reuse(), 2);
+        assert_eq!(Precision::new(4, 2).narrow_reuse(), 2);
+        assert_eq!(Precision::new(8, 8).narrow_reuse(), 1);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Precision::new(8, 4).to_string(), "a8w4");
+    }
+}

@@ -1,0 +1,164 @@
+//! Dense sub-byte packing/unpacking.
+//!
+//! Elements are packed little-endian within each byte and bytes are
+//! little-endian within each 32-bit word, matching what the Flex-V
+//! Slicer&Router extracts in hardware (Fig. 2b: the slicer selects the
+//! first or last group of sub-words of a 32-bit input word) and what the
+//! Pallas kernel (`python/compile/kernels/mpq_matmul.py`) unpacks with
+//! shift/mask — the two sides must agree bit-for-bit.
+
+/// Pack unsigned `bits`-wide values (each in `[0, 2^bits)`) into bytes.
+/// `bits` must divide 8 (2, 4, or 8).
+pub fn pack_unsigned(vals: &[u32], bits: u8) -> Vec<u8> {
+    assert!(matches!(bits, 2 | 4 | 8), "unsupported bit width {bits}");
+    let per_byte = 8 / bits as usize;
+    let mask = ((1u32 << bits) - 1) as u32;
+    let mut out = vec![0u8; vals.len().div_ceil(per_byte)];
+    for (i, &v) in vals.iter().enumerate() {
+        debug_assert!(v <= mask, "value {v} exceeds {bits}-bit range");
+        let byte = i / per_byte;
+        let sub = (i % per_byte) as u8;
+        out[byte] |= ((v & mask) as u8) << (sub * bits);
+    }
+    out
+}
+
+/// Pack signed `bits`-wide values (two's complement) into bytes.
+pub fn pack_signed(vals: &[i32], bits: u8) -> Vec<u8> {
+    let mask = (1u32 << bits) - 1;
+    let unsigned: Vec<u32> = vals
+        .iter()
+        .map(|&v| {
+            debug_assert!(
+                v >= -(1 << (bits - 1)) && v < (1 << (bits - 1)),
+                "value {v} exceeds signed {bits}-bit range"
+            );
+            (v as u32) & mask
+        })
+        .collect();
+    pack_unsigned(&unsigned, bits)
+}
+
+/// Unpack `n` unsigned `bits`-wide values from packed bytes.
+pub fn unpack_unsigned(bytes: &[u8], bits: u8, n: usize) -> Vec<u32> {
+    assert!(matches!(bits, 2 | 4 | 8), "unsupported bit width {bits}");
+    let per_byte = 8 / bits as usize;
+    let mask = (1u32 << bits) - 1;
+    (0..n)
+        .map(|i| {
+            let byte = bytes[i / per_byte] as u32;
+            let sub = (i % per_byte) as u8;
+            (byte >> (sub * bits)) & mask
+        })
+        .collect()
+}
+
+/// Unpack `n` signed (two's complement) `bits`-wide values.
+pub fn unpack_signed(bytes: &[u8], bits: u8, n: usize) -> Vec<i32> {
+    let shift = 32 - bits as u32;
+    unpack_unsigned(bytes, bits, n)
+        .into_iter()
+        .map(|v| ((v << shift) as i32) >> shift)
+        .collect()
+}
+
+/// Extract element `idx` (unsigned) from a packed byte buffer.
+pub fn get_unsigned(bytes: &[u8], bits: u8, idx: usize) -> u32 {
+    let per_byte = 8 / bits as usize;
+    let mask = (1u32 << bits) - 1;
+    ((bytes[idx / per_byte] as u32) >> ((idx % per_byte) as u8 * bits)) & mask
+}
+
+/// Extract element `idx` (signed) from a packed byte buffer.
+pub fn get_signed(bytes: &[u8], bits: u8, idx: usize) -> i32 {
+    let shift = 32 - bits as u32;
+    ((get_unsigned(bytes, bits, idx) << shift) as i32) >> shift
+}
+
+/// Write element `idx` (unsigned, must fit `bits`) into a packed buffer.
+pub fn set_unsigned(bytes: &mut [u8], bits: u8, idx: usize, val: u32) {
+    let per_byte = 8 / bits as usize;
+    let mask = ((1u32 << bits) - 1) as u8;
+    let sub = (idx % per_byte) as u8;
+    let b = &mut bytes[idx / per_byte];
+    *b = (*b & !(mask << (sub * bits))) | (((val as u8) & mask) << (sub * bits));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Prng};
+
+    #[test]
+    fn unsigned_roundtrip_exhaustive_small() {
+        for bits in [2u8, 4, 8] {
+            let max = 1u32 << bits;
+            let vals: Vec<u32> = (0..max).collect();
+            let packed = pack_unsigned(&vals, bits);
+            assert_eq!(unpack_unsigned(&packed, bits, vals.len()), vals);
+        }
+    }
+
+    #[test]
+    fn signed_roundtrip_exhaustive_small() {
+        for bits in [2u8, 4, 8] {
+            let half = 1i32 << (bits - 1);
+            let vals: Vec<i32> = (-half..half).collect();
+            let packed = pack_signed(&vals, bits);
+            assert_eq!(unpack_signed(&packed, bits, vals.len()), vals);
+        }
+    }
+
+    #[test]
+    fn packing_is_little_endian_in_byte() {
+        // values [1, 2, 3, 0] at 2 bits -> byte 0b00_11_10_01 = 0x39
+        assert_eq!(pack_unsigned(&[1, 2, 3, 0], 2), vec![0x39]);
+        // values [0xA, 0x5] at 4 bits -> byte 0x5A
+        assert_eq!(pack_unsigned(&[0xA, 0x5], 4), vec![0x5A]);
+    }
+
+    #[test]
+    fn density_is_exact() {
+        assert_eq!(pack_unsigned(&[0; 16], 2).len(), 4);
+        assert_eq!(pack_unsigned(&[0; 8], 4).len(), 4);
+        assert_eq!(pack_unsigned(&[0; 4], 8).len(), 4);
+        // ragged tail rounds up
+        assert_eq!(pack_unsigned(&[0; 5], 2).len(), 2);
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let bits = *rng.pick(&[2u8, 4, 8]);
+                let n = rng.range(1, 200);
+                let vals: Vec<i32> = (0..n).map(|_| rng.bits_signed(bits)).collect();
+                (bits, vals)
+            },
+            |(bits, vals)| {
+                let packed = pack_signed(vals, *bits);
+                let got = unpack_signed(&packed, *bits, vals.len());
+                if &got == vals { Ok(()) } else { Err(format!("got {got:?}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_get_set_consistent() {
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let bits = *rng.pick(&[2u8, 4, 8]);
+                let n = rng.range(1, 64);
+                let idx = rng.range(0, n);
+                let val = rng.bits_unsigned(bits);
+                (bits, n, idx, val)
+            },
+            |&(bits, n, idx, val)| {
+                let mut buf = vec![0u8; n.div_ceil(8 / bits as usize)];
+                set_unsigned(&mut buf, bits, idx, val);
+                let got = get_unsigned(&buf, bits, idx);
+                if got == val { Ok(()) } else { Err(format!("got {got} want {val}")) }
+            },
+        );
+    }
+}

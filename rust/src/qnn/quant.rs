@@ -1,0 +1,140 @@
+//! PULP-NN integer re-quantization (§II-B "Quantization" phase).
+//!
+//! Each 32-bit accumulator is brought back to the low-bitwidth unsigned
+//! output format with exactly the operation sequence the paper describes:
+//! **one MAC** (accumulator × multiplier + rounding offset), **one shift**
+//! (arithmetic right shift by `d`), **one clip** (to `[0, 2^bits - 1]`).
+//! This is the fixed-point affine requantization used by DORY-deployed
+//! networks; multipliers may be per-output-channel (HAWQ-style) or scalar.
+
+/// Per-layer requantization parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantParams {
+    /// Fixed-point multiplier, one per output channel (or a single scalar
+    /// broadcast to all channels).
+    pub mult: Vec<i32>,
+    /// Arithmetic right-shift amount (the `d` of PULP-NN).
+    pub shift: u8,
+    /// Per-output-channel bias added to the accumulator before scaling.
+    pub bias: Vec<i32>,
+    /// Output activation bit-width (output is unsigned in `[0, 2^bits - 1]`).
+    pub out_bits: u8,
+}
+
+impl QuantParams {
+    /// Scalar multiplier/bias, broadcast over `ch` channels.
+    pub fn scalar(mult: i32, shift: u8, bias: i32, out_bits: u8, ch: usize) -> Self {
+        QuantParams { mult: vec![mult; ch], shift, bias: vec![bias; ch], out_bits }
+    }
+
+    /// The clip upper bound `2^out_bits - 1`.
+    pub fn clip_hi(&self) -> i32 {
+        (1i32 << self.out_bits) - 1
+    }
+
+    /// Requantize one accumulator for output channel `ch`:
+    /// `clip( (acc + bias[ch]) * mult[ch] >> shift , 0, 2^bits-1 )`.
+    ///
+    /// The multiply is widened to i64 exactly like the hardware's 32×32→64
+    /// MAC path; the shift is arithmetic.
+    #[inline]
+    pub fn requant(&self, acc: i32, ch: usize) -> u32 {
+        let biased = acc.wrapping_add(self.bias[ch]) as i64;
+        let scaled = (biased * self.mult[ch] as i64) >> self.shift;
+        scaled.clamp(0, self.clip_hi() as i64) as u32
+    }
+
+    /// Number of channels these parameters cover.
+    pub fn channels(&self) -> usize {
+        self.mult.len()
+    }
+
+    /// Byte footprint of the quantization parameters (DORY accounts for
+    /// these when sizing L1 tiles: 4 B mult + 4 B bias per channel).
+    pub fn bytes(&self) -> usize {
+        self.mult.len() * 4 + self.bias.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Prng};
+
+    #[test]
+    fn requant_basic() {
+        let q = QuantParams::scalar(1, 0, 0, 8, 1);
+        assert_eq!(q.requant(100, 0), 100);
+        assert_eq!(q.requant(300, 0), 255); // clipped hi
+        assert_eq!(q.requant(-5, 0), 0); // clipped lo
+    }
+
+    #[test]
+    fn requant_shift_and_mult() {
+        // (acc + 10) * 3 >> 4
+        let q = QuantParams::scalar(3, 4, 10, 4, 2);
+        assert_eq!(q.requant(22, 0), 6); // (32*3)>>4 = 6
+        assert_eq!(q.requant(1000, 1), 15); // clip to 2^4-1
+    }
+
+    #[test]
+    fn clip_bounds_per_bits() {
+        for bits in [2u8, 4, 8] {
+            let q = QuantParams::scalar(1, 0, 0, bits, 1);
+            assert_eq!(q.clip_hi(), (1 << bits) - 1);
+        }
+    }
+
+    #[test]
+    fn prop_output_always_in_range() {
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let bits = *rng.pick(&[2u8, 4, 8]);
+                let q = QuantParams::scalar(
+                    rng.range_i64(1, 1 << 16) as i32,
+                    rng.range(0, 31) as u8,
+                    rng.range_i64(-(1 << 20), 1 << 20) as i32,
+                    bits,
+                    1,
+                );
+                let acc = rng.range_i64(i32::MIN as i64 / 2, i32::MAX as i64 / 2) as i32;
+                (q, acc)
+            },
+            |(q, acc)| {
+                let out = q.requant(*acc, 0);
+                if out <= q.clip_hi() as u32 {
+                    Ok(())
+                } else {
+                    Err(format!("out {out} exceeds clip {}", q.clip_hi()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_monotone_in_acc() {
+        // Requantization must be monotone non-decreasing in the accumulator
+        // (multiplier is positive) — a property DORY's calibration relies on.
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let q = QuantParams::scalar(
+                    rng.range_i64(1, 1 << 12) as i32,
+                    rng.range(0, 24) as u8,
+                    rng.range_i64(-1000, 1000) as i32,
+                    *rng.pick(&[2u8, 4, 8]),
+                    1,
+                );
+                let a = rng.range_i64(-100_000, 100_000) as i32;
+                let b = rng.range_i64(-100_000, 100_000) as i32;
+                (q, a.min(b), a.max(b))
+            },
+            |(q, lo, hi)| {
+                if q.requant(*lo, 0) <= q.requant(*hi, 0) {
+                    Ok(())
+                } else {
+                    Err("not monotone".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,215 @@
+//! Packed quantized tensors in HWC layout.
+//!
+//! A [`QTensor`] owns a densely packed byte buffer (sub-byte elements packed
+//! little-endian, see [`crate::qnn::packing`]) plus shape/precision metadata.
+//! The innermost (channel) dimension must be byte-aligned — the same
+//! constraint DORY's tiling solver enforces (§IV: "the convolutional loop's
+//! innermost dimensions should always be byte-aligned") — so that rows can
+//! be DMA-copied and word-loaded without cross-byte straddling.
+
+use super::packing;
+use crate::util::Prng;
+
+/// A quantized tensor: packed data + shape + element format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QTensor {
+    /// Packed storage, little-endian sub-byte packing.
+    pub data: Vec<u8>,
+    /// Shape, outermost first. Conv activations are `[H, W, C]` (HWC);
+    /// conv weights are `[Cout, Kh, Kw, Cin]`; vectors are `[N]`.
+    pub shape: Vec<usize>,
+    /// Element bit-width: 2, 4 or 8.
+    pub bits: u8,
+    /// Two's-complement signed elements (weights) vs unsigned (activations).
+    pub signed: bool,
+}
+
+impl QTensor {
+    /// Zero-filled tensor. The total bit count must be byte-aligned (the
+    /// stricter *innermost-dimension* byte alignment required for DMA'd
+    /// rows is enforced by the DORY tiling solver, §IV).
+    pub fn zeros(shape: &[usize], bits: u8, signed: bool) -> Self {
+        assert!(super::check_bits(bits), "unsupported bits {bits}");
+        let n: usize = shape.iter().product();
+        assert!(n * bits as usize % 8 == 0, "{shape:?} x {bits}b not byte-aligned");
+        QTensor {
+            data: vec![0u8; n * bits as usize / 8],
+            shape: shape.to_vec(),
+            bits,
+            signed,
+        }
+    }
+
+    /// Random tensor with elements uniform over the full representable range.
+    pub fn random(shape: &[usize], bits: u8, signed: bool, rng: &mut Prng) -> Self {
+        let mut t = Self::zeros(shape, bits, signed);
+        let n = t.len();
+        for i in 0..n {
+            if signed {
+                t.set_i(i, rng.bits_signed(bits));
+            } else {
+                t.set_u(i, rng.bits_unsigned(bits));
+            }
+        }
+        t
+    }
+
+    /// Build from unsigned element values.
+    pub fn from_unsigned(shape: &[usize], bits: u8, vals: &[u32]) -> Self {
+        let mut t = Self::zeros(shape, bits, false);
+        assert_eq!(vals.len(), t.len());
+        t.data = packing::pack_unsigned(vals, bits);
+        t.data.resize(t.len() * bits as usize / 8, 0);
+        t
+    }
+
+    /// Build from signed element values.
+    pub fn from_signed(shape: &[usize], bits: u8, vals: &[i32]) -> Self {
+        let mut t = Self::zeros(shape, bits, true);
+        assert_eq!(vals.len(), t.len());
+        t.data = packing::pack_signed(vals, bits);
+        t.data.resize(t.len() * bits as usize / 8, 0);
+        t
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Packed byte footprint (the paper's "model size" metric counts this).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Flat index from multi-dimensional index.
+    pub fn flat(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len());
+        let mut f = 0usize;
+        for (i, (&x, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(x < d, "index {x} out of bound {d} at dim {i}");
+            f = f * d + x;
+        }
+        f
+    }
+
+    /// Unsigned element at flat index.
+    pub fn get_u(&self, i: usize) -> u32 {
+        packing::get_unsigned(&self.data, self.bits, i)
+    }
+
+    /// Signed element at flat index.
+    pub fn get_i(&self, i: usize) -> i32 {
+        packing::get_signed(&self.data, self.bits, i)
+    }
+
+    /// Element at flat index as i32 regardless of signedness.
+    pub fn get(&self, i: usize) -> i32 {
+        if self.signed { self.get_i(i) } else { self.get_u(i) as i32 }
+    }
+
+    pub fn set_u(&mut self, i: usize, v: u32) {
+        packing::set_unsigned(&mut self.data, self.bits, i, v);
+    }
+
+    pub fn set_i(&mut self, i: usize, v: i32) {
+        let mask = (1u32 << self.bits) - 1;
+        packing::set_unsigned(&mut self.data, self.bits, i, (v as u32) & mask);
+    }
+
+    /// All elements as i32 (sign- or zero-extended).
+    pub fn to_vec_i32(&self) -> Vec<i32> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn zeros_footprint() {
+        // 16x16x32 @ 2 bit = 2048 B; @ 8 bit = 8192 B
+        assert_eq!(QTensor::zeros(&[16, 16, 32], 2, false).bytes(), 2048);
+        assert_eq!(QTensor::zeros(&[16, 16, 32], 8, false).bytes(), 8192);
+    }
+
+    #[test]
+    #[should_panic(expected = "byte-aligned")]
+    fn rejects_unaligned_total_bits() {
+        // 3 elements x 2 bits = 6 bits, not byte aligned
+        QTensor::zeros(&[1, 3], 2, false);
+    }
+
+    #[test]
+    fn subbyte_trailing_dims_allowed_when_total_aligned() {
+        // depthwise weights [C, kh, kw, 1] at 4 bit: total 36*4 bits OK
+        let t = QTensor::zeros(&[4, 3, 3, 1], 4, true);
+        assert_eq!(t.bytes(), 18);
+    }
+
+    #[test]
+    fn flat_index_hwc() {
+        let t = QTensor::zeros(&[2, 3, 4], 8, false);
+        assert_eq!(t.flat(&[0, 0, 0]), 0);
+        assert_eq!(t.flat(&[0, 0, 3]), 3);
+        assert_eq!(t.flat(&[0, 1, 0]), 4);
+        assert_eq!(t.flat(&[1, 0, 0]), 12);
+    }
+
+    #[test]
+    fn from_signed_roundtrip() {
+        let vals: Vec<i32> = vec![-2, -1, 0, 1, -2, 1, 0, -1];
+        let t = QTensor::from_signed(&[2, 4], 2, &vals);
+        assert_eq!(t.to_vec_i32(), vals);
+    }
+
+    #[test]
+    fn prop_random_in_range() {
+        proptest::check_default(
+            |rng| {
+                let bits = *rng.pick(&[2u8, 4, 8]);
+                let c = rng.range(1, 5) * (8 / bits as usize).max(1);
+                let t = QTensor::random(&[rng.range(1, 6), c], bits, rng.chance(0.5), rng);
+                t
+            },
+            |t| {
+                for i in 0..t.len() {
+                    let v = t.get(i);
+                    let (lo, hi) = if t.signed {
+                        (-(1i32 << (t.bits - 1)), (1i32 << (t.bits - 1)) - 1)
+                    } else {
+                        (0, (1i32 << t.bits) - 1)
+                    };
+                    if v < lo || v > hi {
+                        return Err(format!("elem {i}={v} outside [{lo},{hi}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_set_get_roundtrip() {
+        proptest::check_default(
+            |rng| {
+                let bits = *rng.pick(&[2u8, 4, 8]);
+                let n = rng.range(1, 30) * (8 / bits as usize);
+                let idx = rng.range(0, n);
+                let v = rng.bits_signed(bits);
+                (bits, n, idx, v)
+            },
+            |&(bits, n, idx, v)| {
+                let mut t = QTensor::zeros(&[n], bits, true);
+                t.set_i(idx, v);
+                if t.get_i(idx) == v { Ok(()) } else { Err(format!("got {}", t.get_i(idx))) }
+            },
+        );
+    }
+}

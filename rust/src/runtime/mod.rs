@@ -1,0 +1,278 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas golden models
+//! (HLO text produced by `python/compile/aot.py`) and executes them on the
+//! XLA CPU client — the independent numerical oracle for the simulator.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Each artifact `<name>.hlo.txt` ships with a `<name>.meta` sidecar
+//! (`key=value` lines) describing the baked shapes/precision so the
+//! validator can regenerate the exact inputs on the Rust side.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::isa::IsaVariant;
+use crate::kernels::matmul::{gen_matmul, MatMulTask};
+use crate::kernels::requant::RequantCfg;
+use crate::qnn::{QTensor, Precision, QuantParams};
+use crate::sim::{Cluster, TCDM_BASE};
+use crate::util::Prng;
+
+/// Parsed `.meta` sidecar of an artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub a_bits: u8,
+    pub w_bits: u8,
+    pub out_bits: u8,
+    pub shift: u8,
+}
+
+pub fn parse_meta(path: &Path) -> Result<ArtifactMeta> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let mut kv = HashMap::new();
+    for line in text.lines() {
+        if let Some((k, v)) = line.split_once('=') {
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    let get = |k: &str| -> Result<usize> {
+        kv.get(k)
+            .with_context(|| format!("{path:?} missing key {k}"))?
+            .parse::<usize>()
+            .with_context(|| format!("{path:?} bad value for {k}"))
+    };
+    Ok(ArtifactMeta {
+        name: kv.get("name").cloned().unwrap_or_default(),
+        m: get("m")?,
+        n: get("n")?,
+        k: get("k")?,
+        a_bits: get("a_bits")? as u8,
+        w_bits: get("w_bits")? as u8,
+        out_bits: get("out_bits")? as u8,
+        shift: get("shift")? as u8,
+    })
+}
+
+/// A loaded golden executable.
+pub struct GoldenExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+/// The PJRT CPU client plus loaded artifacts.
+pub struct GoldenRuntime {
+    client: xla::PjRtClient,
+}
+
+impl GoldenRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(GoldenRuntime { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, hlo_path: &Path, meta: ArtifactMeta) -> Result<GoldenExe> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(GoldenExe { exe, meta })
+    }
+}
+
+impl GoldenExe {
+    /// Execute the golden MatMul: unpacked activations `[m, k]` (i32),
+    /// packed weight words `[n, kw]` (i32), `mult[n]`, `bias[n]` → `[m, n]`
+    /// requantized outputs (i32).
+    pub fn run_matmul(
+        &self,
+        a: &[i32],
+        w_words: &[i32],
+        mult: &[i32],
+        bias: &[i32],
+    ) -> Result<Vec<i32>> {
+        let m = &self.meta;
+        let kw = w_words.len() / m.n;
+        let a_lit = xla::Literal::vec1(a).reshape(&[m.m as i64, m.k as i64])?;
+        let w_lit = xla::Literal::vec1(w_words).reshape(&[m.n as i64, kw as i64])?;
+        let mult_lit = xla::Literal::vec1(mult);
+        let bias_lit = xla::Literal::vec1(bias);
+        let result = self.exe.execute::<xla::Literal>(&[a_lit, w_lit, mult_lit, bias_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+/// Run the full three-way cross-check over every artifact in `dir`:
+/// simulator kernel == XLA golden == Rust golden, bit-exact. Returns the
+/// number of artifact checks performed.
+pub fn validate_artifacts(dir: &str) -> Result<usize> {
+    let dir = Path::new(dir);
+    if !dir.exists() {
+        bail!("artifact dir {dir:?} missing — run `make artifacts` first");
+    }
+    let rt = GoldenRuntime::cpu()?;
+    let mut checked = 0;
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "meta").unwrap_or(false))
+        .collect();
+    entries.sort();
+    for meta_path in entries {
+        let meta = parse_meta(&meta_path)?;
+        let hlo_path = meta_path.with_extension("hlo.txt");
+        if !hlo_path.exists() {
+            bail!("{hlo_path:?} missing for {meta_path:?}");
+        }
+        let exe = rt.load(&hlo_path, meta.clone())?;
+        check_matmul_artifact(&exe).with_context(|| format!("artifact {}", meta.name))?;
+        println!("  ok: {} (m={} n={} k={} a{}w{})", meta.name, meta.m, meta.n, meta.k, meta.a_bits, meta.w_bits);
+        checked += 1;
+    }
+    if checked == 0 {
+        bail!("no artifacts found in {dir:?}");
+    }
+    Ok(checked)
+}
+
+/// Three-way check of one MatMul artifact.
+fn check_matmul_artifact(exe: &GoldenExe) -> Result<()> {
+    let m = &exe.meta;
+    let prec = Precision::new(m.a_bits, m.w_bits);
+    let mut rng = Prng::new(0x60D1 + m.a_bits as u64 * 100 + m.w_bits as u64);
+    // Inputs (shared across all three implementations).
+    let a_vals: Vec<u32> = (0..m.m * m.k).map(|_| rng.bits_unsigned(m.a_bits)).collect();
+    let w_vals: Vec<i32> = (0..m.n * m.k).map(|_| rng.bits_signed(m.w_bits)).collect();
+    let mult: Vec<i32> = (0..m.n).map(|_| rng.range_i64(1, 6) as i32).collect();
+    let bias: Vec<i32> = (0..m.n).map(|_| rng.range_i64(-64, 64) as i32).collect();
+
+    // 1. Rust golden.
+    let q = QuantParams { mult: mult.clone(), shift: m.shift, bias: bias.clone(), out_bits: m.out_bits };
+    let golden: Vec<i32> = (0..m.m)
+        .flat_map(|row| {
+            let a_vals = &a_vals;
+            let w_vals = &w_vals;
+            let q = &q;
+            (0..m.n).map(move |ch| {
+                let acc: i64 = (0..m.k)
+                    .map(|kk| a_vals[row * m.k + kk] as i64 * w_vals[ch * m.k + kk] as i64)
+                    .sum();
+                q.requant(acc as i32, ch) as i32
+            })
+        })
+        .collect();
+
+    // 2. XLA golden (packed weights, word-wise, little-endian like the HW).
+    let kw_words = (m.k * m.w_bits as usize).div_ceil(32);
+    let mut w_words = vec![0i32; m.n * kw_words];
+    for ch in 0..m.n {
+        for kk in 0..m.k {
+            let bit = kk * m.w_bits as usize;
+            let (word, off) = (bit / 32, bit % 32);
+            let v = (w_vals[ch * m.k + kk] as u32) & ((1u32 << m.w_bits) - 1);
+            w_words[ch * kw_words + word] |= (v << off) as i32;
+        }
+    }
+    let a_i32: Vec<i32> = a_vals.iter().map(|&v| v as i32).collect();
+    let xla_out = exe.run_matmul(&a_i32, &w_words, &mult, &bias)?;
+    if xla_out != golden {
+        bail!(
+            "XLA golden != Rust golden (first diff at {:?})",
+            xla_out.iter().zip(&golden).position(|(a, b)| a != b)
+        );
+    }
+
+    // 3. Simulator kernel (Flex-V path; the other ISAs are covered by the
+    // kernel unit tests against the same Rust golden).
+    let a_pitch = (m.k.div_ceil(32 / m.a_bits as usize) * 4) as u32;
+    let w_pitch = crate::dory::deploy::w_row_pitch(m.k, m.a_bits, m.w_bits);
+    let a_base = TCDM_BASE;
+    let w_base = a_base + (m.m as u32) * a_pitch;
+    let mult_base = w_base + m.n as u32 * w_pitch;
+    let bias_base = mult_base + 4 * m.n as u32;
+    let out_base = bias_base + 4 * m.n as u32;
+    let mut cl = Cluster::pulp();
+    let ka = a_pitch as usize * 8 / m.a_bits as usize;
+    let mut a_t = QTensor::zeros(&[m.m, ka], m.a_bits, false);
+    for row in 0..m.m {
+        for kk in 0..m.k {
+            a_t.set_u(row * ka + kk, a_vals[row * m.k + kk]);
+        }
+    }
+    let kw = w_pitch as usize * 8 / m.w_bits as usize;
+    let mut w_t = QTensor::zeros(&[m.n, kw], m.w_bits, true);
+    for ch in 0..m.n {
+        for kk in 0..m.k {
+            w_t.set_i(ch * kw + kk, w_vals[ch * m.k + kk]);
+        }
+    }
+    cl.mem.write_bytes(a_base, &a_t.data);
+    cl.mem.write_bytes(w_base, &w_t.data);
+    for ch in 0..m.n {
+        cl.mem.store_u32(mult_base + 4 * ch as u32, mult[ch] as u32);
+        cl.mem.store_u32(bias_base + 4 * ch as u32, bias[ch] as u32);
+    }
+    let task = MatMulTask {
+        m: m.m,
+        n: m.n,
+        k: m.k,
+        prec,
+        a_base,
+        a_pitch,
+        w_base,
+        w_pitch,
+        out_base,
+        out_pitch: (m.n * m.out_bits as usize / 8) as u32,
+        quant: RequantCfg { mult_base, bias_base, shift: m.shift, out_bits: m.out_bits },
+    };
+    cl.load_programs((0..8).map(|c| gen_matmul(IsaVariant::FlexV, &task, c, 8)).collect());
+    cl.run();
+    for row in 0..m.m {
+        for ch in 0..m.n {
+            let want = golden[row * m.n + ch] as u32;
+            let idx = row * m.n + ch;
+            let got = crate::qnn::packing::get_unsigned(
+                &cl.mem.read_bytes(out_base, m.m * m.n * m.out_bits as usize / 8),
+                m.out_bits,
+                idx,
+            );
+            if got != want {
+                bail!("simulator != golden at ({row},{ch}): {got} vs {want}");
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn meta_roundtrip() {
+        let dir = std::env::temp_dir().join("flexv_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.meta");
+        let mut f = std::fs::File::create(&p).unwrap();
+        writeln!(f, "name=mpq_matmul_a8w4\nm=16\nn=8\nk=64\na_bits=8\nw_bits=4\nout_bits=8\nshift=10").unwrap();
+        let meta = parse_meta(&p).unwrap();
+        assert_eq!(meta.m, 16);
+        assert_eq!(meta.w_bits, 4);
+        assert_eq!(meta.name, "mpq_matmul_a8w4");
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(validate_artifacts("/nonexistent_dir_xyz").is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! The 8-core PULP cluster model: lockstep cycle simulation of the cores,
+//! the 16-bank TCDM logarithmic interconnect (one request per bank per
+//! cycle, rotating round-robin priority), the hardware synchronization
+//! unit (barriers with clock-gated waiting) and the background DMA.
+
+use super::core::{Core, CoreState};
+use super::dma::Dma;
+use super::mem::ClusterMem;
+use super::stats::{ClusterStats, CoreStats};
+use crate::isa::Program;
+use crate::{CLUSTER_CORES, TCDM_BANKS};
+
+/// The cluster simulator.
+pub struct Cluster {
+    pub mem: ClusterMem,
+    pub cores: Vec<Core>,
+    pub dma: Dma,
+    /// Rotating arbitration priority offset.
+    rr: usize,
+    /// Global cycle counter.
+    pub cycle: u64,
+    /// Safety limit to catch runaway programs (0 = unlimited).
+    pub max_cycles: u64,
+    /// Reused per-cycle arbitration scratch (avoids per-cycle allocation
+    /// — see EXPERIMENTS.md §Perf).
+    want: Vec<Option<usize>>,
+    granted: Vec<bool>,
+}
+
+impl Cluster {
+    pub fn new(n_cores: usize) -> Self {
+        Cluster {
+            mem: ClusterMem::new(),
+            cores: (0..n_cores).map(Core::new).collect(),
+            dma: Dma::new(),
+            rr: 0,
+            cycle: 0,
+            max_cycles: 20_000_000_000,
+            want: vec![None; n_cores],
+            granted: vec![false; n_cores],
+        }
+    }
+
+    /// Standard 8-core cluster.
+    pub fn pulp() -> Self {
+        Self::new(CLUSTER_CORES)
+    }
+
+    /// Load one program per core (shorter vec leaves remaining cores
+    /// halted). Resets core stats for a fresh measurement window.
+    pub fn load_programs(&mut self, progs: Vec<Program>) {
+        assert!(progs.len() <= self.cores.len());
+        for core in &mut self.cores {
+            core.stats = CoreStats::default();
+        }
+        for (core, prog) in self.cores.iter_mut().zip(progs) {
+            core.load_program(prog);
+        }
+    }
+
+    /// Advance one cycle. Returns false when everything is idle.
+    pub fn step(&mut self) -> bool {
+        let any_core_active =
+            self.cores.iter().any(|c| c.state != CoreState::Halted);
+        if !any_core_active && self.dma.idle() {
+            return false;
+        }
+        self.cycle += 1;
+
+        // Phase 1: collect TCDM requests from cores.
+        let n = self.cores.len();
+        for (i, c) in self.cores.iter().enumerate() {
+            self.want[i] = c.mem_request().map(ClusterMem::bank_of);
+        }
+        // Phase 2: arbitrate one grant per bank; rotating priority
+        // (conditional wraparound — integer division is the hot path's
+        // single most expensive instruction otherwise).
+        let mut bank_taken = [false; TCDM_BANKS];
+        let mut i = self.rr;
+        for _ in 0..n {
+            self.granted[i] = false;
+            if let Some(b) = self.want[i] {
+                if !bank_taken[b] {
+                    bank_taken[b] = true;
+                    self.granted[i] = true;
+                }
+            }
+            i += 1;
+            if i >= n {
+                i = 0;
+            }
+        }
+        self.rr += 1;
+        if self.rr >= n {
+            self.rr = 0;
+        }
+
+        // Phase 3: tick cores (collecting barrier state on the way).
+        let (mut waiting, mut running) = (0usize, 0usize);
+        for i in 0..n {
+            let core = &mut self.cores[i];
+            core.tick(&mut self.mem, self.granted[i]);
+            match core.state {
+                CoreState::AtBarrier => waiting += 1,
+                CoreState::Running => running += 1,
+                CoreState::Halted => {}
+            }
+        }
+
+        // Phase 4: DMA (lowest priority — blocked if any of its banks went
+        // to a core this cycle).
+        let dma_blocked = match self.dma.pending_banks() {
+            Some([b0, b1]) => bank_taken[b0] || bank_taken[b1],
+            None => false,
+        };
+        self.dma.tick(&mut self.mem, dma_blocked);
+
+        // Phase 5: barrier release — when every non-halted core waits.
+        if waiting > 0 && running == 0 {
+            for c in &mut self.cores {
+                if c.state == CoreState::AtBarrier {
+                    c.release_barrier();
+                }
+            }
+        }
+        true
+    }
+
+    /// Run until all cores halt and the DMA drains. Returns the stats of
+    /// this window (cycles counted from the call).
+    pub fn run(&mut self) -> ClusterStats {
+        let start_cycle = self.cycle;
+        let start_dma_busy = self.dma.busy_cycles;
+        let start_dma_bytes = self.dma.bytes_moved;
+        while self.step() {
+            if self.max_cycles > 0 && self.cycle - start_cycle > self.max_cycles {
+                panic!(
+                    "cluster exceeded max_cycles={} (runaway kernel?)",
+                    self.max_cycles
+                );
+            }
+        }
+        ClusterStats {
+            cycles: self.cycle - start_cycle,
+            cores: self.cores.iter().map(|c| c.stats).collect(),
+            dma_busy_cycles: self.dma.busy_cycles - start_dma_busy,
+            dma_bytes: self.dma.bytes_moved - start_dma_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{AluOp, Instr};
+    use crate::sim::mem::TCDM_BASE;
+
+    fn alu_prog(n: usize) -> Program {
+        let mut p = Program::new("alu");
+        p.push(Instr::LpSetup { l: 0, count: n as u32, len: 1 });
+        p.push(Instr::AluI { op: AluOp::Add, rd: 1, rs1: 1, imm: 1 });
+        p.push(Instr::Halt);
+        p
+    }
+
+    #[test]
+    fn independent_alu_programs_run_in_parallel() {
+        let mut cl = Cluster::new(8);
+        cl.load_programs((0..8).map(|_| alu_prog(100)).collect());
+        let stats = cl.run();
+        // no memory => no contention => all finish in lockstep
+        assert_eq!(stats.cores.len(), 8);
+        for c in &stats.cores {
+            assert_eq!(c.instrs, 102);
+            assert_eq!(c.conflict_stalls, 0);
+        }
+        assert_eq!(stats.cycles, 102);
+    }
+
+    #[test]
+    fn same_bank_loads_conflict() {
+        // all 8 cores hammer the same word -> same bank -> serialization
+        let mut cl = Cluster::new(8);
+        let mut progs = vec![];
+        for _ in 0..8 {
+            let mut p = Program::new("ld");
+            p.push(Instr::Li { rd: 1, imm: TCDM_BASE as i32 });
+            p.push(Instr::LpSetup { l: 0, count: 32, len: 1 });
+            p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+            p.push(Instr::Halt);
+            progs.push(p);
+        }
+        cl.load_programs(progs);
+        let stats = cl.run();
+        let total_conflicts: u64 = stats.cores.iter().map(|c| c.conflict_stalls).sum();
+        assert!(total_conflicts > 0, "same-bank access must conflict");
+        // 256 loads through 1 bank: lower bound ~256 cycles
+        assert!(stats.cycles >= 256, "cycles={} too low", stats.cycles);
+    }
+
+    #[test]
+    fn striped_banks_do_not_conflict() {
+        // each core loads its own bank (core i -> word i)
+        let mut cl = Cluster::new(8);
+        let mut progs = vec![];
+        for i in 0..8 {
+            let mut p = Program::new("ld");
+            p.push(Instr::Li { rd: 1, imm: (TCDM_BASE + 4 * i) as i32 });
+            p.push(Instr::LpSetup { l: 0, count: 32, len: 1 });
+            p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+            p.push(Instr::Halt);
+            progs.push(p);
+        }
+        cl.load_programs(progs);
+        let stats = cl.run();
+        for c in &stats.cores {
+            assert_eq!(c.conflict_stalls, 0);
+        }
+    }
+
+    #[test]
+    fn rotating_priority_is_fair() {
+        // two cores fight for one bank; stalls should split roughly evenly
+        let mut cl = Cluster::new(2);
+        let mut progs = vec![];
+        for _ in 0..2 {
+            let mut p = Program::new("ld");
+            p.push(Instr::Li { rd: 1, imm: TCDM_BASE as i32 });
+            p.push(Instr::LpSetup { l: 0, count: 100, len: 1 });
+            p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+            p.push(Instr::Halt);
+            progs.push(p);
+        }
+        cl.load_programs(progs);
+        let stats = cl.run();
+        let s0 = stats.cores[0].conflict_stalls as i64;
+        let s1 = stats.cores[1].conflict_stalls as i64;
+        assert!((s0 - s1).abs() <= 2, "unfair arbitration: {s0} vs {s1}");
+    }
+
+    #[test]
+    fn barrier_synchronizes_cores() {
+        // core 0 runs long, core 1 short; both barrier then store cycle mark
+        let mut cl = Cluster::new(2);
+        let mut p0 = Program::new("long");
+        p0.push(Instr::LpSetup { l: 0, count: 500, len: 1 });
+        p0.push(Instr::AluI { op: AluOp::Add, rd: 1, rs1: 1, imm: 1 });
+        p0.push(Instr::Barrier);
+        p0.push(Instr::AluI { op: AluOp::Add, rd: 3, rs1: 0, imm: 7 });
+        p0.push(Instr::Halt);
+        let mut p1 = Program::new("short");
+        p1.push(Instr::AluI { op: AluOp::Add, rd: 1, rs1: 1, imm: 1 });
+        p1.push(Instr::Barrier);
+        p1.push(Instr::AluI { op: AluOp::Add, rd: 3, rs1: 0, imm: 7 });
+        p1.push(Instr::Halt);
+        cl.load_programs(vec![p0, p1]);
+        let stats = cl.run();
+        // core 1 waited for core 0
+        assert!(stats.cores[1].barrier_cycles >= 490, "{:?}", stats.cores[1]);
+        assert!(stats.cores[0].barrier_cycles <= 5);
+        assert_eq!(cl.cores[0].regs[3], 7);
+        assert_eq!(cl.cores[1].regs[3], 7);
+    }
+
+    #[test]
+    fn dma_overlaps_with_compute() {
+        use crate::sim::dma::{DmaDir, DmaRequest};
+        use crate::sim::mem::L2_BASE;
+        let mut cl = Cluster::new(1);
+        cl.mem.write_bytes(L2_BASE, &vec![0xAB; 4096]);
+        cl.dma.push(DmaRequest::linear(DmaDir::L2ToTcdm, L2_BASE, TCDM_BASE + 8192, 4096));
+        cl.load_programs(vec![alu_prog(2000)]);
+        let stats = cl.run();
+        // compute (2002 cycles) dominates the DMA (16 + 512) — full overlap
+        assert!(stats.cycles < 2100, "cycles={} suggests no overlap", stats.cycles);
+        assert_eq!(cl.mem.read_bytes(TCDM_BASE + 8192, 4096), vec![0xAB; 4096]);
+    }
+
+    #[test]
+    fn dma_tail_extends_run() {
+        use crate::sim::dma::{DmaDir, DmaRequest};
+        use crate::sim::mem::L2_BASE;
+        let mut cl = Cluster::new(1);
+        cl.dma.push(DmaRequest::linear(DmaDir::L2ToTcdm, L2_BASE, TCDM_BASE, 8000));
+        cl.load_programs(vec![alu_prog(10)]);
+        let stats = cl.run();
+        // DMA 16 + 1000 beats dominates the 12-cycle program
+        assert!(stats.cycles >= 1000, "cycles={}", stats.cycles);
+    }
+}

@@ -1,0 +1,703 @@
+//! Single-core instruction-set simulator with RI5CY pipeline timing.
+//!
+//! The core executes a [`Program`] (the IR emitted by the kernel library)
+//! with exact integer semantics and a cycle cost model of the RI5CY 4-stage
+//! in-order single-issue pipeline (§II-A), extended per ISA variant with the
+//! Dotp unit + MPC (mixed-precision slicing, Fig. 2) and the Mac&Load
+//! controller + NN-RF (§III, Fig. 4).
+//!
+//! The cluster drives cores through a two-phase protocol each cycle:
+//! [`Core::mem_request`] peeks whether the next instruction needs a TCDM
+//! port (and which bank), the cluster arbitrates, then [`Core::tick`]
+//! either retires the instruction or records a conflict stall.
+
+use super::mem::ClusterMem;
+use super::mlc::MlcChannel;
+use super::stats::CoreStats;
+use crate::isa::{
+    AluOp, Cond, Csr, Instr, MlChannel, MlUpdate, Program, SimdFmt,
+};
+
+/// Hardware-loop state (RI5CY has two nesting levels).
+#[derive(Clone, Copy, Debug, Default)]
+struct HwLoop {
+    start: usize,
+    end: usize, // exclusive: index one past the last body instruction
+    remaining: u32,
+    active: bool,
+}
+
+/// Core execution phase.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CoreState {
+    Running,
+    /// Waiting at a barrier (clock-gated by the HW sync unit).
+    AtBarrier,
+    Halted,
+}
+
+/// One simulated core.
+#[derive(Clone, Debug)]
+pub struct Core {
+    pub id: usize,
+    pub regs: [u32; 32],
+    /// Flex-V NN register file (W0-W3 = slots 0-3, A0-A1 = slots 4-5).
+    pub nnrf: [u32; 6],
+    pub pc: usize,
+    prog: Program,
+    loops: [HwLoop; 2],
+    /// MLC activation channel.
+    pub mlc_a: MlcChannel,
+    /// MLC weight channel.
+    pub mlc_w: MlcChannel,
+    /// Informational CSR values (simd_fmt etc. — the generators resolve
+    /// virtual instructions statically, but writes are costed and stored).
+    pub csrs: [u32; 16],
+    pub state: CoreState,
+    /// Extra stall cycles to consume before the next issue.
+    pending_stall: u32,
+    /// Destination of the load retired in the previous cycle (load-use).
+    hazard_reg: Option<u8>,
+    /// Cached TCDM request of the instruction at `pc` (recomputed after
+    /// every architectural change — saves a full decode per cycle, see
+    /// EXPERIMENTS.md §Perf).
+    cached_req: Option<u32>,
+    pub stats: CoreStats,
+}
+
+impl Core {
+    pub fn new(id: usize) -> Self {
+        Core {
+            id,
+            regs: [0; 32],
+            nnrf: [0; 6],
+            pc: 0,
+            prog: Program::new("idle"),
+            loops: Default::default(),
+            mlc_a: MlcChannel::default(),
+            mlc_w: MlcChannel::default(),
+            csrs: [0; 16],
+            state: CoreState::Halted,
+            pending_stall: 0,
+            hazard_reg: None,
+            cached_req: None,
+            stats: CoreStats::default(),
+        }
+    }
+
+    /// Load a program and reset architectural state (keeps stats).
+    pub fn load_program(&mut self, prog: Program) {
+        self.prog = prog;
+        self.pc = 0;
+        self.loops = Default::default();
+        self.state = CoreState::Running;
+        self.pending_stall = 0;
+        self.hazard_reg = None;
+        self.refresh_req();
+    }
+
+    pub fn halted(&self) -> bool {
+        self.state == CoreState::Halted
+    }
+
+    fn reg(&self, r: u8) -> u32 {
+        self.regs[r as usize]
+    }
+
+    fn set_reg(&mut self, r: u8, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    fn csr_idx(c: Csr) -> usize {
+        match c {
+            Csr::SimdFmt => 0,
+            Csr::MixSkip => 1,
+            Csr::SbLegacy => 2,
+            Csr::AStride => 3,
+            Csr::WStride => 4,
+            Csr::ARollback => 5,
+            Csr::WRollback => 6,
+            Csr::ASkip => 7,
+            Csr::WSkip => 8,
+            Csr::ABase => 9,
+            Csr::WBase => 10,
+        }
+    }
+
+    /// Phase 1: does the next issue need a TCDM access, and at which
+    /// address? Returns `None` when stalled, halted, or non-memory.
+    #[inline]
+    pub fn mem_request(&self) -> Option<u32> {
+        if self.state != CoreState::Running || self.pending_stall > 0 {
+            return None;
+        }
+        self.cached_req
+    }
+
+    /// Recompute the cached TCDM request for the instruction at `pc`.
+    #[inline]
+    fn refresh_req(&mut self) {
+        let Some(i) = self.prog.instrs.get(self.pc) else {
+            self.cached_req = None;
+            return;
+        };
+        self.cached_req = match *i {
+            Instr::Lw { base, off, .. } | Instr::Lbu { base, off, .. } => {
+                Some(self.reg(base).wrapping_add(off as u32))
+            }
+            Instr::Sw { base, off, .. } | Instr::Sb { base, off, .. } => {
+                Some(self.reg(base).wrapping_add(off as u32))
+            }
+            Instr::NnLoad { ch, .. } => Some(self.mlc(ch).peek()),
+            Instr::MlSdotp { upd: MlUpdate::Load { ch, .. }, .. } => Some(self.mlc(ch).peek()),
+            _ => None,
+        };
+    }
+
+    fn mlc(&self, ch: MlChannel) -> &MlcChannel {
+        match ch {
+            MlChannel::Act => &self.mlc_a,
+            MlChannel::Wgt => &self.mlc_w,
+        }
+    }
+
+    fn mlc_mut(&mut self, ch: MlChannel) -> &mut MlcChannel {
+        match ch {
+            MlChannel::Act => &mut self.mlc_a,
+            MlChannel::Wgt => &mut self.mlc_w,
+        }
+    }
+
+    /// Phase 2: advance one cycle. `mem_granted` tells whether the TCDM
+    /// port requested in phase 1 was won (ignored for non-memory issues).
+    /// Returns true if an instruction retired this cycle.
+    #[inline]
+    pub fn tick(&mut self, mem: &mut ClusterMem, mem_granted: bool) -> bool {
+        match self.state {
+            CoreState::Halted => return false,
+            CoreState::AtBarrier => {
+                self.stats.barrier_cycles += 1;
+                self.stats.cycles += 1;
+                return false;
+            }
+            CoreState::Running => {}
+        }
+        self.stats.cycles += 1;
+        if self.pending_stall > 0 {
+            self.pending_stall -= 1;
+            return false;
+        }
+        let instr = self.prog.instrs[self.pc];
+        // Load-use hazard: consumer immediately following a load stalls 1cy.
+        if let Some(h) = self.hazard_reg {
+            if reads_reg(&instr, h) {
+                self.hazard_reg = None;
+                self.stats.loaduse_stalls += 1;
+                return false;
+            }
+        }
+        self.hazard_reg = None;
+        if instr.is_mem() && !mem_granted {
+            self.stats.conflict_stalls += 1;
+            return false;
+        }
+        self.execute(instr, mem);
+        true
+    }
+
+    /// Execute one instruction (functional + PC/loop bookkeeping).
+    fn execute(&mut self, instr: Instr, mem: &mut ClusterMem) {
+        self.stats.instrs += 1;
+        let mut next_pc = self.pc + 1;
+        match instr {
+            Instr::Li { rd, imm } => self.set_reg(rd, imm as u32),
+            Instr::Alu { op, rd, rs1, rs2 } => {
+                let v = alu(op, self.reg(rs1), self.reg(rs2));
+                self.set_reg(rd, v);
+            }
+            Instr::AluI { op, rd, rs1, imm } => {
+                let v = alu(op, self.reg(rs1), imm as u32);
+                self.set_reg(rd, v);
+            }
+            Instr::ExtractU { rd, rs1, off, len } => {
+                let v = (self.reg(rs1) >> off) & ((1u32 << len) - 1);
+                self.set_reg(rd, v);
+            }
+            Instr::Extract { rd, rs1, off, len } => {
+                let v = (self.reg(rs1) >> off) & ((1u32 << len) - 1);
+                let sh = 32 - len as u32;
+                self.set_reg(rd, (((v << sh) as i32) >> sh) as u32);
+            }
+            Instr::Insert { rd, rs1, off, len } => {
+                let mask = ((1u32 << len) - 1) << off;
+                let v = (self.reg(rd) & !mask) | ((self.reg(rs1) << off) & mask);
+                self.set_reg(rd, v);
+            }
+            Instr::Lw { rd, base, off, post_inc } => {
+                let addr = self.reg(base).wrapping_add(off as u32);
+                let v = mem.load_u32(addr);
+                self.set_reg(rd, v);
+                if post_inc != 0 {
+                    let nb = self.reg(base).wrapping_add(post_inc as u32);
+                    self.set_reg(base, nb);
+                }
+                self.stats.tcdm_accesses += 1;
+                self.hazard_reg = Some(rd);
+            }
+            Instr::Lbu { rd, base, off, post_inc } => {
+                let addr = self.reg(base).wrapping_add(off as u32);
+                let v = mem.load_u8(addr) as u32;
+                self.set_reg(rd, v);
+                if post_inc != 0 {
+                    let nb = self.reg(base).wrapping_add(post_inc as u32);
+                    self.set_reg(base, nb);
+                }
+                self.stats.tcdm_accesses += 1;
+                self.hazard_reg = Some(rd);
+            }
+            Instr::Sw { rs, base, off, post_inc } => {
+                let addr = self.reg(base).wrapping_add(off as u32);
+                mem.store_u32(addr, self.reg(rs));
+                if post_inc != 0 {
+                    let nb = self.reg(base).wrapping_add(post_inc as u32);
+                    self.set_reg(base, nb);
+                }
+                self.stats.tcdm_accesses += 1;
+            }
+            Instr::Sb { rs, base, off, post_inc } => {
+                let addr = self.reg(base).wrapping_add(off as u32);
+                mem.store_u8(addr, self.reg(rs) as u8);
+                if post_inc != 0 {
+                    let nb = self.reg(base).wrapping_add(post_inc as u32);
+                    self.set_reg(base, nb);
+                }
+                self.stats.tcdm_accesses += 1;
+            }
+            Instr::Mac { rd, rs1, rs2 } => {
+                let v = (self.reg(rd) as i32)
+                    .wrapping_add((self.reg(rs1) as i32).wrapping_mul(self.reg(rs2) as i32));
+                self.set_reg(rd, v as u32);
+                self.stats.macs += 1;
+            }
+            Instr::Clipu { rd, rs1, bits } => {
+                let hi = (1i32 << bits) - 1;
+                let v = (self.reg(rs1) as i32).clamp(0, hi);
+                self.set_reg(rd, v as u32);
+            }
+            Instr::Sdotp { rd, ra, rw, a_fmt, w_fmt, sub } => {
+                let d = dotp(self.reg(ra), self.reg(rw), a_fmt, w_fmt, sub);
+                let v = (self.reg(rd) as i32).wrapping_add(d);
+                self.set_reg(rd, v as u32);
+                self.stats.dotp_instrs += 1;
+                self.stats.macs += (32 / a_fmt.bits().max(w_fmt.bits())) as u64;
+            }
+            Instr::MlSdotp { acc, a_slot, w_slot, a_fmt, w_fmt, sub, upd } => {
+                let d = dotp(
+                    self.nnrf[a_slot as usize],
+                    self.nnrf[w_slot as usize],
+                    a_fmt,
+                    w_fmt,
+                    sub,
+                );
+                let v = (self.reg(acc) as i32).wrapping_add(d);
+                self.set_reg(acc, v as u32);
+                if let MlUpdate::Load { ch, slot } = upd {
+                    let addr = self.mlc_mut(ch).next();
+                    let w = mem.load_u32(addr);
+                    self.nnrf[slot as usize] = w;
+                    self.stats.tcdm_accesses += 1;
+                }
+                self.stats.dotp_instrs += 1;
+                self.stats.macload_instrs += 1;
+                self.stats.macs += (32 / a_fmt.bits().max(w_fmt.bits())) as u64;
+            }
+            Instr::NnLoad { ch, slot } => {
+                let addr = self.mlc_mut(ch).next();
+                let w = mem.load_u32(addr);
+                self.nnrf[slot as usize] = w;
+                self.stats.tcdm_accesses += 1;
+            }
+            Instr::CsrW { csr, imm } => {
+                self.csrs[Self::csr_idx(csr)] = imm;
+                // MLC channels are (re)configured through their CSRs.
+                match csr {
+                    Csr::AStride => self.mlc_a.stride = imm as i32,
+                    Csr::WStride => self.mlc_w.stride = imm as i32,
+                    Csr::ARollback => self.mlc_a.rollback = imm as i32,
+                    Csr::WRollback => self.mlc_w.rollback = imm as i32,
+                    Csr::ASkip => self.mlc_a.skip = imm,
+                    Csr::WSkip => self.mlc_w.skip = imm,
+                    Csr::ABase => {
+                        self.mlc_a.addr = imm;
+                        self.mlc_a.cnt = 0;
+                    }
+                    Csr::WBase => {
+                        self.mlc_w.addr = imm;
+                        self.mlc_w.cnt = 0;
+                    }
+                    _ => {}
+                }
+                self.stats.csr_writes += 1;
+            }
+            Instr::LpSetup { l, count, len } => {
+                debug_assert!(l < 2, "RI5CY has two hardware loops");
+                debug_assert!(count > 0, "hardware loop with zero count");
+                self.loops[l as usize] = HwLoop {
+                    start: self.pc + 1,
+                    end: self.pc + 1 + len as usize,
+                    remaining: count,
+                    active: true,
+                };
+            }
+            Instr::Branch { cond, rs1, rs2, off } => {
+                let a = self.reg(rs1) as i32;
+                let b = self.reg(rs2) as i32;
+                let taken = match cond {
+                    Cond::Eq => a == b,
+                    Cond::Ne => a != b,
+                    Cond::Lt => a < b,
+                    Cond::Ge => a >= b,
+                };
+                if taken {
+                    next_pc = (self.pc as i64 + off as i64) as usize;
+                    self.pending_stall += 2;
+                    self.stats.branch_stalls += 2;
+                }
+            }
+            Instr::Barrier => {
+                self.state = CoreState::AtBarrier;
+            }
+            Instr::Halt => {
+                self.state = CoreState::Halted;
+                self.stats.cycles -= 0; // halt retires in its cycle
+            }
+        }
+        // Hardware-loop PC redirection: innermost (0) checked first.
+        self.pc = next_pc;
+        for l in [0usize, 1] {
+            let lp = &mut self.loops[l];
+            if lp.active && self.pc == lp.end {
+                lp.remaining -= 1;
+                if lp.remaining > 0 {
+                    self.pc = lp.start;
+                    break;
+                } else {
+                    lp.active = false;
+                }
+            }
+        }
+        if self.state == CoreState::Running {
+            self.refresh_req();
+        } else {
+            self.cached_req = None;
+        }
+    }
+
+    /// Release from barrier (called by the cluster's sync unit).
+    pub fn release_barrier(&mut self) {
+        debug_assert_eq!(self.state, CoreState::AtBarrier);
+        self.state = CoreState::Running;
+        self.refresh_req();
+    }
+}
+
+/// Scalar ALU semantics.
+fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::And => a & b,
+        AluOp::Or => a | b,
+        AluOp::Xor => a ^ b,
+        AluOp::Sll => a.wrapping_shl(b & 31),
+        AluOp::Srl => a.wrapping_shr(b & 31),
+        AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+        AluOp::Mul => a.wrapping_mul(b),
+        AluOp::Min => (a as i32).min(b as i32) as u32,
+        AluOp::Max => (a as i32).max(b as i32) as u32,
+    }
+}
+
+/// The mixed-precision Dotp unit (Fig. 2): unsigned activations × signed
+/// weights, accumulated at 32 bit. When formats differ, the MPC slicer
+/// selects subgroup `sub` of the *narrower* operand's word and the router
+/// feeds the dotp sub-unit of the *wider* format.
+pub fn dotp(a_word: u32, w_word: u32, a_fmt: SimdFmt, w_fmt: SimdFmt, sub: u8) -> i32 {
+    let a_bits = a_fmt.bits() as u32;
+    let w_bits = w_fmt.bits() as u32;
+    let lanes = (32 / a_bits.max(w_bits)) as u32;
+    let (a_off, w_off) = if a_bits >= w_bits {
+        (0, sub as u32 * lanes)
+    } else {
+        (sub as u32 * lanes, 0)
+    };
+    let mut acc: i32 = 0;
+    for i in 0..lanes {
+        let ai = (a_off + i) * a_bits;
+        let ua = (a_word >> ai) & mask(a_bits);
+        let wi = (w_off + i) * w_bits;
+        let uw = (w_word >> wi) & mask(w_bits);
+        let sw = sign_extend(uw, w_bits);
+        acc = acc.wrapping_add((ua as i32).wrapping_mul(sw));
+    }
+    acc
+}
+
+fn mask(bits: u32) -> u32 {
+    if bits >= 32 { u32::MAX } else { (1u32 << bits) - 1 }
+}
+
+fn sign_extend(v: u32, bits: u32) -> i32 {
+    let sh = 32 - bits;
+    ((v << sh) as i32) >> sh
+}
+
+/// Register-read set check for load-use hazard detection.
+fn reads_reg(i: &Instr, r: u8) -> bool {
+    if r == 0 {
+        return false;
+    }
+    match *i {
+        Instr::Alu { rs1, rs2, .. } => rs1 == r || rs2 == r,
+        Instr::AluI { rs1, .. } => rs1 == r,
+        Instr::ExtractU { rs1, .. } | Instr::Extract { rs1, .. } => rs1 == r,
+        Instr::Insert { rd, rs1, .. } => rd == r || rs1 == r,
+        Instr::Lw { base, .. } | Instr::Lbu { base, .. } => base == r,
+        Instr::Sw { rs, base, .. } | Instr::Sb { rs, base, .. } => rs == r || base == r,
+        Instr::Mac { rd, rs1, rs2 } => rd == r || rs1 == r || rs2 == r,
+        Instr::Clipu { rs1, .. } => rs1 == r,
+        Instr::Sdotp { rd, ra, rw, .. } => rd == r || ra == r || rw == r,
+        // Mac&Load reads its accumulator from the GP-RF; NN-RF sources are
+        // forwarded inside the Mac&Load datapath (no GP hazard).
+        Instr::MlSdotp { acc, .. } => acc == r,
+        Instr::Branch { rs1, rs2, .. } => rs1 == r || rs2 == r,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::mem::TCDM_BASE;
+
+    fn run_single(prog: Program) -> (Core, ClusterMem) {
+        let mut mem = ClusterMem::new();
+        run_single_with_mem(prog, &mut mem)
+    }
+
+    fn run_single_with_mem(prog: Program, mem: &mut ClusterMem) -> (Core, ClusterMem) {
+        let mut c = Core::new(0);
+        c.load_program(prog);
+        let mut guard = 0;
+        while !c.halted() {
+            let granted = c.mem_request().is_some();
+            c.tick(mem, granted);
+            guard += 1;
+            assert!(guard < 1_000_000, "runaway program");
+        }
+        (c, mem.clone())
+    }
+
+    #[test]
+    fn alu_and_li() {
+        let mut p = Program::new("t");
+        p.push(Instr::Li { rd: 1, imm: 5 });
+        p.push(Instr::Li { rd: 2, imm: 7 });
+        p.push(Instr::Alu { op: AluOp::Add, rd: 3, rs1: 1, rs2: 2 });
+        p.push(Instr::Halt);
+        let (c, _) = run_single(p);
+        assert_eq!(c.regs[3], 12);
+        assert_eq!(c.stats.instrs, 4);
+    }
+
+    #[test]
+    fn x0_hardwired_zero() {
+        let mut p = Program::new("t");
+        p.push(Instr::Li { rd: 0, imm: 99 });
+        p.push(Instr::Halt);
+        let (c, _) = run_single(p);
+        assert_eq!(c.regs[0], 0);
+    }
+
+    #[test]
+    fn load_store_post_increment() {
+        let mut mem = ClusterMem::new();
+        mem.store_u32(TCDM_BASE, 0xAABB_CCDD);
+        mem.store_u32(TCDM_BASE + 4, 0x1122_3344);
+        let mut p = Program::new("t");
+        p.push(Instr::Li { rd: 1, imm: TCDM_BASE as i32 });
+        p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 4 });
+        p.push(Instr::Lw { rd: 3, base: 1, off: 0, post_inc: 4 });
+        p.push(Instr::Halt);
+        let (c, _) = run_single_with_mem(p, &mut mem);
+        assert_eq!(c.regs[2], 0xAABB_CCDD);
+        assert_eq!(c.regs[3], 0x1122_3344);
+        assert_eq!(c.regs[1], TCDM_BASE + 8);
+    }
+
+    #[test]
+    fn load_use_hazard_costs_one_cycle() {
+        let mut mem = ClusterMem::new();
+        mem.store_u32(TCDM_BASE, 3);
+        // lw then immediately use -> 1 stall
+        let mut p = Program::new("t");
+        p.push(Instr::Li { rd: 1, imm: TCDM_BASE as i32 });
+        p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+        p.push(Instr::AluI { op: AluOp::Add, rd: 3, rs1: 2, imm: 1 });
+        p.push(Instr::Halt);
+        let (c, _) = run_single_with_mem(p, &mut mem);
+        assert_eq!(c.regs[3], 4);
+        assert_eq!(c.stats.loaduse_stalls, 1);
+        assert_eq!(c.stats.cycles, 5); // 4 instrs + 1 stall
+
+        // independent instruction in between -> no stall
+        let mut mem2 = ClusterMem::new();
+        mem2.store_u32(TCDM_BASE, 3);
+        let mut p2 = Program::new("t");
+        p2.push(Instr::Li { rd: 1, imm: TCDM_BASE as i32 });
+        p2.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+        p2.push(Instr::Li { rd: 4, imm: 9 });
+        p2.push(Instr::AluI { op: AluOp::Add, rd: 3, rs1: 2, imm: 1 });
+        p2.push(Instr::Halt);
+        let (c2, _) = run_single_with_mem(p2, &mut mem2);
+        assert_eq!(c2.stats.loaduse_stalls, 0);
+    }
+
+    #[test]
+    fn hw_loop_zero_overhead() {
+        // loop 10x over 2 ALU instructions = exactly 20 cycles + setup + halt
+        let mut p = Program::new("t");
+        p.push(Instr::LpSetup { l: 0, count: 10, len: 2 });
+        p.push(Instr::AluI { op: AluOp::Add, rd: 1, rs1: 1, imm: 1 });
+        p.push(Instr::AluI { op: AluOp::Add, rd: 2, rs1: 2, imm: 2 });
+        p.push(Instr::Halt);
+        let (c, _) = run_single(p);
+        assert_eq!(c.regs[1], 10);
+        assert_eq!(c.regs[2], 20);
+        assert_eq!(c.stats.cycles, 1 + 20 + 1);
+    }
+
+    #[test]
+    fn nested_hw_loops() {
+        let mut p = Program::new("t");
+        p.push(Instr::LpSetup { l: 1, count: 3, len: 3 });
+        p.push(Instr::LpSetup { l: 0, count: 4, len: 1 });
+        p.push(Instr::AluI { op: AluOp::Add, rd: 1, rs1: 1, imm: 1 });
+        p.push(Instr::AluI { op: AluOp::Add, rd: 2, rs1: 2, imm: 1 });
+        p.push(Instr::Halt);
+        let (c, _) = run_single(p);
+        assert_eq!(c.regs[1], 12); // 3 * 4
+        assert_eq!(c.regs[2], 3);
+    }
+
+    #[test]
+    fn dotp_uniform_8bit() {
+        // a = [1,2,3,4] (u8), w = [1,-1,2,-2] (i8)
+        let a = u32::from_le_bytes([1, 2, 3, 4]);
+        let w = u32::from_le_bytes([1u8, 0xFF, 2, 0xFE]);
+        assert_eq!(dotp(a, w, SimdFmt::Byte, SimdFmt::Byte, 0), 1 - 2 + 6 - 8);
+    }
+
+    #[test]
+    fn dotp_uniform_crumb() {
+        // 16 lanes of a=1 (01 repeated), w=-1 (11 repeated) -> -16
+        let a = 0x5555_5555;
+        let w = 0xFFFF_FFFF;
+        assert_eq!(dotp(a, w, SimdFmt::Crumb, SimdFmt::Crumb, 0), -16);
+    }
+
+    #[test]
+    fn dotp_mixed_a8w4_subgroups() {
+        // a = [10, 20, 30, 40] u8; w-word = 8 nibbles [1,2,3,4,-1,-2,-3,-4]
+        let a = u32::from_le_bytes([10, 20, 30, 40]);
+        let mut w = 0u32;
+        for (i, v) in [1i32, 2, 3, 4, -1, -2, -3, -4].iter().enumerate() {
+            w |= ((*v as u32) & 0xF) << (4 * i);
+        }
+        // subgroup 0: nibbles 0..4 = [1,2,3,4]
+        assert_eq!(
+            dotp(a, w, SimdFmt::Byte, SimdFmt::Nibble, 0),
+            10 + 40 + 90 + 160
+        );
+        // subgroup 1: nibbles 4..8 = [-1,-2,-3,-4]
+        assert_eq!(
+            dotp(a, w, SimdFmt::Byte, SimdFmt::Nibble, 1),
+            -(10 + 40 + 90 + 160)
+        );
+    }
+
+    #[test]
+    fn dotp_mixed_a4w2() {
+        // 8 lanes. a nibbles all 3; w crumbs: subgroup 1 all -2 (0b10)
+        let a = 0x3333_3333;
+        let w = 0xAAAA_0000; // low 16 bits irrelevant (subgroup 0)
+        assert_eq!(dotp(a, w, SimdFmt::Nibble, SimdFmt::Crumb, 1), 8 * 3 * -2);
+    }
+
+    #[test]
+    fn mlsdotp_accumulates_and_loads() {
+        let mut mem = ClusterMem::new();
+        // weight stream at TCDM_BASE: two words
+        mem.store_u32(TCDM_BASE, u32::from_le_bytes([1, 1, 1, 1]));
+        mem.store_u32(TCDM_BASE + 4, u32::from_le_bytes([2, 2, 2, 2]));
+        let mut p = Program::new("t");
+        p.push(Instr::CsrW { csr: Csr::WStride, imm: 4 });
+        p.push(Instr::CsrW { csr: Csr::WBase, imm: TCDM_BASE });
+        // fill W0 explicitly
+        p.push(Instr::NnLoad { ch: MlChannel::Wgt, slot: 0 });
+        // acc += dot(A0, W0) with WB load of next w word into W1
+        p.push(Instr::MlSdotp {
+            acc: 5,
+            a_slot: 4,
+            w_slot: 0,
+            a_fmt: SimdFmt::Byte,
+            w_fmt: SimdFmt::Byte,
+            sub: 0,
+            upd: MlUpdate::Load { ch: MlChannel::Wgt, slot: 1 },
+        });
+        p.push(Instr::Halt);
+        let mut c = Core::new(0);
+        c.load_program(p);
+        c.nnrf[4] = u32::from_le_bytes([3, 3, 3, 3]); // A0 = [3,3,3,3]
+        while !c.halted() {
+            let granted = c.mem_request().is_some();
+            c.tick(&mut mem, granted);
+        }
+        assert_eq!(c.regs[5] as i32, 4 * 3); // dot([3..],[1..])
+        assert_eq!(c.nnrf[1], u32::from_le_bytes([2, 2, 2, 2])); // WB load
+        assert_eq!(c.nnrf[0], u32::from_le_bytes([1, 1, 1, 1]));
+    }
+
+    #[test]
+    fn branch_taken_costs_two_bubbles() {
+        let mut p = Program::new("t");
+        p.push(Instr::Li { rd: 1, imm: 0 });
+        p.push(Instr::Li { rd: 2, imm: 3 });
+        // loop: r1 += 1; if r1 != r2 goto loop
+        p.push(Instr::AluI { op: AluOp::Add, rd: 1, rs1: 1, imm: 1 });
+        p.push(Instr::Branch { cond: Cond::Ne, rs1: 1, rs2: 2, off: -1 });
+        p.push(Instr::Halt);
+        let (c, _) = run_single(p);
+        assert_eq!(c.regs[1], 3);
+        assert_eq!(c.stats.branch_stalls, 4); // 2 taken branches * 2 bubbles
+    }
+
+    #[test]
+    fn conflict_stall_counted_when_not_granted() {
+        let mut mem = ClusterMem::new();
+        let mut p = Program::new("t");
+        p.push(Instr::Li { rd: 1, imm: TCDM_BASE as i32 });
+        p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+        p.push(Instr::Halt);
+        let mut c = Core::new(0);
+        c.load_program(p);
+        c.tick(&mut mem, false); // li
+        c.tick(&mut mem, false); // lw denied -> stall
+        assert_eq!(c.stats.conflict_stalls, 1);
+        c.tick(&mut mem, true); // lw granted
+        assert_eq!(c.regs[2], 0);
+        assert_eq!(c.stats.tcdm_accesses, 1);
+    }
+}

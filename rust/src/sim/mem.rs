@@ -1,0 +1,161 @@
+//! Cluster memory map and functional storage.
+//!
+//! | region | base        | size    | who accesses it            |
+//! |--------|-------------|---------|----------------------------|
+//! | TCDM   | 0x1000_0000 | 128 kB  | cores (1-cycle), DMA       |
+//! | L2     | 0x1C00_0000 | 1.5 MB  | DMA only (cores never touch the request path of L2 in DORY-deployed code) |
+//!
+//! The byte-granular storage is shared by all cores; bank index for
+//! arbitration is word-interleaved across 16 banks exactly like the PULP
+//! logarithmic interconnect.
+
+use crate::{L2_BYTES, TCDM_BANKS, TCDM_BYTES};
+
+pub const TCDM_BASE: u32 = 0x1000_0000;
+pub const L2_BASE: u32 = 0x1C00_0000;
+
+/// Functional memory of the cluster.
+#[derive(Clone)]
+pub struct ClusterMem {
+    pub tcdm: Vec<u8>,
+    pub l2: Vec<u8>,
+}
+
+impl Default for ClusterMem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ClusterMem {
+    pub fn new() -> Self {
+        ClusterMem { tcdm: vec![0; TCDM_BYTES], l2: vec![0; L2_BYTES] }
+    }
+
+    /// TCDM bank serving a byte address (word-interleaved).
+    pub fn bank_of(addr: u32) -> usize {
+        debug_assert!(Self::is_tcdm(addr), "bank_of on non-TCDM address {addr:#x}");
+        ((addr - TCDM_BASE) as usize >> 2) % TCDM_BANKS
+    }
+
+    pub fn is_tcdm(addr: u32) -> bool {
+        (TCDM_BASE..TCDM_BASE + TCDM_BYTES as u32).contains(&addr)
+    }
+
+    pub fn is_l2(addr: u32) -> bool {
+        (L2_BASE..L2_BASE + L2_BYTES as u32).contains(&addr)
+    }
+
+    fn slice(&self, addr: u32, len: usize) -> &[u8] {
+        if Self::is_tcdm(addr) {
+            let o = (addr - TCDM_BASE) as usize;
+            &self.tcdm[o..o + len]
+        } else if Self::is_l2(addr) {
+            let o = (addr - L2_BASE) as usize;
+            &self.l2[o..o + len]
+        } else {
+            panic!("unmapped address {addr:#010x}");
+        }
+    }
+
+    fn slice_mut(&mut self, addr: u32, len: usize) -> &mut [u8] {
+        if Self::is_tcdm(addr) {
+            let o = (addr - TCDM_BASE) as usize;
+            &mut self.tcdm[o..o + len]
+        } else if Self::is_l2(addr) {
+            let o = (addr - L2_BASE) as usize;
+            &mut self.l2[o..o + len]
+        } else {
+            panic!("unmapped address {addr:#010x}");
+        }
+    }
+
+    #[inline]
+    pub fn load_u32(&self, addr: u32) -> u32 {
+        // Fast path: TCDM (every core access in DORY-deployed code).
+        if Self::is_tcdm(addr) {
+            let o = (addr - TCDM_BASE) as usize;
+            let b = &self.tcdm[o..o + 4];
+            return u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+        let b = self.slice(addr, 4);
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+
+    #[inline]
+    pub fn store_u32(&mut self, addr: u32, v: u32) {
+        if Self::is_tcdm(addr) {
+            let o = (addr - TCDM_BASE) as usize;
+            self.tcdm[o..o + 4].copy_from_slice(&v.to_le_bytes());
+            return;
+        }
+        self.slice_mut(addr, 4).copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn load_u8(&self, addr: u32) -> u8 {
+        if Self::is_tcdm(addr) {
+            return self.tcdm[(addr - TCDM_BASE) as usize];
+        }
+        self.slice(addr, 1)[0]
+    }
+
+    #[inline]
+    pub fn store_u8(&mut self, addr: u32, v: u8) {
+        if Self::is_tcdm(addr) {
+            self.tcdm[(addr - TCDM_BASE) as usize] = v;
+            return;
+        }
+        self.slice_mut(addr, 1)[0] = v;
+    }
+
+    /// Bulk write (test/coordinator setup path, not timed).
+    pub fn write_bytes(&mut self, addr: u32, bytes: &[u8]) {
+        self.slice_mut(addr, bytes.len()).copy_from_slice(bytes);
+    }
+
+    /// Bulk read (test/coordinator readback path, not timed).
+    pub fn read_bytes(&self, addr: u32, len: usize) -> Vec<u8> {
+        self.slice(addr, len).to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_interleaved_banks() {
+        assert_eq!(ClusterMem::bank_of(TCDM_BASE), 0);
+        assert_eq!(ClusterMem::bank_of(TCDM_BASE + 4), 1);
+        assert_eq!(ClusterMem::bank_of(TCDM_BASE + 4 * 15), 15);
+        assert_eq!(ClusterMem::bank_of(TCDM_BASE + 4 * 16), 0);
+        // sub-word addresses hit the same bank as their word
+        assert_eq!(ClusterMem::bank_of(TCDM_BASE + 2), 0);
+    }
+
+    #[test]
+    fn load_store_roundtrip_both_regions() {
+        let mut m = ClusterMem::new();
+        m.store_u32(TCDM_BASE + 64, 0xDEAD_BEEF);
+        assert_eq!(m.load_u32(TCDM_BASE + 64), 0xDEAD_BEEF);
+        m.store_u32(L2_BASE + 128, 0x1234_5678);
+        assert_eq!(m.load_u32(L2_BASE + 128), 0x1234_5678);
+        m.store_u8(TCDM_BASE, 0xAB);
+        assert_eq!(m.load_u8(TCDM_BASE), 0xAB);
+    }
+
+    #[test]
+    fn little_endian_storage() {
+        let mut m = ClusterMem::new();
+        m.store_u32(TCDM_BASE, 0x0403_0201);
+        assert_eq!(m.load_u8(TCDM_BASE), 0x01);
+        assert_eq!(m.load_u8(TCDM_BASE + 3), 0x04);
+    }
+
+    #[test]
+    #[should_panic(expected = "unmapped")]
+    fn unmapped_access_panics() {
+        ClusterMem::new().load_u32(0x4000_0000);
+    }
+}

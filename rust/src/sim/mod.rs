@@ -1,0 +1,37 @@
+//! The PULP-cluster simulator.
+//!
+//! A cycle-approximate, functionally-exact model of the system in Fig. 1 of
+//! the paper: eight RI5CY-class cores (parameterized by
+//! [`crate::isa::IsaVariant`]) sharing a 16-bank 128 kB TCDM through a
+//! one-cycle logarithmic interconnect, a non-blocking cluster DMA moving
+//! data between L2 and TCDM, and a hardware synchronization unit providing
+//! low-overhead barriers.
+//!
+//! Timing model (RI5CY 4-stage in-order single-issue pipeline):
+//! - 1 instruction issued per cycle per core;
+//! - 1-cycle load-use penalty (consumer immediately after a load);
+//! - TCDM bank conflicts stall the losing cores (round-robin arbitration,
+//!   one request per bank per cycle; DMA has lowest priority);
+//! - taken branches cost 2 bubble cycles; hardware loops are free;
+//! - fused Mac&Load issues the sdotp and performs its NN-RF load in the
+//!   write-back stage (one issue slot, one TCDM port use);
+//! - barriers clock-gate waiting cores and release one cycle after the
+//!   last core arrives.
+//!
+//! Functional model: exact integer semantics for every instruction — kernel
+//! outputs are compared bit-exactly against [`crate::qnn::golden`] and
+//! against the AOT JAX/Pallas artifacts through [`crate::runtime`].
+
+pub mod cluster;
+pub mod core;
+pub mod dma;
+pub mod mem;
+pub mod mlc;
+pub mod stats;
+
+pub use cluster::Cluster;
+pub use core::Core;
+pub use dma::{Dma, DmaRequest};
+pub use mem::{ClusterMem, L2_BASE, TCDM_BASE};
+pub use mlc::MlcChannel;
+pub use stats::{ClusterStats, CoreStats};

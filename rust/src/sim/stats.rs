@@ -1,0 +1,167 @@
+//! Execution statistics collected by the simulator — the raw material for
+//! every table and figure of the evaluation (MAC/cycle, utilization,
+//! stall breakdowns, per-instruction-class activity for the energy model).
+
+/// Per-core counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CoreStats {
+    /// Instructions retired.
+    pub instrs: u64,
+    /// Cycles this core was active (from reset to halt).
+    pub cycles: u64,
+    /// MAC operations performed (SIMD dotp lanes + scalar macs).
+    pub macs: u64,
+    /// sdotp/mlsdotp instructions retired (dotp-unit activations,
+    /// feeds the energy model).
+    pub dotp_instrs: u64,
+    /// Mac&Load instructions retired (of which WB loads).
+    pub macload_instrs: u64,
+    /// TCDM data accesses performed.
+    pub tcdm_accesses: u64,
+    /// Cycles lost to TCDM bank conflicts.
+    pub conflict_stalls: u64,
+    /// Cycles lost to load-use hazards.
+    pub loaduse_stalls: u64,
+    /// Cycles lost to taken-branch bubbles.
+    pub branch_stalls: u64,
+    /// Cycles spent waiting at barriers (clock-gated).
+    pub barrier_cycles: u64,
+    /// CSR writes (MLC/MPC setup overhead).
+    pub csr_writes: u64,
+}
+
+impl CoreStats {
+    pub fn add(&mut self, o: &CoreStats) {
+        self.instrs += o.instrs;
+        self.cycles = self.cycles.max(o.cycles);
+        self.macs += o.macs;
+        self.dotp_instrs += o.dotp_instrs;
+        self.macload_instrs += o.macload_instrs;
+        self.tcdm_accesses += o.tcdm_accesses;
+        self.conflict_stalls += o.conflict_stalls;
+        self.loaduse_stalls += o.loaduse_stalls;
+        self.branch_stalls += o.branch_stalls;
+        self.barrier_cycles += o.barrier_cycles;
+        self.csr_writes += o.csr_writes;
+    }
+}
+
+/// Whole-cluster result of a simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    /// Wall-clock cycles of the run (max over cores, incl. DMA tail).
+    pub cycles: u64,
+    /// Per-core counters.
+    pub cores: Vec<CoreStats>,
+    /// Cycles the DMA engine was busy moving data.
+    pub dma_busy_cycles: u64,
+    /// Bytes moved by the DMA.
+    pub dma_bytes: u64,
+}
+
+impl ClusterStats {
+    /// Total MACs across cores.
+    pub fn total_macs(&self) -> u64 {
+        self.cores.iter().map(|c| c.macs).sum()
+    }
+
+    /// Total instructions across cores.
+    pub fn total_instrs(&self) -> u64 {
+        self.cores.iter().map(|c| c.instrs).sum()
+    }
+
+    /// The paper's headline metric: MACs per cluster cycle.
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.total_macs() as f64 / self.cycles as f64
+        }
+    }
+
+    /// MAC-unit utilization relative to a peak of `peak_macs_per_cycle`
+    /// (§I claims >80% "ASIC-like" utilization for Flex-V).
+    pub fn utilization(&self, peak_macs_per_cycle: f64) -> f64 {
+        self.macs_per_cycle() / peak_macs_per_cycle
+    }
+
+    /// Merge another run sequentially after this one (tile loops).
+    pub fn extend_serial(&mut self, o: &ClusterStats) {
+        self.cycles += o.cycles;
+        if self.cores.len() < o.cores.len() {
+            self.cores.resize(o.cores.len(), CoreStats::default());
+        }
+        for (a, b) in self.cores.iter_mut().zip(&o.cores) {
+            a.add(b);
+        }
+        self.dma_busy_cycles += o.dma_busy_cycles;
+        self.dma_bytes += o.dma_bytes;
+    }
+
+    /// Scale this run's counters by `n` repetitions (tile memoization —
+    /// exact because kernel timing is data-independent; see DESIGN.md §7).
+    pub fn repeat(&self, n: u64) -> ClusterStats {
+        let mut out = self.clone();
+        out.cycles *= n;
+        out.dma_busy_cycles *= n;
+        out.dma_bytes *= n;
+        for c in &mut out.cores {
+            c.instrs *= n;
+            c.cycles *= n;
+            c.macs *= n;
+            c.dotp_instrs *= n;
+            c.macload_instrs *= n;
+            c.tcdm_accesses *= n;
+            c.conflict_stalls *= n;
+            c.loaduse_stalls *= n;
+            c.branch_stalls *= n;
+            c.barrier_cycles *= n;
+            c.csr_writes *= n;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macs_per_cycle() {
+        let s = ClusterStats {
+            cycles: 100,
+            cores: vec![CoreStats { macs: 500, ..Default::default() }; 8],
+            ..Default::default()
+        };
+        assert!((s.macs_per_cycle() - 40.0).abs() < 1e-9);
+        assert!((s.utilization(64.0) - 0.625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repeat_scales_linearly() {
+        let s = ClusterStats {
+            cycles: 10,
+            cores: vec![CoreStats { macs: 7, instrs: 3, ..Default::default() }],
+            dma_bytes: 4,
+            ..Default::default()
+        };
+        let r = s.repeat(5);
+        assert_eq!(r.cycles, 50);
+        assert_eq!(r.cores[0].macs, 35);
+        assert_eq!(r.dma_bytes, 20);
+        assert!((r.macs_per_cycle() - s.macs_per_cycle()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extend_serial_accumulates() {
+        let a = ClusterStats {
+            cycles: 10,
+            cores: vec![CoreStats { macs: 5, ..Default::default() }],
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        b.extend_serial(&a);
+        assert_eq!(b.cycles, 20);
+        assert_eq!(b.cores[0].macs, 10);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities: deterministic PRNG, a property-testing
+//! harness (the offline build has no `proptest`, so we ship a minimal
+//! equivalent), and table formatting for the report generators.
+
+pub mod prng;
+pub mod proptest;
+pub mod table;
+
+pub use prng::Prng;

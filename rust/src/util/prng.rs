@@ -1,0 +1,163 @@
+//! Deterministic PRNG (splitmix64 + xoshiro256**) used everywhere random
+//! data is needed: synthetic weights/activations, property-test generators,
+//! workload generation. No external `rand` crate is available offline; this
+//! implementation is the standard xoshiro256** reference algorithm.
+
+/// xoshiro256** seeded via splitmix64. Deterministic across platforms.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+impl Prng {
+    /// Create a generator from a 64-bit seed (splitmix64 expansion).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Prng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Next 32-bit value.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        // Lemire-style rejection-free-enough reduction; bias is negligible
+        // for our n << 2^64 and irrelevant for test-data generation.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform i64 in `[lo, hi)`.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as i64
+    }
+
+    /// Random boolean with probability `p` (0.0..=1.0).
+    pub fn chance(&mut self, p: f64) -> bool {
+        (self.next_u64() as f64 / u64::MAX as f64) < p
+    }
+
+    /// Random unsigned value of `bits` bits (0 ..= 2^bits - 1).
+    pub fn bits_unsigned(&mut self, bits: u8) -> u32 {
+        debug_assert!(bits >= 1 && bits <= 32);
+        if bits == 32 { self.next_u32() } else { self.next_u32() & ((1u32 << bits) - 1) }
+    }
+
+    /// Random signed value of `bits` bits (-2^(bits-1) ..= 2^(bits-1) - 1).
+    pub fn bits_signed(&mut self, bits: u8) -> i32 {
+        debug_assert!(bits >= 1 && bits <= 32);
+        let v = self.bits_unsigned(bits);
+        let shift = 32 - bits as u32;
+        ((v << shift) as i32) >> shift
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a random element from a non-empty slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut p = Prng::new(7);
+        for n in [1u64, 2, 3, 7, 100, 1 << 40] {
+            for _ in 0..200 {
+                assert!(p.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn bits_signed_bounds() {
+        let mut p = Prng::new(9);
+        for bits in [2u8, 4, 8] {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            for _ in 0..500 {
+                let v = p.bits_signed(bits);
+                assert!(v >= lo && v <= hi, "v={v} out of [{lo},{hi}] for {bits} bits");
+            }
+        }
+    }
+
+    #[test]
+    fn bits_unsigned_bounds() {
+        let mut p = Prng::new(11);
+        for bits in [2u8, 4, 8] {
+            let hi = (1u32 << bits) - 1;
+            for _ in 0..500 {
+                assert!(p.bits_unsigned(bits) <= hi);
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Prng::new(3);
+        let mut v: Vec<usize> = (0..50).collect();
+        p.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

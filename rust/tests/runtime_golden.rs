@@ -1,0 +1,15 @@
+//! Integration: the three-way cross-validation — AOT JAX/Pallas golden
+//! (via PJRT) == Rust golden == simulated Flex-V kernels, bit-exact.
+//! Requires `make artifacts`; skips (with a notice) when absent so
+//! `cargo test` works before the python step.
+
+#[test]
+fn artifacts_three_way_validation() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("mpq_matmul_a8w8.meta").exists() {
+        eprintln!("SKIP: no artifacts at {dir}; run `make artifacts` first");
+        return;
+    }
+    let n = flexv::runtime::validate_artifacts(dir).expect("validation failed");
+    assert_eq!(n, 6, "expected all six precision artifacts");
+}

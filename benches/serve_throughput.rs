@@ -1,0 +1,44 @@
+//! Bench: serving-engine throughput — the synthetic mixed 3-model
+//! traffic trace (MobileNetV1-8b / 8b4b / ResNet-20-4b2b) replayed on
+//! fleets of growing size. Scaling shards should raise req/s and cut
+//! p99 latency while plan compiles stay at 3 per row (cache).
+//!
+//!     cargo bench --bench serve_throughput [-- --full]
+
+use flexv::serve::{standard_mix, Engine, ServeConfig};
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let hw = if full { 224 } else { 96 };
+    let requests = 24;
+    println!("serve throughput: {requests} requests/row, MNV1 input {hw}x{hw}, mix 45/30/25%");
+    println!(
+        "{:<7} {:>8} {:>9} {:>9} {:>9} {:>7} {:>9} {:>9} {:>8}",
+        "shards", "req/s", "p50[ms]", "p99[ms]", "MAC/cyc", "util%", "hit-rate", "switches", "wall[s]"
+    );
+    for shards in [2usize, 4, 8] {
+        let cfg = ServeConfig { shards, ..ServeConfig::default() };
+        let mut eng = Engine::new(cfg);
+        for net in standard_mix(hw) {
+            eng.register(net);
+        }
+        let trace = eng.synthetic_trace(requests, 1_500_000, &[0.45, 0.30, 0.25], 0xBE7C);
+        let t0 = Instant::now();
+        let m = eng.run_trace(trace);
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<7} {:>8.1} {:>9.2} {:>9.2} {:>9.1} {:>7.0} {:>8.0}% {:>9} {:>8.1}",
+            shards,
+            m.requests_per_sec,
+            m.p50_cycles as f64 / 250e3,
+            m.p99_cycles as f64 / 250e3,
+            m.aggregate_macs_per_cycle,
+            m.shard_utilization * 100.0,
+            m.cache_hit_rate() * 100.0,
+            m.model_switches,
+            wall
+        );
+        assert!(m.cache_misses <= 3, "at most one deploy per model");
+    }
+}

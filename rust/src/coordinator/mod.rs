@@ -6,16 +6,21 @@
 //! streams tile *i+1*'s inputs in and tile *i−1*'s outputs out (§IV: "the
 //! calls to the kernels are always overlapped with the asynchronous DMA
 //! calls"). Per-layer cycle/energy metrics are collected for Table IV.
+//!
+//! The building blocks are exposed as free, `Cluster`-parameterized
+//! functions ([`preload_deployment`], [`execute_deployment`]) so other
+//! drivers — notably the [`crate::serve`] fleet engine, which owns many
+//! clusters — can reuse the exact same execution path; [`Coordinator`]
+//! is the one-cluster convenience wrapper around them.
 
-use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
 
 use crate::dory::deploy::Deployment;
-use crate::dory::{KernelCall, LayerPlan, TileExec};
+use crate::dory::{KernelCall, LayerPlan, PlanKey, TileExec};
 use crate::isa::{IsaVariant, Program};
 use crate::kernels::conv::gen_conv;
 use crate::kernels::layers::{gen_add, gen_avgpool, gen_dwconv, gen_linear, gen_maxpool};
+use crate::power::EnergyModel;
 use crate::qnn::QTensor;
 use crate::sim::{Cluster, ClusterStats};
 
@@ -59,6 +64,20 @@ impl RunResult {
     pub fn macs_per_cycle(&self) -> f64 {
         self.total_macs() as f64 / self.total_cycles().max(1) as f64
     }
+    /// Per-layer cycle counts, in plan order (the serve determinism test
+    /// compares these across execution paths).
+    pub fn layer_cycles(&self) -> Vec<u64> {
+        self.layers.iter().map(|l| l.stats.cycles).collect()
+    }
+    /// Total energy of the inference [pJ], per-layer activity × the
+    /// calibrated per-class energies (each layer billed at its dotp
+    /// element width).
+    pub fn energy_pj(&self, isa: IsaVariant, em: &EnergyModel) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| em.energy_pj(isa, &l.stats, l.dotp_bits))
+            .sum()
+    }
 }
 
 /// Generate the per-core programs of one kernel call.
@@ -82,178 +101,7 @@ pub fn programs_for(isa: IsaVariant, call: &KernelCall, n_cores: usize) -> Vec<P
     }
 }
 
-/// The coordinator owns the cluster and drives deployments end-to-end.
-pub struct Coordinator {
-    pub cluster: Cluster,
-    /// Cross-layer memo for timing-only mode (ResNet's repeated blocks
-    /// share tile structures across layers).
-    memo: HashMap<u64, TileCost>,
-    /// Enable tile memoization: structurally identical tiles within a
-    /// layer are simulated once and their (data-independent) timing is
-    /// replayed (DESIGN.md §7). Functional outputs are still produced for
-    /// every tile.
-    pub memoize_tiles: bool,
-}
-
-impl Coordinator {
-    pub fn new(n_cores: usize) -> Self {
-        Coordinator { cluster: Cluster::new(n_cores), memo: HashMap::new(), memoize_tiles: false }
-    }
-
-    /// Run one inference. `input` must match the deployed network's input
-    /// shape/bits.
-    pub fn run(&mut self, dep: &Deployment, input: &QTensor) -> RunResult {
-        // Deployment-time preloads (weights, quant): not timed — they model
-        // the flash/L3 image already resident in L2.
-        for (addr, bytes) in &dep.preload {
-            self.cluster.mem.write_bytes(*addr, bytes);
-        }
-        self.cluster.mem.write_bytes(dep.input_addr, &input.data);
-
-        let n_cores = self.cluster.cores.len();
-        let mut layers = vec![];
-        for plan in &dep.plans {
-            let stats = self.run_layer(dep.isa, plan, n_cores);
-            layers.push(LayerMetrics {
-                name: plan.name.clone(),
-                macs: plan.macs,
-                stats,
-                dotp_bits: plan.dotp_bits,
-            });
-        }
-        let node_outputs: Vec<Vec<u8>> = dep
-            .node_out
-            .iter()
-            .enumerate()
-            .map(|(i, &addr)| {
-                let bytes = dep_plan_out_bytes(dep, i);
-                self.cluster.mem.read_bytes(addr, bytes)
-            })
-            .collect();
-        RunResult {
-            output: node_outputs.last().cloned().unwrap_or_default(),
-            node_outputs,
-            layers,
-        }
-    }
-
-    /// Execute one layer's tiles with double buffering; returns the
-    /// layer's cycle window.
-    fn run_layer(&mut self, isa: IsaVariant, plan: &LayerPlan, n_cores: usize) -> ClusterStats {
-        if self.memoize_tiles {
-            return self.run_layer_memoized(isa, plan, n_cores);
-        }
-        let mut total = ClusterStats::default();
-        let tiles = &plan.tiles;
-        if tiles.is_empty() {
-            return total;
-        }
-        // Prologue: stream tile 0's inputs.
-        for req in &tiles[0].loads {
-            self.cluster.dma.push(*req);
-        }
-        total.extend_serial(&self.cluster.run());
-        for i in 0..tiles.len() {
-            // Launch kernel i; prefetch tile i+1 while it runs.
-            let progs = programs_for(isa, &tiles[i].kernel, n_cores);
-            self.cluster.load_programs(progs);
-            if i + 1 < tiles.len() {
-                for req in &tiles[i + 1].loads {
-                    self.cluster.dma.push(*req);
-                }
-            }
-            let w = self.cluster.run();
-            total.extend_serial(&w);
-            // Stream out tile i's results (overlaps with kernel i+1).
-            for req in &tiles[i].stores {
-                self.cluster.dma.push(*req);
-            }
-        }
-        // Drain the last stores.
-        total.extend_serial(&self.cluster.run());
-        total
-    }
-}
-
-impl Coordinator {
-    /// Timing-only layer execution with **tile memoization** (DESIGN.md
-    /// §7): structurally identical tiles (same per-core instruction
-    /// streams, same DMA descriptors modulo the double-buffer parity that
-    /// the key includes via the L1 addresses) have identical,
-    /// data-independent cycle counts — kernels contain no data-dependent
-    /// control flow. Each distinct structure is simulated cycle-accurately
-    /// once; repeats replay its timing. The layer window is reconstructed
-    /// with DORY's double-buffer pipeline model:
-    ///
-    /// `cycles = load_0 + Σ_i max(kernel_i, load_{i+1} + store_{i-1}) + store_last`
-    ///
-    /// NOTE: repeated tiles are *not* functionally executed, so node
-    /// outputs are only valid for the measured representatives — use
-    /// `memoize_tiles = false` for numerical validation. The equivalence
-    /// of the reconstructed timing is asserted (<3%) by
-    /// `memoized_timing_matches_full` below.
-    fn run_layer_memoized(
-        &mut self,
-        isa: IsaVariant,
-        plan: &LayerPlan,
-        n_cores: usize,
-    ) -> ClusterStats {
-        let mut costs: Vec<TileCost> = Vec::with_capacity(plan.tiles.len());
-        for tile in &plan.tiles {
-            let key = tile_key(isa, tile, n_cores);
-            let cost = if let Some(c) = self.memo.get(&key) {
-                c.clone()
-            } else {
-                let progs = programs_for(isa, &tile.kernel, n_cores);
-                // Measure this structure in isolation (serial phases so the
-                // windows are attributable), with real functional effects.
-                for req in &tile.loads {
-                    self.cluster.dma.push(*req);
-                }
-                let ld = self.cluster.run();
-                self.cluster.load_programs(progs);
-                let ks = self.cluster.run();
-                for req in &tile.stores {
-                    self.cluster.dma.push(*req);
-                }
-                let st = self.cluster.run();
-                let c = TileCost {
-                    kernel: ks,
-                    load_cycles: ld.cycles,
-                    store_cycles: st.cycles,
-                };
-                self.memo.insert(key, c.clone());
-                c
-            };
-            costs.push(cost);
-        }
-        // Pipeline reconstruction.
-        let mut total = ClusterStats::default();
-        let n = costs.len();
-        for (i, c) in costs.iter().enumerate() {
-            let incoming = if i + 1 < n { costs[i + 1].load_cycles } else { 0 };
-            let outgoing = if i > 0 { costs[i - 1].store_cycles } else { 0 };
-            let window = c.kernel.cycles.max(incoming + outgoing);
-            total.cycles += window;
-            if total.cores.len() < c.kernel.cores.len() {
-                total.cores.resize(c.kernel.cores.len(), Default::default());
-            }
-            for (a, b) in total.cores.iter_mut().zip(&c.kernel.cores) {
-                a.add(b);
-            }
-            total.dma_busy_cycles += c.kernel.dma_busy_cycles;
-        }
-        if let Some(first) = costs.first() {
-            total.cycles += first.load_cycles;
-        }
-        if let Some(last) = costs.last() {
-            total.cycles += last.store_cycles;
-        }
-        total
-    }
-}
-
-/// Memoized per-tile timing (see `run_layer_memoized`).
+/// Memoized per-tile timing (see [`run_layer_memoized`]).
 #[derive(Clone)]
 struct TileCost {
     kernel: ClusterStats,
@@ -261,23 +109,201 @@ struct TileCost {
     store_cycles: u64,
 }
 
-/// Structural key of a tile: the kernel-launch descriptor (program
-/// generation is a pure function of it, the ISA, and the core count) plus
-/// the DMA descriptors. L1 addresses are part of the descriptor, so the
-/// double-buffer parity — which shifts bank-conflict patterns — is
-/// captured.
-fn tile_key(isa: IsaVariant, tile: &TileExec, n_cores: usize) -> u64 {
-    let mut h = DefaultHasher::new();
-    (isa as u8).hash(&mut h);
-    n_cores.hash(&mut h);
-    tile.kernel.hash(&mut h);
-    // DMA timing depends on sizes, the TCDM-side layout (bank patterns)
-    // and strides — NOT on the L2-side address, which differs per tile
-    // without affecting a single cycle.
-    for r in tile.loads.iter().chain(tile.stores.iter()) {
-        (r.dir, r.loc, r.row_bytes, r.rows, r.loc_stride).hash(&mut h);
+/// Cross-layer (and, in the serve engine, cross-request) memo of tile
+/// timings for timing-only execution, keyed by [`PlanKey::for_tile`].
+/// ResNet's repeated blocks share tile structures across layers; repeated
+/// requests for the same model share all of them.
+#[derive(Default)]
+pub struct TileMemo {
+    map: HashMap<PlanKey, TileCost>,
+}
+
+impl TileMemo {
+    pub fn new() -> Self {
+        TileMemo::default()
     }
-    h.finish()
+    /// Number of distinct tile structures measured so far.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Write a deployment's L2 image (weights, quant parameters) into the
+/// cluster memory. Not timed — it models the flash/L3 image already
+/// resident in L2; the serving layer charges an explicit model-switch
+/// cost instead (see `serve::shard`).
+pub fn preload_deployment(cluster: &mut Cluster, dep: &Deployment) {
+    for (addr, bytes) in &dep.preload {
+        cluster.mem.write_bytes(*addr, bytes);
+    }
+}
+
+/// Run one inference of `dep` on `cluster`. `input` must match the
+/// deployed network's input shape/bits. The deployment's L2 image must
+/// already be resident (see [`preload_deployment`]).
+///
+/// With `memo: Some(..)`, layers run in **timing-only** mode: structurally
+/// identical tiles are simulated once and their (data-independent) timing
+/// replayed — node outputs are then only valid for the measured
+/// representatives. Pass `None` for full functional execution.
+pub fn execute_deployment(
+    cluster: &mut Cluster,
+    dep: &Deployment,
+    input: &QTensor,
+    mut memo: Option<&mut TileMemo>,
+) -> RunResult {
+    cluster.mem.write_bytes(dep.input_addr, &input.data);
+    let n_cores = cluster.cores.len();
+    let mut layers = Vec::with_capacity(dep.plans.len());
+    for plan in &dep.plans {
+        let stats = match memo.as_mut() {
+            Some(m) => run_layer_memoized(cluster, dep.isa, plan, n_cores, &mut **m),
+            None => run_layer_full(cluster, dep.isa, plan, n_cores),
+        };
+        layers.push(LayerMetrics {
+            name: plan.name.clone(),
+            macs: plan.macs,
+            stats,
+            dotp_bits: plan.dotp_bits,
+        });
+    }
+    let node_outputs: Vec<Vec<u8>> = dep
+        .node_out
+        .iter()
+        .enumerate()
+        .map(|(i, &addr)| {
+            let bytes = dep_plan_out_bytes(dep, i);
+            cluster.mem.read_bytes(addr, bytes)
+        })
+        .collect();
+    RunResult {
+        output: node_outputs.last().cloned().unwrap_or_default(),
+        node_outputs,
+        layers,
+    }
+}
+
+/// Execute one layer's tiles with double buffering; returns the layer's
+/// cycle window.
+fn run_layer_full(
+    cluster: &mut Cluster,
+    isa: IsaVariant,
+    plan: &LayerPlan,
+    n_cores: usize,
+) -> ClusterStats {
+    let mut total = ClusterStats::default();
+    let tiles = &plan.tiles;
+    if tiles.is_empty() {
+        return total;
+    }
+    // Prologue: stream tile 0's inputs.
+    for req in &tiles[0].loads {
+        cluster.dma.push(*req);
+    }
+    total.extend_serial(&cluster.run());
+    for i in 0..tiles.len() {
+        // Launch kernel i; prefetch tile i+1 while it runs.
+        let progs = programs_for(isa, &tiles[i].kernel, n_cores);
+        cluster.load_programs(progs);
+        if i + 1 < tiles.len() {
+            for req in &tiles[i + 1].loads {
+                cluster.dma.push(*req);
+            }
+        }
+        let w = cluster.run();
+        total.extend_serial(&w);
+        // Stream out tile i's results (overlaps with kernel i+1).
+        for req in &tiles[i].stores {
+            cluster.dma.push(*req);
+        }
+    }
+    // Drain the last stores.
+    total.extend_serial(&cluster.run());
+    total
+}
+
+/// Timing-only layer execution with **tile memoization** (DESIGN.md §7):
+/// structurally identical tiles (same per-core instruction streams, same
+/// DMA descriptors modulo the double-buffer parity that the key includes
+/// via the L1 addresses) have identical, data-independent cycle counts —
+/// kernels contain no data-dependent control flow. Each distinct structure
+/// is simulated cycle-accurately once; repeats replay its timing. The
+/// layer window is reconstructed with DORY's double-buffer pipeline model:
+///
+/// `cycles = load_0 + Σ_i max(kernel_i, load_{i+1} + store_{i-1}) + store_last`
+///
+/// NOTE: repeated tiles are *not* functionally executed, so node outputs
+/// are only valid for the measured representatives — use the
+/// non-memoized path for numerical validation. The equivalence of the
+/// reconstructed timing is asserted (<3%) by `memoized_timing_matches_full`
+/// below.
+fn run_layer_memoized(
+    cluster: &mut Cluster,
+    isa: IsaVariant,
+    plan: &LayerPlan,
+    n_cores: usize,
+    memo: &mut TileMemo,
+) -> ClusterStats {
+    let mut costs: Vec<TileCost> = Vec::with_capacity(plan.tiles.len());
+    for tile in &plan.tiles {
+        let key = tile_key(isa, tile, n_cores);
+        let cost = if let Some(c) = memo.map.get(&key) {
+            c.clone()
+        } else {
+            let progs = programs_for(isa, &tile.kernel, n_cores);
+            // Measure this structure in isolation (serial phases so the
+            // windows are attributable), with real functional effects.
+            for req in &tile.loads {
+                cluster.dma.push(*req);
+            }
+            let ld = cluster.run();
+            cluster.load_programs(progs);
+            let ks = cluster.run();
+            for req in &tile.stores {
+                cluster.dma.push(*req);
+            }
+            let st = cluster.run();
+            let c = TileCost {
+                kernel: ks,
+                load_cycles: ld.cycles,
+                store_cycles: st.cycles,
+            };
+            memo.map.insert(key, c.clone());
+            c
+        };
+        costs.push(cost);
+    }
+    // Pipeline reconstruction.
+    let mut total = ClusterStats::default();
+    let n = costs.len();
+    for (i, c) in costs.iter().enumerate() {
+        let incoming = if i + 1 < n { costs[i + 1].load_cycles } else { 0 };
+        let outgoing = if i > 0 { costs[i - 1].store_cycles } else { 0 };
+        let window = c.kernel.cycles.max(incoming + outgoing);
+        total.cycles += window;
+        if total.cores.len() < c.kernel.cores.len() {
+            total.cores.resize(c.kernel.cores.len(), Default::default());
+        }
+        for (a, b) in total.cores.iter_mut().zip(&c.kernel.cores) {
+            a.add(b);
+        }
+        total.dma_busy_cycles += c.kernel.dma_busy_cycles;
+    }
+    if let Some(first) = costs.first() {
+        total.cycles += first.load_cycles;
+    }
+    if let Some(last) = costs.last() {
+        total.cycles += last.store_cycles;
+    }
+    total
+}
+
+/// Structural key of a tile (see [`PlanKey::for_tile`]).
+fn tile_key(isa: IsaVariant, tile: &TileExec, n_cores: usize) -> PlanKey {
+    PlanKey::for_tile(isa, tile, n_cores)
 }
 
 /// Output byte size of node `i` in a deployment (from the plan's stores).
@@ -289,6 +315,33 @@ fn dep_plan_out_bytes(dep: &Deployment, node: usize) -> usize {
         .flat_map(|t| t.stores.iter())
         .map(|s| s.total_bytes() as usize)
         .sum()
+}
+
+/// The coordinator owns one cluster and drives deployments end-to-end.
+pub struct Coordinator {
+    pub cluster: Cluster,
+    /// Cross-layer memo for timing-only mode (ResNet's repeated blocks
+    /// share tile structures across layers).
+    memo: TileMemo,
+    /// Enable tile memoization: structurally identical tiles within a
+    /// layer are simulated once and their (data-independent) timing is
+    /// replayed (DESIGN.md §7). Functional outputs are still produced for
+    /// every tile.
+    pub memoize_tiles: bool,
+}
+
+impl Coordinator {
+    pub fn new(n_cores: usize) -> Self {
+        Coordinator { cluster: Cluster::new(n_cores), memo: TileMemo::new(), memoize_tiles: false }
+    }
+
+    /// Run one inference. `input` must match the deployed network's input
+    /// shape/bits.
+    pub fn run(&mut self, dep: &Deployment, input: &QTensor) -> RunResult {
+        preload_deployment(&mut self.cluster, dep);
+        let memo = if self.memoize_tiles { Some(&mut self.memo) } else { None };
+        execute_deployment(&mut self.cluster, dep, input, memo)
+    }
 }
 
 #[cfg(test)]
@@ -383,5 +436,25 @@ mod tests {
         for (i, g) in golden_outs.iter().enumerate() {
             assert_eq!(res.node_outputs[i], g.data, "node {i} ({})", net.nodes[i].layer.name);
         }
+    }
+
+    /// The free-function path (preload + execute) is exactly the
+    /// Coordinator path — the serve engine relies on this equivalence.
+    #[test]
+    fn free_functions_match_coordinator() {
+        let mut rng = Prng::new(81);
+        let mut net = Network::new("ff", [10, 10, 8], 8);
+        net.push(Layer::conv("c1", [10, 10, 8], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        net.validate().unwrap();
+        let input = QTensor::random(&[10, 10, 8], 8, false, &mut rng);
+        let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+        let mut coord = Coordinator::new(8);
+        let a = coord.run(&dep, &input);
+        let mut cl = Cluster::new(8);
+        preload_deployment(&mut cl, &dep);
+        let b = execute_deployment(&mut cl, &dep, &input, None);
+        assert_eq!(a.output, b.output);
+        assert_eq!(a.layer_cycles(), b.layer_cycles());
+        assert!(b.energy_pj(IsaVariant::FlexV, &EnergyModel::default()) > 0.0);
     }
 }

@@ -18,11 +18,104 @@ pub mod tiler;
 
 pub use tiler::{solve_conv_tiling, solve_dw_tiling, TileShape};
 
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+use crate::isa::IsaVariant;
 use crate::kernels::conv::ConvTask;
 use crate::kernels::layers::{AddTask, AvgPoolTask, DwConvTask, MaxPoolTask};
 use crate::kernels::requant::RequantCfg;
+use crate::qnn::layer::{LayerKind, Network};
 use crate::qnn::Precision;
 use crate::sim::dma::{DmaDir, DmaRequest};
+
+/// A structural cache key for compiled plans and tile programs.
+///
+/// Two users share this type (so their caches agree on identity):
+///
+/// - the **coordinator**'s tile-timing memo ([`PlanKey::for_tile`]): the
+///   kernel-launch descriptor plus the TCDM-side DMA layout — program
+///   generation and cycle-accurate timing are pure functions of it;
+/// - the **serve** plan cache ([`PlanKey::for_network`]): the full
+///   (model, precision config, tiling parameters) identity, so
+///   [`deploy::deploy`] runs once per model instead of once per request.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct PlanKey(u64);
+
+impl PlanKey {
+    /// The raw 64-bit hash value.
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// Structural key of one tile: the kernel-launch descriptor (program
+    /// generation is a pure function of it, the ISA, and the core count)
+    /// plus the DMA descriptors. L1 addresses are part of the descriptor,
+    /// so the double-buffer parity — which shifts bank-conflict patterns —
+    /// is captured. DMA timing depends on sizes, the TCDM-side layout
+    /// (bank patterns) and strides — NOT on the L2-side address, which
+    /// differs per tile without affecting a single cycle.
+    pub fn for_tile(isa: IsaVariant, tile: &TileExec, n_cores: usize) -> Self {
+        let mut h = DefaultHasher::new();
+        (isa as u8).hash(&mut h);
+        n_cores.hash(&mut h);
+        tile.kernel.hash(&mut h);
+        for r in tile.loads.iter().chain(tile.stores.iter()) {
+            (r.dir, r.loc, r.row_bytes, r.rows, r.loc_stride).hash(&mut h);
+        }
+        PlanKey(h.finish())
+    }
+
+    /// Identity of a compiled deployment: the network (topology, per-layer
+    /// precisions, quantization parameters, weight bytes) together with
+    /// everything else `deploy` depends on — target ISA, memory budget
+    /// (the tiling parameters follow from it) and cluster width.
+    pub fn for_network(net: &Network, isa: IsaVariant, budget: MemBudget, n_cores: usize) -> Self {
+        let mut h = DefaultHasher::new();
+        (isa as u8).hash(&mut h);
+        n_cores.hash(&mut h);
+        budget.l1.hash(&mut h);
+        budget.l2.hash(&mut h);
+        net.name.hash(&mut h);
+        net.input_shape.hash(&mut h);
+        net.input_bits.hash(&mut h);
+        net.nodes.len().hash(&mut h);
+        for node in &net.nodes {
+            node.inputs.hash(&mut h);
+            let l = &node.layer;
+            hash_kind(&l.kind, &mut h);
+            l.in_shape.hash(&mut h);
+            l.out_shape.hash(&mut h);
+            l.a_bits.hash(&mut h);
+            l.w_bits.hash(&mut h);
+            match &l.weights {
+                Some(w) => {
+                    1u8.hash(&mut h);
+                    w.bits.hash(&mut h);
+                    w.shape.hash(&mut h);
+                    w.data.hash(&mut h);
+                }
+                None => 0u8.hash(&mut h),
+            }
+            l.quant.mult.hash(&mut h);
+            l.quant.bias.hash(&mut h);
+            l.quant.shift.hash(&mut h);
+            l.quant.out_bits.hash(&mut h);
+        }
+        PlanKey(h.finish())
+    }
+}
+
+fn hash_kind<H: Hasher>(kind: &LayerKind, h: &mut H) {
+    match kind {
+        LayerKind::Conv2d { kh, kw, stride, pad } => (0u8, kh, kw, stride, pad).hash(h),
+        LayerKind::DwConv2d { kh, kw, stride, pad } => (1u8, kh, kw, stride, pad).hash(h),
+        LayerKind::Linear => 2u8.hash(h),
+        LayerKind::MaxPool { k, stride } => (3u8, k, stride).hash(h),
+        LayerKind::AvgPool { k, stride } => (4u8, k, stride).hash(h),
+        LayerKind::Add { m1, m2 } => (5u8, m1, m2).hash(h),
+    }
+}
 
 /// Memory budgets of the deployment target.
 #[derive(Clone, Copy, Debug)]
@@ -234,5 +327,24 @@ mod tests {
     #[should_panic(expected = "exceeds budget")]
     fn l1_layout_rejects_over_budget() {
         l1_layout(60 * 1024, 10 * 1024, 10 * 1024, 64, 0, 110 * 1024);
+    }
+
+    #[test]
+    fn plan_key_is_stable_and_discriminating() {
+        let mut rng = crate::util::Prng::new(5);
+        let mut net = Network::new("k", [10, 10, 8], 8);
+        net.push(crate::qnn::Layer::conv("c", [10, 10, 8], 8, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        let base = PlanKey::for_network(&net, IsaVariant::FlexV, MemBudget::default(), 8);
+        // deterministic
+        assert_eq!(base, PlanKey::for_network(&net, IsaVariant::FlexV, MemBudget::default(), 8));
+        // target ISA, budget (tiling parameters) and core count all key
+        assert_ne!(base, PlanKey::for_network(&net, IsaVariant::Ri5cy, MemBudget::default(), 8));
+        let small = MemBudget { l1: 40 * 1024, l2: crate::L2_BYTES };
+        assert_ne!(base, PlanKey::for_network(&net, IsaVariant::FlexV, small, 8));
+        assert_ne!(base, PlanKey::for_network(&net, IsaVariant::FlexV, MemBudget::default(), 4));
+        // precision config keys
+        let mut net2 = net.clone();
+        net2.nodes[0].layer.w_bits = 8;
+        assert_ne!(base, PlanKey::for_network(&net2, IsaVariant::FlexV, MemBudget::default(), 8));
     }
 }

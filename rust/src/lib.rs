@@ -36,6 +36,10 @@
 //!   models (HLO text) for cross-validation of every simulated kernel.
 //! - [`coordinator`] — end-to-end inference driver: executes a DORY plan
 //!   (DMA + kernel dispatch) on the simulated cluster and collects metrics.
+//! - [`serve`] — multi-cluster inference serving engine: bounded request
+//!   queue, dynamic batching, compiled-plan cache keyed by
+//!   [`dory::PlanKey`], shard pool with model residency, fleet metrics
+//!   (queue → batcher → shard pool → metrics; see `serve/README.md`).
 //! - [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section (Tables I-IV, Fig. 7).
 
@@ -49,6 +53,7 @@ pub mod power;
 pub mod qnn;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

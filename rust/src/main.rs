@@ -26,11 +26,23 @@ COMMANDS:
   dump-kernel <isa> <aXwY> [n]  disassemble the generated MatMul kernel
                            (first n instructions, default 60; cf. Fig. 5)
   run-net <isa> <mnv1-8b|mnv1-8b4b|resnet20-4b2b> [--quick]
+  serve-bench [--shards N] [--requests N] [--max-batch N] [--full] [--exact]
+                    replay a synthetic mixed 3-model traffic trace on a
+                    multi-cluster serving fleet; reports req/s, p50/p99
+                    latency, MAC/cycle, energy/request, plan-cache hits
   validate [dir]    cross-check simulator vs AOT golden artifacts (PJRT)
 
 ISAs: ri5cy | mpic | xpulpnn | flexv"
     );
     std::process::exit(2);
+}
+
+/// Value of a `--name <n>` style flag.
+fn flag_val(args: &[String], name: &str) -> Option<usize> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
 }
 
 fn parse_isa(s: &str) -> IsaVariant {
@@ -101,18 +113,44 @@ fn main() {
                 usage();
             }
             let isa = parse_isa(&args[1]);
-            use flexv::models::{mobilenet_v1, resnet20, Profile};
             let hw = if quick { 96 } else { 224 };
-            let net = match args[2].as_str() {
-                "mnv1-8b" => mobilenet_v1(Profile::Uniform8, 0.75, hw, 11),
-                "mnv1-8b4b" => mobilenet_v1(Profile::Mixed8a4w, 0.75, hw, 11),
-                "resnet20-4b2b" => resnet20(Profile::Mixed4a2w, 12),
-                other => {
-                    eprintln!("unknown network '{other}'");
-                    usage()
-                }
-            };
+            let net = flexv::models::by_name(&args[2], hw).unwrap_or_else(|| {
+                eprintln!(
+                    "unknown network '{}' (expected one of: {})",
+                    args[2],
+                    flexv::models::MODEL_NAMES.join(" | ")
+                );
+                usage()
+            });
             run_net_verbose(isa, &net);
+        }
+        Some("serve-bench") => {
+            let full = args.iter().any(|a| a == "--full");
+            let exact = args.iter().any(|a| a == "--exact");
+            let shards = flag_val(&args, "--shards").unwrap_or(4);
+            let requests = flag_val(&args, "--requests").unwrap_or(32);
+            let max_batch = flag_val(&args, "--max-batch").unwrap_or(8);
+            let hw = if full { 224 } else { 96 };
+            use flexv::serve::{standard_mix, Engine, ServeConfig};
+            let cfg = ServeConfig { shards, max_batch, exact, ..ServeConfig::default() };
+            let mut eng = Engine::new(cfg);
+            for net in standard_mix(hw) {
+                eng.register(net);
+            }
+            println!(
+                "serve-bench: {requests} requests over 3 models on {shards} shards \
+                 (MNV1 input {hw}x{hw}{}) ...",
+                if exact { ", exact mode" } else { "" }
+            );
+            let trace = eng.synthetic_trace(requests, 2_000_000, &[0.45, 0.30, 0.25], 0x5EEB);
+            let t0 = std::time::Instant::now();
+            let m = eng.run_trace(trace);
+            let wall = t0.elapsed().as_secs_f64();
+            print!("{}", m.render());
+            println!(
+                "(host: {wall:.1}s wall, {:.1} M simulated cycles/s)",
+                m.span_cycles as f64 / wall.max(1e-9) / 1e6
+            );
         }
         Some("dump-kernel") => {
             if args.len() < 3 {
@@ -152,15 +190,27 @@ fn main() {
         }
         Some("validate") => {
             let dir = args.get(1).map(|s| s.as_str()).unwrap_or("artifacts");
+            let legs = if cfg!(feature = "pjrt") {
+                "sim == XLA == golden"
+            } else {
+                "sim == Rust golden; build with --features pjrt for the XLA leg"
+            };
             match flexv::runtime::validate_artifacts(dir) {
-                Ok(n) => println!("validate: {n} artifact checks passed (sim == XLA golden)"),
+                Ok(n) => println!("validate: {n} artifact checks passed ({legs})"),
                 Err(e) => {
                     eprintln!("validate failed: {e:#}");
                     std::process::exit(1);
                 }
             }
         }
-        _ => usage(),
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n");
+            usage()
+        }
+        None => {
+            eprintln!("missing command\n");
+            usage()
+        }
     }
 }
 

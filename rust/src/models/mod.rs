@@ -304,6 +304,24 @@ pub fn resnet20(profile: Profile, seed: u64) -> Network {
     net
 }
 
+/// Look up an evaluation network by its CLI name (`mnv1-8b`,
+/// `mnv1-8b4b`, `resnet20-4b2b`). `input_hw` sets the MobileNet input
+/// resolution (ResNet-20 is fixed at 32×32). Seeds match the `run-net`
+/// subcommand and the Table IV generators, so every consumer (CLI,
+/// report, serve engine) builds bit-identical networks — which is what
+/// lets the serve plan cache key them structurally.
+pub fn by_name(name: &str, input_hw: usize) -> Option<Network> {
+    match name {
+        "mnv1-8b" => Some(mobilenet_v1(Profile::Uniform8, 0.75, input_hw, 11)),
+        "mnv1-8b4b" => Some(mobilenet_v1(Profile::Mixed8a4w, 0.75, input_hw, 11)),
+        "resnet20-4b2b" => Some(resnet20(Profile::Mixed4a2w, 12)),
+        _ => None,
+    }
+}
+
+/// The CLI names accepted by [`by_name`].
+pub const MODEL_NAMES: [&str; 3] = ["mnv1-8b", "mnv1-8b4b", "resnet20-4b2b"];
+
 /// Table IV's cited accuracies (not re-measured; weights are synthetic).
 pub fn cited_accuracy(net_name: &str) -> Option<f64> {
     if net_name.starts_with("MobileNetV1-8b4b") {
@@ -367,6 +385,18 @@ mod tests {
         assert_eq!(adds, 9);
         // at least one node consumes the network input
         assert!(net.nodes.iter().any(|n| n.inputs.contains(&NET_INPUT)));
+    }
+
+    #[test]
+    fn by_name_covers_the_zoo_deterministically() {
+        for name in MODEL_NAMES {
+            let a = by_name(name, 96).expect(name);
+            let b = by_name(name, 96).expect(name);
+            a.validate().expect(name);
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.model_bytes(), b.model_bytes());
+        }
+        assert!(by_name("nope", 96).is_none());
     }
 
     #[test]

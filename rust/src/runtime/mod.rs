@@ -1,25 +1,86 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas golden models
-//! (HLO text produced by `python/compile/aot.py`) and executes them on the
-//! XLA CPU client — the independent numerical oracle for the simulator.
-//!
-//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! Golden-artifact runtime: loads the AOT-compiled JAX/Pallas golden
+//! models (HLO text produced by `python/compile/aot.py`) and cross-checks
+//! the simulator against them.
 //!
 //! Each artifact `<name>.hlo.txt` ships with a `<name>.meta` sidecar
 //! (`key=value` lines) describing the baked shapes/precision so the
 //! validator can regenerate the exact inputs on the Rust side.
+//!
+//! The XLA/PJRT leg (executing the HLO on the XLA CPU client as an
+//! independent numerical oracle) needs the `xla` bindings, which are not
+//! available in the offline build. It is gated behind the `pjrt` cargo
+//! feature; without it, [`validate_artifacts`] still performs the
+//! two-way check **Rust golden == simulated Flex-V kernel** over every
+//! artifact in the directory. Interchange with XLA is HLO *text*, not
+//! serialized protos: jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
 
-use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
+use std::fmt;
 use std::path::Path;
 
 use crate::isa::IsaVariant;
 use crate::kernels::matmul::{gen_matmul, MatMulTask};
 use crate::kernels::requant::RequantCfg;
-use crate::qnn::{QTensor, Precision, QuantParams};
+use crate::qnn::{Precision, QTensor, QuantParams};
 use crate::sim::{Cluster, TCDM_BASE};
 use crate::util::Prng;
+
+/// Minimal error type standing in for `anyhow` (offline build).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error(s.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::runtime::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// `anyhow`-style context adapters for `Result`/`Option`.
+trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error(c.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
 
 /// Parsed `.meta` sidecar of an artifact.
 #[derive(Clone, Debug)]
@@ -60,108 +121,36 @@ pub fn parse_meta(path: &Path) -> Result<ArtifactMeta> {
     })
 }
 
-/// A loaded golden executable.
-pub struct GoldenExe {
-    exe: xla::PjRtLoadedExecutable,
-    pub meta: ArtifactMeta,
+/// Deterministic artifact inputs (shared across all implementations):
+/// activations, weights, multipliers, biases.
+struct ArtifactInputs {
+    a_vals: Vec<u32>,
+    w_vals: Vec<i32>,
+    mult: Vec<i32>,
+    bias: Vec<i32>,
 }
 
-/// The PJRT CPU client plus loaded artifacts.
-pub struct GoldenRuntime {
-    client: xla::PjRtClient,
-}
-
-impl GoldenRuntime {
-    pub fn cpu() -> Result<Self> {
-        Ok(GoldenRuntime { client: xla::PjRtClient::cpu()? })
-    }
-
-    /// Load + compile one artifact.
-    pub fn load(&self, hlo_path: &Path, meta: ArtifactMeta) -> Result<GoldenExe> {
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 path")?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(GoldenExe { exe, meta })
-    }
-}
-
-impl GoldenExe {
-    /// Execute the golden MatMul: unpacked activations `[m, k]` (i32),
-    /// packed weight words `[n, kw]` (i32), `mult[n]`, `bias[n]` → `[m, n]`
-    /// requantized outputs (i32).
-    pub fn run_matmul(
-        &self,
-        a: &[i32],
-        w_words: &[i32],
-        mult: &[i32],
-        bias: &[i32],
-    ) -> Result<Vec<i32>> {
-        let m = &self.meta;
-        let kw = w_words.len() / m.n;
-        let a_lit = xla::Literal::vec1(a).reshape(&[m.m as i64, m.k as i64])?;
-        let w_lit = xla::Literal::vec1(w_words).reshape(&[m.n as i64, kw as i64])?;
-        let mult_lit = xla::Literal::vec1(mult);
-        let bias_lit = xla::Literal::vec1(bias);
-        let result = self.exe.execute::<xla::Literal>(&[a_lit, w_lit, mult_lit, bias_lit])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<i32>()?)
-    }
-}
-
-/// Run the full three-way cross-check over every artifact in `dir`:
-/// simulator kernel == XLA golden == Rust golden, bit-exact. Returns the
-/// number of artifact checks performed.
-pub fn validate_artifacts(dir: &str) -> Result<usize> {
-    let dir = Path::new(dir);
-    if !dir.exists() {
-        bail!("artifact dir {dir:?} missing — run `make artifacts` first");
-    }
-    let rt = GoldenRuntime::cpu()?;
-    let mut checked = 0;
-    let mut entries: Vec<_> = std::fs::read_dir(dir)?
-        .filter_map(|e| e.ok())
-        .map(|e| e.path())
-        .filter(|p| p.extension().map(|x| x == "meta").unwrap_or(false))
-        .collect();
-    entries.sort();
-    for meta_path in entries {
-        let meta = parse_meta(&meta_path)?;
-        let hlo_path = meta_path.with_extension("hlo.txt");
-        if !hlo_path.exists() {
-            bail!("{hlo_path:?} missing for {meta_path:?}");
-        }
-        let exe = rt.load(&hlo_path, meta.clone())?;
-        check_matmul_artifact(&exe).with_context(|| format!("artifact {}", meta.name))?;
-        println!("  ok: {} (m={} n={} k={} a{}w{})", meta.name, meta.m, meta.n, meta.k, meta.a_bits, meta.w_bits);
-        checked += 1;
-    }
-    if checked == 0 {
-        bail!("no artifacts found in {dir:?}");
-    }
-    Ok(checked)
-}
-
-/// Three-way check of one MatMul artifact.
-fn check_matmul_artifact(exe: &GoldenExe) -> Result<()> {
-    let m = &exe.meta;
-    let prec = Precision::new(m.a_bits, m.w_bits);
+fn gen_inputs(m: &ArtifactMeta) -> ArtifactInputs {
     let mut rng = Prng::new(0x60D1 + m.a_bits as u64 * 100 + m.w_bits as u64);
-    // Inputs (shared across all three implementations).
-    let a_vals: Vec<u32> = (0..m.m * m.k).map(|_| rng.bits_unsigned(m.a_bits)).collect();
-    let w_vals: Vec<i32> = (0..m.n * m.k).map(|_| rng.bits_signed(m.w_bits)).collect();
-    let mult: Vec<i32> = (0..m.n).map(|_| rng.range_i64(1, 6) as i32).collect();
-    let bias: Vec<i32> = (0..m.n).map(|_| rng.range_i64(-64, 64) as i32).collect();
+    ArtifactInputs {
+        a_vals: (0..m.m * m.k).map(|_| rng.bits_unsigned(m.a_bits)).collect(),
+        w_vals: (0..m.n * m.k).map(|_| rng.bits_signed(m.w_bits)).collect(),
+        mult: (0..m.n).map(|_| rng.range_i64(1, 6) as i32).collect(),
+        bias: (0..m.n).map(|_| rng.range_i64(-64, 64) as i32).collect(),
+    }
+}
 
-    // 1. Rust golden.
-    let q = QuantParams { mult: mult.clone(), shift: m.shift, bias: bias.clone(), out_bits: m.out_bits };
-    let golden: Vec<i32> = (0..m.m)
+/// The Rust reference (golden) requantized MatMul over the artifact inputs.
+fn rust_golden(m: &ArtifactMeta, inp: &ArtifactInputs) -> Vec<i32> {
+    let q = QuantParams {
+        mult: inp.mult.clone(),
+        shift: m.shift,
+        bias: inp.bias.clone(),
+        out_bits: m.out_bits,
+    };
+    (0..m.m)
         .flat_map(|row| {
-            let a_vals = &a_vals;
-            let w_vals = &w_vals;
-            let q = &q;
+            let (a_vals, w_vals, q) = (&inp.a_vals, &inp.w_vals, &q);
             (0..m.n).map(move |ch| {
                 let acc: i64 = (0..m.k)
                     .map(|kk| a_vals[row * m.k + kk] as i64 * w_vals[ch * m.k + kk] as i64)
@@ -169,30 +158,14 @@ fn check_matmul_artifact(exe: &GoldenExe) -> Result<()> {
                 q.requant(acc as i32, ch) as i32
             })
         })
-        .collect();
+        .collect()
+}
 
-    // 2. XLA golden (packed weights, word-wise, little-endian like the HW).
-    let kw_words = (m.k * m.w_bits as usize).div_ceil(32);
-    let mut w_words = vec![0i32; m.n * kw_words];
-    for ch in 0..m.n {
-        for kk in 0..m.k {
-            let bit = kk * m.w_bits as usize;
-            let (word, off) = (bit / 32, bit % 32);
-            let v = (w_vals[ch * m.k + kk] as u32) & ((1u32 << m.w_bits) - 1);
-            w_words[ch * kw_words + word] |= (v << off) as i32;
-        }
-    }
-    let a_i32: Vec<i32> = a_vals.iter().map(|&v| v as i32).collect();
-    let xla_out = exe.run_matmul(&a_i32, &w_words, &mult, &bias)?;
-    if xla_out != golden {
-        bail!(
-            "XLA golden != Rust golden (first diff at {:?})",
-            xla_out.iter().zip(&golden).position(|(a, b)| a != b)
-        );
-    }
-
-    // 3. Simulator kernel (Flex-V path; the other ISAs are covered by the
-    // kernel unit tests against the same Rust golden).
+/// Simulate the Flex-V MatMul kernel on the artifact inputs and compare
+/// against `golden` bit-exactly. (The other ISAs are covered by the kernel
+/// unit tests against the same Rust golden.)
+fn sim_check(m: &ArtifactMeta, inp: &ArtifactInputs, golden: &[i32]) -> Result<()> {
+    let prec = Precision::new(m.a_bits, m.w_bits);
     let a_pitch = (m.k.div_ceil(32 / m.a_bits as usize) * 4) as u32;
     let w_pitch = crate::dory::deploy::w_row_pitch(m.k, m.a_bits, m.w_bits);
     let a_base = TCDM_BASE;
@@ -205,21 +178,21 @@ fn check_matmul_artifact(exe: &GoldenExe) -> Result<()> {
     let mut a_t = QTensor::zeros(&[m.m, ka], m.a_bits, false);
     for row in 0..m.m {
         for kk in 0..m.k {
-            a_t.set_u(row * ka + kk, a_vals[row * m.k + kk]);
+            a_t.set_u(row * ka + kk, inp.a_vals[row * m.k + kk]);
         }
     }
     let kw = w_pitch as usize * 8 / m.w_bits as usize;
     let mut w_t = QTensor::zeros(&[m.n, kw], m.w_bits, true);
     for ch in 0..m.n {
         for kk in 0..m.k {
-            w_t.set_i(ch * kw + kk, w_vals[ch * m.k + kk]);
+            w_t.set_i(ch * kw + kk, inp.w_vals[ch * m.k + kk]);
         }
     }
     cl.mem.write_bytes(a_base, &a_t.data);
     cl.mem.write_bytes(w_base, &w_t.data);
     for ch in 0..m.n {
-        cl.mem.store_u32(mult_base + 4 * ch as u32, mult[ch] as u32);
-        cl.mem.store_u32(bias_base + 4 * ch as u32, bias[ch] as u32);
+        cl.mem.store_u32(mult_base + 4 * ch as u32, inp.mult[ch] as u32);
+        cl.mem.store_u32(bias_base + 4 * ch as u32, inp.bias[ch] as u32);
     }
     let task = MatMulTask {
         m: m.m,
@@ -236,21 +209,160 @@ fn check_matmul_artifact(exe: &GoldenExe) -> Result<()> {
     };
     cl.load_programs((0..8).map(|c| gen_matmul(IsaVariant::FlexV, &task, c, 8)).collect());
     cl.run();
+    let out_bytes = cl.mem.read_bytes(out_base, m.m * m.n * m.out_bits as usize / 8);
     for row in 0..m.m {
         for ch in 0..m.n {
-            let want = golden[row * m.n + ch] as u32;
             let idx = row * m.n + ch;
-            let got = crate::qnn::packing::get_unsigned(
-                &cl.mem.read_bytes(out_base, m.m * m.n * m.out_bits as usize / 8),
-                m.out_bits,
-                idx,
-            );
+            let want = golden[idx] as u32;
+            let got = crate::qnn::packing::get_unsigned(&out_bytes, m.out_bits, idx);
             if got != want {
                 bail!("simulator != golden at ({row},{ch}): {got} vs {want}");
             }
         }
     }
     Ok(())
+}
+
+/// Run the cross-check over every artifact in `dir`: simulator kernel ==
+/// Rust golden (== XLA golden with the `pjrt` feature), bit-exact.
+/// Returns the number of artifact checks performed.
+pub fn validate_artifacts(dir: &str) -> Result<usize> {
+    let dir = Path::new(dir);
+    if !dir.exists() {
+        bail!("artifact dir {dir:?} missing — run `make artifacts` first");
+    }
+    #[cfg(feature = "pjrt")]
+    let rt = pjrt::GoldenRuntime::cpu()?;
+    let mut checked = 0;
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "meta").unwrap_or(false))
+        .collect();
+    entries.sort();
+    for meta_path in entries {
+        let meta = parse_meta(&meta_path)?;
+        let hlo_path = meta_path.with_extension("hlo.txt");
+        if !hlo_path.exists() {
+            bail!("{hlo_path:?} missing for {meta_path:?}");
+        }
+        let inputs = gen_inputs(&meta);
+        let golden = rust_golden(&meta, &inputs);
+        #[cfg(feature = "pjrt")]
+        {
+            let exe = rt.load(&hlo_path, meta.clone())?;
+            pjrt::xla_check(&exe, &inputs, &golden)
+                .with_context(|| format!("artifact {}", meta.name))?;
+        }
+        sim_check(&meta, &inputs, &golden).with_context(|| format!("artifact {}", meta.name))?;
+        let legs = if cfg!(feature = "pjrt") {
+            "sim == XLA == golden"
+        } else {
+            "sim == golden (XLA leg off: no pjrt feature)"
+        };
+        println!(
+            "  ok: {} (m={} n={} k={} a{}w{}) [{legs}]",
+            meta.name, meta.m, meta.n, meta.k, meta.a_bits, meta.w_bits
+        );
+        checked += 1;
+    }
+    if checked == 0 {
+        bail!("no artifacts found in {dir:?}");
+    }
+    Ok(checked)
+}
+
+/// The PJRT/XLA leg. Compiles the HLO-text artifacts on the XLA CPU
+/// client and runs them as an independent numerical oracle. Requires the
+/// `xla` bindings crate; only built with `--features pjrt`.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+
+    /// A loaded golden executable.
+    pub struct GoldenExe {
+        exe: xla::PjRtLoadedExecutable,
+        pub meta: ArtifactMeta,
+    }
+
+    /// The PJRT CPU client plus loaded artifacts.
+    pub struct GoldenRuntime {
+        client: xla::PjRtClient,
+    }
+
+    impl GoldenRuntime {
+        pub fn cpu() -> Result<Self> {
+            Ok(GoldenRuntime { client: xla::PjRtClient::cpu().context("pjrt cpu client")? })
+        }
+
+        /// Load + compile one artifact.
+        pub fn load(&self, hlo_path: &Path, meta: ArtifactMeta) -> Result<GoldenExe> {
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-utf8 path")?,
+            )
+            .context("parsing hlo text")?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).context("compiling hlo")?;
+            Ok(GoldenExe { exe, meta })
+        }
+    }
+
+    impl GoldenExe {
+        /// Execute the golden MatMul: unpacked activations `[m, k]` (i32),
+        /// packed weight words `[n, kw]` (i32), `mult[n]`, `bias[n]` →
+        /// `[m, n]` requantized outputs (i32).
+        pub fn run_matmul(
+            &self,
+            a: &[i32],
+            w_words: &[i32],
+            mult: &[i32],
+            bias: &[i32],
+        ) -> Result<Vec<i32>> {
+            let m = &self.meta;
+            let kw = w_words.len() / m.n;
+            let a_lit = xla::Literal::vec1(a)
+                .reshape(&[m.m as i64, m.k as i64])
+                .context("reshape a")?;
+            let w_lit = xla::Literal::vec1(w_words)
+                .reshape(&[m.n as i64, kw as i64])
+                .context("reshape w")?;
+            let mult_lit = xla::Literal::vec1(mult);
+            let bias_lit = xla::Literal::vec1(bias);
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[a_lit, w_lit, mult_lit, bias_lit])
+                .context("execute")?[0][0]
+                .to_literal_sync()
+                .context("fetch result")?;
+            let out = result.to_tuple1().context("untuple")?;
+            out.to_vec::<i32>().context("to_vec")
+        }
+    }
+
+    /// XLA-vs-Rust-golden comparison (packed weights, word-wise,
+    /// little-endian like the HW).
+    pub fn xla_check(exe: &GoldenExe, inp: &ArtifactInputs, golden: &[i32]) -> Result<()> {
+        let m = &exe.meta;
+        let kw_words = (m.k * m.w_bits as usize).div_ceil(32);
+        let mut w_words = vec![0i32; m.n * kw_words];
+        for ch in 0..m.n {
+            for kk in 0..m.k {
+                let bit = kk * m.w_bits as usize;
+                let (word, off) = (bit / 32, bit % 32);
+                let v = (inp.w_vals[ch * m.k + kk] as u32) & ((1u32 << m.w_bits) - 1);
+                w_words[ch * kw_words + word] |= (v << off) as i32;
+            }
+        }
+        let a_i32: Vec<i32> = inp.a_vals.iter().map(|&v| v as i32).collect();
+        let xla_out = exe.run_matmul(&a_i32, &w_words, &inp.mult, &inp.bias)?;
+        if xla_out != golden {
+            bail!(
+                "XLA golden != Rust golden (first diff at {:?})",
+                xla_out.iter().zip(golden).position(|(a, b)| a != b)
+            );
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -274,5 +386,24 @@ mod tests {
     #[test]
     fn missing_dir_is_error() {
         assert!(validate_artifacts("/nonexistent_dir_xyz").is_err());
+    }
+
+    /// Without HLO artifacts on disk, the sim-vs-golden legs can still be
+    /// exercised directly from a synthetic meta.
+    #[test]
+    fn sim_matches_rust_golden_synthetic_meta() {
+        let meta = ArtifactMeta {
+            name: "synthetic_a8w4".into(),
+            m: 8,
+            n: 8,
+            k: 32,
+            a_bits: 8,
+            w_bits: 4,
+            out_bits: 8,
+            shift: 10,
+        };
+        let inputs = gen_inputs(&meta);
+        let golden = rust_golden(&meta, &inputs);
+        sim_check(&meta, &inputs, &golden).expect("sim == golden");
     }
 }

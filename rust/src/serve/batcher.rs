@@ -1,0 +1,95 @@
+//! Dynamic batching policy.
+//!
+//! When a shard frees up, the batcher picks a **lead** request from the
+//! queue (priority, FIFO, shard-affinity — see
+//! [`RequestQueue::pop_lead`]) and coalesces up to `max_batch - 1` more
+//! queued requests for the same model behind it. A batch shares one plan
+//! lookup and at most one model switch: the L3→L2 weight streaming and
+//! the warm tile-timing memo are amortized over every member, exactly the
+//! way PULP-NN amortizes im2col/packing setup across kernel invocations.
+
+use super::queue::RequestQueue;
+use super::request::Request;
+
+/// Batch formation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum requests coalesced into one shard pass (1 = no batching).
+    pub max_batch: usize,
+    /// Prefer a lead request matching the shard's resident model (within
+    /// the top priority level), avoiding a weight switch.
+    pub prefer_resident: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, prefer_resident: true }
+    }
+}
+
+/// Form the next batch for a shard whose resident model is `resident`.
+/// Returns `None` when the queue is empty. The returned batch is
+/// non-empty and single-model.
+pub fn next_batch(
+    queue: &mut RequestQueue,
+    resident: Option<usize>,
+    policy: &BatchPolicy,
+) -> Option<Vec<Request>> {
+    assert!(policy.max_batch >= 1);
+    let lead = queue.pop_lead(if policy.prefer_resident { resident } else { None })?;
+    let model = lead.model;
+    let mut batch = vec![lead];
+    if policy.max_batch > 1 {
+        batch.extend(queue.drain_model(model, policy.max_batch - 1));
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::QTensor;
+
+    fn req(id: u64, model: usize, priority: u8) -> Request {
+        Request {
+            id,
+            model,
+            priority,
+            arrival_cycle: id,
+            input: QTensor::zeros(&[1, 1, 8], 8, false),
+        }
+    }
+
+    #[test]
+    fn coalesces_same_model_up_to_max() {
+        let mut q = RequestQueue::new(16);
+        for (id, m) in [(0, 0), (1, 1), (2, 0), (3, 0), (4, 0)] {
+            q.push(req(id, m, 0));
+        }
+        let policy = BatchPolicy { max_batch: 3, prefer_resident: false };
+        let batch = next_batch(&mut q, None, &policy).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 3]);
+        assert!(batch.iter().all(|r| r.model == 0));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn affinity_keeps_shard_on_resident_model() {
+        let mut q = RequestQueue::new(16);
+        q.push(req(0, 0, 0));
+        q.push(req(1, 1, 0));
+        let policy = BatchPolicy { max_batch: 4, prefer_resident: true };
+        let batch = next_batch(&mut q, Some(1), &policy).unwrap();
+        assert_eq!(batch[0].model, 1);
+    }
+
+    #[test]
+    fn max_batch_one_disables_coalescing() {
+        let mut q = RequestQueue::new(16);
+        q.push(req(0, 0, 0));
+        q.push(req(1, 0, 0));
+        let policy = BatchPolicy { max_batch: 1, prefer_resident: false };
+        assert_eq!(next_batch(&mut q, None, &policy).unwrap().len(), 1);
+        assert_eq!(q.len(), 1);
+    }
+}

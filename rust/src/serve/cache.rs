@@ -1,0 +1,96 @@
+//! The compiled-plan cache.
+//!
+//! `dory::deploy` (tiling solve + L2 layout + weight serialization + DMA
+//! schedule generation) is the expensive, input-independent part of a
+//! request — the analog of DORY's offline C-code generation. The cache
+//! keys it by [`PlanKey`] (model × precision config × tiling parameters ×
+//! target) so it runs **once per model**, not once per request; every
+//! shard then shares the same immutable [`Deployment`] through an `Arc`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::dory::deploy::Deployment;
+use crate::dory::PlanKey;
+
+/// Plan cache with hit/miss accounting.
+#[derive(Default)]
+pub struct PlanCache {
+    map: HashMap<PlanKey, Arc<Deployment>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        PlanCache::default()
+    }
+
+    /// Look up `key`, building (and caching) the deployment on a miss.
+    pub fn get_or_build(
+        &mut self,
+        key: PlanKey,
+        build: impl FnOnce() -> Deployment,
+    ) -> Arc<Deployment> {
+        if let Some(dep) = self.map.get(&key) {
+            self.hits += 1;
+            return dep.clone();
+        }
+        self.misses += 1;
+        let dep = Arc::new(build());
+        self.map.insert(key, dep.clone());
+        dep
+    }
+
+    /// Distinct compiled plans resident.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dory::deploy::deploy;
+    use crate::dory::MemBudget;
+    use crate::isa::IsaVariant;
+    use crate::qnn::layer::Network;
+    use crate::qnn::Layer;
+    use crate::util::Prng;
+
+    #[test]
+    fn builds_once_per_key() {
+        let mut rng = Prng::new(9);
+        let mut net = Network::new("c", [8, 8, 8], 8);
+        net.push(Layer::conv("c1", [8, 8, 8], 8, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        let key = PlanKey::for_network(&net, IsaVariant::FlexV, MemBudget::default(), 8);
+        let mut cache = PlanCache::new();
+        let mut builds = 0;
+        for _ in 0..5 {
+            let dep = cache.get_or_build(key, || {
+                builds += 1;
+                deploy(&net, IsaVariant::FlexV, MemBudget::default())
+            });
+            assert_eq!(dep.isa, IsaVariant::FlexV);
+        }
+        assert_eq!(builds, 1);
+        assert_eq!((cache.hits, cache.misses, cache.len()), (4, 1, 1));
+        assert!(cache.hit_rate() > 0.7);
+    }
+}

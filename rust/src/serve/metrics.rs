@@ -1,0 +1,213 @@
+//! Per-request and fleet-level serving metrics.
+//!
+//! Everything is measured in simulated cluster cycles (deterministic);
+//! wall-clock figures are derived at the typical-corner frequency
+//! ([`crate::report::F_TYP_MHZ`], 250 MHz).
+
+use crate::report::F_TYP_MHZ;
+use crate::util::table::{f, Table};
+
+use super::cache::PlanCache;
+use super::queue::RequestQueue;
+use super::request::Completion;
+use super::shard::Shard;
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Aggregates for one registered model.
+#[derive(Clone, Debug)]
+pub struct ModelRow {
+    pub name: String,
+    pub served: usize,
+    pub p50_cycles: u64,
+    pub p99_cycles: u64,
+    pub mean_exec_cycles: f64,
+    pub macs_per_cycle: f64,
+    /// Mean simulated energy per request [µJ].
+    pub energy_uj: f64,
+}
+
+/// The fleet-level report of one serving run.
+#[derive(Clone, Debug)]
+pub struct FleetMetrics {
+    pub shards: usize,
+    pub served: usize,
+    pub enqueued: u64,
+    pub rejected: u64,
+    pub peak_queue_depth: usize,
+    /// First arrival → last completion, simulated cycles.
+    pub span_cycles: u64,
+    pub p50_cycles: u64,
+    pub p99_cycles: u64,
+    pub mean_latency_cycles: f64,
+    /// Throughput at the typical corner.
+    pub requests_per_sec: f64,
+    /// Total MACs / span cycles — the fleet-level Table IV metric.
+    pub aggregate_macs_per_cycle: f64,
+    /// Total MACs / Σ busy cycles — per-shard efficiency while working.
+    pub busy_macs_per_cycle: f64,
+    /// Σ busy / (shards × span).
+    pub shard_utilization: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_entries: usize,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub model_switches: u64,
+    pub rows: Vec<ModelRow>,
+}
+
+impl FleetMetrics {
+    pub fn cache_hit_rate(&self) -> f64 {
+        let lookups = self.cache_hits + self.cache_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / lookups as f64
+        }
+    }
+
+    pub(crate) fn collect(
+        completions: &[Completion],
+        names: &[String],
+        queue: &RequestQueue,
+        cache: &PlanCache,
+        shards: &[Shard],
+    ) -> FleetMetrics {
+        let served = completions.len();
+        let mut latencies: Vec<u64> = completions.iter().map(|c| c.latency_cycles()).collect();
+        latencies.sort_unstable();
+        let first_arrival = completions.iter().map(|c| c.arrival_cycle).min().unwrap_or(0);
+        let last_finish = completions.iter().map(|c| c.finish_cycle).max().unwrap_or(0);
+        let span_cycles = last_finish.saturating_sub(first_arrival);
+        let total_macs: u64 = completions.iter().map(|c| c.macs).sum();
+        let total_exec: u64 = completions.iter().map(|c| c.exec_cycles).sum();
+        let total_busy: u64 = shards.iter().map(|s| s.busy_cycles).sum();
+        let batches: u64 = shards.iter().map(|s| s.batches).sum();
+        let span_secs = span_cycles as f64 / (F_TYP_MHZ * 1e6);
+
+        let rows = names
+            .iter()
+            .enumerate()
+            .map(|(m, name)| {
+                let of_model: Vec<&Completion> =
+                    completions.iter().filter(|c| c.model == m).collect();
+                let mut lat: Vec<u64> = of_model.iter().map(|c| c.latency_cycles()).collect();
+                lat.sort_unstable();
+                let n = of_model.len();
+                let exec: u64 = of_model.iter().map(|c| c.exec_cycles).sum();
+                let macs: u64 = of_model.iter().map(|c| c.macs).sum();
+                let pj: f64 = of_model.iter().map(|c| c.energy_pj).sum();
+                ModelRow {
+                    name: name.clone(),
+                    served: n,
+                    p50_cycles: percentile(&lat, 0.50),
+                    p99_cycles: percentile(&lat, 0.99),
+                    mean_exec_cycles: exec as f64 / n.max(1) as f64,
+                    macs_per_cycle: macs as f64 / exec.max(1) as f64,
+                    energy_uj: pj / n.max(1) as f64 * 1e-6,
+                }
+            })
+            .collect();
+
+        FleetMetrics {
+            shards: shards.len(),
+            served,
+            enqueued: queue.enqueued,
+            rejected: queue.rejected,
+            peak_queue_depth: queue.peak_depth,
+            span_cycles,
+            p50_cycles: percentile(&latencies, 0.50),
+            p99_cycles: percentile(&latencies, 0.99),
+            mean_latency_cycles: latencies.iter().sum::<u64>() as f64 / served.max(1) as f64,
+            requests_per_sec: if span_secs > 0.0 { served as f64 / span_secs } else { 0.0 },
+            aggregate_macs_per_cycle: total_macs as f64 / span_cycles.max(1) as f64,
+            busy_macs_per_cycle: total_macs as f64 / total_exec.max(1) as f64,
+            shard_utilization: if span_cycles > 0 && !shards.is_empty() {
+                total_busy as f64 / (shards.len() as f64 * span_cycles as f64)
+            } else {
+                0.0
+            },
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            cache_entries: cache.len(),
+            batches,
+            mean_batch: served as f64 / batches.max(1) as f64,
+            model_switches: shards.iter().map(|s| s.model_switches).sum(),
+            rows,
+        }
+    }
+
+    /// Render the throughput/latency table plus fleet summary lines.
+    pub fn render(&self) -> String {
+        let ms = |cyc: u64| cyc as f64 / (F_TYP_MHZ * 1e3);
+        let mut t = Table::new(format!(
+            "serve fleet — {} shards, {} requests ({} rejected), {} Mcycle span",
+            self.shards,
+            self.served,
+            self.rejected,
+            self.span_cycles / 1_000_000
+        ))
+        .header(&["model", "served", "p50[ms]", "p99[ms]", "MAC/cyc", "uJ/req"]);
+        for r in &self.rows {
+            t.row(vec![
+                r.name.clone(),
+                r.served.to_string(),
+                f(ms(r.p50_cycles), 2),
+                f(ms(r.p99_cycles), 2),
+                f(r.macs_per_cycle, 1),
+                f(r.energy_uj, 1),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "throughput: {} req/s @ {} MHz | latency p50/p99: {}/{} ms | mean {} ms\n",
+            f(self.requests_per_sec, 1),
+            f(F_TYP_MHZ, 0),
+            f(ms(self.p50_cycles), 2),
+            f(ms(self.p99_cycles), 2),
+            f(self.mean_latency_cycles / (F_TYP_MHZ * 1e3), 2),
+        ));
+        out.push_str(&format!(
+            "fleet: {} MAC/cyc aggregate ({} while busy), utilization {}%, peak queue {}\n",
+            f(self.aggregate_macs_per_cycle, 1),
+            f(self.busy_macs_per_cycle, 1),
+            f(self.shard_utilization * 100.0, 0),
+            self.peak_queue_depth,
+        ));
+        out.push_str(&format!(
+            "plan cache: {} hits / {} misses ({}% hit rate), {} compiled plans | batches: {} (mean {}/batch), model switches: {}\n",
+            self.cache_hits,
+            self.cache_misses,
+            f(self.cache_hit_rate() * 100.0, 0),
+            self.cache_entries,
+            self.batches,
+            f(self.mean_batch, 1),
+            self.model_switches,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&v, 0.5), 51); // round(99*0.5)=50 -> v[50]
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&v, 1.0), 100);
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.99), 7);
+    }
+}

@@ -1,0 +1,434 @@
+//! Multi-cluster inference **serving engine**: request queueing, dynamic
+//! batching, a compiled-plan cache, and a pool of simulated cluster
+//! shards (queue → batcher → shard pool → metrics; see
+//! `rust/src/serve/README.md`).
+//!
+//! The one-shot pipeline (`dory::deploy` → `coordinator`) runs a single
+//! `Deployment` on a single cluster and exits. This module is the layer
+//! the ROADMAP's production north star needs on top of it:
+//!
+//! - a [`PlanCache`] keyed by [`crate::dory::PlanKey`] so the DORY flow
+//!   (tiling solve, L2 layout, weight serialization) runs **once per
+//!   model**, not once per request;
+//! - a bounded priority [`RequestQueue`] with explicit rejection stats —
+//!   graceful saturation instead of unbounded latency collapse;
+//! - a dynamic [`batcher`] that coalesces queued same-model requests
+//!   onto one shard pass, amortizing the L3→L2 model-switch cost the
+//!   same way PULP-NN amortizes im2col/packing across calls;
+//! - a pool of [`Shard`]s, each owning one simulated PULP cluster, driven
+//!   in a deterministic discrete-event loop over **simulated cycles**
+//!   (scaling one core's precision-flexible datapath to a fleet, as
+//!   Dustin does on-die with 16 cores);
+//! - per-request and fleet [`metrics`]: latency percentiles,
+//!   requests/sec, aggregate MAC/cycle, energy per request.
+//!
+//! Determinism: with `exact: true` every request runs on a pristine
+//! cluster, making serve-path outputs and per-layer cycle counts
+//! bit-identical to a direct [`crate::coordinator::Coordinator`] run
+//! (asserted by `rust/tests/serve_determinism.rs`). The default
+//! `exact: false` keeps clusters and tile-timing memos warm for
+//! throughput, at the cost of timing-only outputs (see
+//! `coordinator::execute_deployment`).
+
+pub mod batcher;
+pub mod cache;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod shard;
+
+pub use batcher::BatchPolicy;
+pub use cache::PlanCache;
+pub use metrics::{FleetMetrics, ModelRow};
+pub use queue::RequestQueue;
+pub use request::{Completion, Request};
+pub use shard::Shard;
+
+use crate::dory::deploy::deploy;
+use crate::dory::{MemBudget, PlanKey};
+use crate::isa::IsaVariant;
+use crate::power::EnergyModel;
+use crate::qnn::layer::Network;
+use crate::qnn::QTensor;
+use crate::util::Prng;
+
+/// Fleet configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Number of cluster shards in the pool.
+    pub shards: usize,
+    /// Cores per shard cluster.
+    pub n_cores: usize,
+    /// Admission queue bound (requests beyond it are rejected).
+    pub queue_capacity: usize,
+    /// Maximum requests coalesced into one shard pass.
+    pub max_batch: usize,
+    /// Lead-request shard affinity (avoid model switches when possible).
+    pub prefer_resident: bool,
+    /// Pristine cluster per request: bit-identical to the one-shot
+    /// coordinator path (slow). Off: warm clusters + tile-timing memo.
+    pub exact: bool,
+    pub isa: IsaVariant,
+    pub budget: MemBudget,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            shards: 4,
+            n_cores: crate::CLUSTER_CORES,
+            queue_capacity: 64,
+            max_batch: 8,
+            prefer_resident: true,
+            exact: false,
+            isa: IsaVariant::FlexV,
+            budget: MemBudget::default(),
+        }
+    }
+}
+
+/// One event of an arrival trace.
+pub struct TraceItem {
+    /// Arrival time in simulated cycles.
+    pub at: u64,
+    /// Index into the engine's model registry.
+    pub model: usize,
+    pub priority: u8,
+    pub input: QTensor,
+}
+
+struct ModelEntry {
+    name: String,
+    net: Network,
+    key: PlanKey,
+}
+
+/// The serving engine: model registry + queue + batcher + shard pool +
+/// plan cache, advanced by a deterministic discrete-event loop.
+pub struct Engine {
+    pub cfg: ServeConfig,
+    models: Vec<ModelEntry>,
+    pub cache: PlanCache,
+    pub queue: RequestQueue,
+    shards: Vec<Shard>,
+    em: EnergyModel,
+    completions: Vec<Completion>,
+    next_id: u64,
+}
+
+impl Engine {
+    pub fn new(cfg: ServeConfig) -> Self {
+        assert!(cfg.shards >= 1, "need at least one shard");
+        Engine {
+            models: Vec::new(),
+            cache: PlanCache::new(),
+            queue: RequestQueue::new(cfg.queue_capacity),
+            shards: (0..cfg.shards).map(|i| Shard::new(i, cfg.n_cores, cfg.exact)).collect(),
+            em: EnergyModel::default(),
+            completions: Vec::new(),
+            next_id: 0,
+            cfg,
+        }
+    }
+
+    /// Register a model; returns its registry index. The plan itself is
+    /// compiled lazily (and cached) on first dispatch.
+    pub fn register(&mut self, net: Network) -> usize {
+        net.validate().expect("invalid network");
+        let key = PlanKey::for_network(&net, self.cfg.isa, self.cfg.budget, self.cfg.n_cores);
+        self.models.push(ModelEntry { name: net.name.clone(), net, key });
+        self.models.len() - 1
+    }
+
+    pub fn model_count(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn model_name(&self, model: usize) -> &str {
+        &self.models[model].name
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub fn completions(&self) -> &[Completion] {
+        &self.completions
+    }
+
+    /// Enqueue one request arriving at `arrival_cycle`. Returns the
+    /// request id, or `None` if the queue rejected it (saturation).
+    pub fn submit(
+        &mut self,
+        model: usize,
+        priority: u8,
+        arrival_cycle: u64,
+        input: QTensor,
+    ) -> Option<u64> {
+        let entry = &self.models[model];
+        assert_eq!(
+            input.shape,
+            entry.net.input_shape.to_vec(),
+            "input shape mismatch for model {}",
+            entry.name
+        );
+        assert_eq!(input.bits, entry.net.input_bits, "input bits mismatch");
+        let id = self.next_id;
+        if self.queue.push(Request { id, model, priority, arrival_cycle, input }) {
+            self.next_id += 1;
+            Some(id)
+        } else {
+            None
+        }
+    }
+
+    /// Hand batches to every free shard (deterministic shard order).
+    fn dispatch_free_shards(&mut self, now: u64) {
+        let policy = BatchPolicy {
+            max_batch: self.cfg.max_batch,
+            prefer_resident: self.cfg.prefer_resident,
+        };
+        for si in 0..self.shards.len() {
+            if !self.shards[si].is_free(now) {
+                continue;
+            }
+            if self.queue.is_empty() {
+                break;
+            }
+            let resident = self.shards[si].resident_model;
+            let Some(batch) = batcher::next_batch(&mut self.queue, resident, &policy) else {
+                break;
+            };
+            let model = batch[0].model;
+            let (key, dep) = {
+                let entry = &self.models[model];
+                let (isa, budget) = (self.cfg.isa, self.cfg.budget);
+                let dep = self.cache.get_or_build(entry.key, || deploy(&entry.net, isa, budget));
+                (entry.key, dep)
+            };
+            let comps = self.shards[si].run_batch(model, key, &dep, batch, now, &self.em);
+            self.completions.extend(comps);
+        }
+    }
+
+    /// Replay an arrival trace to completion; returns the fleet report.
+    /// The event loop advances a simulated clock: arrivals are admitted
+    /// when due, free shards pull batches, and time jumps to the next
+    /// arrival or shard-free event — O(events), independent of idle gaps.
+    pub fn run_trace(&mut self, mut trace: Vec<TraceItem>) -> FleetMetrics {
+        trace.sort_by_key(|t| t.at);
+        let mut it = trace.into_iter().peekable();
+        let mut clock = 0u64;
+        loop {
+            while it.peek().map_or(false, |t| t.at <= clock) {
+                let t = it.next().unwrap();
+                self.submit(t.model, t.priority, t.at, t.input);
+            }
+            self.dispatch_free_shards(clock);
+            let next_arrival = it.peek().map(|t| t.at);
+            let next_free = self
+                .shards
+                .iter()
+                .map(|s| s.busy_until)
+                .filter(|&b| b > clock)
+                .min();
+            if self.queue.is_empty() {
+                // Nothing queued: jump to the next arrival, or done.
+                match next_arrival {
+                    Some(a) => clock = a,
+                    None => break,
+                }
+                continue;
+            }
+            // Queue non-empty ⇒ every shard is busy (dispatch drains
+            // otherwise). Wake at the next shard-free or arrival event.
+            clock = match (next_free, next_arrival) {
+                (Some(f), Some(a)) => f.min(a),
+                (Some(f), None) => f,
+                (None, Some(a)) => a,
+                (None, None) => break, // unreachable: busy shards exist
+            };
+        }
+        self.metrics()
+    }
+
+    /// Build the fleet report from everything served so far.
+    pub fn metrics(&self) -> FleetMetrics {
+        let names: Vec<String> = self.models.iter().map(|m| m.name.clone()).collect();
+        FleetMetrics::collect(&self.completions, &names, &self.queue, &self.cache, &self.shards)
+    }
+
+    /// Deterministic synthetic traffic: `n` requests with uniform random
+    /// inter-arrival gaps (mean `mean_gap_cycles`), models drawn from
+    /// `mix` (one non-negative weight per registered model), inputs
+    /// random per request.
+    pub fn synthetic_trace(
+        &self,
+        n: usize,
+        mean_gap_cycles: u64,
+        mix: &[f64],
+        seed: u64,
+    ) -> Vec<TraceItem> {
+        assert_eq!(mix.len(), self.models.len(), "one mix weight per model");
+        let total: f64 = mix.iter().sum();
+        assert!(total > 0.0, "mix must have positive mass");
+        let mut rng = Prng::new(seed);
+        let mut at = 0u64;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            at += rng.below(mean_gap_cycles.max(1) * 2);
+            let mut pick = rng.next_u64() as f64 / u64::MAX as f64 * total;
+            let mut model = 0;
+            for (i, w) in mix.iter().enumerate() {
+                model = i;
+                if pick < *w {
+                    break;
+                }
+                pick -= w;
+            }
+            let net = &self.models[model].net;
+            out.push(TraceItem {
+                at,
+                model,
+                priority: 0,
+                input: QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng),
+            });
+        }
+        out
+    }
+}
+
+/// The paper's three evaluation networks (MobileNetV1-8b, -8b4b at
+/// `input_hw`, ResNet-20-4b2b) — the standard serving mix used by the
+/// `serve-bench` subcommand and the throughput bench.
+pub fn standard_mix(input_hw: usize) -> Vec<Network> {
+    crate::models::MODEL_NAMES
+        .iter()
+        .map(|n| crate::models::by_name(n, input_hw).expect("known model"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::Layer;
+
+    fn tiny(name: &str, seed: u64) -> Network {
+        let mut rng = Prng::new(seed);
+        let mut net = Network::new(name, [8, 8, 8], 8);
+        net.push(Layer::conv("c1", [8, 8, 8], 8, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        net.push(Layer::conv("c2", [8, 8, 8], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+        net
+    }
+
+    fn small_cfg() -> ServeConfig {
+        ServeConfig {
+            shards: 2,
+            n_cores: 4,
+            queue_capacity: 32,
+            max_batch: 4,
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn fleet_serves_mixed_traffic_with_cache_and_batching() {
+        let mut eng = Engine::new(small_cfg());
+        let a = eng.register(tiny("net-a", 1));
+        let b = eng.register(tiny("net-b", 2));
+        let mut rng = Prng::new(3);
+        let mut trace = Vec::new();
+        for (i, m) in [a, a, b, a, b, a, b, b].into_iter().enumerate() {
+            trace.push(TraceItem {
+                at: i as u64 * 100,
+                model: m,
+                priority: 0,
+                input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+            });
+        }
+        let m = eng.run_trace(trace);
+        assert_eq!(m.served, 8);
+        assert_eq!(m.rejected, 0);
+        // deploy ran once per model, later dispatches hit the cache
+        assert_eq!(m.cache_misses, 2);
+        assert!(m.cache_hits >= 1, "hits {}", m.cache_hits);
+        assert_eq!(m.cache_entries, 2);
+        assert!(m.p50_cycles > 0 && m.p99_cycles >= m.p50_cycles);
+        assert!(m.aggregate_macs_per_cycle > 0.0);
+        assert_eq!(m.rows.len(), 2);
+        assert_eq!(m.rows[0].served + m.rows[1].served, 8);
+        // every request completed exactly once
+        let mut ids: Vec<u64> = eng.completions().iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        let rendered = m.render();
+        assert!(rendered.contains("net-a") && rendered.contains("plan cache"));
+    }
+
+    #[test]
+    fn saturation_rejects_beyond_queue_capacity() {
+        let cfg = ServeConfig { queue_capacity: 2, shards: 1, ..small_cfg() };
+        let mut eng = Engine::new(cfg);
+        let a = eng.register(tiny("sat", 4));
+        let mut rng = Prng::new(5);
+        let trace: Vec<TraceItem> = (0..6)
+            .map(|_| TraceItem {
+                at: 0,
+                model: a,
+                priority: 0,
+                input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+            })
+            .collect();
+        let m = eng.run_trace(trace);
+        assert_eq!(m.served, 2);
+        assert_eq!(m.rejected, 4);
+        assert_eq!(m.peak_queue_depth, 2);
+    }
+
+    #[test]
+    fn priorities_jump_the_queue() {
+        let cfg = ServeConfig { shards: 1, max_batch: 1, ..small_cfg() };
+        let mut eng = Engine::new(cfg);
+        let a = eng.register(tiny("lo", 6));
+        let b = eng.register(tiny("hi", 7));
+        let mut rng = Prng::new(8);
+        let mk = |model, priority, rng: &mut Prng| TraceItem {
+            at: 0,
+            model,
+            priority,
+            input: QTensor::random(&[8, 8, 8], 8, false, rng),
+        };
+        let trace = vec![mk(a, 0, &mut rng), mk(b, 2, &mut rng)];
+        eng.run_trace(trace);
+        assert_eq!(eng.completions()[0].model, b, "high priority first");
+        assert_eq!(eng.completions()[1].model, a);
+    }
+
+    #[test]
+    fn batching_amortizes_model_switches() {
+        // one shard, two models, interleaved arrivals all queued up-front:
+        // batching must group same-model requests, so switches < requests.
+        let cfg = ServeConfig { shards: 1, max_batch: 8, ..small_cfg() };
+        let mut eng = Engine::new(cfg);
+        let a = eng.register(tiny("m-a", 10));
+        let b = eng.register(tiny("m-b", 11));
+        let mut rng = Prng::new(12);
+        let trace: Vec<TraceItem> = [a, b, a, b, a, b]
+            .into_iter()
+            .map(|m| TraceItem {
+                at: 0,
+                model: m,
+                priority: 0,
+                input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+            })
+            .collect();
+        let m = eng.run_trace(trace);
+        assert_eq!(m.served, 6);
+        assert!(
+            m.model_switches <= 2,
+            "batching should coalesce to one pass per model, got {} switches",
+            m.model_switches
+        );
+        assert!(m.mean_batch >= 2.0, "mean batch {}", m.mean_batch);
+    }
+}

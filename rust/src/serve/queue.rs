@@ -1,0 +1,156 @@
+//! Bounded admission queue with priorities and rejection accounting.
+//!
+//! The queue is the engine's saturation mechanism: when the fleet falls
+//! behind the arrival process, depth grows to `capacity` and further
+//! arrivals are **rejected** (counted, never silently dropped) — bounded
+//! memory and an explicit load-shedding signal instead of unbounded
+//! latency collapse.
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+/// FIFO-within-priority bounded queue.
+pub struct RequestQueue {
+    capacity: usize,
+    items: VecDeque<Request>,
+    /// Requests accepted over the queue's lifetime.
+    pub enqueued: u64,
+    /// Requests refused because the queue was full.
+    pub rejected: u64,
+    /// High-water mark of the depth.
+    pub peak_depth: usize,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be positive");
+        RequestQueue {
+            capacity,
+            items: VecDeque::new(),
+            enqueued: 0,
+            rejected: 0,
+            peak_depth: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit a request; returns false (and counts a rejection) when full.
+    pub fn push(&mut self, req: Request) -> bool {
+        if self.items.len() >= self.capacity {
+            self.rejected += 1;
+            return false;
+        }
+        self.items.push_back(req);
+        self.enqueued += 1;
+        self.peak_depth = self.peak_depth.max(self.items.len());
+        true
+    }
+
+    /// Remove and return the request that should lead the next batch:
+    /// highest priority first, FIFO within a priority level. When
+    /// `affinity` names a model and a request for it exists at the top
+    /// priority level, the oldest such request is preferred — keeping a
+    /// shard on its resident model avoids the L3→L2 weight-switch cost.
+    pub fn pop_lead(&mut self, affinity: Option<usize>) -> Option<Request> {
+        let pmax = self.items.iter().map(|r| r.priority).max()?;
+        let idx = affinity
+            .and_then(|m| {
+                self.items
+                    .iter()
+                    .position(|r| r.priority == pmax && r.model == m)
+            })
+            .or_else(|| self.items.iter().position(|r| r.priority == pmax))?;
+        self.items.remove(idx)
+    }
+
+    /// Remove up to `max` queued requests for `model` (oldest first,
+    /// any priority) — the batch-coalescing primitive.
+    pub fn drain_model(&mut self, model: usize, max: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.items.len() && out.len() < max {
+            if self.items[i].model == model {
+                out.push(self.items.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::QTensor;
+
+    fn req(id: u64, model: usize, priority: u8) -> Request {
+        Request {
+            id,
+            model,
+            priority,
+            arrival_cycle: id,
+            input: QTensor::zeros(&[1, 1, 8], 8, false),
+        }
+    }
+
+    #[test]
+    fn bounded_with_rejections() {
+        let mut q = RequestQueue::new(2);
+        assert!(q.push(req(0, 0, 0)));
+        assert!(q.push(req(1, 0, 0)));
+        assert!(!q.push(req(2, 0, 0)));
+        assert_eq!((q.enqueued, q.rejected, q.peak_depth), (2, 1, 2));
+    }
+
+    #[test]
+    fn priority_then_fifo() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(0, 0, 0));
+        q.push(req(1, 1, 2));
+        q.push(req(2, 2, 2));
+        q.push(req(3, 0, 1));
+        assert_eq!(q.pop_lead(None).unwrap().id, 1); // oldest of prio 2
+        assert_eq!(q.pop_lead(None).unwrap().id, 2);
+        assert_eq!(q.pop_lead(None).unwrap().id, 3); // prio 1 before prio 0
+        assert_eq!(q.pop_lead(None).unwrap().id, 0);
+        assert!(q.pop_lead(None).is_none());
+    }
+
+    #[test]
+    fn affinity_prefers_resident_model_within_top_priority() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(0, 0, 0));
+        q.push(req(1, 1, 0));
+        // same priority: affinity to model 1 overrides FIFO
+        assert_eq!(q.pop_lead(Some(1)).unwrap().id, 1);
+        // but never crosses priority levels
+        q.push(req(2, 1, 0));
+        q.push(req(3, 0, 1));
+        assert_eq!(q.pop_lead(Some(1)).unwrap().id, 3);
+    }
+
+    #[test]
+    fn drain_model_coalesces_in_order() {
+        let mut q = RequestQueue::new(8);
+        for (id, m) in [(0, 0), (1, 1), (2, 0), (3, 0), (4, 1)] {
+            q.push(req(id, m, 0));
+        }
+        let batch = q.drain_model(0, 2);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.drain_model(0, 9).len(), 1); // id 3 remains
+    }
+}

@@ -1,0 +1,66 @@
+//! Request/response records of the serving engine.
+//!
+//! All times are **simulated cluster cycles** — the serve layer runs a
+//! discrete-event simulation over the fleet, so latency percentiles and
+//! throughput are deterministic and directly comparable across runs
+//! (convert to wall time at the typical corner, 250 MHz, for seconds).
+
+use crate::qnn::QTensor;
+
+/// One inference request: a registered model plus its input payload.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Engine-assigned id (monotonic per engine).
+    pub id: u64,
+    /// Index into the engine's model registry.
+    pub model: usize,
+    /// Higher wins; FIFO within a priority level.
+    pub priority: u8,
+    /// Simulated cycle at which the request entered the queue.
+    pub arrival_cycle: u64,
+    /// Input activation tensor (must match the model's input shape/bits).
+    pub input: QTensor,
+}
+
+/// A finished request with its measured cost breakdown.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    /// Index into the engine's model registry.
+    pub model: usize,
+    /// Shard that executed the request.
+    pub shard: usize,
+    pub arrival_cycle: u64,
+    /// Cycle at which the shard began the batch containing this request.
+    pub start_cycle: u64,
+    pub finish_cycle: u64,
+    /// Simulated compute cycles of this inference alone.
+    pub exec_cycles: u64,
+    /// Model-switch (L3→L2 weight streaming) cycles charged to this
+    /// request; non-zero only on the first request of a switching batch.
+    pub switch_cycles: u64,
+    /// Size of the batch this request was coalesced into.
+    pub batch_size: usize,
+    /// MACs executed.
+    pub macs: u64,
+    /// Simulated energy of the inference [pJ] (activity-based model).
+    pub energy_pj: f64,
+    /// Per-layer cycle counts, in plan order (determinism checks).
+    pub layer_cycles: Vec<u64>,
+    /// Raw packed bytes of the network output. Only fully valid when the
+    /// engine runs in `exact` mode (timing-only mode skips re-executing
+    /// structurally repeated tiles).
+    pub output: Vec<u8>,
+}
+
+impl Completion {
+    /// End-to-end latency: queue wait + switch + position in batch + exec.
+    pub fn latency_cycles(&self) -> u64 {
+        self.finish_cycle - self.arrival_cycle
+    }
+
+    /// Cycles spent queued before the shard started the batch.
+    pub fn queue_cycles(&self) -> u64 {
+        self.start_cycle.saturating_sub(self.arrival_cycle)
+    }
+}

@@ -1,0 +1,193 @@
+//! A shard: one simulated PULP cluster plus its serving state.
+//!
+//! Each shard owns a [`Cluster`], a warm tile-timing memo, and tracks
+//! which model's L2 image is currently **resident**. Executing a batch
+//! for a non-resident model charges an explicit model-switch cost — the
+//! L3→L2 weight streaming the one-shot coordinator leaves untimed (it
+//! models a pre-resident flash image; a serving fleet cannot).
+
+use crate::coordinator::{execute_deployment, preload_deployment, TileMemo};
+use crate::dory::deploy::Deployment;
+use crate::dory::PlanKey;
+use crate::power::EnergyModel;
+use crate::sim::Cluster;
+
+use super::request::{Completion, Request};
+
+/// DMA programming overhead charged per preload segment when streaming a
+/// model in (mirrors `sim::dma::DMA_SETUP_CYCLES`).
+const SWITCH_SETUP_CYCLES: u64 = 16;
+/// Peak bytes per cycle of the L3→L2 streaming port (mirrors the cluster
+/// DMA's 64-bit port).
+const SWITCH_BYTES_PER_CYCLE: u64 = 8;
+
+pub struct Shard {
+    pub id: usize,
+    n_cores: usize,
+    /// Exact mode: a pristine cluster per request (bit-identical outputs
+    /// and cycle counts to a direct `Coordinator` run). Off: warm cluster
+    /// + tile-timing memo for throughput (timing-only outputs).
+    exact: bool,
+    cluster: Cluster,
+    memo: TileMemo,
+    /// Plan identity of the model whose L2 image the shard holds.
+    resident: Option<PlanKey>,
+    /// Registry index of the resident model (batcher affinity).
+    pub resident_model: Option<usize>,
+    /// Simulated cycle at which the shard next becomes free.
+    pub busy_until: u64,
+    /// Total busy cycles over the shard's lifetime.
+    pub busy_cycles: u64,
+    pub served: u64,
+    pub batches: u64,
+    pub model_switches: u64,
+}
+
+impl Shard {
+    pub fn new(id: usize, n_cores: usize, exact: bool) -> Self {
+        Shard {
+            id,
+            n_cores,
+            exact,
+            cluster: Cluster::new(n_cores),
+            memo: TileMemo::new(),
+            resident: None,
+            resident_model: None,
+            busy_until: 0,
+            busy_cycles: 0,
+            served: 0,
+            batches: 0,
+            model_switches: 0,
+        }
+    }
+
+    pub fn is_free(&self, now: u64) -> bool {
+        self.busy_until <= now
+    }
+
+    /// Simulated cycles to stream a deployment's L2 image in (weights +
+    /// quant parameters, per-segment DMA setup + port bandwidth).
+    pub fn switch_cycles(dep: &Deployment) -> u64 {
+        dep.preload
+            .iter()
+            .map(|(_, b)| SWITCH_SETUP_CYCLES + (b.len() as u64).div_ceil(SWITCH_BYTES_PER_CYCLE))
+            .sum()
+    }
+
+    /// Execute one single-model batch starting at `now` (the engine only
+    /// dispatches to free shards). Returns one completion per request, in
+    /// batch order; the shard's clock advances past the batch.
+    pub fn run_batch(
+        &mut self,
+        model: usize,
+        key: PlanKey,
+        dep: &Deployment,
+        batch: Vec<Request>,
+        now: u64,
+        em: &EnergyModel,
+    ) -> Vec<Completion> {
+        debug_assert!(self.is_free(now));
+        let start = now.max(self.busy_until);
+        let switching = self.resident != Some(key);
+        let switch = if switching { Self::switch_cycles(dep) } else { 0 };
+        if switching {
+            self.model_switches += 1;
+        }
+        let batch_size = batch.len();
+        let mut t = start + switch;
+        let mut out = Vec::with_capacity(batch_size);
+        for (i, req) in batch.into_iter().enumerate() {
+            let res = if self.exact {
+                // Pristine cluster per request: the run is indistinguishable
+                // from a fresh direct Coordinator run (same arbiter phase,
+                // same memory image), so outputs AND per-layer cycle counts
+                // are bit-identical to the one-shot path.
+                self.cluster = Cluster::new(self.n_cores);
+                preload_deployment(&mut self.cluster, dep);
+                execute_deployment(&mut self.cluster, dep, &req.input, None)
+            } else {
+                // Warm path: the L2 image persists across same-model
+                // requests; a different model may have clobbered our
+                // regions, so re-preload exactly when switching.
+                if switching && i == 0 {
+                    preload_deployment(&mut self.cluster, dep);
+                }
+                execute_deployment(&mut self.cluster, dep, &req.input, Some(&mut self.memo))
+            };
+            let exec = res.total_cycles();
+            t += exec;
+            out.push(Completion {
+                id: req.id,
+                model,
+                shard: self.id,
+                arrival_cycle: req.arrival_cycle,
+                start_cycle: start,
+                finish_cycle: t,
+                exec_cycles: exec,
+                switch_cycles: if i == 0 { switch } else { 0 },
+                batch_size,
+                macs: res.total_macs(),
+                energy_pj: res.energy_pj(dep.isa, em),
+                layer_cycles: res.layer_cycles(),
+                output: res.output,
+            });
+        }
+        self.resident = Some(key);
+        self.resident_model = Some(model);
+        self.busy_cycles += t - start;
+        self.busy_until = t;
+        self.served += batch_size as u64;
+        self.batches += 1;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dory::deploy::deploy;
+    use crate::dory::MemBudget;
+    use crate::isa::IsaVariant;
+    use crate::qnn::layer::Network;
+    use crate::qnn::{Layer, QTensor};
+    use crate::util::Prng;
+
+    fn tiny(name: &str, seed: u64) -> Network {
+        let mut rng = Prng::new(seed);
+        let mut net = Network::new(name, [8, 8, 8], 8);
+        net.push(Layer::conv("c1", [8, 8, 8], 8, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        net
+    }
+
+    #[test]
+    fn switch_charged_once_then_amortized() {
+        let net = tiny("s", 3);
+        let budget = MemBudget::default();
+        let dep = deploy(&net, IsaVariant::FlexV, budget);
+        let key = PlanKey::for_network(&net, IsaVariant::FlexV, budget, 8);
+        let mut shard = Shard::new(0, 8, false);
+        let em = EnergyModel::default();
+        let mut rng = Prng::new(4);
+        let mk = |id: u64, rng: &mut Prng| Request {
+            id,
+            model: 0,
+            priority: 0,
+            arrival_cycle: 0,
+            input: QTensor::random(&[8, 8, 8], 8, false, rng),
+        };
+        let batch = vec![mk(0, &mut rng), mk(1, &mut rng)];
+        let comps = shard.run_batch(0, key, &dep, batch, 0, &em);
+        assert_eq!(comps.len(), 2);
+        let want_switch = Shard::switch_cycles(&dep);
+        assert!(want_switch > 0);
+        assert_eq!(comps[0].switch_cycles, want_switch);
+        assert_eq!(comps[1].switch_cycles, 0);
+        assert!(comps[1].finish_cycle > comps[0].finish_cycle);
+        assert_eq!(shard.model_switches, 1);
+        // same model again: resident, no switch
+        let comps2 = shard.run_batch(0, key, &dep, vec![mk(2, &mut rng)], shard.busy_until, &em);
+        assert_eq!(comps2[0].switch_cycles, 0);
+        assert_eq!(shard.model_switches, 1);
+        assert_eq!(shard.served, 3);
+    }
+}

@@ -1,0 +1,99 @@
+//! Serve-path determinism: a request served through the fleet (queue →
+//! batcher → shard pool) must return **bit-identical outputs** and
+//! **identical per-layer cycle counts** to a direct `Coordinator` run of
+//! the same model on the same input — the serving layer adds scheduling,
+//! never perturbation.
+
+use flexv::coordinator::Coordinator;
+use flexv::dory::deploy::deploy;
+use flexv::dory::MemBudget;
+use flexv::isa::IsaVariant;
+use flexv::models::{resnet20, Profile};
+use flexv::qnn::layer::Network;
+use flexv::qnn::{Layer, QTensor};
+use flexv::serve::{Completion, Engine, ServeConfig, TraceItem};
+use flexv::util::Prng;
+
+fn tiny(seed: u64) -> Network {
+    let mut rng = Prng::new(seed);
+    let mut net = Network::new("tiny-serve", [10, 10, 8], 8);
+    net.push(Layer::conv("c1", [10, 10, 8], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+    net.push(Layer::conv("c2", [10, 10, 16], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+    net
+}
+
+/// Direct one-shot reference: fresh coordinator, full functional sim.
+fn direct(net: &Network, input: &QTensor) -> (Vec<u8>, Vec<u64>, u64, u64) {
+    let dep = deploy(net, IsaVariant::FlexV, MemBudget::default());
+    let mut coord = Coordinator::new(flexv::CLUSTER_CORES);
+    let res = coord.run(&dep, input);
+    (res.output.clone(), res.layer_cycles(), res.total_cycles(), res.total_macs())
+}
+
+fn assert_matches(net: &Network, input: &QTensor, comp: &Completion) {
+    let (output, layer_cycles, total_cycles, macs) = direct(net, input);
+    assert_eq!(comp.output, output, "serve output != coordinator output ({})", net.name);
+    assert_eq!(
+        comp.layer_cycles, layer_cycles,
+        "per-layer cycle counts differ ({})",
+        net.name
+    );
+    assert_eq!(comp.exec_cycles, total_cycles);
+    assert_eq!(comp.macs, macs);
+}
+
+#[test]
+fn serve_path_matches_coordinator_bit_exactly() {
+    let cfg = ServeConfig { shards: 4, exact: true, ..ServeConfig::default() };
+    let mut eng = Engine::new(cfg);
+    let tiny_id = eng.register(tiny(21));
+    let resnet_id = eng.register(resnet20(Profile::Mixed4a2w, 5));
+
+    let mut rng = Prng::new(22);
+    let tiny_inputs: Vec<QTensor> =
+        (0..3).map(|_| QTensor::random(&[10, 10, 8], 8, false, &mut rng)).collect();
+    let resnet_input = QTensor::random(&[32, 32, 4], 8, false, &mut rng);
+
+    // Interleaved arrivals, mixed priorities, repeated models — ids are
+    // assigned in arrival order (0..4).
+    let trace = vec![
+        TraceItem { at: 0, model: tiny_id, priority: 0, input: tiny_inputs[0].clone() },
+        TraceItem { at: 10, model: resnet_id, priority: 0, input: resnet_input.clone() },
+        TraceItem { at: 20, model: tiny_id, priority: 1, input: tiny_inputs[1].clone() },
+        TraceItem { at: 30, model: tiny_id, priority: 0, input: tiny_inputs[2].clone() },
+    ];
+    let m = eng.run_trace(trace);
+    assert_eq!(m.served, 4);
+    assert_eq!(m.rejected, 0);
+    // deploy ran once per model; repeats hit the plan cache
+    assert_eq!(m.cache_misses, 2);
+    assert!(m.cache_hits > 0, "repeated models must hit the plan cache");
+
+    let comps = eng.completions();
+    let by_id = |id: u64| comps.iter().find(|c| c.id == id).expect("completion");
+    let tiny_net = tiny(21);
+    let resnet_net = resnet20(Profile::Mixed4a2w, 5);
+    assert_matches(&tiny_net, &tiny_inputs[0], by_id(0));
+    assert_matches(&resnet_net, &resnet_input, by_id(1));
+    assert_matches(&tiny_net, &tiny_inputs[1], by_id(2));
+    assert_matches(&tiny_net, &tiny_inputs[2], by_id(3));
+
+    // Serving is also self-deterministic: replaying the identical trace
+    // on a fresh fleet reproduces every completion exactly.
+    let mut eng2 = Engine::new(cfg);
+    assert_eq!(eng2.register(tiny(21)), tiny_id);
+    assert_eq!(eng2.register(resnet20(Profile::Mixed4a2w, 5)), resnet_id);
+    let trace2 = vec![
+        TraceItem { at: 0, model: tiny_id, priority: 0, input: tiny_inputs[0].clone() },
+        TraceItem { at: 10, model: resnet_id, priority: 0, input: resnet_input.clone() },
+        TraceItem { at: 20, model: tiny_id, priority: 1, input: tiny_inputs[1].clone() },
+        TraceItem { at: 30, model: tiny_id, priority: 0, input: tiny_inputs[2].clone() },
+    ];
+    eng2.run_trace(trace2);
+    for (a, b) in eng.completions().iter().zip(eng2.completions()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output, b.output);
+        assert_eq!(a.finish_cycle, b.finish_cycle);
+        assert_eq!(a.layer_cycles, b.layer_cycles);
+    }
+}

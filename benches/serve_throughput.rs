@@ -3,32 +3,55 @@
 //! fleets of growing size. Scaling shards should raise req/s and cut
 //! p99 latency while plan compiles stay at 3 per row (cache).
 //!
-//!     cargo bench --bench serve_throughput [-- --full]
+//! The engine runs with its defaults: shard batches simulate on a host
+//! thread pool and the sim fast path replays steady-state windows. Pass
+//! `--baseline` to also run each row sequentially with the fast path
+//! off; the simulated numbers must match bit-for-bit (asserted) and the
+//! wall-clock ratio is reported (target: ≥ 5x combined).
+//!
+//!     cargo bench --bench serve_throughput [-- --full] [-- --baseline]
 
-use flexv::serve::{standard_mix, Engine, ServeConfig};
+use flexv::serve::{standard_mix, Engine, FleetMetrics, ServeConfig};
 use std::time::Instant;
+
+fn run_row(shards: usize, workers: usize, fastpath: bool, hw: usize, requests: usize) -> (FleetMetrics, f64) {
+    let cfg = ServeConfig { shards, workers, fastpath, ..ServeConfig::default() };
+    let mut eng = Engine::new(cfg);
+    for net in standard_mix(hw) {
+        eng.register(net);
+    }
+    let trace = eng.synthetic_trace(requests, 1_500_000, &[0.45, 0.30, 0.25], 0xBE7C);
+    let t0 = Instant::now();
+    let m = eng.run_trace(trace);
+    (m, t0.elapsed().as_secs_f64())
+}
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
+    let baseline = std::env::args().any(|a| a == "--baseline");
     let hw = if full { 224 } else { 96 };
     let requests = 24;
     println!("serve throughput: {requests} requests/row, MNV1 input {hw}x{hw}, mix 45/30/25%");
     println!(
-        "{:<7} {:>8} {:>9} {:>9} {:>9} {:>7} {:>9} {:>9} {:>8}",
-        "shards", "req/s", "p50[ms]", "p99[ms]", "MAC/cyc", "util%", "hit-rate", "switches", "wall[s]"
+        "{:<7} {:>8} {:>9} {:>9} {:>9} {:>7} {:>9} {:>9} {:>8}{}",
+        "shards", "req/s", "p50[ms]", "p99[ms]", "MAC/cyc", "util%", "hit-rate", "switches", "wall[s]",
+        if baseline { "  base[s] speedup" } else { "" }
     );
     for shards in [2usize, 4, 8] {
-        let cfg = ServeConfig { shards, ..ServeConfig::default() };
-        let mut eng = Engine::new(cfg);
-        for net in standard_mix(hw) {
-            eng.register(net);
-        }
-        let trace = eng.synthetic_trace(requests, 1_500_000, &[0.45, 0.30, 0.25], 0xBE7C);
-        let t0 = Instant::now();
-        let m = eng.run_trace(trace);
-        let wall = t0.elapsed().as_secs_f64();
+        let (m, wall) = run_row(shards, 0, true, hw, requests);
+        let tail = if baseline {
+            let (mb, wall_b) = run_row(shards, 1, false, hw, requests);
+            // parallel + fast path must not move a single simulated number
+            assert_eq!(m.span_cycles, mb.span_cycles, "span diverged at {shards} shards");
+            assert_eq!(m.p50_cycles, mb.p50_cycles, "p50 diverged at {shards} shards");
+            assert_eq!(m.p99_cycles, mb.p99_cycles, "p99 diverged at {shards} shards");
+            assert_eq!(m.model_switches, mb.model_switches);
+            format!(" {:>8.1} {:>7.1}x", wall_b, wall_b / wall.max(1e-9))
+        } else {
+            String::new()
+        };
         println!(
-            "{:<7} {:>8.1} {:>9.2} {:>9.2} {:>9.1} {:>7.0} {:>8.0}% {:>9} {:>8.1}",
+            "{:<7} {:>8.1} {:>9.2} {:>9.2} {:>9.1} {:>7.0} {:>8.0}% {:>9} {:>8.1}{}",
             shards,
             m.requests_per_sec,
             m.p50_cycles as f64 / 250e3,
@@ -37,7 +60,8 @@ fn main() {
             m.shard_utilization * 100.0,
             m.cache_hit_rate() * 100.0,
             m.model_switches,
-            wall
+            wall,
+            tail
         );
         assert!(m.cache_misses <= 3, "at most one deploy per model");
     }

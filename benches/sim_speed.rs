@@ -1,28 +1,74 @@
 //! Bench: simulator throughput (the §Perf L3 metric) — simulated
-//! instructions and cycles per wall-second on the Table III workload.
+//! instructions and cycles per wall-second on the Table III workload,
+//! in both execution modes:
+//!
+//! - **cycle-exact**: every window simulated cycle by cycle (the
+//!   seed-era baseline);
+//! - **steady-state**: the same workload on one persistent cluster with
+//!   the fast path enabled, so repetitions replay the memoized window
+//!   (`sim::fastpath`) — the regime a serving fleet runs in.
+//!
+//! Simulated cycle/instruction counts must be identical in both modes
+//! (asserted); only wall-clock time may differ. Target: ≥ 5x effective
+//! speed-up in steady state.
 //!
 //!     cargo bench --bench sim_speed
 
 use flexv::isa::IsaVariant;
 use flexv::qnn::Precision;
-use flexv::report::workloads::matmul_table3_stats;
+use flexv::report::workloads::matmul_table3_stats_on;
+use flexv::sim::Cluster;
 use std::time::Instant;
 
-fn main() {
-    // warmup + measure
-    let mut total_instr = 0u64;
-    let mut total_core_cycles = 0u64;
+/// Repeat the Table III a8w8 kernel on `cl` for ~`secs`, returning
+/// (reps, wall, instrs, core-cycles, per-rep window cycles).
+fn measure(cl: &mut Cluster, secs: f64) -> (u64, f64, u64, u64, u64) {
+    let (mut reps, mut instrs, mut core_cycles, mut window) = (0u64, 0u64, 0u64, 0u64);
     let t0 = Instant::now();
-    let mut reps = 0;
-    while t0.elapsed().as_secs_f64() < 3.0 {
-        let stats = matmul_table3_stats(IsaVariant::FlexV, Precision::new(8, 8));
-        total_instr += stats.total_instrs();
-        total_core_cycles += stats.cycles * stats.cores.len() as u64;
+    while t0.elapsed().as_secs_f64() < secs {
+        let stats = matmul_table3_stats_on(cl, IsaVariant::FlexV, Precision::new(8, 8));
+        instrs += stats.total_instrs();
+        core_cycles += stats.cycles * stats.cores.len() as u64;
+        if window == 0 {
+            window = stats.cycles;
+        } else {
+            assert_eq!(window, stats.cycles, "simulated cycles drifted across reps");
+        }
         reps += 1;
     }
-    let wall = t0.elapsed().as_secs_f64();
-    println!("simulated {reps} Table III a8w8 kernels in {wall:.2}s:");
-    println!("  {:>10.1} M instr/s", total_instr as f64 / wall / 1e6);
-    println!("  {:>10.1} M core-cycles/s", total_core_cycles as f64 / wall / 1e6);
-    println!("  (§Perf target: >= 50 M instr/s so Table IV regenerates in minutes)");
+    (reps, t0.elapsed().as_secs_f64(), instrs, core_cycles, window)
+}
+
+fn main() {
+    let mut slow = Cluster::pulp();
+    let (reps_s, wall_s, instr_s, cyc_s, window_s) = measure(&mut slow, 3.0);
+
+    let mut fast = Cluster::pulp();
+    fast.enable_fastpath();
+    // one cold rep records the window, then measure pure steady state
+    let cold = matmul_table3_stats_on(&mut fast, IsaVariant::FlexV, Precision::new(8, 8));
+    assert_eq!(cold.cycles, window_s, "fast path changed simulated cycles");
+    let (reps_f, wall_f, instr_f, cyc_f, window_f) = measure(&mut fast, 3.0);
+    assert_eq!(window_f, window_s, "fast path changed simulated cycles");
+    let fp = fast.fastpath().unwrap();
+    assert!(fp.pure_hits + fp.func_hits >= reps_f, "steady state never replayed: {fp:?}");
+
+    let rate_s = cyc_s as f64 / wall_s / 1e6;
+    let rate_f = cyc_f as f64 / wall_f / 1e6;
+    println!("Table III a8w8 kernel, {window_s} simulated cycles per rep:");
+    println!(
+        "  cycle-exact : {reps_s:>6} reps in {wall_s:.2}s  {:>8.1} M instr/s  {rate_s:>8.1} M core-cycles/s",
+        instr_s as f64 / wall_s / 1e6
+    );
+    println!(
+        "  steady-state: {reps_f:>6} reps in {wall_f:.2}s  {:>8.1} M instr/s  {rate_f:>8.1} M core-cycles/s",
+        instr_f as f64 / wall_f / 1e6
+    );
+    println!(
+        "  fast-path speed-up: {:.1}x effective ({} pure / {} functional replays)",
+        rate_f / rate_s.max(1e-9),
+        fp.pure_hits,
+        fp.func_hits
+    );
+    println!("  (§Perf target: >= 50 M instr/s cycle-exact; >= 5x steady-state speed-up)");
 }

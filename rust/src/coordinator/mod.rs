@@ -335,6 +335,18 @@ impl Coordinator {
         Coordinator { cluster: Cluster::new(n_cores), memo: TileMemo::new(), memoize_tiles: false }
     }
 
+    /// A coordinator with the steady-state simulation fast path enabled:
+    /// repeated windows (identical instruction trace, DMA schedule and
+    /// arbiter phase) are replayed from a memo instead of re-simulated.
+    /// Outputs **and** cycle counts stay bit-identical to [`Self::new`]
+    /// (unlike `memoize_tiles`, which is timing-only); see
+    /// [`crate::sim::fastpath`].
+    pub fn with_fastpath(n_cores: usize) -> Self {
+        let mut c = Self::new(n_cores);
+        c.cluster.enable_fastpath();
+        c
+    }
+
     /// Run one inference. `input` must match the deployed network's input
     /// shape/bits.
     pub fn run(&mut self, dep: &Deployment, input: &QTensor) -> RunResult {
@@ -436,6 +448,44 @@ mod tests {
         for (i, g) in golden_outs.iter().enumerate() {
             assert_eq!(res.node_outputs[i], g.data, "node {i} ({})", net.nodes[i].layer.name);
         }
+    }
+
+    /// The steady-state fast path is bit-exact on a real tiled conv:
+    /// outputs and per-layer cycle counts match the plain coordinator,
+    /// with every replayed window cross-checked against a full
+    /// re-simulation, across repeated runs with fresh inputs.
+    #[test]
+    fn fastpath_bit_exact_on_tiled_conv_crosschecked() {
+        let mut rng = Prng::new(82);
+        let mut net = Network::new("fp", [16, 16, 16], 8);
+        net.push(Layer::conv("c1", [16, 16, 16], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        net.push(Layer::conv("c2", [16, 16, 16], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+        net.validate().unwrap();
+        // shrink L1 so c1 tiles (multiple structurally identical windows)
+        let budget = MemBudget { l1: 24 * 1024, l2: crate::L2_BYTES };
+        let dep = deploy(&net, IsaVariant::FlexV, budget);
+        let mut plain = Coordinator::new(8);
+        let mut fast = Coordinator::with_fastpath(8);
+        fast.cluster.set_fastpath_crosscheck(true);
+        for seed in [90u64, 91, 90] {
+            let mut r = Prng::new(seed);
+            let input = QTensor::random(&[16, 16, 16], 8, false, &mut r);
+            let golden_out = golden::run_network(&net, &input);
+            // Pristine cluster per run (the serve exact-mode discipline);
+            // reset keeps the fast-path cache, so runs 2+ replay.
+            plain.cluster.reset();
+            fast.cluster.reset();
+            let a = plain.run(&dep, &input);
+            let b = fast.run(&dep, &input);
+            assert_eq!(b.output, golden_out.last().unwrap().data, "seed {seed}");
+            assert_eq!(a.layer_cycles(), b.layer_cycles(), "seed {seed}");
+            assert_eq!(a.total_macs(), b.total_macs());
+        }
+        let fp = fast.cluster.fastpath().unwrap();
+        // run 2 (fresh input) replays timing functionally; run 3 repeats
+        // run 1's data exactly and replays pure deltas.
+        assert!(fp.func_hits > 0, "no functional replays: {fp:?}");
+        assert!(fp.pure_hits > 0, "no pure replays: {fp:?}");
     }
 
     /// The free-function path (preload + execute) is exactly the

@@ -42,6 +42,54 @@
 //!   (queue → batcher → shard pool → metrics; see `serve/README.md`).
 //! - [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section (Tables I-IV, Fig. 7).
+//!
+//! `ARCHITECTURE.md` at the repository root maps each module to the
+//! paper section/figure it reproduces and draws the data flow from
+//! [`models::by_name`] through [`dory::deploy::deploy`] to
+//! [`serve::Engine`].
+//!
+//! # Determinism
+//!
+//! Simulated results are a pure function of their inputs, never of the
+//! host. Two host-side accelerators exist, both bit-exact and both
+//! defeatable: the serving engine simulates shard batches on a thread
+//! pool ([`serve::ServeConfig::workers`]) and merges completion events
+//! by simulated cycle, and the simulator memoizes steady-state windows
+//! ([`sim::fastpath`], enabled per cluster). `dory::deploy` itself runs
+//! once per model via the [`serve::PlanCache`], keyed by
+//! [`dory::PlanKey`] — the structural identity (network, precisions,
+//! memory budget, ISA, core count) that also keys the per-tile timing
+//! memo.
+//!
+//! # Quickstart
+//!
+//! Deploy a small quantized conv net and run one cycle-approximate,
+//! functionally-exact inference:
+//!
+//! ```
+//! use flexv::coordinator::Coordinator;
+//! use flexv::dory::{deploy::deploy, MemBudget};
+//! use flexv::isa::IsaVariant;
+//! use flexv::qnn::{golden, Layer, Network, QTensor};
+//! use flexv::util::Prng;
+//!
+//! let mut rng = Prng::new(1);
+//! let mut net = Network::new("demo", [8, 8, 8], 8);
+//! net.push(Layer::conv("c1", [8, 8, 8], 8, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+//! net.validate().unwrap();
+//! let input = QTensor::random(&[8, 8, 8], 8, false, &mut rng);
+//!
+//! let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+//! let mut coord = Coordinator::with_fastpath(flexv::CLUSTER_CORES);
+//! let res = coord.run(&dep, &input);
+//!
+//! // bit-exact against the golden integer executor
+//! assert_eq!(res.output, golden::run_network(&net, &input).last().unwrap().data);
+//! assert!(res.macs_per_cycle() > 0.1);
+//! ```
+//!
+//! For the serving layer (`flexv serve-bench` on the CLI), see
+//! [`serve::Engine`] and the root `README.md`.
 
 pub mod baselines;
 pub mod coordinator;

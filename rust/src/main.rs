@@ -25,11 +25,17 @@ COMMANDS:
   run-layer <isa> <aXwY>   run the benchmark conv on one ISA/precision
   dump-kernel <isa> <aXwY> [n]  disassemble the generated MatMul kernel
                            (first n instructions, default 60; cf. Fig. 5)
-  run-net <isa> <mnv1-8b|mnv1-8b4b|resnet20-4b2b> [--quick]
+  run-net <isa> <mnv1-8b|mnv1-8b4b|resnet20-4b2b> [--quick] [--no-fastpath]
   serve-bench [--shards N] [--requests N] [--max-batch N] [--full] [--exact]
+              [--workers N] [--sequential] [--no-fastpath]
                     replay a synthetic mixed 3-model traffic trace on a
                     multi-cluster serving fleet; reports req/s, p50/p99
-                    latency, MAC/cycle, energy/request, plan-cache hits
+                    latency, MAC/cycle, energy/request, plan-cache hits.
+                    Shard batches simulate on a host thread pool
+                    (--workers N caps it, --sequential forces 1) and
+                    steady-state windows replay via the sim fast path
+                    (--no-fastpath disables); both knobs change only
+                    wall-clock time, never a simulated number
   validate [dir]    cross-check simulator vs AOT golden artifacts (PJRT)
 
 ISAs: ri5cy | mpic | xpulpnn | flexv"
@@ -122,25 +128,45 @@ fn main() {
                 );
                 usage()
             });
-            run_net_verbose(isa, &net);
+            let fastpath = !args.iter().any(|a| a == "--no-fastpath");
+            run_net_verbose(isa, &net, fastpath);
         }
         Some("serve-bench") => {
             let full = args.iter().any(|a| a == "--full");
             let exact = args.iter().any(|a| a == "--exact");
+            let fastpath = !args.iter().any(|a| a == "--no-fastpath");
             let shards = flag_val(&args, "--shards").unwrap_or(4);
             let requests = flag_val(&args, "--requests").unwrap_or(32);
             let max_batch = flag_val(&args, "--max-batch").unwrap_or(8);
+            let workers = if args.iter().any(|a| a == "--sequential") {
+                1
+            } else {
+                flag_val(&args, "--workers").unwrap_or(0)
+            };
             let hw = if full { 224 } else { 96 };
             use flexv::serve::{standard_mix, Engine, ServeConfig};
-            let cfg = ServeConfig { shards, max_batch, exact, ..ServeConfig::default() };
+            let cfg = ServeConfig {
+                shards,
+                max_batch,
+                exact,
+                workers,
+                fastpath,
+                ..ServeConfig::default()
+            };
             let mut eng = Engine::new(cfg);
             for net in standard_mix(hw) {
                 eng.register(net);
             }
             println!(
                 "serve-bench: {requests} requests over 3 models on {shards} shards \
-                 (MNV1 input {hw}x{hw}{}) ...",
-                if exact { ", exact mode" } else { "" }
+                 (MNV1 input {hw}x{hw}{}, {}, {}) ...",
+                if exact { ", exact mode" } else { "" },
+                match workers {
+                    0 => "auto workers".to_string(),
+                    1 => "sequential".to_string(),
+                    n => format!("{n} workers"),
+                },
+                if fastpath { "fast path on" } else { "fast path off" },
             );
             let trace = eng.synthetic_trace(requests, 2_000_000, &[0.45, 0.30, 0.25], 0x5EEB);
             let t0 = std::time::Instant::now();
@@ -214,7 +240,7 @@ fn main() {
     }
 }
 
-fn run_net_verbose(isa: IsaVariant, net: &flexv::qnn::Network) {
+fn run_net_verbose(isa: IsaVariant, net: &flexv::qnn::Network, fastpath: bool) {
     use flexv::coordinator::Coordinator;
     use flexv::dory::deploy::deploy;
     use flexv::dory::MemBudget;
@@ -224,7 +250,11 @@ fn run_net_verbose(isa: IsaVariant, net: &flexv::qnn::Network) {
         net.name, net.nodes.len(), net.total_macs() as f64 / 1e6,
         net.model_bytes() as f64 / 1024.0);
     let dep = deploy(net, isa, MemBudget::default());
-    let mut coord = Coordinator::new(flexv::CLUSTER_CORES);
+    let mut coord = if fastpath {
+        Coordinator::with_fastpath(flexv::CLUSTER_CORES)
+    } else {
+        Coordinator::new(flexv::CLUSTER_CORES)
+    };
     coord.memoize_tiles = true;
     let mut rng = Prng::new(0xE2E);
     let input = QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng);

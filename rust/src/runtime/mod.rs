@@ -1,19 +1,24 @@
-//! Golden-artifact runtime: loads the AOT-compiled JAX/Pallas golden
-//! models (HLO text produced by `python/compile/aot.py`) and cross-checks
-//! the simulator against them.
+//! Golden-artifact validation runtime.
 //!
-//! Each artifact `<name>.hlo.txt` ships with a `<name>.meta` sidecar
-//! (`key=value` lines) describing the baked shapes/precision so the
-//! validator can regenerate the exact inputs on the Rust side.
+//! Cross-checks the simulated Flex-V kernels against the AOT-compiled
+//! JAX/Pallas golden models (HLO text produced by
+//! `python/compile/aot.py`). Each artifact `<name>.hlo.txt` ships with
+//! a `<name>.meta` sidecar (`key=value` lines) describing the baked
+//! shapes/precision so the validator can regenerate the exact inputs on
+//! the Rust side.
 //!
-//! The XLA/PJRT leg (executing the HLO on the XLA CPU client as an
-//! independent numerical oracle) needs the `xla` bindings, which are not
-//! available in the offline build. It is gated behind the `pjrt` cargo
-//! feature; without it, [`validate_artifacts`] still performs the
-//! two-way check **Rust golden == simulated Flex-V kernel** over every
-//! artifact in the directory. Interchange with XLA is HLO *text*, not
-//! serialized protos: jax ≥ 0.5 emits 64-bit instruction ids that
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! The crate is dependency-free (see the workspace `Cargo.toml`), so
+//! this module carries its own minimal [`Error`]/context machinery
+//! instead of an external error crate, and the XLA/PJRT leg — executing
+//! the HLO on the XLA CPU client as an independent numerical oracle —
+//! is compiled only under the off-by-default `pjrt` cargo feature,
+//! which requires vendoring `xla` bindings. Without the feature,
+//! [`validate_artifacts`] still performs the two-way check **Rust
+//! golden == simulated Flex-V kernel** over every artifact in the
+//! directory; with it, the check is three-way (sim == XLA == golden).
+//! Interchange with XLA is HLO *text*, not serialized protos: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -26,7 +31,9 @@ use crate::qnn::{Precision, QTensor, QuantParams};
 use crate::sim::{Cluster, TCDM_BASE};
 use crate::util::Prng;
 
-/// Minimal error type standing in for `anyhow` (offline build).
+/// Minimal string error of the zero-dependency build (the seed's
+/// `anyhow` usage was removed in PR 1; the crate-private `Context`
+/// adapters below keep the same call-site ergonomics).
 #[derive(Debug)]
 pub struct Error(String);
 

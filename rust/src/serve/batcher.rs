@@ -7,6 +7,10 @@
 //! lookup and at most one model switch: the L3→L2 weight streaming and
 //! the warm tile-timing memo are amortized over every member, exactly the
 //! way PULP-NN amortizes im2col/packing setup across kernel invocations.
+//!
+//! Batch formation always runs on the engine thread, in shard order —
+//! it is the scheduling half of the engine's determinism contract (see
+//! [`crate::serve`]); only the formed batches execute in parallel.
 
 use super::queue::RequestQueue;
 use super::request::Request;

@@ -5,7 +5,16 @@
 //! request — the analog of DORY's offline C-code generation. The cache
 //! keys it by [`PlanKey`] (model × precision config × tiling parameters ×
 //! target) so it runs **once per model**, not once per request; every
-//! shard then shares the same immutable [`Deployment`] through an `Arc`.
+//! shard then shares the same immutable [`Deployment`] through an `Arc`
+//! — which is also what lets a dispatch round's shard batches execute
+//! on different host threads without copying a plan.
+//!
+//! [`PlanKey`] is the repo-wide structural identity: the same type keys
+//! this cache, the coordinator's per-tile timing memo
+//! (`PlanKey::for_tile`), and model residency on shards, so all caches
+//! agree on when two pieces of work are interchangeable. Lookups happen
+//! during sequential batch formation, keeping hit/miss accounting
+//! deterministic.
 
 use std::collections::HashMap;
 use std::sync::Arc;

@@ -2,7 +2,14 @@
 //!
 //! Everything is measured in simulated cluster cycles (deterministic);
 //! wall-clock figures are derived at the typical-corner frequency
-//! ([`crate::report::F_TYP_MHZ`], 250 MHz).
+//! ([`crate::report::F_TYP_MHZ`], 250 MHz). The engine's determinism
+//! contract (see [`crate::serve`]) makes every **simulated** field a
+//! pure function of the trace, diffable across machines, worker
+//! counts, and fast-path settings — the parallelism tests assert
+//! exactly that. The one exception is the host-side simulator
+//! fast-path counters (`fastpath_*`): they describe how the simulation
+//! was computed (and can vary with thread interleaving on a shared
+//! window cache), never what it computed.
 
 use crate::report::F_TYP_MHZ;
 use crate::util::table::{f, Table};
@@ -61,6 +68,13 @@ pub struct FleetMetrics {
     pub batches: u64,
     pub mean_batch: f64,
     pub model_switches: u64,
+    /// Simulator windows replayed purely from a memoized functional
+    /// delta, across all shards (host-side metric; see `sim::fastpath`).
+    pub fastpath_pure: u64,
+    /// Simulator windows with replayed timing + functional re-execution.
+    pub fastpath_func: u64,
+    /// Simulator windows cycle-simulated and recorded.
+    pub fastpath_miss: u64,
     pub rows: Vec<ModelRow>,
 }
 
@@ -92,6 +106,13 @@ impl FleetMetrics {
         let total_busy: u64 = shards.iter().map(|s| s.busy_cycles).sum();
         let batches: u64 = shards.iter().map(|s| s.batches).sum();
         let span_secs = span_cycles as f64 / (F_TYP_MHZ * 1e6);
+        let (mut fp_pure, mut fp_func, mut fp_miss) = (0u64, 0u64, 0u64);
+        for s in shards {
+            let (p, f, m) = s.fastpath_counts();
+            fp_pure += p;
+            fp_func += f;
+            fp_miss += m;
+        }
 
         let rows = names
             .iter()
@@ -141,6 +162,9 @@ impl FleetMetrics {
             batches,
             mean_batch: served as f64 / batches.max(1) as f64,
             model_switches: shards.iter().map(|s| s.model_switches).sum(),
+            fastpath_pure: fp_pure,
+            fastpath_func: fp_func,
+            fastpath_miss: fp_miss,
             rows,
         }
     }
@@ -192,6 +216,16 @@ impl FleetMetrics {
             f(self.mean_batch, 1),
             self.model_switches,
         ));
+        let fp_total = self.fastpath_pure + self.fastpath_func + self.fastpath_miss;
+        if fp_total > 0 {
+            out.push_str(&format!(
+                "sim fast path: {} pure + {} functional replays / {} windows ({}% replayed; host-side only)\n",
+                self.fastpath_pure,
+                self.fastpath_func,
+                fp_total,
+                f((self.fastpath_pure + self.fastpath_func) as f64 / fp_total as f64 * 100.0, 0),
+            ));
+        }
         out
     }
 }

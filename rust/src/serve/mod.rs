@@ -22,7 +22,27 @@
 //! - per-request and fleet [`metrics`]: latency percentiles,
 //!   requests/sec, aggregate MAC/cycle, energy per request.
 //!
-//! Determinism: with `exact: true` every request runs on a pristine
+//! # Determinism contract
+//!
+//! Everything the engine reports is a function of the trace alone —
+//! never of the host machine, worker count, or fast-path setting:
+//!
+//! - **Scheduling** (queue pops, batch formation, shard assignment) runs
+//!   sequentially on the engine thread, in shard order, so the decision
+//!   stream is reproducible by construction.
+//! - **Execution** of the formed batches is embarrassingly parallel
+//!   (each shard owns its cluster); with `workers != 1` the batches of a
+//!   dispatch round run on a scoped `std::thread` pool. The round's
+//!   completion events are then merged by simulated finish cycle
+//!   (tie-break: shard id, then request id) — the sequential engine
+//!   applies the *same* reduction, so `completions()` is bit-identical
+//!   for any worker count (`rust/tests/serve_parallel_determinism.rs`).
+//! - The simulator's steady-state fast path (`ServeConfig::fastpath`,
+//!   see [`crate::sim::fastpath`]) replays previously-seen windows with
+//!   bit-exact outputs and cycle counts; `fastpath: false` is the
+//!   escape hatch and must change nothing but wall-clock time.
+//!
+//! With `exact: true` every request additionally runs on a pristine
 //! cluster, making serve-path outputs and per-layer cycle counts
 //! bit-identical to a direct [`crate::coordinator::Coordinator`] run
 //! (asserted by `rust/tests/serve_determinism.rs`). The default
@@ -44,7 +64,9 @@ pub use queue::RequestQueue;
 pub use request::{Completion, Request};
 pub use shard::Shard;
 
-use crate::dory::deploy::deploy;
+use std::sync::Arc;
+
+use crate::dory::deploy::{deploy, Deployment};
 use crate::dory::{MemBudget, PlanKey};
 use crate::isa::IsaVariant;
 use crate::power::EnergyModel;
@@ -59,7 +81,8 @@ pub struct ServeConfig {
     pub shards: usize,
     /// Cores per shard cluster.
     pub n_cores: usize,
-    /// Admission queue bound (requests beyond it are rejected).
+    /// Admission queue bound (requests beyond it are rejected;
+    /// 0 admits nothing).
     pub queue_capacity: usize,
     /// Maximum requests coalesced into one shard pass.
     pub max_batch: usize,
@@ -68,6 +91,15 @@ pub struct ServeConfig {
     /// Pristine cluster per request: bit-identical to the one-shot
     /// coordinator path (slow). Off: warm clusters + tile-timing memo.
     pub exact: bool,
+    /// Host threads simulating shard batches concurrently within one
+    /// dispatch round: 0 = one thread per busy shard (default), 1 =
+    /// sequential. Results are bit-identical for any value — see the
+    /// module-level determinism contract.
+    pub workers: usize,
+    /// Steady-state simulation fast path on each shard's cluster
+    /// ([`crate::sim::fastpath`]); bit-exact, `false` is the escape
+    /// hatch (`serve-bench --no-fastpath`).
+    pub fastpath: bool,
     pub isa: IsaVariant,
     pub budget: MemBudget,
 }
@@ -81,6 +113,8 @@ impl Default for ServeConfig {
             max_batch: 8,
             prefer_resident: true,
             exact: false,
+            workers: 0,
+            fastpath: true,
             isa: IsaVariant::FlexV,
             budget: MemBudget::default(),
         }
@@ -103,6 +137,16 @@ struct ModelEntry {
     key: PlanKey,
 }
 
+/// One shard's work for a dispatch round: formed sequentially (so queue
+/// decisions stay deterministic), executed possibly in parallel.
+struct Assignment {
+    shard: usize,
+    model: usize,
+    key: PlanKey,
+    dep: Arc<Deployment>,
+    batch: Vec<Request>,
+}
+
 /// The serving engine: model registry + queue + batcher + shard pool +
 /// plan cache, advanced by a deterministic discrete-event loop.
 pub struct Engine {
@@ -119,11 +163,18 @@ pub struct Engine {
 impl Engine {
     pub fn new(cfg: ServeConfig) -> Self {
         assert!(cfg.shards >= 1, "need at least one shard");
+        // One window cache for the whole fleet: shard B replays windows
+        // shard A recorded (wall-clock only; replay is bit-exact).
+        let windows = crate::sim::fastpath::WindowCache::default();
         Engine {
             models: Vec::new(),
             cache: PlanCache::new(),
             queue: RequestQueue::new(cfg.queue_capacity),
-            shards: (0..cfg.shards).map(|i| Shard::new(i, cfg.n_cores, cfg.exact)).collect(),
+            shards: (0..cfg.shards)
+                .map(|i| {
+                    Shard::new(i, cfg.n_cores, cfg.exact, cfg.fastpath.then(|| windows.clone()))
+                })
+                .collect(),
             em: EnergyModel::default(),
             completions: Vec::new(),
             next_id: 0,
@@ -182,12 +233,22 @@ impl Engine {
         }
     }
 
-    /// Hand batches to every free shard (deterministic shard order).
+    /// Hand batches to every free shard.
+    ///
+    /// Batch **formation** (queue pops, plan-cache lookups, shard
+    /// assignment) runs sequentially in shard order, so every scheduling
+    /// decision is deterministic. The formed batches are independent
+    /// single-shard simulations; with `cfg.workers != 1` they **execute**
+    /// on a scoped thread pool. Either way the round's completion events
+    /// go through the same reduction — merged by simulated finish cycle,
+    /// tie-break (shard id, request id) — so the completion stream is
+    /// bit-identical for any worker count.
     fn dispatch_free_shards(&mut self, now: u64) {
         let policy = BatchPolicy {
             max_batch: self.cfg.max_batch,
             prefer_resident: self.cfg.prefer_resident,
         };
+        let mut assignments: Vec<Assignment> = Vec::new();
         for si in 0..self.shards.len() {
             if !self.shards[si].is_free(now) {
                 continue;
@@ -206,9 +267,56 @@ impl Engine {
                 let dep = self.cache.get_or_build(entry.key, || deploy(&entry.net, isa, budget));
                 (entry.key, dep)
             };
-            let comps = self.shards[si].run_batch(model, key, &dep, batch, now, &self.em);
-            self.completions.extend(comps);
+            assignments.push(Assignment { shard: si, model, key, dep, batch });
         }
+        if assignments.is_empty() {
+            return;
+        }
+        let em = self.em;
+        let workers = if self.cfg.workers == 0 { assignments.len() } else { self.cfg.workers };
+        let mut round: Vec<Completion> = Vec::new();
+        if workers <= 1 || assignments.len() == 1 {
+            for a in assignments {
+                round.extend(
+                    self.shards[a.shard].run_batch(a.model, a.key, &a.dep, a.batch, now, &em),
+                );
+            }
+        } else {
+            let mut assignments = assignments;
+            while !assignments.is_empty() {
+                let rest = assignments.split_off(workers.min(assignments.len()));
+                let chunk = std::mem::replace(&mut assignments, rest);
+                let shards = &mut self.shards;
+                let results: Vec<Vec<Completion>> = std::thread::scope(|scope| {
+                    let mut handles = Vec::with_capacity(chunk.len());
+                    // Shard indices are strictly increasing, so the pool
+                    // splits into disjoint mutable borrows.
+                    let mut tail: &mut [Shard] = &mut shards[..];
+                    let mut consumed = 0usize;
+                    for a in chunk {
+                        let (_, at) = tail.split_at_mut(a.shard - consumed);
+                        let (one, rest) = at.split_at_mut(1);
+                        consumed = a.shard + 1;
+                        tail = rest;
+                        let shard = &mut one[0];
+                        let em = &em;
+                        handles.push(scope.spawn(move || {
+                            shard.run_batch(a.model, a.key, &a.dep, a.batch, now, em)
+                        }));
+                    }
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("shard worker panicked"))
+                        .collect()
+                });
+                for comps in results {
+                    round.extend(comps);
+                }
+            }
+        }
+        // Deterministic event-ordering reduction (see module docs).
+        round.sort_by_key(|c| (c.finish_cycle, c.shard, c.id));
+        self.completions.extend(round);
     }
 
     /// Replay an arrival trace to completion; returns the fleet report.
@@ -402,6 +510,38 @@ mod tests {
         eng.run_trace(trace);
         assert_eq!(eng.completions()[0].model, b, "high priority first");
         assert_eq!(eng.completions()[1].model, a);
+    }
+
+    /// Worker count and fast-path setting change wall-clock time only:
+    /// the completion stream and fleet metrics are bit-identical.
+    #[test]
+    fn worker_count_and_fastpath_do_not_change_results() {
+        let run = |workers: usize, fastpath: bool| {
+            let cfg = ServeConfig { workers, fastpath, ..small_cfg() };
+            let mut eng = Engine::new(cfg);
+            let a = eng.register(tiny("wk-a", 31));
+            let b = eng.register(tiny("wk-b", 32));
+            let mut rng = Prng::new(33);
+            let trace: Vec<TraceItem> = (0..8)
+                .map(|i| TraceItem {
+                    at: i as u64 * 50,
+                    model: if i % 3 == 0 { b } else { a },
+                    priority: (i % 2) as u8,
+                    input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+                })
+                .collect();
+            let m = eng.run_trace(trace);
+            let comps: Vec<(u64, usize, usize, u64, u64)> = eng
+                .completions()
+                .iter()
+                .map(|c| (c.id, c.model, c.shard, c.start_cycle, c.finish_cycle))
+                .collect();
+            (m.span_cycles, m.p99_cycles, comps)
+        };
+        let base = run(1, false);
+        assert_eq!(base, run(4, false), "threading changed results");
+        assert_eq!(base, run(0, true), "fast path changed results");
+        assert_eq!(base, run(2, true));
     }
 
     #[test]

@@ -5,6 +5,17 @@
 //! arrivals are **rejected** (counted, never silently dropped) — bounded
 //! memory and an explicit load-shedding signal instead of unbounded
 //! latency collapse.
+//!
+//! Admission policy notes (tested below):
+//! - rejection is priority-blind: a full queue rejects a high-priority
+//!   arrival rather than evicting a queued low-priority request —
+//!   admitted work is never preempted, so acceptance is monotone in
+//!   arrival order and the engine stays deterministic;
+//! - `capacity == 0` is valid and admits nothing (drain/canary
+//!   configurations);
+//! - service order is priority-first, FIFO within a level, with an
+//!   optional resident-model affinity that never crosses priority
+//!   levels ([`RequestQueue::pop_lead`]).
 
 use std::collections::VecDeque;
 
@@ -24,7 +35,6 @@ pub struct RequestQueue {
 
 impl RequestQueue {
     pub fn new(capacity: usize) -> Self {
-        assert!(capacity > 0, "queue capacity must be positive");
         RequestQueue {
             capacity,
             items: VecDeque::new(),
@@ -140,6 +150,43 @@ mod tests {
         q.push(req(2, 1, 0));
         q.push(req(3, 0, 1));
         assert_eq!(q.pop_lead(Some(1)).unwrap().id, 3);
+    }
+
+    /// A full queue rejects newcomers regardless of priority: admitted
+    /// work is never preempted, even by a higher-priority arrival, and
+    /// the queued order is untouched by the rejected push.
+    #[test]
+    fn full_queue_rejects_high_priority_without_preemption() {
+        let mut q = RequestQueue::new(3);
+        assert!(q.push(req(0, 0, 0)));
+        assert!(q.push(req(1, 0, 1)));
+        assert!(q.push(req(2, 0, 0)));
+        // queue full: top-priority arrival is rejected, not swapped in
+        assert!(!q.push(req(3, 0, 7)));
+        assert!(!q.push(req(4, 0, 0)));
+        assert_eq!((q.enqueued, q.rejected, q.len()), (3, 2, 3));
+        // service order of the admitted requests is unchanged
+        assert_eq!(q.pop_lead(None).unwrap().id, 1);
+        assert_eq!(q.pop_lead(None).unwrap().id, 0);
+        assert_eq!(q.pop_lead(None).unwrap().id, 2);
+        // rejections freed no capacity accounting
+        assert!(q.is_empty());
+        assert_eq!(q.capacity(), 3);
+    }
+
+    /// `capacity == 0` is a valid drain configuration: every push is
+    /// rejected and counted, and every consumer sees an empty queue.
+    #[test]
+    fn zero_capacity_queue_admits_nothing() {
+        let mut q = RequestQueue::new(0);
+        for id in 0..4 {
+            assert!(!q.push(req(id, 0, (id % 3) as u8)));
+        }
+        assert_eq!((q.enqueued, q.rejected, q.peak_depth), (0, 4, 0));
+        assert!(q.is_empty());
+        assert!(q.pop_lead(None).is_none());
+        assert!(q.pop_lead(Some(0)).is_none());
+        assert!(q.drain_model(0, 8).is_empty());
     }
 
     #[test]

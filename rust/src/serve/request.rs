@@ -4,6 +4,12 @@
 //! discrete-event simulation over the fleet, so latency percentiles and
 //! throughput are deterministic and directly comparable across runs
 //! (convert to wall time at the typical corner, 250 MHz, for seconds).
+//!
+//! [`Completion`]s are the engine's canonical event stream: each
+//! dispatch round's completions are merged by `finish_cycle` with
+//! `(shard, id)` tie-breaks, so the stream is identical whether shard
+//! batches were simulated sequentially or on a thread pool (the
+//! determinism contract in [`crate::serve`]).
 
 use crate::qnn::QTensor;
 

@@ -5,11 +5,19 @@
 //! for a non-resident model charges an explicit model-switch cost — the
 //! L3→L2 weight streaming the one-shot coordinator leaves untimed (it
 //! models a pre-resident flash image; a serving fleet cannot).
+//!
+//! Shards are self-contained (`Send`): the engine's dispatch round runs
+//! `run_batch` for different shards on different host threads. With the
+//! steady-state fast path enabled, each cluster also keeps a window memo
+//! that survives the per-request `Cluster::reset` of exact mode, so
+//! repeated requests replay instead of re-simulating — still bit-exact
+//! (see [`crate::sim::fastpath`]).
 
 use crate::coordinator::{execute_deployment, preload_deployment, TileMemo};
 use crate::dory::deploy::Deployment;
 use crate::dory::PlanKey;
 use crate::power::EnergyModel;
+use crate::sim::fastpath::WindowCache;
 use crate::sim::Cluster;
 
 use super::request::{Completion, Request};
@@ -23,7 +31,6 @@ const SWITCH_BYTES_PER_CYCLE: u64 = 8;
 
 pub struct Shard {
     pub id: usize,
-    n_cores: usize,
     /// Exact mode: a pristine cluster per request (bit-identical outputs
     /// and cycle counts to a direct `Coordinator` run). Off: warm cluster
     /// + tile-timing memo for throughput (timing-only outputs).
@@ -44,12 +51,18 @@ pub struct Shard {
 }
 
 impl Shard {
-    pub fn new(id: usize, n_cores: usize, exact: bool) -> Self {
+    /// `fastpath: Some(cache)` enables the steady-state fast path on
+    /// this shard's cluster; the engine passes every shard a clone of
+    /// one [`WindowCache`], so recordings pool across the fleet.
+    pub fn new(id: usize, n_cores: usize, exact: bool, fastpath: Option<WindowCache>) -> Self {
+        let mut cluster = Cluster::new(n_cores);
+        if let Some(cache) = fastpath {
+            cluster.enable_fastpath_shared(cache);
+        }
         Shard {
             id,
-            n_cores,
             exact,
-            cluster: Cluster::new(n_cores),
+            cluster,
             memo: TileMemo::new(),
             resident: None,
             resident_model: None,
@@ -63,6 +76,14 @@ impl Shard {
 
     pub fn is_free(&self, now: u64) -> bool {
         self.busy_until <= now
+    }
+
+    /// Fast-path counters of this shard's cluster: (pure replays,
+    /// functional replays, recorded misses); zeros when disabled.
+    pub fn fastpath_counts(&self) -> (u64, u64, u64) {
+        self.cluster
+            .fastpath()
+            .map_or((0, 0, 0), |f| (f.pure_hits, f.func_hits, f.misses))
     }
 
     /// Simulated cycles to stream a deployment's L2 image in (weights +
@@ -101,8 +122,9 @@ impl Shard {
                 // Pristine cluster per request: the run is indistinguishable
                 // from a fresh direct Coordinator run (same arbiter phase,
                 // same memory image), so outputs AND per-layer cycle counts
-                // are bit-identical to the one-shot path.
-                self.cluster = Cluster::new(self.n_cores);
+                // are bit-identical to the one-shot path. `reset` keeps the
+                // fast-path window memo warm across requests.
+                self.cluster.reset();
                 preload_deployment(&mut self.cluster, dep);
                 execute_deployment(&mut self.cluster, dep, &req.input, None)
             } else {
@@ -165,7 +187,7 @@ mod tests {
         let budget = MemBudget::default();
         let dep = deploy(&net, IsaVariant::FlexV, budget);
         let key = PlanKey::for_network(&net, IsaVariant::FlexV, budget, 8);
-        let mut shard = Shard::new(0, 8, false);
+        let mut shard = Shard::new(0, 8, false, Some(WindowCache::default()));
         let em = EnergyModel::default();
         let mut rng = Prng::new(4);
         let mk = |id: u64, rng: &mut Prng| Request {

@@ -2,9 +2,15 @@
 //! the 16-bank TCDM logarithmic interconnect (one request per bank per
 //! cycle, rotating round-robin priority), the hardware synchronization
 //! unit (barriers with clock-gated waiting) and the background DMA.
+//!
+//! With [`Cluster::enable_fastpath`], steady-state windows (identical
+//! instruction trace, DMA schedule, and arbiter phase) are memoized and
+//! replayed instead of re-simulated — bit-exact outputs and cycle
+//! counts, validated by the cross-check mode (see [`super::fastpath`]).
 
 use super::core::{Core, CoreState};
-use super::dma::Dma;
+use super::dma::{Dma, DmaRequest};
+use super::fastpath::{self, FastEntry, FastPath};
 use super::mem::ClusterMem;
 use super::stats::{ClusterStats, CoreStats};
 use crate::isa::Program;
@@ -16,7 +22,7 @@ pub struct Cluster {
     pub cores: Vec<Core>,
     pub dma: Dma,
     /// Rotating arbitration priority offset.
-    rr: usize,
+    pub(crate) rr: usize,
     /// Global cycle counter.
     pub cycle: u64,
     /// Safety limit to catch runaway programs (0 = unlimited).
@@ -25,6 +31,8 @@ pub struct Cluster {
     /// — see EXPERIMENTS.md §Perf).
     want: Vec<Option<usize>>,
     granted: Vec<bool>,
+    /// Steady-state window memo (None = every window cycle-simulated).
+    fastpath: Option<Box<FastPath>>,
 }
 
 impl Cluster {
@@ -38,12 +46,66 @@ impl Cluster {
             max_cycles: 20_000_000_000,
             want: vec![None; n_cores],
             granted: vec![false; n_cores],
+            fastpath: None,
         }
     }
 
     /// Standard 8-core cluster.
     pub fn pulp() -> Self {
         Self::new(CLUSTER_CORES)
+    }
+
+    /// Enable the steady-state fast path with a private window cache
+    /// (idempotent; keeps an existing cache). See [`super::fastpath`]
+    /// for the replay model.
+    pub fn enable_fastpath(&mut self) {
+        if self.fastpath.is_none() {
+            self.fastpath = Some(Box::default());
+        }
+    }
+
+    /// Enable the fast path backed by `cache`, which may be shared by
+    /// many clusters (a serve fleet pools recordings across shards —
+    /// cloning a [`fastpath::WindowCache`] shares the store). Replaces
+    /// any existing cache; counters are per cluster either way.
+    pub fn enable_fastpath_shared(&mut self, cache: fastpath::WindowCache) {
+        self.fastpath = Some(Box::new(FastPath { cache, ..FastPath::default() }));
+    }
+
+    /// Drop the fast path and its cache: every subsequent window is
+    /// simulated cycle-by-cycle (the `--no-fastpath` escape hatch).
+    pub fn disable_fastpath(&mut self) {
+        self.fastpath = None;
+    }
+
+    /// Fast-path statistics, when enabled.
+    pub fn fastpath(&self) -> Option<&FastPath> {
+        self.fastpath.as_deref()
+    }
+
+    /// Enable the fast path with cross-checking: every replayed window
+    /// is also re-simulated on a forked cluster and all observable state
+    /// is compared (tests; slower than no cache).
+    pub fn set_fastpath_crosscheck(&mut self, on: bool) {
+        self.enable_fastpath();
+        self.fastpath.as_deref_mut().unwrap().crosscheck = on;
+    }
+
+    /// Reset architectural state (memory, cores, DMA, arbiter, clock) to
+    /// power-on while **preserving** the fast-path cache — replays stay
+    /// sound because entries are validated structurally and by footprint
+    /// content, never by wall history. Used by serve shards in exact
+    /// mode to get a pristine cluster per request without losing the
+    /// steady-state memo.
+    pub fn reset(&mut self) {
+        self.mem.tcdm.fill(0);
+        self.mem.l2.fill(0);
+        self.mem.trace = None;
+        let n = self.cores.len();
+        self.cores = (0..n).map(Core::new).collect();
+        self.dma = Dma::new();
+        self.rr = 0;
+        self.cycle = 0;
     }
 
     /// Load one program per core (shorter vec leaves remaining cores
@@ -127,8 +189,19 @@ impl Cluster {
     }
 
     /// Run until all cores halt and the DMA drains. Returns the stats of
-    /// this window (cycles counted from the call).
+    /// this window (cycles counted from the call). With the fast path
+    /// enabled, previously-seen windows are replayed from the memo
+    /// instead of re-simulated (bit-exact; see [`super::fastpath`]).
     pub fn run(&mut self) -> ClusterStats {
+        if self.fastpath.is_some() {
+            self.run_fast()
+        } else {
+            self.run_slow()
+        }
+    }
+
+    /// The cycle-by-cycle simulation loop.
+    fn run_slow(&mut self) -> ClusterStats {
         let start_cycle = self.cycle;
         let start_dma_busy = self.dma.busy_cycles;
         let start_dma_bytes = self.dma.bytes_moved;
@@ -145,6 +218,203 @@ impl Cluster {
             cores: self.cores.iter().map(|c| c.stats).collect(),
             dma_busy_cycles: self.dma.busy_cycles - start_dma_busy,
             dma_bytes: self.dma.bytes_moved - start_dma_bytes,
+        }
+    }
+
+    /// Fast-path window dispatch: pure replay, functional replay, or
+    /// record (see [`super::fastpath`] for the three tiers).
+    fn run_fast(&mut self) -> ClusterStats {
+        let any_active = self.cores.iter().any(|c| c.state != CoreState::Halted);
+        if !any_active && self.dma.idle() {
+            // Idle window: nothing to memoize; mirrors run_slow exactly.
+            return self.run_slow();
+        }
+        let key = self.structural_key();
+        // Take the fast path out of self so replay methods can borrow
+        // the rest of the cluster mutably.
+        let mut fp = self.fastpath.take().expect("run_fast without fastpath");
+        // Entries are immutable Arcs: the (possibly fleet-shared) cache
+        // lock is held only for the lookup, never during replay.
+        let entry = {
+            let cache = fp.cache.0.read().expect("fastpath cache poisoned");
+            cache.get(&key).cloned()
+        };
+        let stats = if let Some(entry) = entry {
+            let shadow = if fp.crosscheck { Some(self.fork_for_crosscheck()) } else { None };
+            let pure_ok = entry.arch_sig == self.arch_sig()
+                && entry.dma_sig.iter().eq(self.dma.queued())
+                && fastpath::hash_mem_ranges(&self.mem, &entry.reads) == entry.read_hash;
+            let stats = if pure_ok {
+                fp.pure_hits += 1;
+                self.replay_pure(&entry)
+            } else {
+                fp.func_hits += 1;
+                self.replay_functional(&entry)
+            };
+            if let Some(shadow) = shadow {
+                self.crosscheck_against(shadow, &stats);
+            }
+            stats
+        } else {
+            fp.misses += 1;
+            let dma_sig: Vec<DmaRequest> = self.dma.queued().copied().collect();
+            let arch_sig = self.arch_sig();
+            let ran: Vec<bool> =
+                self.cores.iter().map(|c| c.state == CoreState::Running).collect();
+            self.mem.trace = Some(Box::default());
+            let stats = self.run_slow();
+            let trace = self.mem.trace.take().expect("trace survived the window");
+            let writes: Vec<(u32, Vec<u8>)> = trace
+                .write_ranges()
+                .into_iter()
+                .map(|(a, l)| (a, self.mem.bytes(a, l as usize).to_vec()))
+                .collect();
+            let entry = FastEntry {
+                dma_sig,
+                arch_sig,
+                reads: trace.read_ranges(),
+                read_hash: trace.read_hash(),
+                writes,
+                ran,
+                cores_end: self.cores.clone(),
+                rr_end: self.rr,
+                stats: stats.clone(),
+            };
+            let mut cache = fp.cache.0.write().expect("fastpath cache poisoned");
+            if cache.len() >= fastpath::MAX_ENTRIES {
+                cache.clear();
+            }
+            cache.insert(key, std::sync::Arc::new(entry));
+            drop(cache);
+            stats
+        };
+        self.fastpath = Some(fp);
+        stats
+    }
+
+    /// Tier 1: the window's exact environment matches the recording —
+    /// apply the memoized functional delta and timing wholesale.
+    fn replay_pure(&mut self, entry: &FastEntry) -> ClusterStats {
+        for (addr, bytes) in &entry.writes {
+            self.mem.write_bytes(*addr, bytes);
+        }
+        for (i, ran) in entry.ran.iter().enumerate() {
+            if *ran {
+                self.cores[i] = entry.cores_end[i].clone();
+            }
+        }
+        self.dma.clear_queue();
+        self.dma.busy_cycles += entry.stats.dma_busy_cycles;
+        self.dma.bytes_moved += entry.stats.dma_bytes;
+        self.rr = entry.rr_end;
+        self.cycle += entry.stats.cycles;
+        ClusterStats {
+            cycles: entry.stats.cycles,
+            cores: self.cores.iter().map(|c| c.stats).collect(),
+            dma_busy_cycles: entry.stats.dma_busy_cycles,
+            dma_bytes: entry.stats.dma_bytes,
+        }
+    }
+
+    /// Tier 2: the footprint was invalidated (different input data, e.g.
+    /// a DMA write overlapping it) — replay the memoized timing, but
+    /// recompute the functional effects with fast straight-line
+    /// execution.
+    fn replay_functional(&mut self, entry: &FastEntry) -> ClusterStats {
+        // DMA first: double-buffered plans never let a window's kernel
+        // read data streamed by that same window (see coordinator docs),
+        // so completing transfers up front is order-equivalent.
+        self.dma.complete_all_functional(&mut self.mem);
+        self.dma.busy_cycles += entry.stats.dma_busy_cycles;
+        self.dma.bytes_moved += entry.stats.dma_bytes;
+        let guard = if self.max_cycles == 0 { u64::MAX } else { self.max_cycles };
+        loop {
+            for c in &mut self.cores {
+                if c.state == CoreState::Running {
+                    c.run_functional(&mut self.mem, guard);
+                }
+            }
+            if !self.cores.iter().any(|c| c.state == CoreState::AtBarrier) {
+                break;
+            }
+            // Every non-halted core reached the barrier: release, as the
+            // HW sync unit would.
+            for c in &mut self.cores {
+                if c.state == CoreState::AtBarrier {
+                    c.release_barrier();
+                }
+            }
+        }
+        // Splice the memoized timing into the functionally-counted
+        // stats. Retired-instruction counts must agree — a divergence
+        // means a kernel has data-dependent control flow, voiding the
+        // structural-timing invariant.
+        for (i, ran) in entry.ran.iter().enumerate() {
+            if !*ran {
+                continue;
+            }
+            let e = entry.stats.cores[i];
+            let c = &mut self.cores[i];
+            assert_eq!(
+                c.stats.instrs, e.instrs,
+                "fast-path invariant violated on core {i}: {} instrs retired \
+                 functionally vs {} in the memo (data-dependent control \
+                 flow?) — rerun with the fast path disabled",
+                c.stats.instrs, e.instrs
+            );
+            c.stats = e;
+        }
+        self.rr = entry.rr_end;
+        self.cycle += entry.stats.cycles;
+        ClusterStats {
+            cycles: entry.stats.cycles,
+            cores: self.cores.iter().map(|c| c.stats).collect(),
+            dma_busy_cycles: entry.stats.dma_busy_cycles,
+            dma_bytes: entry.stats.dma_bytes,
+        }
+    }
+
+    /// Deep copy for cross-checking (fast path and trace stripped).
+    fn fork_for_crosscheck(&self) -> Cluster {
+        Cluster {
+            mem: ClusterMem {
+                tcdm: self.mem.tcdm.clone(),
+                l2: self.mem.l2.clone(),
+                trace: None,
+            },
+            cores: self.cores.clone(),
+            dma: self.dma.clone(),
+            rr: self.rr,
+            cycle: self.cycle,
+            max_cycles: self.max_cycles,
+            want: vec![None; self.cores.len()],
+            granted: vec![false; self.cores.len()],
+            fastpath: None,
+        }
+    }
+
+    /// Re-simulate the window on `shadow` (forked before replay) and
+    /// compare every observable against the replayed state.
+    fn crosscheck_against(&self, mut shadow: Cluster, got: &ClusterStats) {
+        let want = shadow.run_slow();
+        assert_eq!(got, &want, "fast-path crosscheck: window stats diverge");
+        assert_eq!(self.cycle, shadow.cycle, "fast-path crosscheck: clock diverges");
+        assert_eq!(self.rr, shadow.rr, "fast-path crosscheck: arbiter phase diverges");
+        assert!(self.mem.tcdm == shadow.mem.tcdm, "fast-path crosscheck: TCDM diverges");
+        assert!(self.mem.l2 == shadow.mem.l2, "fast-path crosscheck: L2 diverges");
+        assert_eq!(
+            self.dma.busy_cycles, shadow.dma.busy_cycles,
+            "fast-path crosscheck: DMA busy cycles diverge"
+        );
+        assert_eq!(
+            self.dma.bytes_moved, shadow.dma.bytes_moved,
+            "fast-path crosscheck: DMA bytes diverge"
+        );
+        for (i, (a, b)) in self.cores.iter().zip(&shadow.cores).enumerate() {
+            assert_eq!(a.regs, b.regs, "fast-path crosscheck: core {i} regs diverge");
+            assert_eq!(a.nnrf, b.nnrf, "fast-path crosscheck: core {i} NN-RF diverges");
+            assert_eq!(a.stats, b.stats, "fast-path crosscheck: core {i} stats diverge");
+            assert!(a.state == b.state, "fast-path crosscheck: core {i} state diverges");
         }
     }
 }
@@ -286,5 +556,114 @@ mod tests {
         let stats = cl.run();
         // DMA 16 + 1000 beats dominates the 12-cycle program
         assert!(stats.cycles >= 1000, "cycles={}", stats.cycles);
+    }
+
+    /// Program for the fast-path tests: load a word from `X`, add 5,
+    /// store the result to `Y` (data-independent control flow, like all
+    /// generated kernels).
+    fn add5_prog(x: u32, y: u32) -> Program {
+        let mut p = Program::new("add5");
+        p.push(Instr::Li { rd: 1, imm: x as i32 });
+        p.push(Instr::Li { rd: 3, imm: y as i32 });
+        p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+        p.push(Instr::AluI { op: AluOp::Add, rd: 2, rs1: 2, imm: 5 });
+        p.push(Instr::Sw { rs: 2, base: 3, off: 0, post_inc: 0 });
+        p.push(Instr::Halt);
+        p
+    }
+
+    /// One round of the steady-state workload: reset, stream the input
+    /// from L2 into TCDM by DMA (drain window), then run the kernel
+    /// window. Returns (drain cycles, kernel cycles, output word).
+    fn fastpath_round(cl: &mut Cluster, input: u32) -> (u64, u64, u32) {
+        use crate::sim::dma::{DmaDir, DmaRequest};
+        use crate::sim::mem::L2_BASE;
+        let (x, y) = (TCDM_BASE, TCDM_BASE + 256);
+        cl.reset();
+        cl.mem.store_u32(L2_BASE, input);
+        cl.dma.push(DmaRequest::linear(DmaDir::L2ToTcdm, L2_BASE, x, 4));
+        let drain = cl.run();
+        cl.load_programs(vec![add5_prog(x, y)]);
+        let kernel = cl.run();
+        (drain.cycles, kernel.cycles, cl.mem.load_u32(y))
+    }
+
+    #[test]
+    fn fastpath_pure_replay_and_dma_overlap_invalidation() {
+        let mut cl = Cluster::new(1);
+        cl.set_fastpath_crosscheck(true);
+        // Round 1: both windows are recorded.
+        let (d1, k1, y1) = fastpath_round(&mut cl, 100);
+        assert_eq!(y1, 105);
+        assert_eq!(
+            (cl.fastpath().unwrap().misses, cl.fastpath().unwrap().pure_hits),
+            (2, 0)
+        );
+        // Round 2, identical input: both windows replay purely.
+        let (d2, k2, y2) = fastpath_round(&mut cl, 100);
+        assert_eq!((d2, k2, y2), (d1, k1, 105));
+        assert_eq!(cl.fastpath().unwrap().pure_hits, 2);
+        assert_eq!(cl.fastpath().unwrap().misses, 2);
+        // Round 3, new input: the DMA rewrites the kernel's footprint —
+        // pure replay is invalidated, timing replays, the functional
+        // effect is recomputed, and the output tracks the new data.
+        let (d3, k3, y3) = fastpath_round(&mut cl, 200);
+        assert_eq!(y3, 205, "stale replay after a DMA overlapped the footprint");
+        assert_eq!((d3, k3), (d1, k1), "replayed timing must be unchanged");
+        assert_eq!(cl.fastpath().unwrap().func_hits, 2);
+        assert_eq!(cl.fastpath().unwrap().misses, 2);
+    }
+
+    #[test]
+    fn fastpath_matches_no_fastpath_cycles_and_memory() {
+        let mut slow = Cluster::new(1);
+        let mut fast = Cluster::new(1);
+        fast.enable_fastpath();
+        for input in [7u32, 7, 99, 7, 42] {
+            let a = fastpath_round(&mut slow, input);
+            let b = fastpath_round(&mut fast, input);
+            assert_eq!(a, b, "fast path diverged on input {input}");
+        }
+        let fp = fast.fastpath().unwrap();
+        assert!(fp.pure_hits > 0 && fp.func_hits > 0, "{fp:?}");
+        assert!(fp.hit_rate() > 0.5);
+        // The escape hatch drops the cache entirely.
+        fast.disable_fastpath();
+        assert!(fast.fastpath().is_none());
+        let a = fastpath_round(&mut slow, 11);
+        let b = fastpath_round(&mut fast, 11);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fastpath_multicore_barrier_kernel_crosschecked() {
+        // Two cores, bank-conflicting loads plus a barrier: exercises the
+        // functional-replay barrier phases and the conflict-timing memo.
+        fn prog() -> Program {
+            let mut p = Program::new("conflict");
+            p.push(Instr::Li { rd: 1, imm: TCDM_BASE as i32 });
+            p.push(Instr::LpSetup { l: 0, count: 16, len: 1 });
+            p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+            p.push(Instr::Barrier);
+            p.push(Instr::AluI { op: AluOp::Add, rd: 3, rs1: 2, imm: 1 });
+            p.push(Instr::Halt);
+            p
+        }
+        let mut cl = Cluster::new(2);
+        cl.set_fastpath_crosscheck(true);
+        cl.mem.store_u32(TCDM_BASE, 41);
+        // The arbiter rotation is part of the window key, so with two
+        // cores an identical window must recur within three repetitions.
+        // Leftover registers make these functional (not pure) replays;
+        // crosscheck verifies each against a full re-simulation.
+        let mut cycles = Vec::new();
+        for _ in 0..3 {
+            cl.load_programs(vec![prog(), prog()]);
+            cycles.push(cl.run().cycles);
+            assert_eq!(cl.cores[0].regs[3], 42);
+            assert_eq!(cl.cores[1].regs[3], 42);
+        }
+        assert!(cycles.iter().all(|&c| c == cycles[0]), "{cycles:?}");
+        assert!(cl.fastpath().unwrap().func_hits >= 1, "{:?}", cl.fastpath().unwrap());
     }
 }

@@ -237,7 +237,7 @@ impl Core {
             }
             Instr::Lw { rd, base, off, post_inc } => {
                 let addr = self.reg(base).wrapping_add(off as u32);
-                let v = mem.load_u32(addr);
+                let v = mem.traced_load_u32(addr);
                 self.set_reg(rd, v);
                 if post_inc != 0 {
                     let nb = self.reg(base).wrapping_add(post_inc as u32);
@@ -248,7 +248,7 @@ impl Core {
             }
             Instr::Lbu { rd, base, off, post_inc } => {
                 let addr = self.reg(base).wrapping_add(off as u32);
-                let v = mem.load_u8(addr) as u32;
+                let v = mem.traced_load_u8(addr) as u32;
                 self.set_reg(rd, v);
                 if post_inc != 0 {
                     let nb = self.reg(base).wrapping_add(post_inc as u32);
@@ -305,7 +305,7 @@ impl Core {
                 self.set_reg(acc, v as u32);
                 if let MlUpdate::Load { ch, slot } = upd {
                     let addr = self.mlc_mut(ch).next();
-                    let w = mem.load_u32(addr);
+                    let w = mem.traced_load_u32(addr);
                     self.nnrf[slot as usize] = w;
                     self.stats.tcdm_accesses += 1;
                 }
@@ -315,7 +315,7 @@ impl Core {
             }
             Instr::NnLoad { ch, slot } => {
                 let addr = self.mlc_mut(ch).next();
-                let w = mem.load_u32(addr);
+                let w = mem.traced_load_u32(addr);
                 self.nnrf[slot as usize] = w;
                 self.stats.tcdm_accesses += 1;
             }
@@ -400,6 +400,65 @@ impl Core {
         debug_assert_eq!(self.state, CoreState::AtBarrier);
         self.state = CoreState::Running;
         self.refresh_req();
+    }
+
+    /// Fast-path functional execution: retire instructions back-to-back
+    /// with exact integer semantics but **no** cycle, stall, or
+    /// arbitration accounting, until the core leaves `Running` (barrier
+    /// or halt). Timing is replayed from the steady-state memo instead
+    /// (see [`crate::sim::fastpath`]); `max_instrs` bounds runaway
+    /// programs like `Cluster::max_cycles` bounds the cycle loop.
+    pub(crate) fn run_functional(&mut self, mem: &mut ClusterMem, max_instrs: u64) {
+        let mut n: u64 = 0;
+        while self.state == CoreState::Running {
+            let instr = self.prog.instrs[self.pc];
+            self.execute(instr, mem);
+            n += 1;
+            assert!(
+                n <= max_instrs,
+                "fast-path functional runaway in '{}' (core {})",
+                self.prog.label,
+                self.id
+            );
+        }
+        // Pipeline micro-state (branch bubbles, load-use hazards) is not
+        // modeled functionally; normalize it to a drained pipeline.
+        self.pending_stall = 0;
+        self.hazard_reg = None;
+    }
+
+    /// Hash the core's **structural** identity for the fast-path window
+    /// key: run state, program position, and instruction stream — the
+    /// inputs that (together with the DMA schedule and arbiter phase)
+    /// fully determine the window's timing, since generated kernels have
+    /// no data-dependent control flow or addressing.
+    pub(crate) fn hash_structure(&self, h: &mut impl std::hash::Hasher) {
+        use std::hash::Hash;
+        if self.state == CoreState::Halted {
+            0u8.hash(h);
+        } else {
+            1u8.hash(h);
+            self.pc.hash(h);
+            self.prog.instrs.hash(h);
+        }
+    }
+
+    /// Hash the core's architectural **data** state (registers, NN-RF,
+    /// CSRs, MLC channels) — deliberately excluded from the structural
+    /// key, and validated separately before a pure (functional-delta)
+    /// replay.
+    pub(crate) fn hash_arch_state(&self, h: &mut impl std::hash::Hasher) {
+        use std::hash::Hash;
+        self.regs.hash(h);
+        self.nnrf.hash(h);
+        self.csrs.hash(h);
+        for ch in [&self.mlc_a, &self.mlc_w] {
+            ch.addr.hash(h);
+            ch.stride.hash(h);
+            ch.rollback.hash(h);
+            ch.skip.hash(h);
+            ch.cnt.hash(h);
+        }
     }
 }
 

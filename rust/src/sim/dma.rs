@@ -137,8 +137,7 @@ impl Dma {
             DmaDir::L2ToTcdm => (ext_addr, loc_addr),
             DmaDir::TcdmToL2 => (loc_addr, ext_addr),
         };
-        let bytes = mem.read_bytes(src, n);
-        mem.write_bytes(dst, &bytes);
+        mem.dma_copy(src, dst, n);
         self.progress += n as u64;
         self.bytes_moved += n as u64;
         self.busy_cycles += 1;
@@ -156,6 +155,54 @@ impl Dma {
     /// — used by DORY's solver to estimate tile DMA cost.
     pub fn estimate_cycles(bytes: u64) -> u64 {
         DMA_SETUP_CYCLES as u64 + bytes.div_ceil(DMA_BYTES_PER_CYCLE as u64)
+    }
+
+    /// Queued transfers, front first (fast-path window signatures).
+    pub fn queued(&self) -> impl Iterator<Item = &DmaRequest> {
+        self.queue.iter()
+    }
+
+    /// Progress within the head request in bytes (fast-path key).
+    pub(crate) fn progress(&self) -> u64 {
+        self.progress
+    }
+
+    /// Remaining setup cycles of the head request (fast-path key).
+    pub(crate) fn setup_left(&self) -> u32 {
+        self.setup_left
+    }
+
+    /// Drop all queued transfers and reset in-flight state to the
+    /// drained end-of-window state (fast-path pure replay: the memoized
+    /// write delta already contains every byte these transfers moved).
+    pub(crate) fn clear_queue(&mut self) {
+        self.queue.clear();
+        self.progress = 0;
+        self.setup_left = 0;
+    }
+
+    /// Perform every queued transfer at once, functionally (fast-path
+    /// timing replay: cycles and byte counters are restored from the
+    /// memoized window by the caller, so none are touched here).
+    pub(crate) fn complete_all_functional(&mut self, mem: &mut ClusterMem) {
+        while let Some(req) = self.queue.pop_front() {
+            let mut done = self.progress;
+            self.progress = 0;
+            while done < req.total_bytes() {
+                let row = (done / req.row_bytes as u64) as u32;
+                let col = (done % req.row_bytes as u64) as u32;
+                let n = req.row_bytes - col;
+                let ext = req.ext + row * req.ext_stride + col;
+                let loc = req.loc + row * req.loc_stride + col;
+                let (src, dst) = match req.dir {
+                    DmaDir::L2ToTcdm => (ext, loc),
+                    DmaDir::TcdmToL2 => (loc, ext),
+                };
+                mem.copy_range(src, dst, n);
+                done += n as u64;
+            }
+        }
+        self.setup_left = 0;
     }
 }
 

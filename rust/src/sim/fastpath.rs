@@ -1,0 +1,227 @@
+//! Steady-state fast path: memoized replay of whole simulation windows.
+//!
+//! A DORY-deployed network executes the same inner loop thousands of
+//! times: every tile of a conv layer runs an identical per-core
+//! instruction trace against an identical TCDM layout, so its cycle
+//! evolution — bank conflicts, load-use hazards, barrier waits, DMA
+//! interleaving — is identical too (Dustin's lockstep observation:
+//! identical per-core schedules need not be re-derived per iteration).
+//! The fast path exploits this at [`Cluster::run`] granularity:
+//!
+//! 1. **Recording (miss).** The window is simulated cycle-by-cycle as
+//!    usual while an [`super::mem::AccessTrace`] captures its external read
+//!    footprint (bytes read before being written, with their pre-window
+//!    values) and its functional write delta. The entry stores both,
+//!    plus the window's [`ClusterStats`] and the final core states.
+//! 2. **Pure replay.** If a later window matches the entry's structural
+//!    key *and* its exact environment — same DMA descriptors including
+//!    L2 addresses, same initial register data, same footprint contents
+//!    (hash-checked) — the memoized writes and timing are applied
+//!    directly; no instruction is re-executed.
+//! 3. **Functional replay.** If only the data differs (e.g. a DMA wrote
+//!    fresh activations over the footprint — the *invalidation* case),
+//!    the memoized **timing** is still exact, because generated kernels
+//!    have no data-dependent control flow or addressing (the same
+//!    invariant `coordinator::TileMemo` relies on). The cores are then
+//!    re-executed *functionally* — straight-line retirement with exact
+//!    integer semantics, no per-cycle arbitration — and the DMA queue is
+//!    completed as bulk copies. Outputs stay bit-exact; only the cost of
+//!    simulating stalls, arbitration, and barrier spins is saved.
+//!
+//! The structural key covers: core count, arbiter rotation, each core's
+//! run-state + pc + instruction stream, and the timing-relevant DMA
+//! descriptor fields (TCDM-side layout; the L2-side address never
+//! affects a cycle). The retired-instruction invariant is asserted on
+//! every functional replay, and [`FastPath::crosscheck`] re-simulates
+//! each replayed window on a forked cluster and compares all observable
+//! state — tests run the serve determinism suites in this mode.
+//!
+//! The cache is a [`WindowCache`]: cloning shares the underlying store,
+//! so a fleet of clusters (serve shards on host threads) pools its
+//! recordings — one shard measures a window, every shard replays it.
+//!
+//! Escape hatches: `Cluster::disable_fastpath`, the serve engine's
+//! `ServeConfig::fastpath`, and the CLI's `--no-fastpath`.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::Hasher;
+use std::sync::{Arc, RwLock};
+
+use super::cluster::Cluster;
+use super::core::Core;
+use super::dma::DmaRequest;
+use super::mem::ClusterMem;
+use super::stats::ClusterStats;
+
+/// Cache-size backstop: a steady-state workload settles on at most a
+/// few hundred distinct windows; a runaway-diversity workload simply
+/// clears and re-records.
+pub(crate) const MAX_ENTRIES: usize = 8192;
+
+/// One memoized simulation window.
+#[derive(Clone, Debug)]
+pub(crate) struct FastEntry {
+    /// Exact DMA descriptors queued at window start. Unlike the
+    /// structural key this includes the L2-side addresses — a pure
+    /// replay applies recorded absolute writes, so the environment must
+    /// match exactly.
+    pub dma_sig: Vec<DmaRequest>,
+    /// Hash of the initial register/NN-RF/CSR/MLC data state (pure
+    /// replay gate; the structural key excludes data registers).
+    pub arch_sig: u64,
+    /// External input footprint: `(addr, len)` byte ranges read before
+    /// being written, ascending.
+    pub reads: Vec<(u32, u32)>,
+    /// Hash of the footprint's pre-window contents.
+    pub read_hash: u64,
+    /// Functional effect delta: every byte range written, with its
+    /// end-of-window contents.
+    pub writes: Vec<(u32, Vec<u8>)>,
+    /// Which cores were running at window start.
+    pub ran: Vec<bool>,
+    /// Final core states (restored on pure replay; running cores only —
+    /// halted cores are untouched by a window).
+    pub cores_end: Vec<Core>,
+    /// Arbiter rotation at window end.
+    pub rr_end: usize,
+    /// Recorded window stats: cycles, per-core counters (absolute since
+    /// the `load_programs` reset), DMA busy/byte deltas.
+    pub stats: ClusterStats,
+}
+
+/// A shareable window cache: cloning shares the same underlying store,
+/// so a fleet of clusters (serve shards, one per host thread) can pool
+/// their recordings — shard B replays a window shard A measured, the
+/// lockstep insight applied across the fleet. Entries are immutable
+/// (`Arc`), so the lock is held only for the lookup or insert itself,
+/// never during replay; cache contents affect wall-clock time only,
+/// never a simulated number, so sharing cannot perturb determinism.
+#[derive(Clone, Debug, Default)]
+pub struct WindowCache(pub(crate) Arc<RwLock<HashMap<u64, Arc<FastEntry>>>>);
+
+impl WindowCache {
+    /// Distinct windows memoized.
+    pub fn entries(&self) -> usize {
+        self.0.read().expect("fastpath cache poisoned").len()
+    }
+}
+
+/// Fast-path state attached to a [`Cluster`] via
+/// [`Cluster::enable_fastpath`] (private cache) or
+/// [`Cluster::enable_fastpath_shared`] (fleet-shared cache).
+/// Replay/record counters are per cluster even when the cache is
+/// shared.
+#[derive(Clone, Debug, Default)]
+pub struct FastPath {
+    pub(crate) cache: WindowCache,
+    /// Re-simulate every replayed window on a forked cluster and compare
+    /// all observable state (tests only — it is slower than no cache).
+    pub crosscheck: bool,
+    /// Windows replayed purely from the memoized functional delta.
+    pub pure_hits: u64,
+    /// Windows with replayed timing + fast functional re-execution
+    /// (footprint invalidated, e.g. by a DMA write overlapping it).
+    pub func_hits: u64,
+    /// Windows simulated cycle-by-cycle and recorded.
+    pub misses: u64,
+}
+
+impl FastPath {
+    /// Distinct windows memoized (in the possibly-shared cache).
+    pub fn entries(&self) -> usize {
+        self.cache.entries()
+    }
+
+    /// Fraction of non-trivial windows served without cycle simulation.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.pure_hits + self.func_hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            (self.pure_hits + self.func_hits) as f64 / total as f64
+        }
+    }
+}
+
+/// Hash `ranges` of the live memory image, chunked identically to
+/// [`super::mem::AccessTrace::read_hash`] so the two are comparable.
+pub(crate) fn hash_mem_ranges(mem: &ClusterMem, ranges: &[(u32, u32)]) -> u64 {
+    let mut h = DefaultHasher::new();
+    for &(addr, len) in ranges {
+        h.write_u32(addr);
+        h.write_u32(len);
+        h.write(mem.bytes(addr, len as usize));
+    }
+    h.finish()
+}
+
+impl Cluster {
+    /// Structural identity of the window about to run: everything that
+    /// determines its timing under the no-data-dependent-control-flow
+    /// invariant (see the module docs).
+    pub(crate) fn structural_key(&self) -> u64 {
+        use std::hash::Hash;
+        let mut h = DefaultHasher::new();
+        self.cores.len().hash(&mut h);
+        self.rr.hash(&mut h);
+        for c in &self.cores {
+            c.hash_structure(&mut h);
+        }
+        self.dma.progress().hash(&mut h);
+        self.dma.setup_left().hash(&mut h);
+        for r in self.dma.queued() {
+            (r.dir, r.loc, r.row_bytes, r.rows, r.loc_stride).hash(&mut h);
+        }
+        h.finish()
+    }
+
+    /// Combined data-state signature of all cores (pure-replay gate).
+    pub(crate) fn arch_sig(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        for c in &self.cores {
+            c.hash_arch_state(&mut h);
+        }
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::mem::AccessTrace;
+
+    #[test]
+    fn trace_footprint_excludes_read_after_write() {
+        let mut t = AccessTrace::default();
+        t.record_write(0x1000_0100, 4);
+        t.record_read(0x1000_0100, &[1, 2, 3, 4]); // internal
+        t.record_read(0x1000_0104, &[5, 6, 7, 8]); // external
+        assert_eq!(t.read_ranges(), vec![(0x1000_0104, 4)]);
+        assert_eq!(t.write_ranges(), vec![(0x1000_0100, 4)]);
+    }
+
+    #[test]
+    fn trace_hash_matches_live_memory() {
+        let mut mem = ClusterMem::new();
+        let data: Vec<u8> = (0..32u8).collect();
+        mem.write_bytes(0x1000_0040, &data);
+        let mut t = AccessTrace::default();
+        t.record_read(0x1000_0040, &data);
+        let ranges = t.read_ranges();
+        assert_eq!(ranges, vec![(0x1000_0040, 32)]);
+        assert_eq!(t.read_hash(), hash_mem_ranges(&mem, &ranges));
+        // perturb one footprint byte -> hash must change
+        mem.store_u8(0x1000_0050, 0xFF);
+        assert_ne!(t.read_hash(), hash_mem_ranges(&mem, &ranges));
+    }
+
+    #[test]
+    fn trace_coalesces_across_blocks() {
+        let mut t = AccessTrace::default();
+        // 128 contiguous bytes spanning three 64-byte blocks
+        let bytes = vec![7u8; 128];
+        t.record_read(0x1000_0020, &bytes);
+        assert_eq!(t.read_ranges(), vec![(0x1000_0020, 128)]);
+    }
+}

@@ -9,16 +9,113 @@
 //! arbitration is word-interleaved across 16 banks exactly like the PULP
 //! logarithmic interconnect.
 
+use std::collections::HashMap;
+
 use crate::{L2_BYTES, TCDM_BANKS, TCDM_BYTES};
 
 pub const TCDM_BASE: u32 = 0x1000_0000;
 pub const L2_BASE: u32 = 0x1C00_0000;
+
+/// Byte-granular access trace of one simulation window, recorded while
+/// the steady-state fast path measures a window it has not seen before
+/// (see [`crate::sim::fastpath`]).
+///
+/// Storage is 64-byte blocks with one mask bit per byte. `reads` holds
+/// only bytes read **before** any write of the window — the window's
+/// external input footprint; `read_vals` captures their pre-window
+/// values so the recorded entry can later be validated against the
+/// current memory image (a DMA write overlapping the footprint changes
+/// the hash and invalidates pure replay). `writes` is the window's
+/// functional effect delta.
+#[derive(Clone, Debug, Default)]
+pub struct AccessTrace {
+    reads: HashMap<u32, u64>,
+    read_vals: HashMap<u32, [u8; 64]>,
+    writes: HashMap<u32, u64>,
+}
+
+impl AccessTrace {
+    /// Record a read of `bytes` starting at `addr`. Bytes already
+    /// written this window are internal and excluded from the footprint.
+    pub fn record_read(&mut self, addr: u32, bytes: &[u8]) {
+        for (i, &b) in bytes.iter().enumerate() {
+            let a = addr + i as u32;
+            let blk = a >> 6;
+            let bit = 1u64 << (a & 63);
+            if self.writes.get(&blk).map_or(false, |w| w & bit != 0) {
+                continue;
+            }
+            let m = self.reads.entry(blk).or_insert(0);
+            if *m & bit == 0 {
+                *m |= bit;
+                self.read_vals.entry(blk).or_insert([0; 64])[(a & 63) as usize] = b;
+            }
+        }
+    }
+
+    /// Record a write of `len` bytes starting at `addr`.
+    pub fn record_write(&mut self, addr: u32, len: u32) {
+        for i in 0..len {
+            let a = addr + i;
+            *self.writes.entry(a >> 6).or_insert(0) |= 1u64 << (a & 63);
+        }
+    }
+
+    fn ranges(map: &HashMap<u32, u64>) -> Vec<(u32, u32)> {
+        let mut blocks: Vec<(u32, u64)> = map.iter().map(|(b, m)| (*b, *m)).collect();
+        blocks.sort_unstable_by_key(|(b, _)| *b);
+        let mut out: Vec<(u32, u32)> = Vec::new();
+        for (blk, mask) in blocks {
+            for bit in 0..64u32 {
+                if mask & (1u64 << bit) != 0 {
+                    let a = (blk << 6) + bit;
+                    match out.last_mut() {
+                        Some((start, len)) if *start + *len == a => *len += 1,
+                        _ => out.push((a, 1)),
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Footprint byte ranges `(addr, len)`, ascending and coalesced.
+    pub fn read_ranges(&self) -> Vec<(u32, u32)> {
+        Self::ranges(&self.reads)
+    }
+
+    /// Written byte ranges `(addr, len)`, ascending and coalesced.
+    pub fn write_ranges(&self) -> Vec<(u32, u32)> {
+        Self::ranges(&self.writes)
+    }
+
+    /// Hash of the captured **pre-window** contents of the read
+    /// footprint, comparable with the fast path's `hash_mem_ranges`
+    /// over a live memory image.
+    pub fn read_hash(&self) -> u64 {
+        use std::hash::Hasher;
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        let mut buf = Vec::new();
+        for (addr, len) in self.read_ranges() {
+            h.write_u32(addr);
+            h.write_u32(len);
+            buf.clear();
+            for a in addr..addr + len {
+                buf.push(self.read_vals[&(a >> 6)][(a & 63) as usize]);
+            }
+            h.write(&buf);
+        }
+        h.finish()
+    }
+}
 
 /// Functional memory of the cluster.
 #[derive(Clone)]
 pub struct ClusterMem {
     pub tcdm: Vec<u8>,
     pub l2: Vec<u8>,
+    /// Access trace, active only while the fast path records a window.
+    pub(crate) trace: Option<Box<AccessTrace>>,
 }
 
 impl Default for ClusterMem {
@@ -29,7 +126,7 @@ impl Default for ClusterMem {
 
 impl ClusterMem {
     pub fn new() -> Self {
-        ClusterMem { tcdm: vec![0; TCDM_BYTES], l2: vec![0; L2_BYTES] }
+        ClusterMem { tcdm: vec![0; TCDM_BYTES], l2: vec![0; L2_BYTES], trace: None }
     }
 
     /// TCDM bank serving a byte address (word-interleaved).
@@ -84,6 +181,9 @@ impl ClusterMem {
 
     #[inline]
     pub fn store_u32(&mut self, addr: u32, v: u32) {
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.record_write(addr, 4);
+        }
         if Self::is_tcdm(addr) {
             let o = (addr - TCDM_BASE) as usize;
             self.tcdm[o..o + 4].copy_from_slice(&v.to_le_bytes());
@@ -102,11 +202,63 @@ impl ClusterMem {
 
     #[inline]
     pub fn store_u8(&mut self, addr: u32, v: u8) {
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.record_write(addr, 1);
+        }
         if Self::is_tcdm(addr) {
             self.tcdm[(addr - TCDM_BASE) as usize] = v;
             return;
         }
         self.slice_mut(addr, 1)[0] = v;
+    }
+
+    /// [`Self::load_u32`] plus fast-path read tracing (core load path).
+    #[inline]
+    pub(crate) fn traced_load_u32(&mut self, addr: u32) -> u32 {
+        let v = self.load_u32(addr);
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.record_read(addr, &v.to_le_bytes());
+        }
+        v
+    }
+
+    /// [`Self::load_u8`] plus fast-path read tracing (core load path).
+    #[inline]
+    pub(crate) fn traced_load_u8(&mut self, addr: u32) -> u8 {
+        let v = self.load_u8(addr);
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.record_read(addr, &[v]);
+        }
+        v
+    }
+
+    /// One DMA beat: copy `len` (≤ 8) bytes from `src` to `dst`,
+    /// recording both sides on the active trace.
+    pub(crate) fn dma_copy(&mut self, src: u32, dst: u32, len: usize) {
+        debug_assert!(len <= 8);
+        let mut buf = [0u8; 8];
+        buf[..len].copy_from_slice(self.slice(src, len));
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.record_read(src, &buf[..len]);
+            t.record_write(dst, len as u32);
+        }
+        self.slice_mut(dst, len).copy_from_slice(&buf[..len]);
+    }
+
+    /// Bulk copy for the fast path's functional DMA completion (whole
+    /// rows at once, no per-beat cycle model).
+    pub(crate) fn copy_range(&mut self, src: u32, dst: u32, len: u32) {
+        let tmp = self.slice(src, len as usize).to_vec();
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.record_read(src, &tmp);
+            t.record_write(dst, len);
+        }
+        self.slice_mut(dst, len as usize).copy_from_slice(&tmp);
+    }
+
+    /// Borrow `len` bytes at `addr` (fast-path hashing and recording).
+    pub(crate) fn bytes(&self, addr: u32, len: usize) -> &[u8] {
+        self.slice(addr, len)
     }
 
     /// Bulk write (test/coordinator setup path, not timed).

@@ -21,10 +21,19 @@
 //! Functional model: exact integer semantics for every instruction — kernel
 //! outputs are compared bit-exactly against [`crate::qnn::golden`] and
 //! against the AOT JAX/Pallas artifacts through [`crate::runtime`].
+//!
+//! Steady-state fast path ([`fastpath`], [`Cluster::enable_fastpath`]):
+//! windows whose instruction trace, DMA schedule and arbiter phase have
+//! been seen before are replayed from a memo (timing always, functional
+//! effects either from the recorded delta or via fast straight-line
+//! re-execution) instead of being re-simulated cycle by cycle — outputs
+//! and cycle counts stay bit-identical, and a cross-check mode
+//! re-simulates every replayed window in tests.
 
 pub mod cluster;
 pub mod core;
 pub mod dma;
+pub mod fastpath;
 pub mod mem;
 pub mod mlc;
 pub mod stats;
@@ -32,6 +41,7 @@ pub mod stats;
 pub use cluster::Cluster;
 pub use core::Core;
 pub use dma::{Dma, DmaRequest};
-pub use mem::{ClusterMem, L2_BASE, TCDM_BASE};
+pub use fastpath::{FastPath, WindowCache};
+pub use mem::{AccessTrace, ClusterMem, L2_BASE, TCDM_BASE};
 pub use mlc::MlcChannel;
 pub use stats::{ClusterStats, CoreStats};

@@ -47,7 +47,7 @@ impl CoreStats {
 }
 
 /// Whole-cluster result of a simulation run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ClusterStats {
     /// Wall-clock cycles of the run (max over cores, incl. DMA tail).
     pub cycles: u64,

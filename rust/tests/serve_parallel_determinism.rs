@@ -1,0 +1,103 @@
+//! The tentpole guarantee of the parallel serving engine: running shard
+//! batches on a host thread pool AND replaying steady-state windows
+//! through the simulator fast path change **wall-clock time only**.
+//! Outputs, per-layer cycle counts, completion ordering, and every
+//! fleet metric must be bit-identical to the sequential, no-fastpath
+//! engine — the deterministic event-ordering reduction (merge per-shard
+//! completions by simulated cycle, tie-break by shard id) makes the
+//! completion stream a pure function of the trace.
+
+use flexv::models::{resnet20, Profile};
+use flexv::qnn::layer::Network;
+use flexv::qnn::{Layer, QTensor};
+use flexv::serve::{Completion, Engine, FleetMetrics, ServeConfig, TraceItem};
+use flexv::util::Prng;
+
+fn tiny(name: &str, seed: u64) -> Network {
+    let mut rng = Prng::new(seed);
+    let mut net = Network::new(name, [10, 10, 8], 8);
+    net.push(Layer::conv("c1", [10, 10, 8], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+    net.push(Layer::conv("c2", [10, 10, 16], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+    net
+}
+
+/// Deterministic mixed-model trace: two tiny nets plus one ResNet-20
+/// request, interleaved arrivals, mixed priorities, repeated inputs (so
+/// the fast path sees both pure and functional replays).
+fn mk_trace(tiny_a: usize, tiny_b: usize, resnet: usize) -> Vec<TraceItem> {
+    let mut rng = Prng::new(40);
+    let mut inputs: Vec<QTensor> =
+        (0..4).map(|_| QTensor::random(&[10, 10, 8], 8, false, &mut rng)).collect();
+    inputs.push(inputs[0].clone()); // exact repeat of the first payload
+    let resnet_input = QTensor::random(&[32, 32, 4], 8, false, &mut rng);
+    let mut trace = Vec::new();
+    for (i, input) in inputs.into_iter().enumerate() {
+        trace.push(TraceItem {
+            at: i as u64 * 40,
+            model: if i % 2 == 0 { tiny_a } else { tiny_b },
+            priority: (i % 3) as u8,
+            input,
+        });
+    }
+    trace.push(TraceItem { at: 90, model: resnet, priority: 0, input: resnet_input });
+    trace
+}
+
+/// Run the standard fleet over the standard trace with the given
+/// execution knobs; everything else is fixed.
+fn run(workers: usize, fastpath: bool, exact: bool) -> (Vec<Completion>, FleetMetrics) {
+    let cfg = ServeConfig { shards: 3, workers, fastpath, exact, ..ServeConfig::default() };
+    let mut eng = Engine::new(cfg);
+    let a = eng.register(tiny("par-a", 41));
+    let b = eng.register(tiny("par-b", 42));
+    let r = eng.register(resnet20(Profile::Mixed4a2w, 5));
+    let m = eng.run_trace(mk_trace(a, b, r));
+    (eng.completions().to_vec(), m)
+}
+
+fn assert_bit_identical(l: &(Vec<Completion>, FleetMetrics), r: &(Vec<Completion>, FleetMetrics)) {
+    assert_eq!(l.0.len(), r.0.len(), "served counts differ");
+    for (x, y) in l.0.iter().zip(&r.0) {
+        assert_eq!(x.id, y.id, "completion order diverged");
+        assert_eq!(x.model, y.model);
+        assert_eq!(x.shard, y.shard, "shard assignment diverged (id {})", x.id);
+        assert_eq!(x.start_cycle, y.start_cycle, "id {}", x.id);
+        assert_eq!(x.finish_cycle, y.finish_cycle, "id {}", x.id);
+        assert_eq!(x.exec_cycles, y.exec_cycles, "id {}", x.id);
+        assert_eq!(x.switch_cycles, y.switch_cycles, "id {}", x.id);
+        assert_eq!(x.batch_size, y.batch_size, "id {}", x.id);
+        assert_eq!(x.macs, y.macs, "id {}", x.id);
+        assert_eq!(x.layer_cycles, y.layer_cycles, "per-layer cycles diverged (id {})", x.id);
+        assert_eq!(x.output, y.output, "outputs diverged (id {})", x.id);
+        assert!(x.energy_pj == y.energy_pj, "energy diverged (id {})", x.id);
+    }
+    // fleet metrics are a pure function of the completions
+    assert_eq!(l.1.served, r.1.served);
+    assert_eq!(l.1.span_cycles, r.1.span_cycles);
+    assert_eq!(l.1.p50_cycles, r.1.p50_cycles);
+    assert_eq!(l.1.p99_cycles, r.1.p99_cycles);
+    assert_eq!(l.1.model_switches, r.1.model_switches);
+    assert_eq!(l.1.batches, r.1.batches);
+    assert!(l.1.aggregate_macs_per_cycle == r.1.aggregate_macs_per_cycle);
+}
+
+/// Exact mode: the threaded, fast-path engine is bit-identical to the
+/// sequential no-fastpath engine (outputs and simulated cycle counts).
+#[test]
+fn serve_parallel_determinism() {
+    let reference = run(1, false, true);
+    let parallel = run(0, true, true);
+    assert_bit_identical(&reference, &parallel);
+    // a worker cap exercises the chunked pool path; still identical
+    let two_workers = run(2, true, true);
+    assert_bit_identical(&reference, &two_workers);
+}
+
+/// Warm (timing-only) mode: same guarantee for the throughput
+/// configuration the benches run.
+#[test]
+fn serve_parallel_determinism_warm_mode() {
+    let reference = run(1, false, false);
+    let parallel = run(0, true, false);
+    assert_bit_identical(&reference, &parallel);
+}

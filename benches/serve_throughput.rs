@@ -1,18 +1,30 @@
 //! Bench: serving-engine throughput — the synthetic mixed 3-model
 //! traffic trace (MobileNetV1-8b / 8b4b / ResNet-20-4b2b) replayed on
-//! fleets of growing size. Scaling shards should raise req/s and cut
-//! p99 latency while plan compiles stay at 3 per row (cache).
+//! fleets of growing size, plus the trace-shape scenario matrix
+//! (steady / poisson / bursty / diurnal SLO workloads with per-class
+//! p99 and deadline-miss reporting, static vs autoscaled fleets).
 //!
 //! The engine runs with its defaults: shard batches simulate on a host
 //! thread pool and the sim fast path replays steady-state windows. Pass
-//! `--baseline` to also run each row sequentially with the fast path
-//! off; the simulated numbers must match bit-for-bit (asserted) and the
-//! wall-clock ratio is reported (target: ≥ 5x combined).
+//! `--baseline` to also run each scaling row sequentially with the fast
+//! path off; the simulated numbers must match bit-for-bit (asserted)
+//! and the wall-clock ratio is reported (target: ≥ 5x combined).
 //!
 //!     cargo bench --bench serve_throughput [-- --full] [-- --baseline]
 
-use flexv::serve::{standard_mix, Engine, FleetMetrics, ServeConfig};
+use flexv::serve::{
+    standard_mix, AutoscaleConfig, Engine, FleetMetrics, ServeConfig, SloClass, TraceShape,
+    WorkloadSpec,
+};
 use std::time::Instant;
+
+/// Simulated cycles → milliseconds at the typical corner (the same
+/// conversion FleetMetrics::render uses).
+fn ms(cyc: u64) -> f64 {
+    cyc as f64 / (flexv::report::F_TYP_MHZ * 1e3)
+}
+
+const MIX: [f64; 3] = [0.45, 0.30, 0.25];
 
 fn run_row(shards: usize, workers: usize, fastpath: bool, hw: usize, requests: usize) -> (FleetMetrics, f64) {
     let cfg = ServeConfig { shards, workers, fastpath, ..ServeConfig::default() };
@@ -20,10 +32,105 @@ fn run_row(shards: usize, workers: usize, fastpath: bool, hw: usize, requests: u
     for net in standard_mix(hw) {
         eng.register(net);
     }
-    let trace = eng.synthetic_trace(requests, 1_500_000, &[0.45, 0.30, 0.25], 0xBE7C);
+    let trace = eng.synthetic_trace(requests, 1_500_000, &MIX, 0xBE7C);
     let t0 = Instant::now();
     let m = eng.run_trace(trace);
     (m, t0.elapsed().as_secs_f64())
+}
+
+/// One SLO scenario: `shape` traffic over the 3-model zoo, either a
+/// static `shards`-wide fleet or an autoscaled 1..=`shards` pool.
+fn run_scenario(
+    shape: TraceShape,
+    shards: usize,
+    autoscale: bool,
+    hw: usize,
+    requests: usize,
+) -> (FleetMetrics, f64) {
+    let autoscale_cfg = autoscale.then(|| {
+        let mut ac = AutoscaleConfig::range(1, shards);
+        // park quickly relative to the trace's mean gap so valleys show
+        ac.idle_cycles_down = 20_000_000;
+        ac.cooldown_cycles = 2_000_000;
+        ac
+    });
+    let cfg = ServeConfig { shards, autoscale: autoscale_cfg, ..ServeConfig::default() };
+    let mut eng = Engine::new(cfg);
+    for net in standard_mix(hw) {
+        eng.register(net);
+    }
+    let mut spec = WorkloadSpec::new(shape, requests, 1_500_000, 3);
+    spec.mix = MIX.to_vec();
+    spec.classes = SloClass::standard_tiers(40_000_000);
+    spec.seed = 0x51_0;
+    let trace = eng.workload_trace(&spec);
+    let t0 = Instant::now();
+    let m = eng.run_trace(trace);
+    (m, t0.elapsed().as_secs_f64())
+}
+
+fn scenario_matrix(hw: usize, requests: usize) {
+    println!();
+    println!(
+        "scenario matrix: {requests} requests/shape, 3-tier SLO (interactive/standard/batch), \
+         static 4-shard fleet vs autoscaled 1:4"
+    );
+    println!(
+        "{:<9} {:<6} {:>7} {:>9} {:>9} {:>6} {:>5} {:>6} {:>7} {:>8}",
+        "trace", "fleet", "req/s", "p99[ms]", "int-p99", "miss%", "shed", "occ", "ups/dn", "wall[s]"
+    );
+    let mut bursty: Vec<FleetMetrics> = Vec::new();
+    for shape in TraceShape::ALL {
+        for autoscale in [false, true] {
+            let (m, wall) = run_scenario(shape, 4, autoscale, hw, requests);
+            let interactive = &m.class_rows[0];
+            println!(
+                "{:<9} {:<6} {:>7.1} {:>9.1} {:>9.1} {:>6.1} {:>5} {:>6.1} {:>4}/{:<2} {:>8.1}",
+                shape.name(),
+                if autoscale { "auto" } else { "static" },
+                m.requests_per_sec,
+                ms(m.p99_cycles),
+                ms(interactive.p99_cycles),
+                m.miss_rate() * 100.0,
+                m.shed,
+                m.mean_active_shards(),
+                m.scale_ups,
+                m.scale_downs,
+                wall
+            );
+            assert_eq!(m.class_rows.len(), 3, "per-class reporting missing");
+            assert_eq!(
+                m.served + m.shed as usize + m.rejected as usize,
+                requests,
+                "{shape}: requests must be served, shed, or rejected"
+            );
+            if shape == TraceShape::Bursty {
+                bursty.push(m);
+            }
+        }
+    }
+    // Elasticity gate: under the bursty trace, the autoscaled pool must
+    // track the static max-shard fleet's tail latency (the cold model
+    // loads it pays on wake are bounded by the switch costs the static
+    // fleet also pays on first use).
+    let (stat, auto) = (&bursty[0], &bursty[1]);
+    println!(
+        "bursty p99: static {:.1} ms vs autoscaled {:.1} ms (mean occupancy {:.1} vs {:.1} shards)",
+        ms(stat.p99_cycles),
+        ms(auto.p99_cycles),
+        stat.mean_active_shards(),
+        auto.mean_active_shards(),
+    );
+    assert!(
+        auto.p99_cycles <= stat.p99_cycles,
+        "autoscaled bursty p99 ({}) worse than static max fleet ({})",
+        auto.p99_cycles,
+        stat.p99_cycles
+    );
+    assert!(
+        auto.mean_active_shards() <= stat.mean_active_shards(),
+        "autoscaling should not use more shard-time than the static fleet"
+    );
 }
 
 fn main() {
@@ -54,8 +161,8 @@ fn main() {
             "{:<7} {:>8.1} {:>9.2} {:>9.2} {:>9.1} {:>7.0} {:>8.0}% {:>9} {:>8.1}{}",
             shards,
             m.requests_per_sec,
-            m.p50_cycles as f64 / 250e3,
-            m.p99_cycles as f64 / 250e3,
+            ms(m.p50_cycles),
+            ms(m.p99_cycles),
             m.aggregate_macs_per_cycle,
             m.shard_utilization * 100.0,
             m.cache_hit_rate() * 100.0,
@@ -65,4 +172,5 @@ fn main() {
         );
         assert!(m.cache_misses <= 3, "at most one deploy per model");
     }
+    scenario_matrix(hw, requests);
 }

@@ -2,6 +2,14 @@
 //! notation (Fig. 5) — `pv.mlsdotusp.b s1, aw, ...`, `csrwi simd_fmt`,
 //! `lp.setup` — so generated kernels can be inspected side-by-side with
 //! the listing in the paper.
+//!
+//! The rendering is **lossless** against [`crate::isa::parse::parse`]
+//! (encode→disasm→parse roundtrips to the same instruction) with two
+//! documented conventions: state a real encoding cannot carry rides in
+//! a trailing `#` comment (`mpc_cnt`, the fused `wb-load` target), and
+//! post-modified memory ops render only their increment — the XpulpV2
+//! encoding has no separate offset field, and the kernel generators
+//! never emit one (asserted by the roundtrip property test).
 
 use super::instr::{AluOp, Cond, Csr, Instr, MlChannel, MlUpdate, SimdFmt};
 use super::Program;
@@ -12,6 +20,18 @@ fn fmt_suffix(f: SimdFmt) -> &'static str {
         SimdFmt::Byte => "b",
         SimdFmt::Nibble => "n",
         SimdFmt::Crumb => "c",
+    }
+}
+
+/// Mnemonic suffix encoding the operand formats: one letter when both
+/// operands share a format, activation-then-weight letters otherwise.
+/// The single place that pins the convention
+/// [`crate::isa::parse`]'s `fmts_from_mix` inverts.
+pub(crate) fn mix_suffix(a_fmt: SimdFmt, w_fmt: SimdFmt) -> String {
+    if a_fmt == w_fmt {
+        fmt_suffix(a_fmt).to_string()
+    } else {
+        format!("{}{}", fmt_suffix(a_fmt), fmt_suffix(w_fmt))
     }
 }
 
@@ -85,37 +105,41 @@ pub fn disasm(i: &Instr) -> String {
         Instr::Mac { rd, rs1, rs2 } => format!("p.mac   x{rd}, x{rs1}, x{rs2}"),
         Instr::Clipu { rd, rs1, bits } => format!("p.clipu x{rd}, x{rs1}, {bits}"),
         Instr::Sdotp { rd, ra, rw, a_fmt, w_fmt, sub } => {
-            if a_fmt == w_fmt {
-                format!("pv.sdotusp.{} x{rd}, x{ra}, x{rw}", fmt_suffix(a_fmt))
+            let mix = mix_suffix(a_fmt, w_fmt);
+            // mpc_cnt lives in a CSR-fed counter, not the encoding: it is
+            // rendered as a comment whenever it carries information
+            // (always for mixed formats, nonzero otherwise).
+            if a_fmt != w_fmt || sub != 0 {
+                format!("pv.sdotusp.{mix} x{rd}, x{ra}, x{rw}  # mpc_cnt={sub}")
             } else {
-                format!(
-                    "pv.sdotusp.{}{} x{rd}, x{ra}, x{rw}  # mpc_cnt={sub}",
-                    fmt_suffix(a_fmt),
-                    fmt_suffix(w_fmt)
-                )
+                format!("pv.sdotusp.{mix} x{rd}, x{ra}, x{rw}")
             }
         }
         Instr::MlSdotp { acc, a_slot, w_slot, a_fmt, w_fmt, sub, upd } => {
-            let upd_s = match upd {
-                MlUpdate::None => String::new(),
-                MlUpdate::Load { ch, slot } => format!(
-                    "  # wb-load {} <- {}",
+            let mix = mix_suffix(a_fmt, w_fmt);
+            let mut notes: Vec<String> = Vec::new();
+            if a_fmt != w_fmt || sub != 0 {
+                notes.push(format!("mpc_cnt={sub}"));
+            }
+            if let MlUpdate::Load { ch, slot } = upd {
+                notes.push(format!(
+                    "wb-load {} <- {}",
                     nn_slot(slot),
                     match ch {
                         MlChannel::Act => "a_ch",
                         MlChannel::Wgt => "w_ch",
                     }
-                ),
-            };
-            let mix = if a_fmt == w_fmt {
-                fmt_suffix(a_fmt).to_string()
-            } else {
-                format!("{}{} (sub={sub})", fmt_suffix(a_fmt), fmt_suffix(w_fmt))
-            };
+                ));
+            }
             format!(
-                "pv.mlsdotusp.{mix} x{acc}, {}, {}{upd_s}",
+                "pv.mlsdotusp.{mix} x{acc}, {}, {}{}",
                 nn_slot(a_slot),
-                nn_slot(w_slot)
+                nn_slot(w_slot),
+                if notes.is_empty() {
+                    String::new()
+                } else {
+                    format!("  # {}", notes.join(", "))
+                }
             )
         }
         Instr::NnLoad { ch, slot } => format!(

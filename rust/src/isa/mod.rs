@@ -22,6 +22,7 @@
 
 pub mod disasm;
 pub mod instr;
+pub mod parse;
 pub mod variant;
 
 pub use instr::{AluOp, Cond, Csr, Instr, MlChannel, MlUpdate, NnSlot, Program, Reg, SimdFmt};

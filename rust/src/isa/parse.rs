@@ -1,0 +1,559 @@
+//! Assembly parser: the inverse of [`crate::isa::disasm`].
+//!
+//! [`parse`] turns one line of the disassembler's Fig.-5-style notation
+//! back into the instruction IR, so `encode → disasm → parse` is a
+//! roundtrip over every kernel the generators emit (property-tested
+//! below across all [`crate::isa::IsaVariant`]s × the paper's
+//! precision grid).
+//!
+//! # Representation conventions (the documented asymmetries)
+//!
+//! Three pieces of IR state have no slot in the textual encoding; the
+//! disassembler renders them as a trailing `#` comment, which this
+//! parser treats as **load-bearing**:
+//!
+//! - `mpc_cnt=N` — the MPC subgroup counter of a (mixed-precision)
+//!   `pv.sdotusp`/`pv.mlsdotusp` (hardware derives it from CSR state,
+//!   the IR carries it inline). Omitted ⇒ `sub == 0`.
+//! - `wb-load <slot> <- <ch>` — the fused write-back load of a
+//!   Mac&Load (hardware derives target slot and channel from the MLC;
+//!   the IR carries them inline). Omitted ⇒ [`MlUpdate::None`].
+//! - Post-modified memory ops (`p.lw x1, 4(x2!)`) render only the
+//!   post-increment: the XpulpV2 encoding has no separate offset field
+//!   for them, so an IR value with both `off != 0` and `post_inc != 0`
+//!   would be lossy. The kernel generators never emit that combination
+//!   (asserted by the roundtrip test), and [`parse`] always returns
+//!   `off == 0` for the post-modified form.
+
+use super::instr::{AluOp, Cond, Csr, Instr, MlChannel, MlUpdate, NnSlot, Reg, SimdFmt};
+
+fn fmt_from_suffix(c: char) -> Option<SimdFmt> {
+    Some(match c {
+        'h' => SimdFmt::Half,
+        'b' => SimdFmt::Byte,
+        'n' => SimdFmt::Nibble,
+        'c' => SimdFmt::Crumb,
+        _ => return None,
+    })
+}
+
+/// Inverse of [`crate::isa::disasm`]'s `mix_suffix`: one letter = both
+/// operands share the format, two letters = activation then weight.
+fn fmts_from_mix(mix: &str) -> Option<(SimdFmt, SimdFmt)> {
+    let fmts: Vec<SimdFmt> = mix.chars().map(fmt_from_suffix).collect::<Option<_>>()?;
+    match fmts.as_slice() {
+        [f] => Some((*f, *f)),
+        [a, w] => Some((*a, *w)),
+        _ => None,
+    }
+}
+
+fn csr_from_name(s: &str) -> Option<Csr> {
+    Some(match s {
+        "simd_fmt" => Csr::SimdFmt,
+        "mix_skip" => Csr::MixSkip,
+        "sb_legacy" => Csr::SbLegacy,
+        "a_stride" => Csr::AStride,
+        "w_stride" => Csr::WStride,
+        "a_rollback" => Csr::ARollback,
+        "w_rollback" => Csr::WRollback,
+        "a_skip" => Csr::ASkip,
+        "w_skip" => Csr::WSkip,
+        "a_csr" => Csr::ABase,
+        "w_csr" => Csr::WBase,
+        _ => return None,
+    })
+}
+
+fn alu_from_name(s: &str) -> Option<AluOp> {
+    Some(match s {
+        "add" => AluOp::Add,
+        "sub" => AluOp::Sub,
+        "and" => AluOp::And,
+        "or" => AluOp::Or,
+        "xor" => AluOp::Xor,
+        "sll" => AluOp::Sll,
+        "srl" => AluOp::Srl,
+        "sra" => AluOp::Sra,
+        "mul" => AluOp::Mul,
+        "min" => AluOp::Min,
+        "max" => AluOp::Max,
+        _ => return None,
+    })
+}
+
+/// `x{n}` → register index.
+fn reg(tok: &str) -> Option<Reg> {
+    tok.strip_prefix('x')?.parse().ok()
+}
+
+/// `w{n}` / `a{n}` → NN-RF slot index (weights 0-3, activations 4-5).
+fn nn_slot(tok: &str) -> Option<NnSlot> {
+    if let Some(n) = tok.strip_prefix('w') {
+        let n: u8 = n.parse().ok()?;
+        (n < 4).then_some(n)
+    } else if let Some(n) = tok.strip_prefix('a') {
+        let n: u8 = n.parse().ok()?;
+        (n < 2).then_some(4 + n)
+    } else {
+        None
+    }
+}
+
+/// Signed decimal (with optional sign) or `0x…` two's-complement hex.
+fn imm_i32(tok: &str) -> Option<i32> {
+    if let Some(hex) = tok.strip_prefix("0x") {
+        u32::from_str_radix(hex, 16).ok().map(|v| v as i32)
+    } else {
+        tok.parse().ok()
+    }
+}
+
+fn imm_u32(tok: &str) -> Option<u32> {
+    if let Some(hex) = tok.strip_prefix("0x") {
+        u32::from_str_radix(hex, 16).ok()
+    } else {
+        tok.parse().ok()
+    }
+}
+
+/// `{v}(x{base})` → (base, v, false) | `{v}(x{base}!)` → (base, v, true).
+fn mem_operand(tok: &str) -> Option<(Reg, i32, bool)> {
+    let open = tok.find('(')?;
+    let v: i32 = tok[..open].parse().ok()?;
+    let inner = tok[open + 1..].strip_suffix(')')?;
+    let (inner, post) = match inner.strip_suffix('!') {
+        Some(i) => (i, true),
+        None => (inner, false),
+    };
+    Some((reg(inner)?, v, post))
+}
+
+fn ch_from_name(s: &str) -> Option<MlChannel> {
+    match s {
+        "a_ch" => Some(MlChannel::Act),
+        "w_ch" => Some(MlChannel::Wgt),
+        _ => None,
+    }
+}
+
+/// Parse one line of disassembly (optionally carrying the disassembler's
+/// `#` comment) back into an [`Instr`]. Returns `None` for anything the
+/// disassembler cannot have produced.
+pub fn parse(line: &str) -> Option<Instr> {
+    let s = line.trim();
+    let (code, comment) = match s.find('#') {
+        Some(i) => (s[..i].trim_end(), s[i + 1..].trim()),
+        None => (s, ""),
+    };
+    let mut words = code.split_whitespace();
+    let mnem = words.next()?;
+    let rest: String = words.collect::<Vec<_>>().join(" ");
+    let ops: Vec<&str> =
+        rest.split(',').map(|o| o.trim()).filter(|o| !o.is_empty()).collect();
+    // comment notes: "mpc_cnt=N" and/or "wb-load w2 <- w_ch"
+    let mut sub: u8 = 0;
+    let mut upd = MlUpdate::None;
+    for note in comment.split(',').map(|n| n.trim()).filter(|n| !n.is_empty()) {
+        if let Some(v) = note.strip_prefix("mpc_cnt=") {
+            sub = v.parse().ok()?;
+        } else if let Some(rest) = note.strip_prefix("wb-load ") {
+            let mut it = rest.split("<-").map(|p| p.trim());
+            let slot = nn_slot(it.next()?)?;
+            let ch = ch_from_name(it.next()?)?;
+            upd = MlUpdate::Load { ch, slot };
+        }
+    }
+
+    match mnem {
+        "li" => Some(Instr::Li { rd: reg(ops.first()?)?, imm: imm_i32(ops.get(1)?)? }),
+        "p.extractu" => Some(Instr::ExtractU {
+            rd: reg(ops.first()?)?,
+            rs1: reg(ops.get(1)?)?,
+            len: ops.get(2)?.parse().ok()?,
+            off: ops.get(3)?.parse().ok()?,
+        }),
+        "p.extract" => Some(Instr::Extract {
+            rd: reg(ops.first()?)?,
+            rs1: reg(ops.get(1)?)?,
+            len: ops.get(2)?.parse().ok()?,
+            off: ops.get(3)?.parse().ok()?,
+        }),
+        "p.insert" => Some(Instr::Insert {
+            rd: reg(ops.first()?)?,
+            rs1: reg(ops.get(1)?)?,
+            len: ops.get(2)?.parse().ok()?,
+            off: ops.get(3)?.parse().ok()?,
+        }),
+        "lw" | "p.lw" | "lbu" | "p.lbu" => {
+            let rd = reg(ops.first()?)?;
+            let (base, v, post) = mem_operand(ops.get(1)?)?;
+            if post != (mnem.starts_with("p.")) {
+                return None;
+            }
+            let (off, post_inc) = if post { (0, v) } else { (v, 0) };
+            Some(if mnem.ends_with("lw") {
+                Instr::Lw { rd, base, off, post_inc }
+            } else {
+                Instr::Lbu { rd, base, off, post_inc }
+            })
+        }
+        "sw" | "p.sw" | "sb" | "p.sb" => {
+            let rs = reg(ops.first()?)?;
+            let (base, v, post) = mem_operand(ops.get(1)?)?;
+            if post != (mnem.starts_with("p.")) {
+                return None;
+            }
+            let (off, post_inc) = if post { (0, v) } else { (v, 0) };
+            Some(if mnem.ends_with("sw") {
+                Instr::Sw { rs, base, off, post_inc }
+            } else {
+                Instr::Sb { rs, base, off, post_inc }
+            })
+        }
+        "p.mac" => Some(Instr::Mac {
+            rd: reg(ops.first()?)?,
+            rs1: reg(ops.get(1)?)?,
+            rs2: reg(ops.get(2)?)?,
+        }),
+        "p.clipu" => Some(Instr::Clipu {
+            rd: reg(ops.first()?)?,
+            rs1: reg(ops.get(1)?)?,
+            bits: ops.get(2)?.parse().ok()?,
+        }),
+        "p.nnload" => Some(Instr::NnLoad {
+            slot: nn_slot(ops.first()?)?,
+            ch: ch_from_name(ops.get(1)?)?,
+        }),
+        "csrwi" => Some(Instr::CsrW {
+            csr: csr_from_name(ops.first()?)?,
+            imm: imm_u32(ops.get(1)?)?,
+        }),
+        "lp.setup" => Some(Instr::LpSetup {
+            l: ops.first()?.strip_prefix('l')?.parse().ok()?,
+            count: ops.get(1)?.parse().ok()?,
+            len: ops.get(2)?.strip_prefix('+')?.parse().ok()?,
+        }),
+        "beq" | "bne" | "blt" | "bge" => Some(Instr::Branch {
+            cond: match mnem {
+                "beq" => Cond::Eq,
+                "bne" => Cond::Ne,
+                "blt" => Cond::Lt,
+                _ => Cond::Ge,
+            },
+            rs1: reg(ops.first()?)?,
+            rs2: reg(ops.get(1)?)?,
+            off: ops.get(2)?.parse().ok()?,
+        }),
+        "p.barrier" => ops.is_empty().then_some(Instr::Barrier),
+        "halt" => ops.is_empty().then_some(Instr::Halt),
+        _ => {
+            if let Some(mix) = mnem.strip_prefix("pv.sdotusp.") {
+                let (a_fmt, w_fmt) = fmts_from_mix(mix)?;
+                return Some(Instr::Sdotp {
+                    rd: reg(ops.first()?)?,
+                    ra: reg(ops.get(1)?)?,
+                    rw: reg(ops.get(2)?)?,
+                    a_fmt,
+                    w_fmt,
+                    sub,
+                });
+            }
+            if let Some(mix) = mnem.strip_prefix("pv.mlsdotusp.") {
+                let (a_fmt, w_fmt) = fmts_from_mix(mix)?;
+                return Some(Instr::MlSdotp {
+                    acc: reg(ops.first()?)?,
+                    a_slot: nn_slot(ops.get(1)?)?,
+                    w_slot: nn_slot(ops.get(2)?)?,
+                    a_fmt,
+                    w_fmt,
+                    sub,
+                    upd,
+                });
+            }
+            // ALU: register-register, or register-immediate with an
+            // 'i'-suffixed mnemonic.
+            if let Some(op) = alu_from_name(mnem) {
+                return Some(Instr::Alu {
+                    op,
+                    rd: reg(ops.first()?)?,
+                    rs1: reg(ops.get(1)?)?,
+                    rs2: reg(ops.get(2)?)?,
+                });
+            }
+            if let Some(op) = mnem.strip_suffix('i').and_then(alu_from_name) {
+                return Some(Instr::AluI {
+                    op,
+                    rd: reg(ops.first()?)?,
+                    rs1: reg(ops.get(1)?)?,
+                    imm: imm_i32(ops.get(2)?)?,
+                });
+            }
+            None
+        }
+    }
+}
+
+/// Parse a full [`disasm_program`](crate::isa::disasm::disasm_program)
+/// listing: skips the header comment line and per-line `pc:` prefixes.
+pub fn parse_program(listing: &str) -> Option<Vec<Instr>> {
+    listing
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .map(|l| {
+            let body = match l.find(':') {
+                Some(i) if l[..i].trim().chars().all(|c| c.is_ascii_digit()) => &l[i + 1..],
+                _ => l,
+            };
+            parse(body)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::disasm::{disasm, disasm_program};
+    use crate::isa::variant::IsaVariant;
+    use crate::qnn::Precision;
+    use crate::util::{proptest, Prng};
+
+    fn roundtrip(i: Instr) {
+        let text = disasm(&i);
+        let back = parse(&text);
+        assert_eq!(back, Some(i), "roundtrip failed for `{text}`");
+    }
+
+    /// Hand-built coverage of every IR variant, including the edge
+    /// representations (negative immediates as two's-complement hex,
+    /// post-modified vs offset addressing, comment-carried state).
+    #[test]
+    fn every_variant_roundtrips() {
+        use Instr::*;
+        let cases = vec![
+            Li { rd: 1, imm: 0 },
+            Li { rd: 31, imm: -4 },
+            Li { rd: 2, imm: 0x1000_0040u32 as i32 },
+            Alu { op: AluOp::Add, rd: 1, rs1: 2, rs2: 3 },
+            Alu { op: AluOp::Max, rd: 30, rs1: 0, rs2: 31 },
+            AluI { op: AluOp::Sra, rd: 4, rs1: 5, imm: -7 },
+            AluI { op: AluOp::Add, rd: 4, rs1: 5, imm: 12 },
+            ExtractU { rd: 1, rs1: 2, off: 3, len: 4 },
+            Extract { rd: 1, rs1: 2, off: 0, len: 8 },
+            Insert { rd: 9, rs1: 8, off: 24, len: 8 },
+            Lw { rd: 1, base: 2, off: 16, post_inc: 0 },
+            Lw { rd: 1, base: 2, off: 0, post_inc: 4 },
+            Lbu { rd: 1, base: 2, off: -3, post_inc: 0 },
+            Lbu { rd: 1, base: 2, off: 0, post_inc: 1 },
+            Sw { rs: 7, base: 6, off: 0, post_inc: 0 },
+            Sw { rs: 7, base: 6, off: 0, post_inc: -8 },
+            Sb { rs: 7, base: 6, off: 5, post_inc: 0 },
+            Sb { rs: 7, base: 6, off: 0, post_inc: 1 },
+            Mac { rd: 10, rs1: 11, rs2: 12 },
+            Clipu { rd: 1, rs1: 1, bits: 4 },
+            Sdotp { rd: 1, ra: 2, rw: 3, a_fmt: SimdFmt::Byte, w_fmt: SimdFmt::Byte, sub: 0 },
+            Sdotp { rd: 1, ra: 2, rw: 3, a_fmt: SimdFmt::Byte, w_fmt: SimdFmt::Nibble, sub: 1 },
+            Sdotp { rd: 1, ra: 2, rw: 3, a_fmt: SimdFmt::Crumb, w_fmt: SimdFmt::Crumb, sub: 3 },
+            Sdotp { rd: 1, ra: 2, rw: 3, a_fmt: SimdFmt::Half, w_fmt: SimdFmt::Crumb, sub: 0 },
+            MlSdotp {
+                acc: 1,
+                a_slot: 4,
+                w_slot: 0,
+                a_fmt: SimdFmt::Byte,
+                w_fmt: SimdFmt::Byte,
+                sub: 0,
+                upd: MlUpdate::None,
+            },
+            MlSdotp {
+                acc: 1,
+                a_slot: 5,
+                w_slot: 3,
+                a_fmt: SimdFmt::Byte,
+                w_fmt: SimdFmt::Nibble,
+                sub: 1,
+                upd: MlUpdate::Load { ch: MlChannel::Wgt, slot: 2 },
+            },
+            MlSdotp {
+                acc: 28,
+                a_slot: 4,
+                w_slot: 1,
+                a_fmt: SimdFmt::Nibble,
+                w_fmt: SimdFmt::Nibble,
+                sub: 1,
+                upd: MlUpdate::Load { ch: MlChannel::Act, slot: 5 },
+            },
+            NnLoad { ch: MlChannel::Act, slot: 4 },
+            NnLoad { ch: MlChannel::Wgt, slot: 0 },
+            CsrW { csr: Csr::SimdFmt, imm: 0x12 },
+            CsrW { csr: Csr::WBase, imm: 0x1000_2000 },
+            LpSetup { l: 0, count: 70, len: 17 },
+            LpSetup { l: 1, count: 1, len: 1 },
+            Branch { cond: Cond::Eq, rs1: 1, rs2: 2, off: 5 },
+            Branch { cond: Cond::Ne, rs1: 1, rs2: 0, off: -3 },
+            Branch { cond: Cond::Lt, rs1: 9, rs2: 8, off: 2 },
+            Branch { cond: Cond::Ge, rs1: 9, rs2: 8, off: -2 },
+            Barrier,
+            Halt,
+        ];
+        for i in cases {
+            roundtrip(i);
+        }
+    }
+
+    /// Every CSR name roundtrips through its rendering.
+    #[test]
+    fn every_csr_roundtrips() {
+        for csr in [
+            Csr::SimdFmt,
+            Csr::MixSkip,
+            Csr::SbLegacy,
+            Csr::AStride,
+            Csr::WStride,
+            Csr::ARollback,
+            Csr::WRollback,
+            Csr::ASkip,
+            Csr::WSkip,
+            Csr::ABase,
+            Csr::WBase,
+        ] {
+            roundtrip(Instr::CsrW { csr, imm: 7 });
+        }
+    }
+
+    /// The satellite guarantee: disassembling the generated MatMul
+    /// kernel of EVERY IsaVariant × precision point and parsing it back
+    /// reproduces the instruction stream exactly — including the
+    /// generator invariants the textual form relies on (post-modified
+    /// ops carry no separate offset).
+    #[test]
+    fn generated_kernels_roundtrip_for_every_isa() {
+        use crate::kernels::matmul::{gen_matmul, MatMulTask};
+        use crate::kernels::requant::RequantCfg;
+        for isa in IsaVariant::ALL {
+            for prec in Precision::grid() {
+                let task = MatMulTask {
+                    m: 8,
+                    n: 8,
+                    k: 32,
+                    prec,
+                    a_base: crate::sim::TCDM_BASE,
+                    a_pitch: (32usize.div_ceil(32 / prec.a_bits as usize) * 4) as u32,
+                    w_base: crate::sim::TCDM_BASE + 4096,
+                    w_pitch: 16,
+                    out_base: crate::sim::TCDM_BASE + 8192,
+                    out_pitch: 8,
+                    quant: RequantCfg {
+                        mult_base: crate::sim::TCDM_BASE + 12288,
+                        bias_base: crate::sim::TCDM_BASE + 12544,
+                        shift: 8,
+                        out_bits: 8,
+                    },
+                };
+                let prog = gen_matmul(isa, &task, 0, 1);
+                assert!(!prog.is_empty(), "{isa} {prec}: empty kernel");
+                for instr in &prog.instrs {
+                    // the lossless-rendering invariant (module docs)
+                    match *instr {
+                        Instr::Lw { off, post_inc, .. }
+                        | Instr::Lbu { off, post_inc, .. }
+                        | Instr::Sw { off, post_inc, .. }
+                        | Instr::Sb { off, post_inc, .. } => {
+                            assert!(
+                                post_inc == 0 || off == 0,
+                                "{isa} {prec}: post-modified op with offset {instr:?}"
+                            );
+                        }
+                        _ => {}
+                    }
+                    roundtrip(*instr);
+                }
+                // whole-listing parse (addresses + header) agrees too
+                let listing = disasm_program(&prog);
+                let back = parse_program(&listing).expect("listing must parse");
+                assert_eq!(back, prog.instrs, "{isa} {prec}: listing roundtrip");
+            }
+        }
+    }
+
+    /// Property: random instructions drawn from the IR roundtrip.
+    #[test]
+    fn prop_random_instructions_roundtrip() {
+        let fmts = [SimdFmt::Half, SimdFmt::Byte, SimdFmt::Nibble, SimdFmt::Crumb];
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let r = |rng: &mut Prng| rng.range(0, 32) as u8;
+                match rng.range(0, 10) {
+                    0 => Instr::Li { rd: r(rng), imm: rng.next_u32() as i32 },
+                    1 => Instr::Alu {
+                        op: *rng.pick(&[AluOp::Add, AluOp::Sub, AluOp::Sll, AluOp::Min]),
+                        rd: r(rng),
+                        rs1: r(rng),
+                        rs2: r(rng),
+                    },
+                    2 => Instr::AluI {
+                        op: *rng.pick(&[AluOp::Add, AluOp::Srl, AluOp::And, AluOp::Max]),
+                        rd: r(rng),
+                        rs1: r(rng),
+                        imm: rng.range_i64(-2048, 2048) as i32,
+                    },
+                    3 => Instr::Lw {
+                        rd: r(rng),
+                        base: r(rng),
+                        off: if rng.chance(0.5) { rng.range_i64(-64, 64) as i32 * 4 } else { 0 },
+                        post_inc: 0,
+                    },
+                    4 => Instr::Sw {
+                        rs: r(rng),
+                        base: r(rng),
+                        off: 0,
+                        post_inc: rng.range_i64(-16, 17) as i32,
+                    },
+                    5 => Instr::Sdotp {
+                        rd: r(rng),
+                        ra: r(rng),
+                        rw: r(rng),
+                        a_fmt: *rng.pick(&fmts),
+                        w_fmt: *rng.pick(&fmts),
+                        sub: rng.range(0, 8) as u8,
+                    },
+                    6 => Instr::MlSdotp {
+                        acc: r(rng),
+                        a_slot: 4 + rng.range(0, 2) as u8,
+                        w_slot: rng.range(0, 4) as u8,
+                        a_fmt: *rng.pick(&fmts),
+                        w_fmt: *rng.pick(&fmts),
+                        sub: rng.range(0, 8) as u8,
+                        upd: if rng.chance(0.5) {
+                            MlUpdate::None
+                        } else {
+                            MlUpdate::Load {
+                                ch: *rng.pick(&[MlChannel::Act, MlChannel::Wgt]),
+                                slot: rng.range(0, 6) as u8,
+                            }
+                        },
+                    },
+                    7 => Instr::LpSetup {
+                        l: rng.range(0, 2) as u8,
+                        count: rng.next_u32() % 1000 + 1,
+                        len: (rng.range(1, 100)) as u16,
+                    },
+                    8 => Instr::Clipu { rd: r(rng), rs1: r(rng), bits: rng.range(1, 9) as u8 },
+                    _ => Instr::Branch {
+                        cond: *rng.pick(&[Cond::Eq, Cond::Ne, Cond::Lt, Cond::Ge]),
+                        rs1: r(rng),
+                        rs2: r(rng),
+                        off: rng.range_i64(-100, 100) as i32,
+                    },
+                }
+            },
+            |i| {
+                let text = disasm(i);
+                if parse(&text) == Some(*i) {
+                    Ok(())
+                } else {
+                    Err(format!("`{text}` parsed to {:?}", parse(&text)))
+                }
+            },
+        );
+    }
+}

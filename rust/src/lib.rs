@@ -36,10 +36,13 @@
 //!   models (HLO text) for cross-validation of every simulated kernel.
 //! - [`coordinator`] — end-to-end inference driver: executes a DORY plan
 //!   (DMA + kernel dispatch) on the simulated cluster and collects metrics.
-//! - [`serve`] — multi-cluster inference serving engine: bounded request
-//!   queue, dynamic batching, compiled-plan cache keyed by
-//!   [`dory::PlanKey`], shard pool with model residency, fleet metrics
-//!   (queue → batcher → shard pool → metrics; see `serve/README.md`).
+//! - [`serve`] — multi-cluster inference serving engine: trace-driven
+//!   workload generator (steady/Poisson/bursty/diurnal arrivals, SLO
+//!   classes with deadlines), bounded request queue with EDF ordering
+//!   and load shedding, dynamic batching, compiled-plan cache keyed by
+//!   [`dory::PlanKey`], elastic shard pool with model residency and
+//!   autoscaling, per-class fleet metrics (workload → queue → batcher →
+//!   shard pool → metrics; see `serve/README.md`).
 //! - [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section (Tables I-IV, Fig. 7).
 //!

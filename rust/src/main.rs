@@ -28,9 +28,19 @@ COMMANDS:
   run-net <isa> <mnv1-8b|mnv1-8b4b|resnet20-4b2b> [--quick] [--no-fastpath]
   serve-bench [--shards N] [--requests N] [--max-batch N] [--full] [--exact]
               [--workers N] [--sequential] [--no-fastpath]
-                    replay a synthetic mixed 3-model traffic trace on a
+              [--trace steady|poisson|bursty|diurnal] [--slo]
+              [--autoscale MIN:MAX] [--mean-gap CYCLES] [--seed N]
+                    replay a mixed 3-model traffic trace on a
                     multi-cluster serving fleet; reports req/s, p50/p99
                     latency, MAC/cycle, energy/request, plan-cache hits.
+                    --trace picks a generated arrival shape (default:
+                    the legacy uniform-gap trace); --slo attaches the
+                    standard 3-tier class mix (priorities + deadlines,
+                    EDF scheduling, shed-before-simulate) and reports
+                    per-class p50/p99 latency and deadline-miss rates;
+                    --autoscale MIN:MAX runs the elastic shard pool
+                    (queue-pressure wake, idle park, cold model load on
+                    wake) and reports the occupancy timeline.
                     Shard batches simulate on a host thread pool
                     (--workers N caps it, --sequential forces 1) and
                     steady-state windows replay via the sim fast path
@@ -49,6 +59,28 @@ fn flag_val(args: &[String], name: &str) -> Option<usize> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
+}
+
+/// String value of a `--name <s>` style flag.
+fn flag_str<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+/// Parse `--autoscale MIN:MAX`.
+fn parse_autoscale(s: &str) -> flexv::serve::AutoscaleConfig {
+    let parts: Vec<&str> = s.split(':').collect();
+    if parts.len() == 2 {
+        if let (Ok(min), Ok(max)) = (parts[0].parse(), parts[1].parse()) {
+            if min >= 1 && min <= max {
+                return flexv::serve::AutoscaleConfig::range(min, max);
+            }
+        }
+    }
+    eprintln!("bad --autoscale '{s}', expected MIN:MAX with 1 <= MIN <= MAX");
+    usage()
 }
 
 fn parse_isa(s: &str) -> IsaVariant {
@@ -135,22 +167,53 @@ fn main() {
             let full = args.iter().any(|a| a == "--full");
             let exact = args.iter().any(|a| a == "--exact");
             let fastpath = !args.iter().any(|a| a == "--no-fastpath");
+            let slo = args.iter().any(|a| a == "--slo");
             let shards = flag_val(&args, "--shards").unwrap_or(4);
             let requests = flag_val(&args, "--requests").unwrap_or(32);
             let max_batch = flag_val(&args, "--max-batch").unwrap_or(8);
+            let mean_gap = flag_val(&args, "--mean-gap").unwrap_or(2_000_000) as u64;
+            let seed = flag_val(&args, "--seed").map_or(0x5EEB, |s| s as u64);
             let workers = if args.iter().any(|a| a == "--sequential") {
                 1
             } else {
                 flag_val(&args, "--workers").unwrap_or(0)
             };
+            let shape = flag_str(&args, "--trace").map(|s| {
+                flexv::serve::TraceShape::from_name(s).unwrap_or_else(|| {
+                    eprintln!(
+                        "unknown trace shape '{s}' (expected steady | poisson | bursty | diurnal)"
+                    );
+                    usage()
+                })
+            });
+            // --slo needs the workload generator; default it to steady.
+            let shape = match (slo, shape) {
+                (true, None) => Some(flexv::serve::TraceShape::Steady),
+                (_, s) => s,
+            };
+            // the pool can never exceed --shards: clamp loudly rather
+            // than report a ceiling the fleet cannot reach
+            let autoscale = flag_str(&args, "--autoscale").map(|s| {
+                let mut a = parse_autoscale(s);
+                if a.max_shards > shards {
+                    eprintln!(
+                        "note: --autoscale max {} clamped to --shards {shards}",
+                        a.max_shards
+                    );
+                    a.max_shards = shards;
+                    a.min_shards = a.min_shards.min(shards);
+                }
+                a
+            });
             let hw = if full { 224 } else { 96 };
-            use flexv::serve::{standard_mix, Engine, ServeConfig};
+            use flexv::serve::{standard_mix, Engine, ServeConfig, SloClass, WorkloadSpec};
             let cfg = ServeConfig {
                 shards,
                 max_batch,
                 exact,
                 workers,
                 fastpath,
+                autoscale,
                 ..ServeConfig::default()
             };
             let mut eng = Engine::new(cfg);
@@ -159,7 +222,7 @@ fn main() {
             }
             println!(
                 "serve-bench: {requests} requests over 3 models on {shards} shards \
-                 (MNV1 input {hw}x{hw}{}, {}, {}) ...",
+                 (MNV1 input {hw}x{hw}{}, {}, {}, trace {}{}{}) ...",
                 if exact { ", exact mode" } else { "" },
                 match workers {
                     0 => "auto workers".to_string(),
@@ -167,8 +230,27 @@ fn main() {
                     n => format!("{n} workers"),
                 },
                 if fastpath { "fast path on" } else { "fast path off" },
+                shape.map_or("legacy".to_string(), |s| s.to_string()),
+                if slo { ", 3-tier SLO" } else { "" },
+                autoscale.map_or(String::new(), |a| format!(
+                    ", autoscale {}:{}",
+                    a.min_shards, a.max_shards
+                )),
             );
-            let trace = eng.synthetic_trace(requests, 2_000_000, &[0.45, 0.30, 0.25], 0x5EEB);
+            let trace = match shape {
+                None => eng.synthetic_trace(requests, mean_gap, &[0.45, 0.30, 0.25], seed),
+                Some(shape) => {
+                    let mut spec = WorkloadSpec::new(shape, requests, mean_gap, 3);
+                    spec.mix = vec![0.45, 0.30, 0.25];
+                    spec.seed = seed;
+                    if slo {
+                        // base deadline: 25x the mean gap — tight enough to
+                        // miss under bursts, slack under steady load
+                        spec.classes = SloClass::standard_tiers(mean_gap.saturating_mul(25));
+                    }
+                    eng.workload_trace(&spec)
+                }
+            };
             let t0 = std::time::Instant::now();
             let m = eng.run_trace(trace);
             let wall = t0.elapsed().as_secs_f64();

@@ -144,6 +144,84 @@ mod tests {
     }
 
     #[test]
+    fn prop_roundtrip_random_unsigned() {
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let bits = *rng.pick(&[2u8, 4, 8]);
+                let n = rng.range(1, 200);
+                let vals: Vec<u32> = (0..n).map(|_| rng.bits_unsigned(bits)).collect();
+                (bits, vals)
+            },
+            |(bits, vals)| {
+                let packed = pack_unsigned(vals, *bits);
+                if packed.len() != vals.len().div_ceil(8 / *bits as usize) {
+                    return Err(format!("packed length {}", packed.len()));
+                }
+                let got = unpack_unsigned(&packed, *bits, vals.len());
+                if &got == vals { Ok(()) } else { Err(format!("got {got:?}")) }
+            },
+        );
+    }
+
+    /// Ragged tails: lengths that are NOT a multiple of the per-byte (or
+    /// per-word) lane count round up to a whole byte whose unused high
+    /// lanes stay zero — the DORY L2 serializer and the DMA both rely on
+    /// deterministic (zero) padding.
+    #[test]
+    fn prop_tail_lanes_are_zero_padded() {
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let bits = *rng.pick(&[2u8, 4]);
+                let lanes = 32 / bits as usize;
+                // force a ragged length: k whole words plus 1..lanes-1
+                let n = rng.range(0, 3) * lanes + rng.range(1, lanes);
+                let vals: Vec<u32> = (0..n).map(|_| rng.bits_unsigned(bits)).collect();
+                (bits, vals)
+            },
+            |(bits, vals)| {
+                let per_byte = 8 / *bits as usize;
+                let packed = pack_unsigned(vals, *bits);
+                // every element of the partial last byte beyond n reads 0
+                let slots = packed.len() * per_byte;
+                for idx in vals.len()..slots {
+                    let v = get_unsigned(&packed, *bits, idx);
+                    if v != 0 {
+                        return Err(format!("tail lane {idx} = {v}, want 0"));
+                    }
+                }
+                // and the roundtrip ignores the padding
+                let got = unpack_unsigned(&packed, *bits, vals.len());
+                if &got == vals { Ok(()) } else { Err(format!("got {got:?}")) }
+            },
+        );
+    }
+
+    /// Signed tails: same ragged-length invariant through the
+    /// sign-extending path, plus per-element get consistency.
+    #[test]
+    fn prop_tail_roundtrip_signed_with_gets() {
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let bits = *rng.pick(&[2u8, 4, 8]);
+                let per_byte = 8 / bits as usize;
+                let n = rng.range(1, 8) * per_byte + rng.range(0, per_byte);
+                let vals: Vec<i32> = (0..n).map(|_| rng.bits_signed(bits)).collect();
+                (bits, vals)
+            },
+            |(bits, vals)| {
+                let packed = pack_signed(vals, *bits);
+                for (i, &want) in vals.iter().enumerate() {
+                    let got = get_signed(&packed, *bits, i);
+                    if got != want {
+                        return Err(format!("elem {i}: got {got} want {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn prop_get_set_consistent() {
         proptest::check_default(
             |rng: &mut Prng| {

@@ -1,0 +1,267 @@
+//! Elastic shard pool: scale the active shard count to the offered load.
+//!
+//! A static fleet sized for the burst peak idles through the valleys;
+//! one sized for the average melts under bursts. The autoscaler walks
+//! the active shard count between a configured `min` and `max` from two
+//! deterministic signals observed **between dispatch rounds on the
+//! sequential engine thread**:
+//!
+//! - **queue pressure** (scale up): after arrivals are admitted and
+//!   unmeetable requests shed, the target active count is the busy
+//!   shards plus one shard per `up_queue_per_shard` queued requests —
+//!   i.e. work waiting behind busy shards wakes parked shards in the
+//!   same dispatch round it queued (jumping straight to the needed
+//!   count — burst response is one round, not one shard per round, so
+//!   an elastic pool tracks a static max-size fleet's schedule through
+//!   a burst). Scale-up is **not** gated by the cooldown: an SLO breach
+//!   now outweighs churn.
+//! - **idleness** (scale down): when the queue is empty and an active
+//!   shard has been idle for `idle_cycles_down`, it is parked — at most
+//!   one shard per `cooldown_cycles`, so draining a valley doesn't
+//!   collapse the fleet just before the next burst.
+//!
+//! **Cold-load cost.** Parking a shard evicts its L2 model image
+//! ([`super::Shard::park`] clears residency): the next batch after a
+//! wake pays the full L3→L2 weight-streaming switch cost, exactly the
+//! cost a cold static shard pays on first use. Nothing else about a
+//! parked shard is retained or lost — its cluster (and the fleet-shared
+//! fast-path window cache) survives, because parking is a scheduling
+//! decision, not a teardown.
+//!
+//! **Determinism.** Decisions depend only on (simulated clock, queue
+//! depth, shard busy/idle state) — all products of the sequential
+//! scheduling half of the engine's determinism contract — so the
+//! scaling timeline (and therefore every completion) is bit-identical
+//! for any `workers` count and fast-path setting
+//! (`rust/tests/serve_workload.rs`).
+
+use super::shard::Shard;
+
+/// Elastic-pool knobs (`serve-bench --autoscale min:max`).
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// Never park below this many active shards (≥ 1).
+    pub min_shards: usize,
+    /// Never wake above this many active shards (≤ `ServeConfig::shards`).
+    pub max_shards: usize,
+    /// Queued requests per active shard that trigger a wake.
+    pub up_queue_per_shard: f64,
+    /// Idle cycles after which an active shard becomes parkable.
+    pub idle_cycles_down: u64,
+    /// Minimum cycles between two scale-*down* actions (scale-up is
+    /// deliberately immediate; see module docs).
+    pub cooldown_cycles: u64,
+}
+
+impl AutoscaleConfig {
+    /// Defaults for a `min:max` range: wake on any queued backlog beyond
+    /// one request per active shard; park after ~40 ms idle at 250 MHz;
+    /// at most one park per 4 ms.
+    pub fn range(min_shards: usize, max_shards: usize) -> Self {
+        assert!(min_shards >= 1 && min_shards <= max_shards, "need 1 <= min <= max");
+        AutoscaleConfig {
+            min_shards,
+            max_shards,
+            up_queue_per_shard: 1.0,
+            idle_cycles_down: 10_000_000,
+            cooldown_cycles: 1_000_000,
+        }
+    }
+}
+
+/// One scaling action, recorded for the occupancy timeline.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ScaleAction {
+    /// Woke `n` shards.
+    Up(usize),
+    /// Parked one shard.
+    Down,
+}
+
+/// The autoscaler's mutable state (cooldown bookkeeping + counters).
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    /// Cycle of the last scale-down (cooldown reference).
+    last_down: Option<u64>,
+    /// Shards woken over the run.
+    pub ups: u64,
+    /// Shards parked over the run.
+    pub downs: u64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        Autoscaler { cfg, last_down: None, ups: 0, downs: 0 }
+    }
+
+    /// Decide and apply one round of scaling at simulated cycle `now`
+    /// given the post-shed queue depth. Mutates shard active flags via
+    /// [`Shard::wake`]/[`Shard::park`] and returns the action taken, if
+    /// any. Runs on the engine thread between dispatch rounds — never
+    /// concurrently with shard execution.
+    pub fn step(
+        &mut self,
+        now: u64,
+        queue_len: usize,
+        shards: &mut [Shard],
+    ) -> Option<ScaleAction> {
+        let max = self.cfg.max_shards.min(shards.len());
+        let min = self.cfg.min_shards.min(max);
+        let active = shards.iter().filter(|s| s.active).count();
+
+        // Scale up: wake enough parked shards (lowest index first, so
+        // the choice is deterministic) to serve the in-flight work plus
+        // one shard per up_queue_per_shard queued requests.
+        let per = self.cfg.up_queue_per_shard.max(f64::MIN_POSITIVE);
+        let busy = shards.iter().filter(|s| s.active && !s.is_free(now)).count();
+        let needed = busy + (queue_len as f64 / per).ceil() as usize;
+        let target = needed.clamp(min, max);
+        if target > active {
+            let mut woken = 0;
+            for s in shards.iter_mut() {
+                if active + woken >= target {
+                    break;
+                }
+                if !s.active {
+                    s.wake();
+                    woken += 1;
+                }
+            }
+            if woken > 0 {
+                self.ups += woken as u64;
+                return Some(ScaleAction::Up(woken));
+            }
+            return None;
+        }
+
+        // Scale down: one idle shard per cooldown window, only when the
+        // queue is drained. Park the highest-index idle shard so shard 0
+        // stays the stable core of the fleet.
+        if queue_len == 0 && active > min {
+            let cooled = self
+                .last_down
+                .map_or(true, |t| now.saturating_sub(t) >= self.cfg.cooldown_cycles);
+            if cooled {
+                let victim = shards
+                    .iter_mut()
+                    .rev()
+                    .find(|s| s.active && s.idle_cycles(now) >= self.cfg.idle_cycles_down);
+                if let Some(s) = victim {
+                    s.park();
+                    self.downs += 1;
+                    self.last_down = Some(now);
+                    return Some(ScaleAction::Down);
+                }
+            }
+        }
+        None
+    }
+
+    /// Earliest future cycle at which a scale-down could fire, assuming
+    /// the queue stays empty and no new work lands: the soonest any
+    /// active shard reaches `idle_cycles_down`, pushed past the cooldown
+    /// window. `None` when the pool is already at its floor. The engine
+    /// uses this as a discrete wake event so long valleys actually park
+    /// shards instead of being skipped by the event-driven clock.
+    pub fn next_down_event(&self, shards: &[Shard]) -> Option<u64> {
+        let max = self.cfg.max_shards.min(shards.len());
+        let min = self.cfg.min_shards.min(max);
+        let active = shards.iter().filter(|s| s.active).count();
+        if active <= min {
+            return None;
+        }
+        let earliest = shards
+            .iter()
+            .filter(|s| s.active)
+            .map(|s| s.busy_until.saturating_add(self.cfg.idle_cycles_down))
+            .min()?;
+        Some(match self.last_down {
+            Some(t) => earliest.max(t.saturating_add(self.cfg.cooldown_cycles)),
+            None => earliest,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize, active: usize) -> Vec<Shard> {
+        (0..n)
+            .map(|i| {
+                let mut s = Shard::new(i, 2, false, None);
+                if i >= active {
+                    s.park();
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn active_ids(shards: &[Shard]) -> Vec<usize> {
+        shards.iter().filter(|s| s.active).map(|s| s.id).collect()
+    }
+
+    #[test]
+    fn wakes_enough_shards_for_the_backlog_in_one_step() {
+        let mut shards = fleet(4, 1);
+        let mut a = Autoscaler::new(AutoscaleConfig::range(1, 4));
+        // 3 queued requests at 1 request/shard => target 3 active
+        assert_eq!(a.step(0, 3, &mut shards), Some(ScaleAction::Up(2)));
+        assert_eq!(active_ids(&shards), vec![0, 1, 2]);
+        assert_eq!(a.ups, 2);
+        // already at target: no action
+        assert_eq!(a.step(10, 3, &mut shards), None);
+        // deeper backlog saturates at max
+        assert_eq!(a.step(20, 100, &mut shards), Some(ScaleAction::Up(1)));
+        assert_eq!(active_ids(&shards), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn parks_idle_shards_one_per_cooldown_down_to_min() {
+        let mut shards = fleet(3, 3);
+        let mut cfg = AutoscaleConfig::range(1, 3);
+        cfg.idle_cycles_down = 100;
+        cfg.cooldown_cycles = 1000;
+        let mut a = Autoscaler::new(cfg);
+        // not yet idle long enough
+        assert_eq!(a.step(50, 0, &mut shards), None);
+        // highest-index idle shard parks first
+        assert_eq!(a.step(200, 0, &mut shards), Some(ScaleAction::Down));
+        assert_eq!(active_ids(&shards), vec![0, 1]);
+        // cooldown blocks the next park
+        assert_eq!(a.step(300, 0, &mut shards), None);
+        assert_eq!(a.step(1300, 0, &mut shards), Some(ScaleAction::Down));
+        assert_eq!(active_ids(&shards), vec![0]);
+        // never below min
+        assert_eq!(a.step(99_999, 0, &mut shards), None);
+        assert_eq!((a.ups, a.downs), (0, 2));
+    }
+
+    #[test]
+    fn parked_shard_loses_residency_and_pays_cold_load_on_wake() {
+        let mut s = Shard::new(0, 2, false, None);
+        s.resident_model = Some(1);
+        s.park();
+        assert!(!s.active);
+        assert_eq!(s.resident_model, None, "parking evicts the L2 image");
+        s.wake();
+        assert!(s.active);
+        assert_eq!(s.resident_model, None, "wake is cold: next batch pays the switch");
+    }
+
+    #[test]
+    fn busy_shards_are_not_parked() {
+        let mut shards = fleet(2, 2);
+        shards[1].busy_until = 1_000_000; // mid-batch
+        let mut cfg = AutoscaleConfig::range(1, 2);
+        cfg.idle_cycles_down = 10;
+        cfg.cooldown_cycles = 0;
+        let mut a = Autoscaler::new(cfg);
+        // shard 1 is busy (idle_cycles == 0); shard 0 is idle => shard 0
+        // parks even though higher-index shards are preferred victims
+        assert_eq!(a.step(500_000, 0, &mut shards), Some(ScaleAction::Down));
+        assert_eq!(active_ids(&shards), vec![1]);
+    }
+}

@@ -33,7 +33,11 @@ impl Default for BatchPolicy {
 
 /// Form the next batch for a shard whose resident model is `resident`.
 /// Returns `None` when the queue is empty. The returned batch is
-/// non-empty and single-model.
+/// non-empty and single-model; the coalesced tail behind the lead is
+/// ordered earliest-deadline-first ([`RequestQueue::drain_model`]), so
+/// within a priority level tighter SLOs finish earlier. The lead itself
+/// is chosen priority-first, so a high-priority lead may legitimately
+/// precede a tail member with a tighter deadline.
 pub fn next_batch(
     queue: &mut RequestQueue,
     resident: Option<usize>,
@@ -53,13 +57,16 @@ pub fn next_batch(
 mod tests {
     use super::*;
     use crate::qnn::QTensor;
+    use crate::util::{proptest, Prng};
 
     fn req(id: u64, model: usize, priority: u8) -> Request {
         Request {
             id,
             model,
+            class: 0,
             priority,
             arrival_cycle: id,
+            deadline: None,
             input: QTensor::zeros(&[1, 1, 8], 8, false),
         }
     }
@@ -95,5 +102,96 @@ mod tests {
         let policy = BatchPolicy { max_batch: 1, prefer_resident: false };
         assert_eq!(next_batch(&mut q, None, &policy).unwrap().len(), 1);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn batch_is_edf_ordered_behind_the_lead() {
+        let mut q = RequestQueue::new(16);
+        let mut a = req(0, 0, 0);
+        a.deadline = Some(800);
+        let mut b = req(1, 0, 0);
+        b.deadline = Some(200);
+        q.push(a);
+        q.push(b);
+        q.push(req(2, 0, 0)); // best-effort goes last
+        let policy = BatchPolicy { max_batch: 4, prefer_resident: false };
+        let batch = next_batch(&mut q, None, &policy).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 0, 2]);
+    }
+
+    /// Property: over random queue contents, batches formed until the
+    /// queue drains (a) never mix models, (b) are non-empty and bounded
+    /// by `max_batch`, (c) lead with a top-priority request, (d) are
+    /// EDF-ordered within each priority level, and (e) account for every
+    /// admitted request exactly once.
+    #[test]
+    fn prop_batches_single_model_bounded_and_edf() {
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let n = rng.range(1, 40);
+                let max_batch = rng.range(1, 6);
+                let reqs: Vec<(usize, u8, Option<u64>)> = (0..n)
+                    .map(|_| {
+                        let model = rng.range(0, 3);
+                        let prio = rng.range(0, 3) as u8;
+                        let dl = rng.chance(0.5).then(|| rng.below(1000));
+                        (model, prio, dl)
+                    })
+                    .collect();
+                (max_batch, reqs)
+            },
+            |(max_batch, reqs)| {
+                let mut q = RequestQueue::new(64);
+                for (id, &(model, prio, dl)) in reqs.iter().enumerate() {
+                    let mut r = req(id as u64, model, prio);
+                    r.deadline = dl;
+                    q.push(r);
+                }
+                let policy = BatchPolicy { max_batch: *max_batch, prefer_resident: true };
+                let mut seen = vec![false; reqs.len()];
+                let mut resident = None;
+                while let Some(batch) = next_batch(&mut q, resident, &policy) {
+                    if batch.is_empty() || batch.len() > *max_batch {
+                        return Err(format!("batch size {} (max {max_batch})", batch.len()));
+                    }
+                    let model = batch[0].model;
+                    if batch.iter().any(|r| r.model != model) {
+                        return Err("batch mixes models".into());
+                    }
+                    // the lead must carry the top priority among the
+                    // requests that were still queued at formation time
+                    let top = reqs
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| !seen[*i])
+                        .map(|(_, &(_, p, _))| p)
+                        .max()
+                        .unwrap_or(0);
+                    if batch[0].priority != top {
+                        return Err(format!(
+                            "lead priority {} != queued max {top}",
+                            batch[0].priority
+                        ));
+                    }
+                    for w in batch[1..].windows(2) {
+                        if w[0].deadline_key() > w[1].deadline_key() {
+                            return Err("batch tail not EDF-ordered".into());
+                        }
+                    }
+                    for r in &batch {
+                        let i = r.id as usize;
+                        if seen[i] {
+                            return Err(format!("request {i} served twice"));
+                        }
+                        seen[i] = true;
+                    }
+                    resident = Some(model);
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("request lost (never batched)".into());
+                }
+                Ok(())
+            },
+        );
     }
 }

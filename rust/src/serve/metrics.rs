@@ -1,4 +1,4 @@
-//! Per-request and fleet-level serving metrics.
+//! Per-request, per-class, and fleet-level serving metrics.
 //!
 //! Everything is measured in simulated cluster cycles (deterministic);
 //! wall-clock figures are derived at the typical-corner frequency
@@ -6,18 +6,22 @@
 //! contract (see [`crate::serve`]) makes every **simulated** field a
 //! pure function of the trace, diffable across machines, worker
 //! counts, and fast-path settings — the parallelism tests assert
-//! exactly that. The one exception is the host-side simulator
-//! fast-path counters (`fastpath_*`): they describe how the simulation
-//! was computed (and can vary with thread interleaving on a shared
-//! window cache), never what it computed.
+//! exactly that; with SLO workloads this extends to deadline-miss
+//! counts, shed events, and the shard-occupancy timeline
+//! (`rust/tests/serve_workload.rs`). The one exception is the
+//! host-side simulator fast-path counters (`fastpath_*`): they
+//! describe how the simulation was computed (and can vary with thread
+//! interleaving on a shared window cache), never what it computed.
 
 use crate::report::F_TYP_MHZ;
 use crate::util::table::{f, Table};
 
+use super::autoscale::Autoscaler;
 use super::cache::PlanCache;
 use super::queue::RequestQueue;
-use super::request::Completion;
+use super::request::{Completion, ShedEvent};
 use super::shard::Shard;
+use super::workload::SloClass;
 
 /// Nearest-rank percentile over an ascending-sorted slice.
 pub fn percentile(sorted: &[u64], q: f64) -> u64 {
@@ -41,6 +45,50 @@ pub struct ModelRow {
     pub energy_uj: f64,
 }
 
+/// Aggregates for one SLO class (see [`SloClass`]).
+#[derive(Clone, Debug)]
+pub struct ClassRow {
+    pub name: String,
+    pub priority: u8,
+    /// Relative deadline of the class (`None` = best-effort).
+    pub deadline_cycles: Option<u64>,
+    pub served: usize,
+    /// Completions that finished after their deadline.
+    pub missed: usize,
+    /// Requests shed before simulation (deadline unmeetable).
+    pub shed: usize,
+    pub p50_cycles: u64,
+    pub p99_cycles: u64,
+}
+
+impl ClassRow {
+    /// Fraction of this class's admitted requests that violated their
+    /// deadline (late completions + sheds, over served + shed). 0 for a
+    /// best-effort class.
+    pub fn violation_rate(&self) -> f64 {
+        let n = self.served + self.shed;
+        if n == 0 {
+            0.0
+        } else {
+            (self.missed + self.shed) as f64 / n as f64
+        }
+    }
+}
+
+/// Everything [`FleetMetrics::collect`] reads, bundled (the engine owns
+/// all of it; the borrow is one struct instead of nine arguments).
+pub(crate) struct CollectInputs<'a> {
+    pub completions: &'a [Completion],
+    pub names: &'a [String],
+    pub classes: &'a [SloClass],
+    pub queue: &'a RequestQueue,
+    pub cache: &'a PlanCache,
+    pub shards: &'a [Shard],
+    pub shed: &'a [ShedEvent],
+    pub occupancy: &'a [(u64, usize)],
+    pub scaler: Option<&'a Autoscaler>,
+}
+
 /// The fleet-level report of one serving run.
 #[derive(Clone, Debug)]
 pub struct FleetMetrics {
@@ -48,6 +96,10 @@ pub struct FleetMetrics {
     pub served: usize,
     pub enqueued: u64,
     pub rejected: u64,
+    /// Requests shed before simulation (unmeetable deadlines).
+    pub shed: u64,
+    /// Completions that finished after their deadline.
+    pub deadline_misses: u64,
     pub peak_queue_depth: usize,
     /// First arrival → last completion, simulated cycles.
     pub span_cycles: u64,
@@ -68,6 +120,20 @@ pub struct FleetMetrics {
     pub batches: u64,
     pub mean_batch: f64,
     pub model_switches: u64,
+    /// Shards woken / parked by the autoscaler (0 for a static fleet).
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// `(cycle, active shards)` at start plus one entry per scaling
+    /// action — the shard-occupancy timeline (absolute simulated
+    /// cycles).
+    pub occupancy: Vec<(u64, usize)>,
+    /// Time-weighted mean of `occupancy` over first arrival → last
+    /// completion.
+    mean_active: f64,
+    /// Completions that carried a deadline (the [`FleetMetrics::miss_rate`]
+    /// denominator — per-completion, so it agrees with `deadline_misses`
+    /// even when requests carry deadlines their class table does not).
+    deadlined_served: usize,
     /// Simulator windows replayed purely from a memoized functional
     /// delta, across all shards (host-side metric; see `sim::fastpath`).
     pub fastpath_pure: u64,
@@ -76,6 +142,9 @@ pub struct FleetMetrics {
     /// Simulator windows cycle-simulated and recorded.
     pub fastpath_miss: u64,
     pub rows: Vec<ModelRow>,
+    /// Per-SLO-class latency and violation breakdown (single "default"
+    /// row when no class table was installed).
+    pub class_rows: Vec<ClassRow>,
 }
 
 impl FleetMetrics {
@@ -88,13 +157,36 @@ impl FleetMetrics {
         }
     }
 
-    pub(crate) fn collect(
-        completions: &[Completion],
-        names: &[String],
-        queue: &RequestQueue,
-        cache: &PlanCache,
-        shards: &[Shard],
-    ) -> FleetMetrics {
+    /// Deadline-miss rate over completions that carried a deadline
+    /// (sheds are counted separately; see [`ClassRow::violation_rate`]
+    /// for the combined per-class view).
+    pub fn miss_rate(&self) -> f64 {
+        if self.deadlined_served == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / self.deadlined_served as f64
+        }
+    }
+
+    /// Mean active shards over the run (occupancy time-weighted across
+    /// the first-arrival → last-completion window; computed in
+    /// [`FleetMetrics::collect`]).
+    pub fn mean_active_shards(&self) -> f64 {
+        self.mean_active
+    }
+
+    pub(crate) fn collect(inp: CollectInputs<'_>) -> FleetMetrics {
+        let CollectInputs {
+            completions,
+            names,
+            classes,
+            queue,
+            cache,
+            shards,
+            shed,
+            occupancy,
+            scaler,
+        } = inp;
         let served = completions.len();
         let mut latencies: Vec<u64> = completions.iter().map(|c| c.latency_cycles()).collect();
         latencies.sort_unstable();
@@ -106,6 +198,8 @@ impl FleetMetrics {
         let total_busy: u64 = shards.iter().map(|s| s.busy_cycles).sum();
         let batches: u64 = shards.iter().map(|s| s.batches).sum();
         let span_secs = span_cycles as f64 / (F_TYP_MHZ * 1e6);
+        let deadline_misses = completions.iter().filter(|c| c.missed_deadline()).count() as u64;
+        let deadlined_served = completions.iter().filter(|c| c.deadline.is_some()).count();
         let (mut fp_pure, mut fp_func, mut fp_miss) = (0u64, 0u64, 0u64);
         for s in shards {
             let (p, f, m) = s.fastpath_counts();
@@ -113,6 +207,25 @@ impl FleetMetrics {
             fp_func += f;
             fp_miss += m;
         }
+
+        // Time-weighted occupancy over the run window [first arrival,
+        // last completion]. Occupancy entries are absolute cycles; a
+        // segment straddling the window boundary contributes only its
+        // inside part.
+        let mean_active = if last_finish > first_arrival && !occupancy.is_empty() {
+            let (start, end) = (first_arrival, last_finish);
+            let mut area = 0.0;
+            for (i, &(t, n)) in occupancy.iter().enumerate() {
+                let seg_start = t.max(start);
+                let seg_end = occupancy.get(i + 1).map_or(end, |&(t2, _)| t2).clamp(start, end);
+                if seg_end > seg_start {
+                    area += (seg_end - seg_start) as f64 * n as f64;
+                }
+            }
+            area / (end - start) as f64
+        } else {
+            occupancy.last().map_or(0.0, |&(_, n)| n as f64)
+        };
 
         let rows = names
             .iter()
@@ -138,11 +251,34 @@ impl FleetMetrics {
             })
             .collect();
 
+        let class_rows = classes
+            .iter()
+            .enumerate()
+            .map(|(ci, c)| {
+                let of_class: Vec<&Completion> =
+                    completions.iter().filter(|x| x.class as usize == ci).collect();
+                let mut lat: Vec<u64> = of_class.iter().map(|x| x.latency_cycles()).collect();
+                lat.sort_unstable();
+                ClassRow {
+                    name: c.name.clone(),
+                    priority: c.priority,
+                    deadline_cycles: c.deadline_cycles,
+                    served: of_class.len(),
+                    missed: of_class.iter().filter(|x| x.missed_deadline()).count(),
+                    shed: shed.iter().filter(|s| s.class as usize == ci).count(),
+                    p50_cycles: percentile(&lat, 0.50),
+                    p99_cycles: percentile(&lat, 0.99),
+                }
+            })
+            .collect();
+
         FleetMetrics {
             shards: shards.len(),
             served,
             enqueued: queue.enqueued,
             rejected: queue.rejected,
+            shed: queue.shed,
+            deadline_misses,
             peak_queue_depth: queue.peak_depth,
             span_cycles,
             p50_cycles: percentile(&latencies, 0.50),
@@ -162,21 +298,30 @@ impl FleetMetrics {
             batches,
             mean_batch: served as f64 / batches.max(1) as f64,
             model_switches: shards.iter().map(|s| s.model_switches).sum(),
+            scale_ups: scaler.map_or(0, |s| s.ups),
+            scale_downs: scaler.map_or(0, |s| s.downs),
+            occupancy: occupancy.to_vec(),
+            mean_active,
+            deadlined_served,
             fastpath_pure: fp_pure,
             fastpath_func: fp_func,
             fastpath_miss: fp_miss,
             rows,
+            class_rows,
         }
     }
 
-    /// Render the throughput/latency table plus fleet summary lines.
+    /// Render the throughput/latency table plus fleet summary lines
+    /// (and, for SLO workloads, the per-class table and the autoscaler's
+    /// occupancy line).
     pub fn render(&self) -> String {
         let ms = |cyc: u64| cyc as f64 / (F_TYP_MHZ * 1e3);
         let mut t = Table::new(format!(
-            "serve fleet — {} shards, {} requests ({} rejected), {} Mcycle span",
+            "serve fleet — {} shards, {} requests ({} rejected, {} shed), {} Mcycle span",
             self.shards,
             self.served,
             self.rejected,
+            self.shed,
             self.span_cycles / 1_000_000
         ))
         .header(&["model", "served", "p50[ms]", "p99[ms]", "MAC/cyc", "uJ/req"]);
@@ -191,6 +336,30 @@ impl FleetMetrics {
             ]);
         }
         let mut out = t.render();
+        // Per-class SLO table: only interesting once a class table with
+        // deadlines or multiple tiers is installed.
+        if self.class_rows.len() > 1
+            || self.class_rows.iter().any(|c| c.deadline_cycles.is_some())
+        {
+            let mut ct = Table::new("SLO classes".to_string()).header(&[
+                "class", "prio", "SLO[ms]", "served", "missed", "shed", "p50[ms]", "p99[ms]",
+                "viol%",
+            ]);
+            for c in &self.class_rows {
+                ct.row(vec![
+                    c.name.clone(),
+                    c.priority.to_string(),
+                    c.deadline_cycles.map_or("-".into(), |d| f(ms(d), 1)),
+                    c.served.to_string(),
+                    c.missed.to_string(),
+                    c.shed.to_string(),
+                    f(ms(c.p50_cycles), 2),
+                    f(ms(c.p99_cycles), 2),
+                    f(c.violation_rate() * 100.0, 1),
+                ]);
+            }
+            out.push_str(&ct.render());
+        }
         out.push_str(&format!(
             "throughput: {} req/s @ {} MHz | latency p50/p99: {}/{} ms | mean {} ms\n",
             f(self.requests_per_sec, 1),
@@ -206,6 +375,34 @@ impl FleetMetrics {
             f(self.shard_utilization * 100.0, 0),
             self.peak_queue_depth,
         ));
+        if self.deadline_misses > 0 || self.shed > 0 {
+            out.push_str(&format!(
+                "SLO: {} deadline misses ({}% of deadlined completions), {} shed before simulation\n",
+                self.deadline_misses,
+                f(self.miss_rate() * 100.0, 1),
+                self.shed,
+            ));
+        }
+        if self.scale_ups + self.scale_downs > 0 || self.occupancy.len() > 1 {
+            let tail: Vec<String> = self
+                .occupancy
+                .iter()
+                .take(8)
+                .map(|&(t, n)| format!("{}:{n}", f(ms(t), 1)))
+                .collect();
+            out.push_str(&format!(
+                "autoscale: {} ups / {} downs, mean {} active shards | occupancy[ms:active] {}{}\n",
+                self.scale_ups,
+                self.scale_downs,
+                f(self.mean_active_shards(), 1),
+                tail.join(" → "),
+                if self.occupancy.len() > 8 {
+                    format!(" … ({} more)", self.occupancy.len() - 8)
+                } else {
+                    String::new()
+                },
+            ));
+        }
         out.push_str(&format!(
             "plan cache: {} hits / {} misses ({}% hit rate), {} compiled plans | batches: {} (mean {}/batch), model switches: {}\n",
             self.cache_hits,
@@ -243,5 +440,31 @@ mod tests {
         assert_eq!(percentile(&v, 1.0), 100);
         assert_eq!(percentile(&[], 0.5), 0);
         assert_eq!(percentile(&[7], 0.99), 7);
+    }
+
+    #[test]
+    fn class_violation_rate_combines_misses_and_sheds() {
+        let c = ClassRow {
+            name: "x".into(),
+            priority: 1,
+            deadline_cycles: Some(100),
+            served: 8,
+            missed: 1,
+            shed: 2,
+            p50_cycles: 10,
+            p99_cycles: 20,
+        };
+        assert!((c.violation_rate() - 0.3).abs() < 1e-12);
+        let be = ClassRow {
+            name: "b".into(),
+            priority: 0,
+            deadline_cycles: None,
+            served: 0,
+            missed: 0,
+            shed: 0,
+            p50_cycles: 0,
+            p99_cycles: 0,
+        };
+        assert_eq!(be.violation_rate(), 0.0);
     }
 }

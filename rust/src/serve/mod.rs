@@ -1,42 +1,51 @@
 //! Multi-cluster inference **serving engine**: request queueing, dynamic
 //! batching, a compiled-plan cache, and a pool of simulated cluster
-//! shards (queue → batcher → shard pool → metrics; see
+//! shards (workload → queue → batcher → shard pool → metrics; see
 //! `rust/src/serve/README.md`).
 //!
 //! The one-shot pipeline (`dory::deploy` → `coordinator`) runs a single
 //! `Deployment` on a single cluster and exits. This module is the layer
 //! the ROADMAP's production north star needs on top of it:
 //!
+//! - a [`workload`] engine generating deterministic open-loop arrival
+//!   traces (steady / Poisson / bursty / diurnal, multi-model mixes,
+//!   SLO classes with priorities and deadlines);
 //! - a [`PlanCache`] keyed by [`crate::dory::PlanKey`] so the DORY flow
 //!   (tiling solve, L2 layout, weight serialization) runs **once per
 //!   model**, not once per request;
-//! - a bounded priority [`RequestQueue`] with explicit rejection stats —
-//!   graceful saturation instead of unbounded latency collapse;
+//! - a bounded priority [`RequestQueue`] with explicit rejection stats,
+//!   earliest-deadline-first ordering within a priority level, and
+//!   shed-before-simulate load shedding of requests whose deadline can
+//!   no longer be met — graceful saturation instead of unbounded
+//!   latency collapse;
 //! - a dynamic [`batcher`] that coalesces queued same-model requests
 //!   onto one shard pass, amortizing the L3→L2 model-switch cost the
 //!   same way PULP-NN amortizes im2col/packing across calls;
 //! - a pool of [`Shard`]s, each owning one simulated PULP cluster, driven
 //!   in a deterministic discrete-event loop over **simulated cycles**
 //!   (scaling one core's precision-flexible datapath to a fleet, as
-//!   Dustin does on-die with 16 cores);
-//! - per-request and fleet [`metrics`]: latency percentiles,
-//!   requests/sec, aggregate MAC/cycle, energy per request.
+//!   Dustin does on-die with 16 cores), elastically grown and shrunk by
+//!   the [`autoscale`]r between dispatch rounds;
+//! - per-request, per-class, and fleet [`metrics`]: latency percentiles,
+//!   deadline-miss rates, shed counts, requests/sec, aggregate
+//!   MAC/cycle, energy per request, shard-occupancy timeline.
 //!
 //! # Determinism contract
 //!
 //! Everything the engine reports is a function of the trace alone —
 //! never of the host machine, worker count, or fast-path setting:
 //!
-//! - **Scheduling** (queue pops, batch formation, shard assignment) runs
-//!   sequentially on the engine thread, in shard order, so the decision
-//!   stream is reproducible by construction.
+//! - **Scheduling** (queue pops, shedding, autoscaling, batch formation,
+//!   shard assignment) runs sequentially on the engine thread, in shard
+//!   order, so the decision stream is reproducible by construction.
 //! - **Execution** of the formed batches is embarrassingly parallel
 //!   (each shard owns its cluster); with `workers != 1` the batches of a
 //!   dispatch round run on a scoped `std::thread` pool. The round's
 //!   completion events are then merged by simulated finish cycle
 //!   (tie-break: shard id, then request id) — the sequential engine
 //!   applies the *same* reduction, so `completions()` is bit-identical
-//!   for any worker count (`rust/tests/serve_parallel_determinism.rs`).
+//!   for any worker count (`rust/tests/serve_parallel_determinism.rs`,
+//!   `rust/tests/serve_workload.rs`).
 //! - The simulator's steady-state fast path (`ServeConfig::fastpath`,
 //!   see [`crate::sim::fastpath`]) replays previously-seen windows with
 //!   bit-exact outputs and cycle counts; `fastpath: false` is the
@@ -50,19 +59,23 @@
 //! throughput, at the cost of timing-only outputs (see
 //! `coordinator::execute_deployment`).
 
+pub mod autoscale;
 pub mod batcher;
 pub mod cache;
 pub mod metrics;
 pub mod queue;
 pub mod request;
 pub mod shard;
+pub mod workload;
 
+pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleAction};
 pub use batcher::BatchPolicy;
 pub use cache::PlanCache;
-pub use metrics::{FleetMetrics, ModelRow};
+pub use metrics::{ClassRow, FleetMetrics, ModelRow};
 pub use queue::RequestQueue;
-pub use request::{Completion, Request};
+pub use request::{Completion, Request, ShedEvent};
 pub use shard::Shard;
+pub use workload::{SloClass, TraceShape, WorkloadSpec};
 
 use std::sync::Arc;
 
@@ -100,6 +113,13 @@ pub struct ServeConfig {
     /// ([`crate::sim::fastpath`]); bit-exact, `false` is the escape
     /// hatch (`serve-bench --no-fastpath`).
     pub fastpath: bool,
+    /// Re-simulate every fast-path replay and panic on divergence (soak
+    /// tests; implies heavy slowdown; no-op without `fastpath`).
+    pub crosscheck: bool,
+    /// Elastic shard pool: walk the active shard count between
+    /// `min_shards` and `max_shards` from queue pressure and idleness
+    /// ([`autoscale`]). `None` keeps all `shards` active (static fleet).
+    pub autoscale: Option<AutoscaleConfig>,
     pub isa: IsaVariant,
     pub budget: MemBudget,
 }
@@ -115,6 +135,8 @@ impl Default for ServeConfig {
             exact: false,
             workers: 0,
             fastpath: true,
+            crosscheck: false,
+            autoscale: None,
             isa: IsaVariant::FlexV,
             budget: MemBudget::default(),
         }
@@ -127,7 +149,11 @@ pub struct TraceItem {
     pub at: u64,
     /// Index into the engine's model registry.
     pub model: usize,
+    /// SLO class index (into the engine's class table; 0 = default).
+    pub class: u8,
     pub priority: u8,
+    /// Absolute deadline cycle (`None` = best-effort).
+    pub deadline: Option<u64>,
     pub input: QTensor,
 }
 
@@ -148,15 +174,27 @@ struct Assignment {
 }
 
 /// The serving engine: model registry + queue + batcher + shard pool +
-/// plan cache, advanced by a deterministic discrete-event loop.
+/// plan cache (+ optional autoscaler), advanced by a deterministic
+/// discrete-event loop.
 pub struct Engine {
     pub cfg: ServeConfig,
     models: Vec<ModelEntry>,
     pub cache: PlanCache,
     pub queue: RequestQueue,
     shards: Vec<Shard>,
+    scaler: Option<Autoscaler>,
+    /// SLO class table for per-class metrics (index = `Request::class`).
+    classes: Vec<SloClass>,
     em: EnergyModel,
     completions: Vec<Completion>,
+    /// Shed-before-simulate events, in decision order.
+    shed_log: Vec<ShedEvent>,
+    /// `(cycle, active shard count)` — one entry at start plus one per
+    /// scaling action.
+    occupancy: Vec<(u64, usize)>,
+    /// Minimum observed exec cycles per model (0 = never served): the
+    /// deterministic lower bound the shed decision uses.
+    min_exec: Vec<u64>,
     next_id: u64,
 }
 
@@ -166,17 +204,40 @@ impl Engine {
         // One window cache for the whole fleet: shard B replays windows
         // shard A recorded (wall-clock only; replay is bit-exact).
         let windows = crate::sim::fastpath::WindowCache::default();
+        let mut shards: Vec<Shard> = (0..cfg.shards)
+            .map(|i| {
+                let mut s =
+                    Shard::new(i, cfg.n_cores, cfg.exact, cfg.fastpath.then(|| windows.clone()));
+                if cfg.crosscheck {
+                    s.set_crosscheck(true);
+                }
+                s
+            })
+            .collect();
+        let scaler = cfg.autoscale.map(|ac| {
+            assert!(
+                ac.min_shards >= 1 && ac.min_shards <= ac.max_shards,
+                "autoscale needs 1 <= min <= max"
+            );
+            // Start at the floor: the ramp to peak is the autoscaler's job.
+            for s in shards.iter_mut().skip(ac.min_shards) {
+                s.park();
+            }
+            Autoscaler::new(ac)
+        });
+        let active = shards.iter().filter(|s| s.active).count();
         Engine {
             models: Vec::new(),
             cache: PlanCache::new(),
             queue: RequestQueue::new(cfg.queue_capacity),
-            shards: (0..cfg.shards)
-                .map(|i| {
-                    Shard::new(i, cfg.n_cores, cfg.exact, cfg.fastpath.then(|| windows.clone()))
-                })
-                .collect(),
+            shards,
+            scaler,
+            classes: SloClass::best_effort(),
             em: EnergyModel::default(),
             completions: Vec::new(),
+            shed_log: Vec::new(),
+            occupancy: vec![(0, active)],
+            min_exec: Vec::new(),
             next_id: 0,
             cfg,
         }
@@ -188,6 +249,7 @@ impl Engine {
         net.validate().expect("invalid network");
         let key = PlanKey::for_network(&net, self.cfg.isa, self.cfg.budget, self.cfg.n_cores);
         self.models.push(ModelEntry { name: net.name.clone(), net, key });
+        self.min_exec.push(0);
         self.models.len() - 1
     }
 
@@ -207,25 +269,64 @@ impl Engine {
         &self.completions
     }
 
-    /// Enqueue one request arriving at `arrival_cycle`. Returns the
-    /// request id, or `None` if the queue rejected it (saturation).
-    pub fn submit(
-        &mut self,
-        model: usize,
-        priority: u8,
-        arrival_cycle: u64,
-        input: QTensor,
-    ) -> Option<u64> {
-        let entry = &self.models[model];
+    /// Requests shed because their deadline became unmeetable, in
+    /// decision order (part of the deterministic event stream).
+    pub fn shed_events(&self) -> &[ShedEvent] {
+        &self.shed_log
+    }
+
+    /// Shard-occupancy timeline: `(cycle, active shards)` at start and
+    /// after every scaling action.
+    pub fn occupancy(&self) -> &[(u64, usize)] {
+        &self.occupancy
+    }
+
+    /// Install the SLO class table used for per-class metrics (index =
+    /// `Request::class`/`TraceItem::class`). [`Engine::workload_trace`]
+    /// does this automatically.
+    pub fn set_classes(&mut self, classes: Vec<SloClass>) {
+        assert!(!classes.is_empty() && classes.len() <= 256, "1..=256 classes");
+        self.classes = classes;
+    }
+
+    /// Generate a deterministic arrival trace from `spec` over the
+    /// registered models, and install `spec.classes` as the engine's
+    /// class table (so the fleet report breaks latency/miss/shed stats
+    /// out per class).
+    pub fn workload_trace(&mut self, spec: &WorkloadSpec) -> Vec<TraceItem> {
+        assert_eq!(spec.mix.len(), self.models.len(), "one mix weight per model");
+        self.set_classes(spec.classes.clone());
+        let io: Vec<(Vec<usize>, u8)> = self
+            .models
+            .iter()
+            .map(|m| (m.net.input_shape.to_vec(), m.net.input_bits))
+            .collect();
+        workload::generate(spec, &io)
+    }
+
+    /// Enqueue one request. Returns the request id, or `None` if the
+    /// queue rejected it (saturation).
+    pub fn submit(&mut self, t: TraceItem) -> Option<u64> {
+        let entry = &self.models[t.model];
         assert_eq!(
-            input.shape,
+            t.input.shape,
             entry.net.input_shape.to_vec(),
             "input shape mismatch for model {}",
             entry.name
         );
-        assert_eq!(input.bits, entry.net.input_bits, "input bits mismatch");
+        assert_eq!(t.input.bits, entry.net.input_bits, "input bits mismatch");
+        assert!((t.class as usize) < self.classes.len(), "unknown SLO class {}", t.class);
         let id = self.next_id;
-        if self.queue.push(Request { id, model, priority, arrival_cycle, input }) {
+        let admitted = self.queue.push(Request {
+            id,
+            model: t.model,
+            class: t.class,
+            priority: t.priority,
+            arrival_cycle: t.at,
+            deadline: t.deadline,
+            input: t.input,
+        });
+        if admitted {
             self.next_id += 1;
             Some(id)
         } else {
@@ -233,7 +334,42 @@ impl Engine {
         }
     }
 
-    /// Hand batches to every free shard.
+    /// Shed-before-simulate: drop every queued request that can no
+    /// longer meet its deadline, using the minimum observed execution
+    /// time of its model as the (deterministic) remaining-cost lower
+    /// bound. Runs on the engine thread before each dispatch round.
+    fn shed_unmeetable(&mut self, now: u64) {
+        if self.queue.is_empty() {
+            return;
+        }
+        let min_exec = &self.min_exec;
+        let shed = self.queue.shed_expired(now, |m| min_exec[m]);
+        for r in shed {
+            self.shed_log.push(ShedEvent {
+                id: r.id,
+                model: r.model,
+                class: r.class,
+                priority: r.priority,
+                arrival_cycle: r.arrival_cycle,
+                deadline: r.deadline.expect("only deadlined requests are shed"),
+                shed_cycle: now,
+            });
+        }
+    }
+
+    /// One autoscaler step between dispatch rounds (no-op for a static
+    /// fleet). Decisions see the post-shed queue depth.
+    fn autoscale_step(&mut self, now: u64) {
+        let Some(scaler) = self.scaler.as_mut() else {
+            return;
+        };
+        if scaler.step(now, self.queue.len(), &mut self.shards).is_some() {
+            let active = self.shards.iter().filter(|s| s.active).count();
+            self.occupancy.push((now, active));
+        }
+    }
+
+    /// Hand batches to every free, active shard.
     ///
     /// Batch **formation** (queue pops, plan-cache lookups, shard
     /// assignment) runs sequentially in shard order, so every scheduling
@@ -250,7 +386,7 @@ impl Engine {
         };
         let mut assignments: Vec<Assignment> = Vec::new();
         for si in 0..self.shards.len() {
-            if !self.shards[si].is_free(now) {
+            if !self.shards[si].active || !self.shards[si].is_free(now) {
                 continue;
             }
             if self.queue.is_empty() {
@@ -316,13 +452,21 @@ impl Engine {
         }
         // Deterministic event-ordering reduction (see module docs).
         round.sort_by_key(|c| (c.finish_cycle, c.shard, c.id));
+        for c in &round {
+            let m = &mut self.min_exec[c.model];
+            if *m == 0 || c.exec_cycles < *m {
+                *m = c.exec_cycles;
+            }
+        }
         self.completions.extend(round);
     }
 
     /// Replay an arrival trace to completion; returns the fleet report.
     /// The event loop advances a simulated clock: arrivals are admitted
-    /// when due, free shards pull batches, and time jumps to the next
-    /// arrival or shard-free event — O(events), independent of idle gaps.
+    /// when due, unmeetable requests are shed, the autoscaler adjusts
+    /// the active pool, free shards pull batches, and time jumps to the
+    /// next arrival, shard-free, or scale-down-eligibility event —
+    /// O(events), independent of idle gaps.
     pub fn run_trace(&mut self, mut trace: Vec<TraceItem>) -> FleetMetrics {
         trace.sort_by_key(|t| t.at);
         let mut it = trace.into_iter().peekable();
@@ -330,26 +474,48 @@ impl Engine {
         loop {
             while it.peek().map_or(false, |t| t.at <= clock) {
                 let t = it.next().unwrap();
-                self.submit(t.model, t.priority, t.at, t.input);
+                self.submit(t);
             }
+            self.shed_unmeetable(clock);
+            self.autoscale_step(clock);
             self.dispatch_free_shards(clock);
             let next_arrival = it.peek().map(|t| t.at);
             let next_free = self
                 .shards
                 .iter()
+                .filter(|s| s.active)
                 .map(|s| s.busy_until)
                 .filter(|&b| b > clock)
                 .min();
             if self.queue.is_empty() {
-                // Nothing queued: jump to the next arrival, or done.
-                match next_arrival {
-                    Some(a) => clock = a,
-                    None => break,
-                }
+                // Nothing queued: jump to the next arrival or to the next
+                // cycle at which the autoscaler could park an idle shard
+                // (so valleys between bursts actually shrink the fleet —
+                // the jump would otherwise skip the whole idle window).
+                // With no arrivals left, remaining parks only extend the
+                // occupancy timeline down to the configured floor.
+                // `next_down <= clock` is possible (zero cooldown right
+                // after a park, or eligibility reached while the queue
+                // was still non-empty): clamp to `clock` so the loop
+                // re-enters at the same cycle and the autoscaler parks
+                // the next shard — each such pass shrinks the pool, so
+                // this always terminates.
+                let next_down = self
+                    .scaler
+                    .as_ref()
+                    .and_then(|sc| sc.next_down_event(&self.shards))
+                    .map(|t| t.max(clock));
+                clock = match (next_arrival, next_down) {
+                    (Some(a), Some(d)) if d < a => d,
+                    (Some(a), _) => a,
+                    (None, Some(d)) => d,
+                    (None, None) => break,
+                };
                 continue;
             }
-            // Queue non-empty ⇒ every shard is busy (dispatch drains
-            // otherwise). Wake at the next shard-free or arrival event.
+            // Queue non-empty ⇒ every active shard is busy (dispatch
+            // drains otherwise). Wake at the next shard-free or arrival
+            // event.
             clock = match (next_free, next_arrival) {
                 (Some(f), Some(a)) => f.min(a),
                 (Some(f), None) => f,
@@ -363,13 +529,24 @@ impl Engine {
     /// Build the fleet report from everything served so far.
     pub fn metrics(&self) -> FleetMetrics {
         let names: Vec<String> = self.models.iter().map(|m| m.name.clone()).collect();
-        FleetMetrics::collect(&self.completions, &names, &self.queue, &self.cache, &self.shards)
+        FleetMetrics::collect(metrics::CollectInputs {
+            completions: &self.completions,
+            names: &names,
+            classes: &self.classes,
+            queue: &self.queue,
+            cache: &self.cache,
+            shards: &self.shards,
+            shed: &self.shed_log,
+            occupancy: &self.occupancy,
+            scaler: self.scaler.as_ref(),
+        })
     }
 
-    /// Deterministic synthetic traffic: `n` requests with uniform random
-    /// inter-arrival gaps (mean `mean_gap_cycles`), models drawn from
-    /// `mix` (one non-negative weight per registered model), inputs
-    /// random per request.
+    /// Deterministic synthetic traffic: `n` best-effort requests with
+    /// uniform random inter-arrival gaps (mean `mean_gap_cycles`),
+    /// models drawn from `mix` (one non-negative weight per registered
+    /// model), inputs random per request. The legacy pre-[`workload`]
+    /// generator, kept for the default `serve-bench` path.
     pub fn synthetic_trace(
         &self,
         n: usize,
@@ -385,20 +562,14 @@ impl Engine {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             at += rng.below(mean_gap_cycles.max(1) * 2);
-            let mut pick = rng.next_u64() as f64 / u64::MAX as f64 * total;
-            let mut model = 0;
-            for (i, w) in mix.iter().enumerate() {
-                model = i;
-                if pick < *w {
-                    break;
-                }
-                pick -= w;
-            }
+            let model = workload::weighted_pick(&mut rng, mix);
             let net = &self.models[model].net;
             out.push(TraceItem {
                 at,
                 model,
+                class: 0,
                 priority: 0,
+                deadline: None,
                 input: QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng),
             });
         }
@@ -439,6 +610,10 @@ mod tests {
         }
     }
 
+    fn item(at: u64, model: usize, priority: u8, input: QTensor) -> TraceItem {
+        TraceItem { at, model, class: 0, priority, deadline: None, input }
+    }
+
     #[test]
     fn fleet_serves_mixed_traffic_with_cache_and_batching() {
         let mut eng = Engine::new(small_cfg());
@@ -447,16 +622,18 @@ mod tests {
         let mut rng = Prng::new(3);
         let mut trace = Vec::new();
         for (i, m) in [a, a, b, a, b, a, b, b].into_iter().enumerate() {
-            trace.push(TraceItem {
-                at: i as u64 * 100,
-                model: m,
-                priority: 0,
-                input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
-            });
+            trace.push(item(
+                i as u64 * 100,
+                m,
+                0,
+                QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+            ));
         }
         let m = eng.run_trace(trace);
         assert_eq!(m.served, 8);
         assert_eq!(m.rejected, 0);
+        assert_eq!(m.shed, 0);
+        assert_eq!(m.deadline_misses, 0);
         // deploy ran once per model, later dispatches hit the cache
         assert_eq!(m.cache_misses, 2);
         assert!(m.cache_hits >= 1, "hits {}", m.cache_hits);
@@ -465,6 +642,8 @@ mod tests {
         assert!(m.aggregate_macs_per_cycle > 0.0);
         assert_eq!(m.rows.len(), 2);
         assert_eq!(m.rows[0].served + m.rows[1].served, 8);
+        // a static fleet's occupancy is flat at `shards`
+        assert_eq!(m.occupancy, vec![(0, 2)]);
         // every request completed exactly once
         let mut ids: Vec<u64> = eng.completions().iter().map(|c| c.id).collect();
         ids.sort_unstable();
@@ -480,12 +659,7 @@ mod tests {
         let a = eng.register(tiny("sat", 4));
         let mut rng = Prng::new(5);
         let trace: Vec<TraceItem> = (0..6)
-            .map(|_| TraceItem {
-                at: 0,
-                model: a,
-                priority: 0,
-                input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
-            })
+            .map(|_| item(0, a, 0, QTensor::random(&[8, 8, 8], 8, false, &mut rng)))
             .collect();
         let m = eng.run_trace(trace);
         assert_eq!(m.served, 2);
@@ -500,13 +674,10 @@ mod tests {
         let a = eng.register(tiny("lo", 6));
         let b = eng.register(tiny("hi", 7));
         let mut rng = Prng::new(8);
-        let mk = |model, priority, rng: &mut Prng| TraceItem {
-            at: 0,
-            model,
-            priority,
-            input: QTensor::random(&[8, 8, 8], 8, false, rng),
-        };
-        let trace = vec![mk(a, 0, &mut rng), mk(b, 2, &mut rng)];
+        let trace = vec![
+            item(0, a, 0, QTensor::random(&[8, 8, 8], 8, false, &mut rng)),
+            item(0, b, 2, QTensor::random(&[8, 8, 8], 8, false, &mut rng)),
+        ];
         eng.run_trace(trace);
         assert_eq!(eng.completions()[0].model, b, "high priority first");
         assert_eq!(eng.completions()[1].model, a);
@@ -523,11 +694,13 @@ mod tests {
             let b = eng.register(tiny("wk-b", 32));
             let mut rng = Prng::new(33);
             let trace: Vec<TraceItem> = (0..8)
-                .map(|i| TraceItem {
-                    at: i as u64 * 50,
-                    model: if i % 3 == 0 { b } else { a },
-                    priority: (i % 2) as u8,
-                    input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+                .map(|i| {
+                    item(
+                        i as u64 * 50,
+                        if i % 3 == 0 { b } else { a },
+                        (i % 2) as u8,
+                        QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+                    )
                 })
                 .collect();
             let m = eng.run_trace(trace);
@@ -555,12 +728,7 @@ mod tests {
         let mut rng = Prng::new(12);
         let trace: Vec<TraceItem> = [a, b, a, b, a, b]
             .into_iter()
-            .map(|m| TraceItem {
-                at: 0,
-                model: m,
-                priority: 0,
-                input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
-            })
+            .map(|m| item(0, m, 0, QTensor::random(&[8, 8, 8], 8, false, &mut rng)))
             .collect();
         let m = eng.run_trace(trace);
         assert_eq!(m.served, 6);
@@ -570,5 +738,116 @@ mod tests {
             m.model_switches
         );
         assert!(m.mean_batch >= 2.0, "mean batch {}", m.mean_batch);
+    }
+
+    /// An impossible deadline is shed before simulation (no shard ever
+    /// runs it); a comfortable one is served and counted as met.
+    #[test]
+    fn unmeetable_deadlines_are_shed_not_simulated() {
+        let cfg = ServeConfig { shards: 1, max_batch: 1, ..small_cfg() };
+        let mut eng = Engine::new(cfg);
+        let a = eng.register(tiny("slo", 13));
+        eng.set_classes(vec![
+            SloClass { name: "tight".into(), priority: 1, deadline_cycles: Some(1), share: 0.5 },
+            SloClass { name: "easy".into(), priority: 0, deadline_cycles: None, share: 0.5 },
+        ]);
+        let mut rng = Prng::new(14);
+        let mk = |at: u64, class: u8, deadline, rng: &mut Prng| TraceItem {
+            at,
+            model: a,
+            class,
+            priority: 1 - class,
+            deadline,
+            input: QTensor::random(&[8, 8, 8], 8, false, rng),
+        };
+        // Request 0 occupies the shard; request 1's deadline expires
+        // while it waits (deadline 1 cycle after a later arrival).
+        let trace = vec![
+            mk(0, 1, None, &mut rng),
+            mk(10, 0, Some(11), &mut rng),
+            mk(20, 1, None, &mut rng),
+        ];
+        let m = eng.run_trace(trace);
+        assert_eq!(m.served, 2, "the expired request must not be simulated");
+        assert_eq!(m.shed, 1);
+        assert_eq!(eng.shed_events().len(), 1);
+        assert_eq!(eng.shed_events()[0].id, 1);
+        assert_eq!(eng.shed_events()[0].class, 0);
+        assert_eq!(m.deadline_misses, 0, "sheds are not misses");
+        assert!(eng.completions().iter().all(|c| c.id != 1));
+        // per-class accounting: class 0 shed once, class 1 served twice
+        assert_eq!(m.class_rows.len(), 2);
+        assert_eq!(m.class_rows[0].shed, 1);
+        assert_eq!(m.class_rows[0].served, 0);
+        assert_eq!(m.class_rows[1].served, 2);
+    }
+
+    /// Deadlines that pass while a request executes are misses, not
+    /// sheds: shedding only ever happens before simulation.
+    #[test]
+    fn late_completions_count_as_deadline_misses() {
+        let cfg = ServeConfig { shards: 1, max_batch: 1, ..small_cfg() };
+        let mut eng = Engine::new(cfg);
+        let a = eng.register(tiny("miss", 15));
+        eng.set_classes(vec![SloClass {
+            name: "tight".into(),
+            priority: 0,
+            deadline_cycles: Some(2),
+            share: 1.0,
+        }]);
+        let mut rng = Prng::new(16);
+        let trace = vec![TraceItem {
+            at: 0,
+            model: a,
+            class: 0,
+            priority: 0,
+            deadline: Some(2), // arrives meetable (min_exec unknown), finishes late
+            input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+        }];
+        let m = eng.run_trace(trace);
+        assert_eq!((m.served, m.shed), (1, 0));
+        assert_eq!(m.deadline_misses, 1);
+        assert!(m.miss_rate() > 0.99);
+        assert!(eng.completions()[0].missed_deadline());
+    }
+
+    /// The autoscaler wakes shards under backlog and parks them when the
+    /// valley is long enough; the occupancy timeline records each step.
+    #[test]
+    fn autoscaler_tracks_load_and_charges_cold_start() {
+        let mut auto_cfg = AutoscaleConfig::range(1, 2);
+        auto_cfg.idle_cycles_down = 50_000;
+        auto_cfg.cooldown_cycles = 0;
+        let cfg = ServeConfig {
+            shards: 2,
+            max_batch: 1,
+            autoscale: Some(auto_cfg),
+            ..small_cfg()
+        };
+        let mut eng = Engine::new(cfg);
+        let a = eng.register(tiny("elastic", 17));
+        let mut rng = Prng::new(18);
+        // burst of 4 at t=0, then a long valley, then one more request
+        let mut trace: Vec<TraceItem> = (0..4)
+            .map(|_| item(0, a, 0, QTensor::random(&[8, 8, 8], 8, false, &mut rng)))
+            .collect();
+        trace.push(item(
+            100_000_000,
+            a,
+            0,
+            QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+        ));
+        let m = eng.run_trace(trace);
+        assert_eq!(m.served, 5);
+        assert!(m.scale_ups >= 1, "burst must wake shard 1");
+        assert!(m.scale_downs >= 1, "valley must park it again");
+        let occ = eng.occupancy();
+        assert_eq!(occ[0], (0, 1), "fleet starts at min");
+        assert!(occ.iter().any(|&(_, n)| n == 2), "peaked at max");
+        assert_eq!(occ.last().unwrap().1, 1, "back to min after the valley");
+        // shard 1 served work during the burst; exactly one shard (the
+        // less recently busy one is parked first) survives the valley
+        assert!(eng.completions().iter().any(|c| c.shard == 1));
+        assert_eq!(eng.shards().iter().filter(|s| s.active).count(), 1);
     }
 }

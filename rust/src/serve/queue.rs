@@ -1,4 +1,5 @@
-//! Bounded admission queue with priorities and rejection accounting.
+//! Bounded admission queue with priorities, EDF ordering, and
+//! rejection/shed accounting.
 //!
 //! The queue is the engine's saturation mechanism: when the fleet falls
 //! behind the arrival process, depth grows to `capacity` and further
@@ -6,22 +7,27 @@
 //! memory and an explicit load-shedding signal instead of unbounded
 //! latency collapse.
 //!
-//! Admission policy notes (tested below):
+//! Admission/service policy notes (tested below):
 //! - rejection is priority-blind: a full queue rejects a high-priority
 //!   arrival rather than evicting a queued low-priority request —
 //!   admitted work is never preempted, so acceptance is monotone in
 //!   arrival order and the engine stays deterministic;
 //! - `capacity == 0` is valid and admits nothing (drain/canary
 //!   configurations);
-//! - service order is priority-first, FIFO within a level, with an
-//!   optional resident-model affinity that never crosses priority
-//!   levels ([`RequestQueue::pop_lead`]).
+//! - service order is priority-first, then **earliest deadline first**
+//!   within a level (best-effort requests, `deadline == None`, order
+//!   after every deadlined request), then FIFO; an optional
+//!   resident-model affinity breaks *equal-deadline* ties only and never
+//!   crosses priority levels ([`RequestQueue::pop_lead`]);
+//! - requests whose deadline can provably no longer be met are **shed**
+//!   before they reach a shard ([`RequestQueue::shed_expired`],
+//!   shed-before-simulate) and counted separately from rejections.
 
 use std::collections::VecDeque;
 
 use super::request::Request;
 
-/// FIFO-within-priority bounded queue.
+/// Priority + EDF + FIFO bounded queue.
 pub struct RequestQueue {
     capacity: usize,
     items: VecDeque<Request>,
@@ -29,6 +35,9 @@ pub struct RequestQueue {
     pub enqueued: u64,
     /// Requests refused because the queue was full.
     pub rejected: u64,
+    /// Admitted requests later shed because their deadline became
+    /// unmeetable (see [`RequestQueue::shed_expired`]).
+    pub shed: u64,
     /// High-water mark of the depth.
     pub peak_depth: usize,
 }
@@ -40,6 +49,7 @@ impl RequestQueue {
             items: VecDeque::new(),
             enqueued: 0,
             rejected: 0,
+            shed: 0,
             peak_depth: 0,
         }
     }
@@ -69,34 +79,86 @@ impl RequestQueue {
     }
 
     /// Remove and return the request that should lead the next batch:
-    /// highest priority first, FIFO within a priority level. When
-    /// `affinity` names a model and a request for it exists at the top
-    /// priority level, the oldest such request is preferred — keeping a
-    /// shard on its resident model avoids the L3→L2 weight-switch cost.
+    /// highest priority first; within that level, earliest deadline
+    /// first (best-effort requests order after all deadlined ones), FIFO
+    /// among equal deadlines. When `affinity` names a model, it breaks
+    /// equal-`(priority, deadline)` ties in favor of the resident model —
+    /// keeping a shard on its model avoids the L3→L2 weight-switch cost
+    /// without ever letting residency trump a tighter SLO.
     pub fn pop_lead(&mut self, affinity: Option<usize>) -> Option<Request> {
         let pmax = self.items.iter().map(|r| r.priority).max()?;
-        let idx = affinity
-            .and_then(|m| {
-                self.items
-                    .iter()
-                    .position(|r| r.priority == pmax && r.model == m)
+        // Sort key: (deadline, non-affine, arrival position). The queue
+        // holds arrivals in admission order, so the position is the FIFO
+        // tie-break.
+        let idx = self
+            .items
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.priority == pmax)
+            .min_by_key(|(pos, r)| {
+                (r.deadline_key(), affinity != Some(r.model), *pos)
             })
-            .or_else(|| self.items.iter().position(|r| r.priority == pmax))?;
+            .map(|(pos, _)| pos)?;
         self.items.remove(idx)
     }
 
-    /// Remove up to `max` queued requests for `model` (oldest first,
-    /// any priority) — the batch-coalescing primitive.
+    /// Remove up to `max` queued requests for `model`, earliest deadline
+    /// first (FIFO among equal deadlines, any priority) — the
+    /// batch-coalescing primitive. Within a batch the shard executes
+    /// members in the returned order, so EDF ordering here is what makes
+    /// a coalesced batch respect its members' deadlines.
     pub fn drain_model(&mut self, model: usize, max: usize) -> Vec<Request> {
+        let mut picks: Vec<(u64, usize)> = self
+            .items
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.model == model)
+            .map(|(pos, r)| (r.deadline_key(), pos))
+            .collect();
+        picks.sort_unstable();
+        picks.truncate(max);
+        // Remove by descending position so earlier indices stay valid.
+        let mut order: Vec<usize> = picks.iter().map(|&(_, pos)| pos).collect();
+        let mut by_pos = order.clone();
+        by_pos.sort_unstable_by(|a, b| b.cmp(a));
+        let mut removed: Vec<(usize, Request)> = by_pos
+            .into_iter()
+            .map(|pos| (pos, self.items.remove(pos).unwrap()))
+            .collect();
+        // Re-emit in EDF pick order.
+        let mut out = Vec::with_capacity(removed.len());
+        for pos in order.drain(..) {
+            let at = removed.iter().position(|&(p, _)| p == pos).unwrap();
+            out.push(removed.swap_remove(at).1);
+        }
+        out
+    }
+
+    /// Shed every queued request that can no longer meet its deadline:
+    /// a request is removed (and counted in `shed`) when
+    /// `now + est(model) > deadline`, where `est` is a lower bound on the
+    /// remaining service cycles for that model (the engine passes the
+    /// minimum execution time observed so far, or 0 when the model has
+    /// never run — then only already-expired requests are shed).
+    /// Best-effort requests (`deadline == None`) are never shed. Returns
+    /// the shed requests in queue (admission) order — the deterministic
+    /// shed event stream.
+    pub fn shed_expired(&mut self, now: u64, est: impl Fn(usize) -> u64) -> Vec<Request> {
         let mut out = Vec::new();
         let mut i = 0;
-        while i < self.items.len() && out.len() < max {
-            if self.items[i].model == model {
+        while i < self.items.len() {
+            let r = &self.items[i];
+            let dead = match r.deadline {
+                Some(d) => now.saturating_add(est(r.model)) > d,
+                None => false,
+            };
+            if dead {
                 out.push(self.items.remove(i).unwrap());
             } else {
                 i += 1;
             }
         }
+        self.shed += out.len() as u64;
         out
     }
 }
@@ -105,15 +167,22 @@ impl RequestQueue {
 mod tests {
     use super::*;
     use crate::qnn::QTensor;
+    use crate::util::{proptest, Prng};
 
     fn req(id: u64, model: usize, priority: u8) -> Request {
         Request {
             id,
             model,
+            class: 0,
             priority,
             arrival_cycle: id,
+            deadline: None,
             input: QTensor::zeros(&[1, 1, 8], 8, false),
         }
+    }
+
+    fn req_slo(id: u64, model: usize, priority: u8, deadline: u64) -> Request {
+        Request { deadline: Some(deadline), ..req(id, model, priority) }
     }
 
     #[test]
@@ -140,16 +209,32 @@ mod tests {
     }
 
     #[test]
+    fn edf_within_priority_level() {
+        let mut q = RequestQueue::new(8);
+        q.push(req_slo(0, 0, 1, 900)); // later deadline, arrived first
+        q.push(req_slo(1, 0, 1, 300)); // tightest deadline
+        q.push(req(2, 0, 1)); // best-effort: after all deadlined peers
+        q.push(req_slo(3, 0, 0, 10)); // tighter but lower priority
+        assert_eq!(q.pop_lead(None).unwrap().id, 1, "EDF within level");
+        assert_eq!(q.pop_lead(None).unwrap().id, 0);
+        assert_eq!(q.pop_lead(None).unwrap().id, 2, "best-effort last");
+        assert_eq!(q.pop_lead(None).unwrap().id, 3, "priority still wins");
+    }
+
+    #[test]
     fn affinity_prefers_resident_model_within_top_priority() {
         let mut q = RequestQueue::new(8);
         q.push(req(0, 0, 0));
         q.push(req(1, 1, 0));
-        // same priority: affinity to model 1 overrides FIFO
+        // same priority, no deadlines: affinity to model 1 overrides FIFO
         assert_eq!(q.pop_lead(Some(1)).unwrap().id, 1);
         // but never crosses priority levels
         q.push(req(2, 1, 0));
         q.push(req(3, 0, 1));
         assert_eq!(q.pop_lead(Some(1)).unwrap().id, 3);
+        // and never trumps a tighter deadline
+        q.push(req_slo(4, 0, 0, 100));
+        assert_eq!(q.pop_lead(Some(1)).unwrap().id, 4);
     }
 
     /// A full queue rejects newcomers regardless of priority: admitted
@@ -199,5 +284,139 @@ mod tests {
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
         assert_eq!(q.len(), 3);
         assert_eq!(q.drain_model(0, 9).len(), 1); // id 3 remains
+    }
+
+    #[test]
+    fn drain_model_orders_by_deadline_first() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(0, 0, 0)); // best-effort, oldest
+        q.push(req_slo(1, 0, 0, 500));
+        q.push(req_slo(2, 0, 0, 100));
+        q.push(req(3, 1, 0)); // other model, untouched
+        let batch = q.drain_model(0, 8);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 1, 0]);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn shed_expired_removes_only_unmeetable_deadlines() {
+        let mut q = RequestQueue::new(8);
+        q.push(req_slo(0, 0, 0, 50)); // expired at now=100
+        q.push(req_slo(1, 0, 0, 130)); // unmeetable with est 50
+        q.push(req_slo(2, 0, 0, 200)); // meetable
+        q.push(req(3, 0, 0)); // best-effort, never shed
+        let shed = q.shed_expired(100, |_| 50);
+        assert_eq!(shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(q.shed, 2);
+        assert_eq!(q.len(), 2);
+        // shedding frees capacity for new admissions
+        for id in 4..10 {
+            q.push(req(id, 0, 0));
+        }
+        assert_eq!(q.len(), 8);
+    }
+
+    /// Property: pops drain in (priority desc, deadline asc, FIFO) order,
+    /// depth never exceeds capacity, and the admission accounting is
+    /// consistent with the number of successful pushes.
+    #[test]
+    fn prop_pop_order_and_capacity() {
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let capacity = rng.range(0, 12);
+                let n = rng.range(1, 32);
+                let reqs: Vec<(u8, Option<u64>)> = (0..n)
+                    .map(|_| {
+                        let prio = rng.range(0, 3) as u8;
+                        let dl = rng.chance(0.6).then(|| rng.below(1000));
+                        (prio, dl)
+                    })
+                    .collect();
+                (capacity, reqs)
+            },
+            |(capacity, reqs)| {
+                let mut q = RequestQueue::new(*capacity);
+                let mut admitted = 0u64;
+                for (id, &(prio, dl)) in reqs.iter().enumerate() {
+                    let mut r = req(id as u64, 0, prio);
+                    r.deadline = dl;
+                    if q.push(r) {
+                        admitted += 1;
+                    }
+                    if q.len() > *capacity {
+                        return Err(format!("depth {} > capacity {capacity}", q.len()));
+                    }
+                }
+                if q.enqueued != admitted || q.rejected != reqs.len() as u64 - admitted {
+                    return Err(format!(
+                        "accounting: enqueued {} rejected {} admits {admitted}",
+                        q.enqueued, q.rejected
+                    ));
+                }
+                let mut popped = Vec::new();
+                while let Some(r) = q.pop_lead(None) {
+                    popped.push(r);
+                }
+                if popped.len() as u64 != admitted {
+                    return Err("pop count != admits".into());
+                }
+                for w in popped.windows(2) {
+                    let a = (std::cmp::Reverse(w[0].priority), w[0].deadline_key(), w[0].id);
+                    let b = (std::cmp::Reverse(w[1].priority), w[1].deadline_key(), w[1].id);
+                    if a > b {
+                        return Err(format!(
+                            "order violated: {:?} before {:?}",
+                            (w[0].id, w[0].priority, w[0].deadline),
+                            (w[1].id, w[1].priority, w[1].deadline)
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: shedding removes exactly the unmeetable-deadline subset,
+    /// keeps everything else in place, and the shed/enqueued counters
+    /// stay consistent.
+    #[test]
+    fn prop_shed_partitions_queue() {
+        proptest::check_default(
+            |rng: &mut Prng| {
+                let n = rng.range(1, 24);
+                let now = rng.below(500);
+                let est = rng.below(100);
+                let dls: Vec<Option<u64>> =
+                    (0..n).map(|_| rng.chance(0.7).then(|| rng.below(700))).collect();
+                (now, est, dls)
+            },
+            |(now, est, dls)| {
+                let mut q = RequestQueue::new(64);
+                for (id, &dl) in dls.iter().enumerate() {
+                    let mut r = req(id as u64, id % 3, 0);
+                    r.deadline = dl;
+                    q.push(r);
+                }
+                let shed = q.shed_expired(*now, |_| *est);
+                let should_shed = |dl: &Option<u64>| dl.is_some_and(|d| now + est > d);
+                let want: Vec<u64> = dls
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, dl)| should_shed(dl))
+                    .map(|(id, _)| id as u64)
+                    .collect();
+                let got: Vec<u64> = shed.iter().map(|r| r.id).collect();
+                if got != want {
+                    return Err(format!("shed {got:?} want {want:?}"));
+                }
+                if q.shed != want.len() as u64 || q.len() + want.len() != dls.len() {
+                    return Err("shed accounting inconsistent".into());
+                }
+                if q.shed_expired(*now, |_| *est).len() != 0 {
+                    return Err("shed not idempotent".into());
+                }
+                Ok(())
+            },
+        );
     }
 }

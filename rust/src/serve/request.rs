@@ -10,6 +10,14 @@
 //! `(shard, id)` tie-breaks, so the stream is identical whether shard
 //! batches were simulated sequentially or on a thread pool (the
 //! determinism contract in [`crate::serve`]).
+//!
+//! Requests carry an optional **deadline** (absolute simulated cycle by
+//! which the response must be complete) and an SLO **class** index (into
+//! the engine's class table, see [`crate::serve::workload::SloClass`]).
+//! Deadlines drive the queue's earliest-deadline-first ordering and the
+//! engine's shed-before-simulate load shedding; classes drive the
+//! per-class latency/miss accounting in
+//! [`crate::serve::FleetMetrics`].
 
 use crate::qnn::QTensor;
 
@@ -20,12 +28,24 @@ pub struct Request {
     pub id: u64,
     /// Index into the engine's model registry.
     pub model: usize,
-    /// Higher wins; FIFO within a priority level.
+    /// SLO class index (per-class metrics; 0 = default class).
+    pub class: u8,
+    /// Higher wins; EDF then FIFO within a priority level.
     pub priority: u8,
     /// Simulated cycle at which the request entered the queue.
     pub arrival_cycle: u64,
+    /// Absolute simulated cycle by which the request must finish to meet
+    /// its SLO; `None` = best-effort (never shed, never counted missed).
+    pub deadline: Option<u64>,
     /// Input activation tensor (must match the model's input shape/bits).
     pub input: QTensor,
+}
+
+impl Request {
+    /// Deadline as a sortable key: best-effort requests order last.
+    pub fn deadline_key(&self) -> u64 {
+        self.deadline.unwrap_or(u64::MAX)
+    }
 }
 
 /// A finished request with its measured cost breakdown.
@@ -34,9 +54,13 @@ pub struct Completion {
     pub id: u64,
     /// Index into the engine's model registry.
     pub model: usize,
+    /// SLO class index of the originating request.
+    pub class: u8,
     /// Shard that executed the request.
     pub shard: usize,
     pub arrival_cycle: u64,
+    /// Deadline carried by the request (miss accounting).
+    pub deadline: Option<u64>,
     /// Cycle at which the shard began the batch containing this request.
     pub start_cycle: u64,
     pub finish_cycle: u64,
@@ -69,4 +93,26 @@ impl Completion {
     pub fn queue_cycles(&self) -> u64 {
         self.start_cycle.saturating_sub(self.arrival_cycle)
     }
+
+    /// True when the request carried a deadline and finished after it.
+    pub fn missed_deadline(&self) -> bool {
+        self.deadline.is_some_and(|d| self.finish_cycle > d)
+    }
+}
+
+/// A request shed before simulation because its deadline could no longer
+/// be met (see [`crate::serve::queue::RequestQueue::shed_expired`]).
+/// Sheds are part of the deterministic event stream: the engine records
+/// them in queue order at the cycle the decision was made.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShedEvent {
+    pub id: u64,
+    pub model: usize,
+    pub class: u8,
+    pub priority: u8,
+    pub arrival_cycle: u64,
+    /// The deadline that could no longer be met.
+    pub deadline: u64,
+    /// Simulated cycle at which the engine shed the request.
+    pub shed_cycle: u64,
 }

@@ -12,6 +12,13 @@
 //! that survives the per-request `Cluster::reset` of exact mode, so
 //! repeated requests replay instead of re-simulating — still bit-exact
 //! (see [`crate::sim::fastpath`]).
+//!
+//! A shard can be **parked** by the autoscaler
+//! ([`crate::serve::autoscale`]): an inactive shard receives no batches
+//! and its L2 model image is evicted, so the first batch after a
+//! [`Shard::wake`] pays the full model cold-load (switch) cost. The
+//! cluster itself — including its share of the fleet window cache — is
+//! kept, since parking models a scheduling decision, not a teardown.
 
 use crate::coordinator::{execute_deployment, preload_deployment, TileMemo};
 use crate::dory::deploy::Deployment;
@@ -41,6 +48,9 @@ pub struct Shard {
     resident: Option<PlanKey>,
     /// Registry index of the resident model (batcher affinity).
     pub resident_model: Option<usize>,
+    /// Eligible for dispatch. Parked (`false`) shards hold no model
+    /// image; the autoscaler toggles this between dispatch rounds.
+    pub active: bool,
     /// Simulated cycle at which the shard next becomes free.
     pub busy_until: u64,
     /// Total busy cycles over the shard's lifetime.
@@ -66,6 +76,7 @@ impl Shard {
             memo: TileMemo::new(),
             resident: None,
             resident_model: None,
+            active: true,
             busy_until: 0,
             busy_cycles: 0,
             served: 0,
@@ -76,6 +87,36 @@ impl Shard {
 
     pub fn is_free(&self, now: u64) -> bool {
         self.busy_until <= now
+    }
+
+    /// Cycles since the shard last finished a batch (0 while busy).
+    pub fn idle_cycles(&self, now: u64) -> u64 {
+        now.saturating_sub(self.busy_until)
+    }
+
+    /// Park the shard: no more dispatches, and the resident model's L2
+    /// image is evicted — the next batch after [`Shard::wake`] pays the
+    /// full L3→L2 cold-load cost. The cluster (and its fast-path window
+    /// cache) is retained.
+    pub fn park(&mut self) {
+        self.active = false;
+        self.resident = None;
+        self.resident_model = None;
+    }
+
+    /// Reactivate a parked shard (cold: no model resident).
+    pub fn wake(&mut self) {
+        self.active = true;
+    }
+
+    /// Enable the fast path's crosscheck mode on this shard's cluster:
+    /// every replayed window is re-simulated and compared, panicking on
+    /// any divergence (soak tests only — slower than no cache). No-op
+    /// when the fast path is disabled.
+    pub fn set_crosscheck(&mut self, on: bool) {
+        if self.cluster.fastpath().is_some() {
+            self.cluster.set_fastpath_crosscheck(on);
+        }
     }
 
     /// Fast-path counters of this shard's cluster: (pure replays,
@@ -141,8 +182,10 @@ impl Shard {
             out.push(Completion {
                 id: req.id,
                 model,
+                class: req.class,
                 shard: self.id,
                 arrival_cycle: req.arrival_cycle,
+                deadline: req.deadline,
                 start_cycle: start,
                 finish_cycle: t,
                 exec_cycles: exec,
@@ -193,8 +236,10 @@ mod tests {
         let mk = |id: u64, rng: &mut Prng| Request {
             id,
             model: 0,
+            class: 0,
             priority: 0,
             arrival_cycle: 0,
+            deadline: None,
             input: QTensor::random(&[8, 8, 8], 8, false, rng),
         };
         let batch = vec![mk(0, &mut rng), mk(1, &mut rng)];

@@ -1,0 +1,347 @@
+//! Trace-driven workload engine: deterministic open-loop arrival
+//! processes with SLO classes.
+//!
+//! The paper evaluates end-to-end QNNs one inference at a time
+//! (Table IV); a serving fleet instead faces an **arrival process** —
+//! requests show up on their own clock whether or not the fleet keeps
+//! up (open-loop). This module generates such traces purely from a
+//! seeded [`Prng`] over **simulated cycles** (no wall clock anywhere),
+//! so a trace is a deterministic function of its [`WorkloadSpec`] and
+//! every downstream number stays bit-reproducible.
+//!
+//! Four arrival shapes cover the standard serving regimes:
+//!
+//! - [`TraceShape::Steady`] — constant inter-arrival gap; the
+//!   closed-form baseline (utilization = offered load).
+//! - [`TraceShape::Poisson`] — exponential inter-arrival gaps (memoryless
+//!   traffic, the M/G/k textbook case); tail latency comes from random
+//!   clumping.
+//! - [`TraceShape::Bursty`] — on/off traffic: tight bursts separated by
+//!   long silences at the same average rate; the adversarial case for a
+//!   fixed fleet and the reason the autoscaler exists.
+//! - [`TraceShape::Diurnal`] — the inter-arrival gap ramps 1.75× →
+//!   0.25× → 1.75× of the mean (instantaneous rate peaks at 4× the
+//!   mean mid-trace, exactly load-matched on average — a day of
+//!   traffic compressed into one trace); exercises slow scale-up/down
+//!   rather than burst response.
+//!
+//! Every request draws a model from the per-model `mix` weights and an
+//! [`SloClass`] from the per-class `share` weights; the class assigns
+//! the request's priority and (optionally) a relative deadline, which
+//! the queue turns into EDF ordering and the engine into
+//! shed-before-simulate load shedding (see [`crate::serve::queue`]).
+
+use crate::qnn::QTensor;
+use crate::util::Prng;
+
+use super::TraceItem;
+
+/// Arrival-process shape of a generated trace.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TraceShape {
+    /// Constant inter-arrival gap.
+    Steady,
+    /// Exponential (memoryless) inter-arrival gaps.
+    Poisson,
+    /// On/off: bursts of `burst_len` back-to-back requests, then silence.
+    Bursty,
+    /// Gap ramps 1.75× → 0.25× → 1.75× of the mean (rate peaks at 4×
+    /// mid-trace; mean offered load matches the other shapes exactly).
+    Diurnal,
+}
+
+impl TraceShape {
+    pub const ALL: [TraceShape; 4] =
+        [TraceShape::Steady, TraceShape::Poisson, TraceShape::Bursty, TraceShape::Diurnal];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceShape::Steady => "steady",
+            TraceShape::Poisson => "poisson",
+            TraceShape::Bursty => "bursty",
+            TraceShape::Diurnal => "diurnal",
+        }
+    }
+
+    /// Parse a CLI name (`serve-bench --trace <name>`).
+    pub fn from_name(s: &str) -> Option<TraceShape> {
+        TraceShape::ALL.iter().copied().find(|t| t.name() == s)
+    }
+}
+
+impl std::fmt::Display for TraceShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One service class: a share of the traffic with a priority and an
+/// optional relative deadline (its SLO).
+#[derive(Clone, Debug)]
+pub struct SloClass {
+    pub name: String,
+    /// Queue priority (higher wins).
+    pub priority: u8,
+    /// Relative deadline in cycles from arrival; `None` = best-effort.
+    pub deadline_cycles: Option<u64>,
+    /// Non-negative mix weight of this class in the trace.
+    pub share: f64,
+}
+
+impl SloClass {
+    /// The single default class: best-effort, priority 0.
+    pub fn best_effort() -> Vec<SloClass> {
+        vec![SloClass {
+            name: "default".into(),
+            priority: 0,
+            deadline_cycles: None,
+            share: 1.0,
+        }]
+    }
+
+    /// A standard three-tier SLO mix around a base deadline:
+    /// `interactive` (20%, priority 2, deadline = base),
+    /// `standard` (50%, priority 1, deadline = 4× base),
+    /// `batch` (30%, priority 0, best-effort).
+    pub fn standard_tiers(base_deadline_cycles: u64) -> Vec<SloClass> {
+        vec![
+            SloClass {
+                name: "interactive".into(),
+                priority: 2,
+                deadline_cycles: Some(base_deadline_cycles),
+                share: 0.2,
+            },
+            SloClass {
+                name: "standard".into(),
+                priority: 1,
+                deadline_cycles: Some(base_deadline_cycles.saturating_mul(4)),
+                share: 0.5,
+            },
+            SloClass { name: "batch".into(), priority: 0, deadline_cycles: None, share: 0.3 },
+        ]
+    }
+}
+
+/// Everything that determines a generated trace. Two specs with equal
+/// fields produce bit-identical traces.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub shape: TraceShape,
+    /// Number of requests in the trace.
+    pub requests: usize,
+    /// Mean inter-arrival gap in simulated cycles (the offered load is
+    /// one request per `mean_gap` cycles for every shape).
+    pub mean_gap: u64,
+    /// Per-model mix weights (one non-negative weight per registered
+    /// model; at least one positive).
+    pub mix: Vec<f64>,
+    /// Service classes with their traffic shares (at least one).
+    pub classes: Vec<SloClass>,
+    /// Requests per burst (only [`TraceShape::Bursty`]).
+    pub burst_len: usize,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// A single-class best-effort spec over `models` equal-weighted
+    /// models (the pre-SLO engine behavior).
+    pub fn new(shape: TraceShape, requests: usize, mean_gap: u64, models: usize) -> Self {
+        WorkloadSpec {
+            shape,
+            requests,
+            mean_gap: mean_gap.max(1),
+            mix: vec![1.0; models],
+            classes: SloClass::best_effort(),
+            burst_len: 8,
+            seed: 0x70AD,
+        }
+    }
+}
+
+/// Draw an index from non-negative `weights` (at least one positive).
+/// Shared with [`crate::serve::Engine::synthetic_trace`] so the two
+/// generators cannot drift on edge behavior.
+pub(crate) fn weighted_pick(rng: &mut Prng, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    debug_assert!(total > 0.0, "weights must have positive mass");
+    let mut pick = rng.next_u64() as f64 / u64::MAX as f64 * total;
+    let mut idx = 0;
+    for (i, w) in weights.iter().enumerate() {
+        idx = i;
+        if pick < *w {
+            break;
+        }
+        pick -= w;
+    }
+    idx
+}
+
+/// Exponential gap with the given mean (inverse-CDF over a uniform
+/// draw; clamped to ≥ 1 cycle).
+fn exp_gap(rng: &mut Prng, mean: u64) -> u64 {
+    // 53 uniform bits in (0, 1]: never ln(0).
+    let u = ((rng.next_u64() >> 11) + 1) as f64 / (1u64 << 53) as f64;
+    (-(mean as f64) * u.ln()).round().max(1.0) as u64
+}
+
+/// Generate the arrival trace for `spec`. `model_io[m]` is the input
+/// `(shape, bits)` of registered model `m` (the engine passes its
+/// registry; see [`crate::serve::Engine::workload_trace`]). Arrival
+/// times are non-decreasing by construction.
+pub fn generate(spec: &WorkloadSpec, model_io: &[(Vec<usize>, u8)]) -> Vec<TraceItem> {
+    assert_eq!(spec.mix.len(), model_io.len(), "one mix weight per model");
+    assert!(!spec.classes.is_empty(), "need at least one SLO class");
+    let mut rng = Prng::new(spec.seed);
+    let class_shares: Vec<f64> = spec.classes.iter().map(|c| c.share).collect();
+    let mean = spec.mean_gap.max(1);
+    let burst = spec.burst_len.max(1);
+    let mut at = 0u64;
+    let mut out = Vec::with_capacity(spec.requests);
+    for i in 0..spec.requests {
+        // Advance the arrival clock per the shape (skip before the first
+        // request so every shape starts at cycle 0).
+        if i > 0 {
+            at += match spec.shape {
+                TraceShape::Steady => mean,
+                TraceShape::Poisson => exp_gap(&mut rng, mean),
+                TraceShape::Bursty => {
+                    if i % burst == 0 {
+                        // silence between bursts: the burst's share of the
+                        // mean load, minus what the tight gaps consumed
+                        let tight = mean / 10;
+                        mean * burst as u64 - tight * (burst as u64 - 1)
+                    } else {
+                        mean / 10 // tight intra-burst gap
+                    }
+                }
+                TraceShape::Diurnal => {
+                    // gap factor ramps 1.75 → 0.25 → 1.75 (triangle):
+                    // the rate peaks at 4× mid-trace while the average
+                    // gap factor is exactly 1.75 - 1.5·E[tri] = 1, so
+                    // the mean offered load matches the other shapes.
+                    let n = spec.requests.max(2) as f64;
+                    let tri = 1.0 - ((2.0 * i as f64 / (n - 1.0)) - 1.0).abs();
+                    let g = 1.75 - 1.5 * tri;
+                    ((mean as f64 * g).round() as u64).max(1)
+                }
+            };
+        }
+        let model = weighted_pick(&mut rng, &spec.mix);
+        let class = weighted_pick(&mut rng, &class_shares);
+        let c = &spec.classes[class];
+        let (shape, bits) = &model_io[model];
+        out.push(TraceItem {
+            at,
+            model,
+            class: class as u8,
+            priority: c.priority,
+            deadline: c.deadline_cycles.map(|d| at + d),
+            input: QTensor::random(shape, *bits, false, &mut rng),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io() -> Vec<(Vec<usize>, u8)> {
+        vec![(vec![8, 8, 8], 8), (vec![4, 4, 8], 8)]
+    }
+
+    fn spec(shape: TraceShape) -> WorkloadSpec {
+        WorkloadSpec {
+            shape,
+            requests: 64,
+            mean_gap: 1000,
+            mix: vec![0.7, 0.3],
+            classes: SloClass::standard_tiers(5_000),
+            burst_len: 8,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn every_shape_generates_a_well_formed_trace() {
+        for shape in TraceShape::ALL {
+            let s = spec(shape);
+            let trace = generate(&s, &io());
+            assert_eq!(trace.len(), 64, "{shape}");
+            // arrivals non-decreasing, models/classes in range,
+            // deadlines after arrival
+            for w in trace.windows(2) {
+                assert!(w[0].at <= w[1].at, "{shape}: arrivals must be sorted");
+            }
+            for t in &trace {
+                assert!(t.model < 2);
+                assert!((t.class as usize) < s.classes.len());
+                if let Some(d) = t.deadline {
+                    assert!(d > t.at, "{shape}: deadline before arrival");
+                }
+                let c = &s.classes[t.class as usize];
+                assert_eq!(t.priority, c.priority);
+                assert_eq!(t.deadline, c.deadline_cycles.map(|d| t.at + d));
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let s = spec(TraceShape::Poisson);
+        let (a, b) = (generate(&s, &io()), generate(&s, &io()));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.deadline, y.deadline);
+            assert_eq!(x.input.data, y.input.data);
+        }
+        let mut s2 = spec(TraceShape::Poisson);
+        s2.seed ^= 1;
+        let c = generate(&s2, &io());
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.at != y.at || x.input.data != y.input.data),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn mean_offered_load_is_matched_across_shapes() {
+        // All shapes target one request per mean_gap cycles; bursty and
+        // diurnal redistribute load in time without changing the mean
+        // (the band covers Poisson sampling noise at 256 draws).
+        for shape in TraceShape::ALL {
+            let mut s = spec(shape);
+            s.requests = 256;
+            let trace = generate(&s, &io());
+            let span = trace.last().unwrap().at - trace[0].at;
+            let mean = span as f64 / (s.requests - 1) as f64;
+            assert!(
+                mean > 0.75 * s.mean_gap as f64 && mean < 1.35 * s.mean_gap as f64,
+                "{shape}: mean gap {mean} vs target {}",
+                s.mean_gap
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_alternates_tight_and_long_gaps() {
+        let s = spec(TraceShape::Bursty);
+        let trace = generate(&s, &io());
+        let gaps: Vec<u64> = trace.windows(2).map(|w| w[1].at - w[0].at).collect();
+        let tight = gaps.iter().filter(|&&g| g <= s.mean_gap / 10).count();
+        let long = gaps.iter().filter(|&&g| g >= s.mean_gap).count();
+        assert!(tight >= gaps.len() / 2, "most gaps are intra-burst ({tight}/{})", gaps.len());
+        assert_eq!(long, 64 / 8 - 1, "one silence per burst boundary");
+    }
+
+    #[test]
+    fn shape_names_roundtrip() {
+        for shape in TraceShape::ALL {
+            assert_eq!(TraceShape::from_name(shape.name()), Some(shape));
+        }
+        assert_eq!(TraceShape::from_name("nope"), None);
+    }
+}

@@ -57,10 +57,38 @@ fn serve_path_matches_coordinator_bit_exactly() {
     // Interleaved arrivals, mixed priorities, repeated models — ids are
     // assigned in arrival order (0..4).
     let trace = vec![
-        TraceItem { at: 0, model: tiny_id, priority: 0, input: tiny_inputs[0].clone() },
-        TraceItem { at: 10, model: resnet_id, priority: 0, input: resnet_input.clone() },
-        TraceItem { at: 20, model: tiny_id, priority: 1, input: tiny_inputs[1].clone() },
-        TraceItem { at: 30, model: tiny_id, priority: 0, input: tiny_inputs[2].clone() },
+        TraceItem {
+            at: 0,
+            model: tiny_id,
+            class: 0,
+            priority: 0,
+            deadline: None,
+            input: tiny_inputs[0].clone(),
+        },
+        TraceItem {
+            at: 10,
+            model: resnet_id,
+            class: 0,
+            priority: 0,
+            deadline: None,
+            input: resnet_input.clone(),
+        },
+        TraceItem {
+            at: 20,
+            model: tiny_id,
+            class: 0,
+            priority: 1,
+            deadline: None,
+            input: tiny_inputs[1].clone(),
+        },
+        TraceItem {
+            at: 30,
+            model: tiny_id,
+            class: 0,
+            priority: 0,
+            deadline: None,
+            input: tiny_inputs[2].clone(),
+        },
     ];
     let m = eng.run_trace(trace);
     assert_eq!(m.served, 4);
@@ -84,10 +112,38 @@ fn serve_path_matches_coordinator_bit_exactly() {
     assert_eq!(eng2.register(tiny(21)), tiny_id);
     assert_eq!(eng2.register(resnet20(Profile::Mixed4a2w, 5)), resnet_id);
     let trace2 = vec![
-        TraceItem { at: 0, model: tiny_id, priority: 0, input: tiny_inputs[0].clone() },
-        TraceItem { at: 10, model: resnet_id, priority: 0, input: resnet_input.clone() },
-        TraceItem { at: 20, model: tiny_id, priority: 1, input: tiny_inputs[1].clone() },
-        TraceItem { at: 30, model: tiny_id, priority: 0, input: tiny_inputs[2].clone() },
+        TraceItem {
+            at: 0,
+            model: tiny_id,
+            class: 0,
+            priority: 0,
+            deadline: None,
+            input: tiny_inputs[0].clone(),
+        },
+        TraceItem {
+            at: 10,
+            model: resnet_id,
+            class: 0,
+            priority: 0,
+            deadline: None,
+            input: resnet_input.clone(),
+        },
+        TraceItem {
+            at: 20,
+            model: tiny_id,
+            class: 0,
+            priority: 1,
+            deadline: None,
+            input: tiny_inputs[1].clone(),
+        },
+        TraceItem {
+            at: 30,
+            model: tiny_id,
+            class: 0,
+            priority: 0,
+            deadline: None,
+            input: tiny_inputs[2].clone(),
+        },
     ];
     eng2.run_trace(trace2);
     for (a, b) in eng.completions().iter().zip(eng2.completions()) {

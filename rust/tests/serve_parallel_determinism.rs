@@ -35,11 +35,20 @@ fn mk_trace(tiny_a: usize, tiny_b: usize, resnet: usize) -> Vec<TraceItem> {
         trace.push(TraceItem {
             at: i as u64 * 40,
             model: if i % 2 == 0 { tiny_a } else { tiny_b },
+            class: 0,
             priority: (i % 3) as u8,
+            deadline: None,
             input,
         });
     }
-    trace.push(TraceItem { at: 90, model: resnet, priority: 0, input: resnet_input });
+    trace.push(TraceItem {
+        at: 90,
+        model: resnet,
+        class: 0,
+        priority: 0,
+        deadline: None,
+        input: resnet_input,
+    });
     trace
 }
 

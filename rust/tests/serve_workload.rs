@@ -1,0 +1,182 @@
+//! Workload-engine integration: the adversarial traffic scenarios
+//! (bursty arrivals, SLO classes, load shedding, elastic scaling) obey
+//! the same determinism contract as the plain fleet — every simulated
+//! number, including deadline-miss counts, shed events, and the
+//! shard-occupancy timeline, is bit-identical for any worker count and
+//! fast-path setting. Plus the randomized fast-path soak: a seeded
+//! bursty trace with crosscheck mode on (every replayed simulation
+//! window is re-simulated and compared; any divergence panics).
+
+use flexv::qnn::layer::Network;
+use flexv::qnn::Layer;
+use flexv::serve::{
+    AutoscaleConfig, Engine, ServeConfig, SloClass, TraceShape, WorkloadSpec,
+};
+use flexv::util::Prng;
+
+fn tiny(name: &str, seed: u64) -> Network {
+    let mut rng = Prng::new(seed);
+    let mut net = Network::new(name, [8, 8, 8], 8);
+    net.push(Layer::conv("c1", [8, 8, 8], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+    net.push(Layer::conv("c2", [8, 8, 16], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+    net
+}
+
+/// The standard adversarial scenario: a bursty two-model SLO trace on
+/// an autoscaled fleet (1..=3 shards, fast park/cooldown so both scale
+/// directions fire within the trace).
+fn bursty_spec() -> WorkloadSpec {
+    WorkloadSpec {
+        shape: TraceShape::Bursty,
+        requests: 18,
+        mean_gap: 30_000,
+        mix: vec![0.6, 0.4],
+        classes: SloClass::standard_tiers(250_000),
+        burst_len: 6,
+        seed: 0xB0B5,
+    }
+}
+
+fn autoscale_cfg() -> AutoscaleConfig {
+    let mut ac = AutoscaleConfig::range(1, 3);
+    ac.idle_cycles_down = 120_000;
+    ac.cooldown_cycles = 30_000;
+    ac
+}
+
+/// Everything a run reports, flattened for equality comparison.
+#[derive(PartialEq, Debug)]
+struct Fingerprint {
+    completions: Vec<(u64, usize, u8, usize, u64, u64, u64, u64, usize, Vec<u64>, Vec<u8>)>,
+    shed: Vec<(u64, u8, u64, u64)>,
+    occupancy: Vec<(u64, usize)>,
+    served: usize,
+    misses: u64,
+    shed_count: u64,
+    ups: u64,
+    downs: u64,
+    span: u64,
+    p99: u64,
+    class_p99: Vec<u64>,
+    class_viol: Vec<(usize, usize)>,
+}
+
+fn run(workers: usize, fastpath: bool, crosscheck: bool) -> Fingerprint {
+    let cfg = ServeConfig {
+        shards: 3,
+        n_cores: 4,
+        workers,
+        fastpath,
+        crosscheck,
+        autoscale: Some(autoscale_cfg()),
+        ..ServeConfig::default()
+    };
+    let mut eng = Engine::new(cfg);
+    eng.register(tiny("wl-a", 51));
+    eng.register(tiny("wl-b", 52));
+    let trace = eng.workload_trace(&bursty_spec());
+    let m = eng.run_trace(trace);
+    Fingerprint {
+        completions: eng
+            .completions()
+            .iter()
+            .map(|c| {
+                (
+                    c.id,
+                    c.model,
+                    c.class,
+                    c.shard,
+                    c.arrival_cycle,
+                    c.start_cycle,
+                    c.finish_cycle,
+                    c.exec_cycles,
+                    c.batch_size,
+                    c.layer_cycles.clone(),
+                    c.output.clone(),
+                )
+            })
+            .collect(),
+        shed: eng
+            .shed_events()
+            .iter()
+            .map(|s| (s.id, s.class, s.deadline, s.shed_cycle))
+            .collect(),
+        occupancy: eng.occupancy().to_vec(),
+        served: m.served,
+        misses: m.deadline_misses,
+        shed_count: m.shed,
+        ups: m.scale_ups,
+        downs: m.scale_downs,
+        span: m.span_cycles,
+        p99: m.p99_cycles,
+        class_p99: m.class_rows.iter().map(|c| c.p99_cycles).collect(),
+        class_viol: m.class_rows.iter().map(|c| (c.missed, c.shed)).collect(),
+    }
+}
+
+/// Acceptance gate: the autoscaled bursty SLO scenario is bit-identical
+/// for workers ∈ {1, 4} and fast path on/off — completions, deadline
+/// misses, shed events, and the shard-occupancy timeline included.
+#[test]
+fn autoscaled_bursty_trace_is_bit_deterministic() {
+    let reference = run(1, false, false);
+    // the trace must actually exercise the new machinery
+    assert!(reference.served > 0, "nothing served");
+    assert!(reference.ups > 0, "burst never woke a shard");
+    assert!(
+        reference.occupancy.iter().any(|&(_, n)| n > 1),
+        "occupancy never left the floor: {:?}",
+        reference.occupancy
+    );
+    assert_eq!(reference.occupancy[0], (0, 1), "fleet must start at min");
+    assert_eq!(
+        reference.served + reference.shed_count as usize,
+        18,
+        "every request is either served or shed"
+    );
+
+    let four_workers = run(4, false, false);
+    assert_eq!(reference, four_workers, "worker count changed results");
+    let fastpath = run(1, true, false);
+    assert_eq!(reference, fastpath, "fast path changed results");
+    let both = run(4, true, false);
+    assert_eq!(reference, both, "workers + fast path changed results");
+}
+
+/// Randomized fast-path soak (satellite): the same bursty trace with
+/// crosscheck mode on — every replayed window is re-simulated on a
+/// forked cluster and compared, so completing at all means zero
+/// crosscheck divergences — and the results still match `--no-fastpath`
+/// bit-for-bit.
+#[test]
+fn fastpath_soak_bursty_crosscheck_zero_divergence() {
+    let checked = run(1, true, true);
+    let reference = run(1, false, false);
+    assert_eq!(checked, reference, "crosschecked fast path diverged from slow path");
+}
+
+/// The workload trace generator and the engine agree end-to-end on SLO
+/// semantics: the per-class rows partition every request (served or
+/// shed), carry the class table's priorities/deadlines, and render.
+#[test]
+fn slo_classes_flow_through_to_metrics() {
+    let cfg = ServeConfig { shards: 1, n_cores: 4, max_batch: 2, ..ServeConfig::default() };
+    let mut eng = Engine::new(cfg);
+    eng.register(tiny("slo-a", 53));
+    eng.register(tiny("slo-b", 54));
+    let mut spec = bursty_spec();
+    spec.requests = 12;
+    let trace = eng.workload_trace(&spec);
+    let m = eng.run_trace(trace);
+    assert_eq!(m.class_rows.len(), 3);
+    let by_class: usize = m.class_rows.iter().map(|c| c.served + c.shed).sum();
+    assert_eq!(by_class, m.served + m.shed as usize, "class rows must partition requests");
+    for (row, class) in m.class_rows.iter().zip(&spec.classes) {
+        assert_eq!(row.name, class.name);
+        assert_eq!(row.priority, class.priority);
+        assert_eq!(row.deadline_cycles, class.deadline_cycles);
+    }
+    // rendering includes the SLO table
+    let rendered = m.render();
+    assert!(rendered.contains("interactive") && rendered.contains("viol%"), "{rendered}");
+}

@@ -10,7 +10,12 @@
 //! path off; the simulated numbers must match bit-for-bit (asserted)
 //! and the wall-clock ratio is reported (target: ≥ 5x combined).
 //!
-//!     cargo bench --bench serve_throughput [-- --full] [-- --baseline]
+//! Pass `--tuned` to add an autotuned-fleet row: the same trace served
+//! with `ServeConfig::tuned` (simulator-in-the-loop per-layer plans),
+//! reporting the tuner's measured default → tuned cycle totals — which
+//! can never regress, since the analytic plan is always a candidate.
+//!
+//!     cargo bench --bench serve_throughput [-- --full] [-- --baseline] [-- --tuned]
 
 use flexv::serve::{
     standard_mix, AutoscaleConfig, Engine, FleetMetrics, ServeConfig, SloClass, TraceShape,
@@ -133,9 +138,56 @@ fn scenario_matrix(hw: usize, requests: usize) {
     );
 }
 
+/// `--tuned`: serve the standard trace once with analytic plans and
+/// once with autotuned plans on the same 4-shard fleet; report both and
+/// the tuner's own measured delta.
+fn tuned_row(hw: usize, requests: usize) {
+    println!();
+    let run = |tuned: bool| {
+        let cfg = ServeConfig { shards: 4, tuned, ..ServeConfig::default() };
+        let mut eng = Engine::new(cfg);
+        for net in standard_mix(hw) {
+            eng.register(net);
+        }
+        let trace = eng.synthetic_trace(requests, 1_500_000, &MIX, 0xBE7C);
+        let t0 = Instant::now();
+        let m = eng.run_trace(trace);
+        (m, t0.elapsed().as_secs_f64())
+    };
+    let (md, wall_d) = run(false);
+    let (mt, wall_t) = run(true);
+    println!(
+        "autotuned fleet (4 shards): analytic p99 {:.1} ms, {:.1} MAC/cyc busy ({wall_d:.1}s) \
+         vs tuned p99 {:.1} ms, {:.1} MAC/cyc busy ({wall_t:.1}s incl. tuning)",
+        ms(md.p99_cycles),
+        md.busy_macs_per_cycle,
+        ms(mt.p99_cycles),
+        mt.busy_macs_per_cycle,
+    );
+    println!(
+        "autotune: {} models, measured per-inference cycles {} → {} ({:.1}% saved, {} layers improved)",
+        mt.tuned.models,
+        mt.tuned.default_cycles,
+        mt.tuned.tuned_cycles,
+        mt.tuned.gain_fraction() * 100.0,
+        mt.tuned.improved_layers,
+    );
+    // every model the trace actually dispatched was tuned exactly once
+    assert!(
+        mt.tuned.models >= 1 && mt.tuned.models <= 3,
+        "unexpected tuned-model count {}",
+        mt.tuned.models
+    );
+    assert!(
+        mt.tuned.tuned_cycles <= mt.tuned.default_cycles,
+        "tuned plans measured worse than the analytic default"
+    );
+}
+
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let baseline = std::env::args().any(|a| a == "--baseline");
+    let tuned = std::env::args().any(|a| a == "--tuned");
     let hw = if full { 224 } else { 96 };
     let requests = 24;
     println!("serve throughput: {requests} requests/row, MNV1 input {hw}x{hw}, mix 45/30/25%");
@@ -171,6 +223,9 @@ fn main() {
             tail
         );
         assert!(m.cache_misses <= 3, "at most one deploy per model");
+    }
+    if tuned {
+        tuned_row(hw, requests);
     }
     scenario_matrix(hw, requests);
 }

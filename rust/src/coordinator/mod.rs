@@ -159,9 +159,14 @@ pub fn execute_deployment(
     let n_cores = cluster.cores.len();
     let mut layers = Vec::with_capacity(dep.plans.len());
     for plan in &dep.plans {
+        // Autotuned plans carry a per-layer kernel lowering + core
+        // count; cores beyond the override stay halted for the layer.
+        let (isa, nc) = plan
+            .exec
+            .map_or((dep.isa, n_cores), |e| (e.isa, e.n_cores.min(n_cores)));
         let stats = match memo.as_mut() {
-            Some(m) => run_layer_memoized(cluster, dep.isa, plan, n_cores, &mut **m),
-            None => run_layer_full(cluster, dep.isa, plan, n_cores),
+            Some(m) => run_layer_memoized(cluster, isa, plan, nc, &mut **m),
+            None => run_layer_full(cluster, isa, plan, nc),
         };
         layers.push(LayerMetrics {
             name: plan.name.clone(),
@@ -240,7 +245,13 @@ fn run_layer_full(
 /// non-memoized path for numerical validation. The equivalence of the
 /// reconstructed timing is asserted (<3%) by `memoized_timing_matches_full`
 /// below.
-fn run_layer_memoized(
+///
+/// Public because it is also the autotuner's measurement primitive
+/// ([`crate::dory::autotune`]): candidate layer plans are costed with
+/// exactly the metric the memoized executor will later reproduce, and a
+/// shared [`TileMemo`] makes structurally identical candidates cost
+/// identically (so selection ties are exact, not noisy).
+pub fn run_layer_memoized(
     cluster: &mut Cluster,
     isa: IsaVariant,
     plan: &LayerPlan,
@@ -486,6 +497,44 @@ mod tests {
         // run 1's data exactly and replays pure deltas.
         assert!(fp.func_hits > 0, "no functional replays: {fp:?}");
         assert!(fp.pure_hits > 0, "no pure replays: {fp:?}");
+    }
+
+    /// Per-layer exec overrides (autotuner output) stay bit-exact: a
+    /// layer lowered to a narrower core count and another lowered to a
+    /// simpler ISA still reproduce the golden outputs, in both full and
+    /// memoized execution.
+    #[test]
+    fn exec_overrides_stay_bit_exact_across_isa_and_core_count() {
+        use crate::dory::autotune::{LayerTuning, NetworkTuning};
+        use crate::dory::deploy::deploy_tuned;
+        let mut rng = Prng::new(83);
+        let mut net = Network::new("ovr", [10, 10, 8], 8);
+        net.push(Layer::conv("c1", [10, 10, 8], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        net.push(Layer::conv("c2", [10, 10, 16], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+        net.validate().unwrap();
+        let input = QTensor::random(&[10, 10, 8], 8, false, &mut rng);
+        let golden_outs = golden::run_network(&net, &input);
+        let t = |isa, n_cores| LayerTuning {
+            isa,
+            n_cores,
+            shape: None,
+            tuned_cycles: 0,
+            default_cycles: 0,
+        };
+        let tuning = NetworkTuning {
+            layers: vec![t(IsaVariant::FlexV, 4), t(IsaVariant::Ri5cy, 8)],
+        };
+        let dep = deploy_tuned(&net, IsaVariant::FlexV, MemBudget::default(), &tuning);
+        let mut coord = Coordinator::new(8);
+        let res = coord.run(&dep, &input);
+        assert_eq!(res.output, golden_outs.last().unwrap().data, "override output");
+        // memoized timing-only mode resolves the same overrides (the
+        // per-tile key includes the overridden ISA and core count)
+        let mut memo = Coordinator::new(8);
+        memo.memoize_tiles = true;
+        let rm = memo.run(&dep, &input);
+        assert_eq!(rm.total_macs(), res.total_macs());
+        assert!(rm.total_cycles() > 0);
     }
 
     /// The free-function path (preload + execute) is exactly the

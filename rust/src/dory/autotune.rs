@@ -1,0 +1,617 @@
+//! Simulator-in-the-loop autotuner for per-layer deployment plans.
+//!
+//! The analytic tiler minimizes DMA *traffic* and [`deploy`] pins one
+//! kernel lowering and the full cluster width for a whole network — but
+//! the quantity that matters is measured **cycles**, and the winner is
+//! per-layer: a pointwise conv with few output pixels may run fastest on
+//! 4 cores (less TCDM contention, shorter barrier tails), a degenerate
+//! geometry may prefer a different tile shape than the traffic optimum,
+//! and on a Flex-V core a sw-unpack lowering of a simpler variant can
+//! occasionally beat the native mixed-precision kernel. This module
+//! searches those axes with the simulator itself in the loop:
+//!
+//! 1. **Enumerate** candidates per layer: feasible tile shapes from the
+//!    tiler ([`enumerate_conv_tilings`], analytic DMA cost as the
+//!    search-space pruner), kernel lowerings the target core can execute
+//!    ([`IsaVariant::compatible_lowerings`], including sw-unpack
+//!    lowerings), and core counts (default {4, 8}).
+//! 2. **Measure** each candidate by planning the layer in isolation
+//!    (`deploy::plan_layer`) and running its distinct tile structures
+//!    through a short [`Cluster`] simulation — exactly the serial
+//!    load/kernel/store windows plus double-buffer pipeline
+//!    reconstruction of [`run_layer_memoized`], with one shared
+//!    [`TileMemo`] so structurally identical candidates cost
+//!    identically.
+//! 3. **Select** by measured cycles; the analytic DMA cost breaks ties,
+//!    and the untuned default — always candidate 0 — wins full ties, so
+//!    a tuned plan is *never worse than the analytic plan by the
+//!    measured metric* (`tuned_cycles <= default_cycles` per layer, by
+//!    construction).
+//!
+//! Results land in a [`NetworkTuning`] (one [`LayerTuning`] per node)
+//! collected in a [`TuneCache`] keyed like the plan cache
+//! ([`PlanKey::for_network`]); [`deploy::deploy_tuned`] consumes it and
+//! stamps each plan with the matching [`crate::dory::ExecOverride`].
+//!
+//! # Determinism
+//!
+//! Tuning is a pure function of (network, target ISA, memory budget,
+//! cluster width, [`TuneConfig`]): candidate order is fixed, every
+//! measurement is a deterministic cycle-accurate simulation, and
+//! selection is a total order — two runs produce bit-identical
+//! [`NetworkTuning`]s, which is what lets the serve engine tune once
+//! per model fleet-wide and keeps `serve-bench --tuned` inside the
+//! engine's determinism contract. The cache serializes to a plain text
+//! format ([`TuneCache::to_text`]) so a tuning can be persisted and
+//! reloaded without re-measuring.
+
+use std::collections::BTreeMap;
+
+use super::deploy::{self, w_row_pitch, L2Alloc};
+use super::tiler::{buf_bits, dma_cost, enumerate_conv_tilings};
+use super::{LayerPlan, MemBudget, PlanKey, TileShape};
+use crate::coordinator::{run_layer_memoized, TileMemo};
+use crate::isa::IsaVariant;
+use crate::kernels::im2col::ConvGeom;
+use crate::qnn::layer::{Layer, LayerKind, Network};
+use crate::sim::Cluster;
+
+/// Search-space knobs of one tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// Core counts to try per layer (values above the cluster width are
+    /// skipped; the default width is always a candidate).
+    pub core_counts: Vec<usize>,
+    /// Tile shapes per (layer, lowering), best analytic cost first —
+    /// the pruner bounding how much of the tiler's feasible set is
+    /// measured.
+    pub max_shapes: usize,
+    /// Kernel lowerings to try; `None` = everything the target core can
+    /// execute ([`IsaVariant::compatible_lowerings`]).
+    pub isas: Option<Vec<IsaVariant>>,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig { core_counts: vec![4, 8], max_shapes: 2, isas: None }
+    }
+}
+
+/// The tuned plan of one layer, plus both sides of the measurement that
+/// chose it ([`run_layer_memoized`]'s pipeline-reconstructed cycles).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct LayerTuning {
+    /// Kernel lowering the layer runs (a compatible lowering of the
+    /// deployment target).
+    pub isa: IsaVariant,
+    /// Cores the layer's programs are generated for.
+    pub n_cores: usize,
+    /// Conv tile-shape override (`None` = the analytic solver's choice).
+    pub shape: Option<TileShape>,
+    /// Measured cycles of the selected plan.
+    pub tuned_cycles: u64,
+    /// Measured cycles of the analytic default plan (same metric);
+    /// `tuned_cycles <= default_cycles` always holds.
+    pub default_cycles: u64,
+}
+
+impl LayerTuning {
+    /// Measured cycles saved over the analytic default.
+    pub fn gain(&self) -> u64 {
+        self.default_cycles - self.tuned_cycles
+    }
+}
+
+/// Per-layer tunings of one network, indexed by node id.
+#[derive(Clone, PartialEq, Eq, Debug, Default)]
+pub struct NetworkTuning {
+    pub layers: Vec<LayerTuning>,
+}
+
+impl NetworkTuning {
+    /// Σ measured cycles of the tuned per-layer plans.
+    pub fn total_tuned_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.tuned_cycles).sum()
+    }
+
+    /// Σ measured cycles of the analytic default plans.
+    pub fn total_default_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.default_cycles).sum()
+    }
+
+    /// Layers whose tuned plan measured strictly faster than the
+    /// analytic default.
+    pub fn improved_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.tuned_cycles < l.default_cycles).count()
+    }
+
+    /// Fraction of the default's measured cycles saved (0.0 when
+    /// nothing improved).
+    pub fn gain_fraction(&self) -> f64 {
+        let d = self.total_default_cycles();
+        if d == 0 {
+            0.0
+        } else {
+            (d - self.total_tuned_cycles()) as f64 / d as f64
+        }
+    }
+}
+
+/// One candidate plan of the per-layer search.
+struct Candidate {
+    isa: IsaVariant,
+    n_cores: usize,
+    shape: Option<TileShape>,
+    /// Analytic DMA cost (conv shapes only; 0 elsewhere) — the
+    /// selection tie-break.
+    analytic: u64,
+}
+
+/// Plan one layer in isolation: a scratch L2 allocator provides the
+/// activation/weight addresses (DMA timing never depends on the L2-side
+/// address, so the probe's tile windows cost exactly what the deployed
+/// layer's will — see [`PlanKey::for_tile`]).
+fn probe_plan(
+    l: &Layer,
+    isa: IsaVariant,
+    budget: &MemBudget,
+    shape: Option<TileShape>,
+) -> LayerPlan {
+    let mut l2 = L2Alloc::new(budget);
+    let mut preload = vec![];
+    let in_l2 = l2.alloc(l.in_bytes().max(4));
+    let in2_l2 = matches!(l.kind, LayerKind::Add { .. }).then(|| l2.alloc(l.in_bytes().max(4)));
+    let out_l2 = l2.alloc(l.out_bytes().max(4));
+    deploy::plan_layer(isa, budget, &mut l2, &mut preload, l, 0, in_l2, in2_l2, out_l2, shape)
+}
+
+/// Candidate plans of one layer, untuned default first.
+fn layer_candidates(
+    l: &Layer,
+    target: IsaVariant,
+    budget: &MemBudget,
+    max_cores: usize,
+    cfg: &TuneConfig,
+) -> Vec<Candidate> {
+    let mut cores: Vec<usize> = cfg
+        .core_counts
+        .iter()
+        .copied()
+        .filter(|&n| n >= 1 && n <= max_cores)
+        .collect();
+    if !cores.contains(&max_cores) {
+        cores.push(max_cores);
+    }
+    cores.sort_unstable();
+    cores.dedup();
+    let default_isas = target.compatible_lowerings().to_vec();
+    let isas: Vec<IsaVariant> = cfg
+        .isas
+        .clone()
+        .unwrap_or(default_isas)
+        .into_iter()
+        .filter(|i| target.compatible_lowerings().contains(i))
+        .collect();
+
+    // The untuned default: deployment-wide lowering, full width,
+    // analytic tile shape.
+    let mut out = vec![Candidate { isa: target, n_cores: max_cores, shape: None, analytic: 0 }];
+    // Geometry of conv layers, for per-lowering shape enumeration.
+    let conv_geom = match l.kind {
+        LayerKind::Conv2d { kh, kw, stride, pad } => {
+            let [h, w, cin] = l.in_shape;
+            Some(ConvGeom::square(h, w, cin, l.out_shape[2], kh, kw, stride, pad, l.a_bits))
+        }
+        _ => None,
+    };
+    // Lowerings only matter where the generators consume them.
+    let isa_sensitive = matches!(l.kind, LayerKind::Conv2d { .. } | LayerKind::Linear);
+    for &isa in &isas {
+        if !isa_sensitive && isa != target {
+            continue;
+        }
+        // Per-lowering conv shapes (the GEMM row pitch — and with it the
+        // feasible set — depends on the lowering's buffer width).
+        let shapes: Vec<Option<TileShape>> = match &conv_geom {
+            Some(g) => {
+                let w_pitch = w_row_pitch(g.k(), buf_bits(g, isa), l.w_bits) as usize;
+                enumerate_conv_tilings(g, isa, w_pitch, l.quant.out_bits, budget.l1, cfg.max_shapes)
+                    .into_iter()
+                    .map(Some)
+                    .collect()
+            }
+            None => vec![None],
+        };
+        if shapes.is_empty() {
+            // Nothing fits L1 under this lowering (wider buffers).
+            continue;
+        }
+        for &n_cores in &cores {
+            for &shape in &shapes {
+                // Skip the candidate structurally identical to the
+                // default (for the target lowering the enumerator's
+                // first shape *is* the analytic solver's choice).
+                let is_default_shape = match (&conv_geom, shape) {
+                    (None, None) => true,
+                    (Some(_), s) => s == shapes[0],
+                    _ => false,
+                };
+                if isa == target && n_cores == max_cores && is_default_shape {
+                    continue;
+                }
+                let analytic = match (&conv_geom, shape) {
+                    (Some(g), Some(s)) => {
+                        let w_pitch = w_row_pitch(g.k(), buf_bits(g, isa), l.w_bits) as usize;
+                        dma_cost(g, w_pitch, l.quant.out_bits, s)
+                    }
+                    _ => 0,
+                };
+                out.push(Candidate { isa, n_cores, shape, analytic });
+            }
+        }
+    }
+    out
+}
+
+/// Tune every layer of `net` for a `max_cores`-wide cluster of `target`
+/// cores under `budget`. Deterministic (see the module docs); the
+/// result feeds [`deploy::deploy_tuned`].
+pub fn tune_network(
+    net: &Network,
+    target: IsaVariant,
+    budget: MemBudget,
+    max_cores: usize,
+    cfg: &TuneConfig,
+) -> NetworkTuning {
+    net.validate().expect("invalid network");
+    let mut cluster = Cluster::new(max_cores);
+    let mut memo = TileMemo::new();
+    let mut layers = Vec::with_capacity(net.nodes.len());
+    for node in &net.nodes {
+        let l = &node.layer;
+        let cands = layer_candidates(l, target, &budget, max_cores, cfg);
+        // Plans depend only on (lowering, shape) — build each once
+        // (weight serialization dominates plan cost) and measure it at
+        // every candidate core count.
+        let mut plans: Vec<((IsaVariant, Option<TileShape>), LayerPlan)> = Vec::new();
+        let mut measured = Vec::with_capacity(cands.len());
+        for c in &cands {
+            let key = (c.isa, c.shape);
+            if !plans.iter().any(|(k, _)| *k == key) {
+                plans.push((key, probe_plan(l, c.isa, &budget, c.shape)));
+            }
+            let plan = &plans.iter().find(|(k, _)| *k == key).expect("just inserted").1;
+            let cycles =
+                run_layer_memoized(&mut cluster, c.isa, plan, c.n_cores, &mut memo).cycles;
+            measured.push(cycles);
+        }
+        // Select by (measured cycles, analytic cost); the default is
+        // candidate 0, so it survives exact ties.
+        let mut best = 0;
+        for i in 1..cands.len() {
+            if (measured[i], cands[i].analytic) < (measured[best], cands[best].analytic) {
+                best = i;
+            }
+        }
+        let c = &cands[best];
+        layers.push(LayerTuning {
+            isa: c.isa,
+            n_cores: c.n_cores,
+            shape: c.shape,
+            tuned_cycles: measured[best],
+            default_cycles: measured[0],
+        });
+    }
+    NetworkTuning { layers }
+}
+
+/// Fleet-wide store of [`NetworkTuning`]s keyed like the serve plan
+/// cache ([`PlanKey::for_network`]), with hit/miss accounting and a
+/// deterministic text serialization (`BTreeMap` ⇒ stable iteration and
+/// output order).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TuneCache {
+    map: BTreeMap<u64, NetworkTuning>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Stable lowercase token of a variant for the text format (parsed back
+/// by [`IsaVariant::from_name`]).
+fn isa_token(isa: IsaVariant) -> &'static str {
+    match isa {
+        IsaVariant::Ri5cy => "ri5cy",
+        IsaVariant::Mpic => "mpic",
+        IsaVariant::XpulpNn => "xpulpnn",
+        IsaVariant::FlexV => "flexv",
+    }
+}
+
+impl TuneCache {
+    pub fn new() -> Self {
+        TuneCache::default()
+    }
+
+    /// Look up a tuning by its plan identity.
+    pub fn get(&self, key: PlanKey) -> Option<&NetworkTuning> {
+        self.map.get(&key.raw())
+    }
+
+    /// Look up `key`, running (and caching) the tuner on a miss — the
+    /// serve engine's once-per-model entry point.
+    pub fn get_or_tune(
+        &mut self,
+        key: PlanKey,
+        tune: impl FnOnce() -> NetworkTuning,
+    ) -> &NetworkTuning {
+        if self.map.contains_key(&key.raw()) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            let t = tune();
+            self.map.insert(key.raw(), t);
+        }
+        self.map.get(&key.raw()).expect("just inserted")
+    }
+
+    pub fn insert(&mut self, key: PlanKey, t: NetworkTuning) {
+        self.map.insert(key.raw(), t);
+    }
+
+    /// Distinct tuned networks resident.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Iterate (raw plan key, tuning) in stable key order.
+    pub fn entries(&self) -> impl Iterator<Item = (u64, &NetworkTuning)> {
+        self.map.iter().map(|(&k, v)| (k, v))
+    }
+
+    /// Serialize to the line-based text format:
+    ///
+    /// ```text
+    /// flexv-tune-cache v1
+    /// net <plan-key-hex> <layer-count>
+    /// layer <node> <isa> <cores> <rows>x<chs>|- <tuned-cycles> <default-cycles>
+    /// ```
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("flexv-tune-cache v1\n");
+        for (key, net) in &self.map {
+            out.push_str(&format!("net {key:016x} {}\n", net.layers.len()));
+            for (i, l) in net.layers.iter().enumerate() {
+                let shape = match l.shape {
+                    Some(s) => format!("{}x{}", s.rows, s.chs),
+                    None => "-".to_string(),
+                };
+                out.push_str(&format!(
+                    "layer {i} {} {} {shape} {} {}\n",
+                    isa_token(l.isa),
+                    l.n_cores,
+                    l.tuned_cycles,
+                    l.default_cycles
+                ));
+            }
+        }
+        out
+    }
+
+    /// Parse the [`TuneCache::to_text`] format (accounting counters
+    /// start at zero).
+    pub fn from_text(s: &str) -> Result<TuneCache, String> {
+        let mut lines = s.lines().filter(|l| !l.trim().is_empty());
+        match lines.next() {
+            Some("flexv-tune-cache v1") => {}
+            other => return Err(format!("bad header: {other:?}")),
+        }
+        let mut cache = TuneCache::new();
+        let mut cur: Option<(u64, usize, Vec<LayerTuning>)> = None;
+        fn flush(
+            cur: &mut Option<(u64, usize, Vec<LayerTuning>)>,
+            cache: &mut TuneCache,
+        ) -> Result<(), String> {
+            if let Some((key, want, layers)) = cur.take() {
+                if layers.len() != want {
+                    return Err(format!(
+                        "net {key:016x}: {} layers, expected {want}",
+                        layers.len()
+                    ));
+                }
+                cache.map.insert(key, NetworkTuning { layers });
+            }
+            Ok(())
+        }
+        for line in lines {
+            let f: Vec<&str> = line.split_whitespace().collect();
+            match f.first().copied() {
+                Some("net") if f.len() == 3 => {
+                    flush(&mut cur, &mut cache)?;
+                    let key = u64::from_str_radix(f[1], 16)
+                        .map_err(|e| format!("bad plan key '{}': {e}", f[1]))?;
+                    let n: usize =
+                        f[2].parse().map_err(|e| format!("bad layer count '{}': {e}", f[2]))?;
+                    cur = Some((key, n, Vec::with_capacity(n)));
+                }
+                Some("layer") if f.len() == 7 => {
+                    let (_, _, layers) =
+                        cur.as_mut().ok_or_else(|| "layer line before net line".to_string())?;
+                    let isa = IsaVariant::from_name(f[2])
+                        .ok_or_else(|| format!("unknown isa '{}'", f[2]))?;
+                    let n_cores: usize =
+                        f[3].parse().map_err(|e| format!("bad cores '{}': {e}", f[3]))?;
+                    if n_cores == 0 {
+                        return Err(format!("layer {}: zero cores", f[1]));
+                    }
+                    let shape = if f[4] == "-" {
+                        None
+                    } else {
+                        let (r, c) = f[4]
+                            .split_once('x')
+                            .ok_or_else(|| format!("bad shape '{}'", f[4]))?;
+                        Some(TileShape {
+                            rows: r.parse().map_err(|e| format!("bad rows '{r}': {e}"))?,
+                            chs: c.parse().map_err(|e| format!("bad chs '{c}': {e}"))?,
+                        })
+                    };
+                    if let Some(s) = shape {
+                        if s.rows == 0 || s.chs == 0 || s.chs % 4 != 0 {
+                            return Err(format!("layer {}: invalid shape {s:?}", f[1]));
+                        }
+                    }
+                    let tuned_cycles: u64 =
+                        f[5].parse().map_err(|e| format!("bad cycles '{}': {e}", f[5]))?;
+                    let default_cycles: u64 =
+                        f[6].parse().map_err(|e| format!("bad cycles '{}': {e}", f[6]))?;
+                    if tuned_cycles > default_cycles {
+                        return Err(format!(
+                            "layer {}: tuned {tuned_cycles} > default {default_cycles}",
+                            f[1]
+                        ));
+                    }
+                    layers.push(LayerTuning { isa, n_cores, shape, tuned_cycles, default_cycles });
+                }
+                other => return Err(format!("bad line: {other:?} in '{line}'")),
+            }
+        }
+        flush(&mut cur, &mut cache)?;
+        Ok(cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Coordinator;
+    use crate::dory::deploy::{deploy, deploy_tuned};
+    use crate::qnn::{golden, Layer, QTensor};
+    use crate::util::Prng;
+
+    fn small_net(seed: u64) -> Network {
+        let mut rng = Prng::new(seed);
+        let mut net = Network::new("tune-small", [10, 10, 8], 8);
+        net.push(Layer::conv("c1", [10, 10, 8], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        net.push(Layer::conv("c2", [10, 10, 16], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+        net
+    }
+
+    #[test]
+    fn tuning_is_deterministic_and_never_worse_per_layer() {
+        let net = small_net(31);
+        let cfg = TuneConfig::default();
+        let a = tune_network(&net, IsaVariant::FlexV, MemBudget::default(), 8, &cfg);
+        let b = tune_network(&net, IsaVariant::FlexV, MemBudget::default(), 8, &cfg);
+        assert_eq!(a, b, "tuning must be a pure function of its inputs");
+        assert_eq!(a.layers.len(), net.nodes.len());
+        for (i, l) in a.layers.iter().enumerate() {
+            assert!(
+                l.tuned_cycles <= l.default_cycles,
+                "layer {i}: tuned {} > default {}",
+                l.tuned_cycles,
+                l.default_cycles
+            );
+            assert!(l.n_cores >= 1 && l.n_cores <= 8);
+            assert!(
+                IsaVariant::FlexV.compatible_lowerings().contains(&l.isa),
+                "layer {i}: {:?} not executable on Flex-V",
+                l.isa
+            );
+        }
+        assert!(a.total_tuned_cycles() <= a.total_default_cycles());
+    }
+
+    #[test]
+    fn deploy_tuned_is_bit_exact_and_carries_overrides() {
+        let net = small_net(32);
+        let mut rng = Prng::new(33);
+        let input = QTensor::random(&[10, 10, 8], 8, false, &mut rng);
+        let golden_out = golden::run_network(&net, &input);
+        let tuning =
+            tune_network(&net, IsaVariant::FlexV, MemBudget::default(), 8, &TuneConfig::default());
+        let dep = deploy_tuned(&net, IsaVariant::FlexV, MemBudget::default(), &tuning);
+        for (plan, t) in dep.plans.iter().zip(&tuning.layers) {
+            let e = plan.exec.expect("tuned plans carry an exec override");
+            assert_eq!((e.isa, e.n_cores), (t.isa, t.n_cores), "{}", plan.name);
+        }
+        let mut coord = Coordinator::new(8);
+        let res = coord.run(&dep, &input);
+        assert_eq!(res.output, golden_out.last().unwrap().data, "tuned output != golden");
+        // and the analytic deployment still matches too (sanity)
+        let dep0 = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+        let mut coord0 = Coordinator::new(8);
+        assert_eq!(coord0.run(&dep0, &input).output, res.output);
+    }
+
+    #[test]
+    fn tune_cache_counts_and_roundtrips_through_text() {
+        let net = small_net(34);
+        let key = PlanKey::for_network(&net, IsaVariant::FlexV, MemBudget::default(), 8);
+        let mut cache = TuneCache::new();
+        let mut runs = 0;
+        for _ in 0..3 {
+            cache.get_or_tune(key, || {
+                runs += 1;
+                tune_network(
+                    &net,
+                    IsaVariant::FlexV,
+                    MemBudget::default(),
+                    8,
+                    &TuneConfig::default(),
+                )
+            });
+        }
+        assert_eq!(runs, 1, "tuner must run once per key");
+        assert_eq!((cache.hits, cache.misses, cache.len()), (2, 1, 1));
+
+        let text = cache.to_text();
+        let parsed = TuneCache::from_text(&text).expect("roundtrip");
+        assert_eq!(parsed.get(key), cache.get(key));
+        assert_eq!(parsed.to_text(), text);
+
+        // malformed or semantically invalid inputs are rejected
+        assert!(TuneCache::from_text("nope").is_err());
+        assert!(TuneCache::from_text("flexv-tune-cache v1\nlayer 0 flexv 8 - 1 1").is_err());
+        assert!(TuneCache::from_text("flexv-tune-cache v1\nnet 00 2\nlayer 0 flexv 8 - 1 1")
+            .is_err());
+        let bad = [
+            "layer 0 flexv 0 - 1 1",    // zero cores
+            "layer 0 flexv 8 0x16 1 1", // zero tile rows
+            "layer 0 flexv 8 4x6 1 1",  // channel tile not a multiple of 4
+            "layer 0 flexv 8 - 2 1",    // tuned worse than default
+        ];
+        for line in bad {
+            let text = format!("flexv-tune-cache v1\nnet 00 1\n{line}");
+            assert!(TuneCache::from_text(&text).is_err(), "accepted: {line}");
+        }
+    }
+
+    #[test]
+    fn shape_override_feeds_the_planner() {
+        // A layer big enough to have several feasible channel tiles:
+        // force a non-default shape through deploy_tuned and check the
+        // tile structure follows it.
+        let mut rng = Prng::new(35);
+        let mut net = Network::new("shape-ovr", [16, 16, 16], 8);
+        net.push(Layer::conv("c", [16, 16, 16], 32, 3, 3, 1, 1, 8, 8, 8, &mut rng));
+        let shape = TileShape { rows: 16, chs: 16 };
+        let tuning = NetworkTuning {
+            layers: vec![LayerTuning {
+                isa: IsaVariant::FlexV,
+                n_cores: 8,
+                shape: Some(shape),
+                tuned_cycles: 0,
+                default_cycles: 0,
+            }],
+        };
+        let dep = deploy_tuned(&net, IsaVariant::FlexV, MemBudget::default(), &tuning);
+        assert_eq!(dep.plans[0].tiles.len(), 2, "chs=16 of 32 → two channel tiles");
+        // still bit-exact
+        let input = QTensor::random(&[16, 16, 16], 8, false, &mut rng);
+        let golden_out = golden::run_network(&net, &input);
+        let mut coord = Coordinator::new(8);
+        assert_eq!(coord.run(&dep, &input).output, golden_out.last().unwrap().data);
+    }
+}

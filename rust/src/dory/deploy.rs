@@ -7,8 +7,11 @@
 //! descriptors plus kernel-launch records whose programs are emitted by
 //! [`crate::kernels`] at execution time.
 
-use super::tiler::{buf_bits, solve_conv_tiling, solve_dw_tiling};
-use super::{conv_tiles, l1_layout, load, store, KernelCall, LayerPlan, MemBudget, TileExec};
+use super::autotune::NetworkTuning;
+use super::tiler::{buf_bits, solve_conv_tiling, solve_dw_tiling, TileShape};
+use super::{
+    conv_tiles, l1_layout, load, store, ExecOverride, KernelCall, LayerPlan, MemBudget, TileExec,
+};
 use crate::isa::IsaVariant;
 use crate::kernels::conv::ConvTask;
 use crate::kernels::im2col::ConvGeom;
@@ -86,16 +89,16 @@ pub fn serialize_quant(l: &Layer) -> Vec<u8> {
     out
 }
 
-struct L2Alloc {
+pub(crate) struct L2Alloc {
     cur: u32,
     limit: u32,
 }
 
 impl L2Alloc {
-    fn new(budget: &MemBudget) -> Self {
+    pub(crate) fn new(budget: &MemBudget) -> Self {
         L2Alloc { cur: L2_BASE, limit: L2_BASE + budget.l2 as u32 }
     }
-    fn alloc(&mut self, bytes: usize) -> u32 {
+    pub(crate) fn alloc(&mut self, bytes: usize) -> u32 {
         let at = self.cur;
         self.cur = (self.cur + bytes as u32).next_multiple_of(8);
         assert!(self.cur <= self.limit, "L2 exhausted ({} B)", self.cur - L2_BASE);
@@ -103,8 +106,40 @@ impl L2Alloc {
     }
 }
 
-/// Deploy a network for `isa`.
+/// Deploy a network for `isa` with the analytic (DMA-cost) tiling
+/// objective and the deployment-wide kernel lowering — the untuned
+/// baseline. See [`deploy_tuned`] for the measured per-layer variant.
 pub fn deploy(net: &Network, isa: IsaVariant, budget: MemBudget) -> Deployment {
+    deploy_with(net, isa, budget, None)
+}
+
+/// Deploy a network with per-layer plans chosen by the autotuner
+/// ([`crate::dory::autotune::tune_network`]): each layer's tile shape,
+/// kernel lowering, and core count come from `tuning`, and the plans
+/// carry the matching [`ExecOverride`] the coordinator honours. The
+/// weight serialization follows each layer's chosen lowering (the GEMM
+/// row pitch depends on the kernel's buffer width), so a tuned
+/// deployment is self-consistent end to end.
+pub fn deploy_tuned(
+    net: &Network,
+    isa: IsaVariant,
+    budget: MemBudget,
+    tuning: &NetworkTuning,
+) -> Deployment {
+    assert_eq!(
+        tuning.layers.len(),
+        net.nodes.len(),
+        "tuning entry count does not match the network"
+    );
+    deploy_with(net, isa, budget, Some(tuning))
+}
+
+fn deploy_with(
+    net: &Network,
+    isa: IsaVariant,
+    budget: MemBudget,
+    tuning: Option<&NetworkTuning>,
+) -> Deployment {
     net.validate().expect("invalid network");
     let mut l2 = L2Alloc::new(&budget);
     let mut preload = vec![];
@@ -125,26 +160,26 @@ pub fn deploy(net: &Network, isa: IsaVariant, budget: MemBudget) -> Deployment {
     for (id, node) in net.nodes.iter().enumerate() {
         let l = &node.layer;
         let in_l2 = src_addr(node.inputs[0]);
+        let in2_l2 = node.inputs.get(1).map(|&s| src_addr(s));
         let out_l2 = node_out[id];
-        let plan = match &l.kind {
-            LayerKind::Conv2d { kh, kw, stride, pad } => plan_conv(
-                isa, &budget, &mut l2, &mut preload, l, id, in_l2, out_l2, *kh, *kw, *stride, *pad,
-            ),
-            LayerKind::DwConv2d { kh, kw, stride, pad } => plan_dw(
-                &budget, &mut l2, &mut preload, l, id, in_l2, out_l2, *kh, *kw, *stride, *pad,
-            ),
-            LayerKind::Linear => {
-                plan_linear(isa, &budget, &mut l2, &mut preload, l, id, in_l2, out_l2)
-            }
-            LayerKind::MaxPool { k, stride } => plan_maxpool(&budget, l, id, in_l2, out_l2, *k, *stride),
-            LayerKind::AvgPool { k, stride } => plan_avgpool(
-                &budget, &mut l2, &mut preload, l, id, in_l2, out_l2, *k, *stride,
-            ),
-            LayerKind::Add { m1, m2 } => {
-                let in2_l2 = src_addr(node.inputs[1]);
-                plan_add(&budget, l, id, in_l2, in2_l2, out_l2, *m1, *m2)
-            }
-        };
+        let tune = tuning.map(|t| &t.layers[id]);
+        let l_isa = tune.map_or(isa, |t| t.isa);
+        let mut plan = plan_layer(
+            l_isa,
+            &budget,
+            &mut l2,
+            &mut preload,
+            l,
+            id,
+            in_l2,
+            in2_l2,
+            out_l2,
+            tune.and_then(|t| t.shape),
+        );
+        plan.exec = tune.map(|t| {
+            assert!(t.n_cores >= 1, "layer {}: tuned core count must be >= 1", l.name);
+            ExecOverride { isa: l_isa, n_cores: t.n_cores }
+        });
         plans.push(plan);
     }
     Deployment {
@@ -154,6 +189,43 @@ pub fn deploy(net: &Network, isa: IsaVariant, budget: MemBudget) -> Deployment {
         input_addr,
         node_out,
         l2_used: (l2.cur - L2_BASE) as usize,
+    }
+}
+
+/// Plan one layer: dispatch on the layer kind. `shape_ovr` overrides the
+/// conv tiling solver's choice (autotuner candidates; must be feasible —
+/// the L1 layout asserts the budget). Exposed crate-internally so the
+/// autotuner can plan candidate layers in isolation with its own scratch
+/// L2 allocator.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn plan_layer(
+    isa: IsaVariant,
+    budget: &MemBudget,
+    l2: &mut L2Alloc,
+    preload: &mut Vec<(u32, Vec<u8>)>,
+    l: &Layer,
+    id: usize,
+    in_l2: u32,
+    in2_l2: Option<u32>,
+    out_l2: u32,
+    shape_ovr: Option<TileShape>,
+) -> LayerPlan {
+    match &l.kind {
+        LayerKind::Conv2d { kh, kw, stride, pad } => plan_conv(
+            isa, budget, l2, preload, l, id, in_l2, out_l2, *kh, *kw, *stride, *pad, shape_ovr,
+        ),
+        LayerKind::DwConv2d { kh, kw, stride, pad } => {
+            plan_dw(budget, l2, preload, l, id, in_l2, out_l2, *kh, *kw, *stride, *pad)
+        }
+        LayerKind::Linear => plan_linear(isa, budget, l2, preload, l, id, in_l2, out_l2),
+        LayerKind::MaxPool { k, stride } => plan_maxpool(budget, l, id, in_l2, out_l2, *k, *stride),
+        LayerKind::AvgPool { k, stride } => {
+            plan_avgpool(budget, l2, preload, l, id, in_l2, out_l2, *k, *stride)
+        }
+        LayerKind::Add { m1, m2 } => {
+            let in2 = in2_l2.expect("Add layer needs a second input address");
+            plan_add(budget, l, id, in_l2, in2, out_l2, *m1, *m2)
+        }
     }
 }
 
@@ -171,6 +243,7 @@ fn plan_conv(
     kw: usize,
     stride: usize,
     pad: usize,
+    shape_ovr: Option<TileShape>,
 ) -> LayerPlan {
     let [h, w, cin] = l.in_shape;
     let cout = l.out_shape[2];
@@ -185,7 +258,8 @@ fn plan_conv(
     let bias_l2 = q_l2 + 4 * cout as u32;
 
     let out_bits = l.quant.out_bits;
-    let shape = solve_conv_tiling(&geom, isa, w_pitch as usize, out_bits, budget.l1)
+    let shape = shape_ovr
+        .or_else(|| solve_conv_tiling(&geom, isa, w_pitch as usize, out_bits, budget.l1))
         .unwrap_or_else(|| panic!("layer {} does not tile into L1", l.name));
     let tiles = conv_tiles(geom.out_h(), cout, shape, h, kh, stride, pad);
     // L1 layout sized for the worst tile.
@@ -285,6 +359,7 @@ fn plan_conv(
         tiles: execs,
         macs: l.macs(),
         dotp_bits: l.a_bits.max(l.w_bits),
+        exec: None,
     }
 }
 
@@ -372,6 +447,7 @@ fn plan_dw(
         tiles: execs,
         macs: l.macs(),
         dotp_bits: l.a_bits.max(l.w_bits),
+        exec: None,
     }
 }
 
@@ -460,6 +536,7 @@ fn plan_linear(
         tiles: execs,
         macs: l.macs(),
         dotp_bits: l.a_bits.max(l.w_bits),
+        exec: None,
     }
 }
 
@@ -495,6 +572,7 @@ fn plan_maxpool(
         }],
         macs: 0,
         dotp_bits: 8,
+        exec: None,
     }
 }
 
@@ -548,6 +626,7 @@ fn plan_avgpool(
         }],
         macs: 0,
         dotp_bits: 8,
+        exec: None,
     }
 }
 
@@ -606,5 +685,6 @@ fn plan_add(
         tiles: execs,
         macs: 0,
         dotp_bits: 8,
+        exec: None,
     }
 }

@@ -13,9 +13,11 @@
 //! inner; the input strip is loaded once per row strip, weight tiles are
 //! streamed per channel tile, everything ping-pongs between two L1 buffers.
 
+pub mod autotune;
 pub mod deploy;
 pub mod tiler;
 
+pub use autotune::{LayerTuning, NetworkTuning, TuneCache, TuneConfig};
 pub use tiler::{solve_conv_tiling, solve_dw_tiling, TileShape};
 
 use std::collections::hash_map::DefaultHasher;
@@ -160,6 +162,16 @@ pub struct TileExec {
     pub stores: Vec<DmaRequest>,
 }
 
+/// Per-layer execution override chosen by the autotuner: the kernel
+/// lowering ([`IsaVariant::compatible_lowerings`]) and the core count
+/// this layer's programs are generated for. `None` on a plan means the
+/// deployment-wide defaults (the deployment's ISA, the cluster width).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct ExecOverride {
+    pub isa: IsaVariant,
+    pub n_cores: usize,
+}
+
 /// Execution plan of one layer.
 #[derive(Clone, Debug)]
 pub struct LayerPlan {
@@ -170,6 +182,9 @@ pub struct LayerPlan {
     pub macs: u64,
     /// The dotp element width for the energy model.
     pub dotp_bits: u8,
+    /// Autotuned per-layer kernel lowering + core count (see
+    /// [`crate::dory::autotune`]); `None` = deployment defaults.
+    pub exec: Option<ExecOverride>,
 }
 
 /// L1 double-buffer allocator: lays out the per-layer tile buffers.

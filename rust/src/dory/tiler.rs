@@ -45,8 +45,10 @@ pub fn conv_tile_bytes(
     }
 }
 
-/// Total DMA bytes for a shape (the solver's objective).
-fn dma_cost(g: &ConvGeom, w_pitch: usize, out_bits: u8, shape: TileShape) -> u64 {
+/// Total DMA bytes for a shape — the solver's analytic objective, also
+/// used by [`crate::dory::autotune`] to prune and tie-break measured
+/// candidates.
+pub fn dma_cost(g: &ConvGeom, w_pitch: usize, out_bits: u8, shape: TileShape) -> u64 {
     let oh = g.out_h();
     let row_strips = oh.div_ceil(shape.rows) as u64;
     let ch_tiles = (g.cout.div_ceil(shape.chs)) as u64;
@@ -61,6 +63,21 @@ fn dma_cost(g: &ConvGeom, w_pitch: usize, out_bits: u8, shape: TileShape) -> u64
         + row_strips * ch_tiles * 128
 }
 
+/// Per-core im2col scratch bytes the conv kernel needs on `isa` (the
+/// feasibility margin both the solver and the enumerator reserve).
+fn conv_scratch(g: &ConvGeom, isa: IsaVariant) -> usize {
+    crate::CLUSTER_CORES
+        * isa.unroll().buffers
+        * ((g.k() * buf_bits(g, isa) as usize).div_ceil(32) * 4)
+}
+
+/// Single-buffer working set a shape needs inside `l1_budget`, counting
+/// the double-buffering and the per-core scratch.
+fn l1_need(g: &ConvGeom, isa: IsaVariant, w_pitch: usize, out_bits: u8, shape: TileShape) -> usize {
+    let tb = conv_tile_bytes(g, w_pitch, out_bits, shape);
+    2 * (tb.input + tb.weights + tb.output + tb.quant) + conv_scratch(g, isa) + 64
+}
+
 /// Solve the conv tiling: returns the cheapest shape that fits.
 pub fn solve_conv_tiling(
     g: &ConvGeom,
@@ -69,32 +86,47 @@ pub fn solve_conv_tiling(
     out_bits: u8,
     l1_budget: usize,
 ) -> Option<TileShape> {
-    let scratch = crate::CLUSTER_CORES
-        * isa.unroll().buffers
-        * ((g.k() * buf_bits(g, isa) as usize).div_ceil(32) * 4);
+    enumerate_conv_tilings(g, isa, w_pitch, out_bits, l1_budget, 1)
+        .first()
+        .copied()
+}
+
+/// Enumerate feasible conv tile shapes, best analytic cost first.
+///
+/// One shape per channel-tile width (the largest row strip that fits:
+/// for a fixed `chs`, larger strips strictly dominate on DMA traffic),
+/// every one satisfying the sub-byte constraints (`chs % 4 == 0`,
+/// `chs * out_bits % 8 == 0`) and the L1 working-set budget. Sorted by
+/// ([`dma_cost`], `chs`) and truncated to `max` entries — the
+/// [`crate::dory::autotune`] candidate enumerator; `max = 1` recovers
+/// exactly the analytic solver's choice.
+pub fn enumerate_conv_tilings(
+    g: &ConvGeom,
+    isa: IsaVariant,
+    w_pitch: usize,
+    out_bits: u8,
+    l1_budget: usize,
+    max: usize,
+) -> Vec<TileShape> {
     let oh = g.out_h();
-    let mut best: Option<(u64, TileShape)> = None;
+    let mut found: Vec<(u64, TileShape)> = Vec::new();
     let mut chs = 4;
     while chs <= g.cout {
         if chs * out_bits as usize % 8 == 0 {
             // largest row strip that fits for this chs
             for rows in (1..=oh).rev() {
                 let shape = TileShape { rows, chs };
-                let tb = conv_tile_bytes(g, w_pitch, out_bits, shape);
-                let need =
-                    2 * (tb.input + tb.weights + tb.output + tb.quant) + scratch + 64;
-                if need <= l1_budget {
-                    let cost = dma_cost(g, w_pitch, out_bits, shape);
-                    if best.map(|(c, _)| cost < c).unwrap_or(true) {
-                        best = Some((cost, shape));
-                    }
+                if l1_need(g, isa, w_pitch, out_bits, shape) <= l1_budget {
+                    found.push((dma_cost(g, w_pitch, out_bits, shape), shape));
                     break; // larger rows always dominate smaller for same chs
                 }
             }
         }
         chs += 4;
     }
-    best.map(|(_, s)| s)
+    found.sort_by_key(|&(cost, s)| (cost, s.chs));
+    found.truncate(max);
+    found.into_iter().map(|(_, s)| s).collect()
 }
 
 /// Buffer width the conv kernel will use on `isa` (8 when expanding).
@@ -175,6 +207,21 @@ mod tests {
         let shape = solve_conv_tiling(&g, IsaVariant::FlexV, 256 * 2 / 8 * 9, 2, 110 * 1024).unwrap();
         assert_eq!(shape.chs * 2 % 8, 0);
         assert_eq!(shape.chs % 4, 0);
+    }
+
+    #[test]
+    fn enumerator_is_sorted_and_contains_solver_choice() {
+        let g = ConvGeom::square(112, 112, 24, 48, 1, 1, 1, 0, 8);
+        let shapes = enumerate_conv_tilings(&g, IsaVariant::FlexV, 24, 8, 110 * 1024, 8);
+        assert!(!shapes.is_empty());
+        let solved = solve_conv_tiling(&g, IsaVariant::FlexV, 24, 8, 110 * 1024).unwrap();
+        assert_eq!(shapes[0], solved, "first candidate must be the analytic optimum");
+        let costs: Vec<u64> =
+            shapes.iter().map(|&s| dma_cost(&g, 24, 8, s)).collect();
+        assert!(costs.windows(2).all(|w| w[0] <= w[1]), "not sorted: {costs:?}");
+        // a max of 1 is exactly the solver
+        let one = enumerate_conv_tilings(&g, IsaVariant::FlexV, 24, 8, 110 * 1024, 1);
+        assert_eq!(one, vec![solved]);
     }
 
     #[test]

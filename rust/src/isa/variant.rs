@@ -53,6 +53,39 @@ impl IsaVariant {
         }
     }
 
+    /// Parse a variant from its display or CLI name (case-insensitive:
+    /// `ri5cy`/`xpulpv2`, `mpic`, `xpulpnn`, `flexv`/`flex-v`).
+    pub fn from_name(s: &str) -> Option<IsaVariant> {
+        match s.to_lowercase().as_str() {
+            "ri5cy" | "xpulpv2" => Some(IsaVariant::Ri5cy),
+            "mpic" => Some(IsaVariant::Mpic),
+            "xpulpnn" => Some(IsaVariant::XpulpNn),
+            "flexv" | "flex-v" => Some(IsaVariant::FlexV),
+            _ => None,
+        }
+    }
+
+    /// Kernel lowerings a core with this ISA can also execute: every
+    /// variant whose generated instruction streams use only a subset of
+    /// this core's instructions (RI5CY is the RV32IMC+XpulpV2 base all
+    /// extensions share; Flex-V subsumes the MPC of MPIC and the
+    /// Mac&Load of XpulpNN). The autotuner picks per layer from this
+    /// set — e.g. on Flex-V a sw-unpack RI5CY lowering can beat the
+    /// native mixed-precision kernel for degenerate geometries.
+    pub fn compatible_lowerings(&self) -> &'static [IsaVariant] {
+        match self {
+            IsaVariant::Ri5cy => &[IsaVariant::Ri5cy],
+            IsaVariant::Mpic => &[IsaVariant::Mpic, IsaVariant::Ri5cy],
+            IsaVariant::XpulpNn => &[IsaVariant::XpulpNn, IsaVariant::Ri5cy],
+            IsaVariant::FlexV => &[
+                IsaVariant::FlexV,
+                IsaVariant::XpulpNn,
+                IsaVariant::Mpic,
+                IsaVariant::Ri5cy,
+            ],
+        }
+    }
+
     /// SIMD dot-product formats the core executes natively.
     pub fn native_fmts(&self) -> &'static [SimdFmt] {
         match self {
@@ -155,6 +188,20 @@ mod tests {
         assert_eq!(IsaVariant::Ri5cy.unroll(), UnrollShape::new(4, 2));
         assert_eq!(IsaVariant::FlexV.unroll(), UnrollShape::new(4, 4));
         assert_eq!(IsaVariant::FlexV.unroll().accumulators(), 16);
+    }
+
+    #[test]
+    fn names_roundtrip_and_lowerings_are_reflexive() {
+        for v in IsaVariant::ALL {
+            assert_eq!(IsaVariant::from_name(v.name()), Some(v));
+            // every core can run its own kernels, listed first
+            assert_eq!(v.compatible_lowerings()[0], v);
+            // the base ISA is always a legal lowering
+            assert!(v.compatible_lowerings().contains(&IsaVariant::Ri5cy));
+        }
+        assert_eq!(IsaVariant::from_name("xpulpv2"), Some(IsaVariant::Ri5cy));
+        assert_eq!(IsaVariant::from_name("nope"), None);
+        assert_eq!(IsaVariant::FlexV.compatible_lowerings().len(), 4);
     }
 
     #[test]

@@ -27,7 +27,10 @@
 //!   MatMul / convolution instruction-stream generators reproducing the
 //!   paper's assembly (Fig. 5), plus im2col and requantization phases.
 //! - [`dory`] — the deployment flow: tiling solver with byte-alignment
-//!   constraints, L3/L2/L1 memory manager, double-buffered DMA schedule.
+//!   constraints, L3/L2/L1 memory manager, double-buffered DMA schedule;
+//!   plus [`dory::autotune`], the simulator-in-the-loop autotuner that
+//!   selects per-layer plans (tile shape, kernel lowering, core count)
+//!   by measured cycles and feeds [`dory::deploy::deploy_tuned`].
 //! - [`models`] — the end-to-end network zoo of the evaluation
 //!   (MobileNetV1 8b / 8b4b, ResNet-20 4b2b).
 //! - [`power`] — GF22FDX area/power/energy model calibrated to Table II.

@@ -26,8 +26,16 @@ COMMANDS:
   dump-kernel <isa> <aXwY> [n]  disassemble the generated MatMul kernel
                            (first n instructions, default 60; cf. Fig. 5)
   run-net <isa> <mnv1-8b|mnv1-8b4b|resnet20-4b2b> [--quick] [--no-fastpath]
+  tune [<model>|all] [--isa I] [--full] [--out FILE]
+                    simulator-in-the-loop autotuner: per layer, measure
+                    candidate plans (tile shapes, kernel lowerings incl.
+                    sw-unpack, core counts 4/8) on the cluster simulator
+                    and pick by measured cycles; prints the per-layer
+                    wins and the measured default → tuned totals (tuned
+                    is never worse — the analytic default is always a
+                    candidate). --out persists the TuneCache as text
   serve-bench [--shards N] [--requests N] [--max-batch N] [--full] [--exact]
-              [--workers N] [--sequential] [--no-fastpath]
+              [--workers N] [--sequential] [--no-fastpath] [--tuned]
               [--trace steady|poisson|bursty|diurnal] [--slo]
               [--autoscale MIN:MAX] [--mean-gap CYCLES] [--seed N]
                     replay a mixed 3-model traffic trace on a
@@ -45,7 +53,10 @@ COMMANDS:
                     (--workers N caps it, --sequential forces 1) and
                     steady-state windows replay via the sim fast path
                     (--no-fastpath disables); both knobs change only
-                    wall-clock time, never a simulated number
+                    wall-clock time, never a simulated number.
+                    --tuned autotunes each model's per-layer plans on
+                    first dispatch (deterministic, once per model) and
+                    reports the measured tuned-vs-default cycle delta
   validate [dir]    cross-check simulator vs AOT golden artifacts (PJRT)
 
 ISAs: ri5cy | mpic | xpulpnn | flexv"
@@ -84,16 +95,10 @@ fn parse_autoscale(s: &str) -> flexv::serve::AutoscaleConfig {
 }
 
 fn parse_isa(s: &str) -> IsaVariant {
-    match s.to_lowercase().as_str() {
-        "ri5cy" | "xpulpv2" => IsaVariant::Ri5cy,
-        "mpic" => IsaVariant::Mpic,
-        "xpulpnn" => IsaVariant::XpulpNn,
-        "flexv" | "flex-v" => IsaVariant::FlexV,
-        other => {
-            eprintln!("unknown ISA '{other}'");
-            usage()
-        }
-    }
+    IsaVariant::from_name(s).unwrap_or_else(|| {
+        eprintln!("unknown ISA '{s}'");
+        usage()
+    })
 }
 
 fn parse_prec(s: &str) -> Precision {
@@ -163,10 +168,12 @@ fn main() {
             let fastpath = !args.iter().any(|a| a == "--no-fastpath");
             run_net_verbose(isa, &net, fastpath);
         }
+        Some("tune") => run_tune(&args),
         Some("serve-bench") => {
             let full = args.iter().any(|a| a == "--full");
             let exact = args.iter().any(|a| a == "--exact");
             let fastpath = !args.iter().any(|a| a == "--no-fastpath");
+            let tuned = args.iter().any(|a| a == "--tuned");
             let slo = args.iter().any(|a| a == "--slo");
             let shards = flag_val(&args, "--shards").unwrap_or(4);
             let requests = flag_val(&args, "--requests").unwrap_or(32);
@@ -214,6 +221,7 @@ fn main() {
                 workers,
                 fastpath,
                 autoscale,
+                tuned,
                 ..ServeConfig::default()
             };
             let mut eng = Engine::new(cfg);
@@ -222,7 +230,7 @@ fn main() {
             }
             println!(
                 "serve-bench: {requests} requests over 3 models on {shards} shards \
-                 (MNV1 input {hw}x{hw}{}, {}, {}, trace {}{}{}) ...",
+                 (MNV1 input {hw}x{hw}{}, {}, {}, trace {}{}{}{}) ...",
                 if exact { ", exact mode" } else { "" },
                 match workers {
                     0 => "auto workers".to_string(),
@@ -231,6 +239,7 @@ fn main() {
                 },
                 if fastpath { "fast path on" } else { "fast path off" },
                 shape.map_or("legacy".to_string(), |s| s.to_string()),
+                if tuned { ", autotuned plans" } else { "" },
                 if slo { ", 3-tier SLO" } else { "" },
                 autoscale.map_or(String::new(), |a| format!(
                     ", autoscale {}:{}",
@@ -319,6 +328,83 @@ fn main() {
             eprintln!("missing command\n");
             usage()
         }
+    }
+}
+
+/// The `tune` subcommand: run the simulator-in-the-loop autotuner over
+/// the model zoo (or one model), print the per-layer wins and the
+/// measured totals, and optionally persist the TuneCache. The tuned
+/// total is ≤ the analytic total by construction (the analytic default
+/// is always a candidate and survives ties).
+fn run_tune(args: &[String]) {
+    use flexv::dory::autotune::{tune_network, TuneCache, TuneConfig};
+    use flexv::dory::{MemBudget, PlanKey};
+    use flexv::util::table::{f, Table};
+    let full = args.iter().any(|a| a == "--full");
+    let hw = if full { 224 } else { 96 };
+    let isa = flag_str(args, "--isa").map(parse_isa).unwrap_or(IsaVariant::FlexV);
+    let which = args
+        .get(1)
+        .filter(|s| !s.starts_with("--"))
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let names: Vec<&str> = if which == "all" {
+        flexv::models::MODEL_NAMES.to_vec()
+    } else {
+        vec![which]
+    };
+    let budget = MemBudget::default();
+    let n_cores = flexv::CLUSTER_CORES;
+    let cfg = TuneConfig::default();
+    let mut cache = TuneCache::new();
+    for name in names {
+        let net = flexv::models::by_name(name, hw).unwrap_or_else(|| {
+            eprintln!(
+                "unknown network '{name}' (expected one of: {} | all)",
+                flexv::models::MODEL_NAMES.join(" | ")
+            );
+            usage()
+        });
+        let t0 = std::time::Instant::now();
+        let tuning = tune_network(&net, isa, budget, n_cores, &cfg);
+        let wall = t0.elapsed().as_secs_f64();
+        let mut t = Table::new(format!(
+            "{} on {} — tuned layers ({} of {} improved)",
+            net.name,
+            isa,
+            tuning.improved_layers(),
+            tuning.layers.len()
+        ))
+        .header(&["layer", "tuned plan", "default cyc", "tuned cyc", "saved%"]);
+        for (node, l) in net.nodes.iter().zip(&tuning.layers) {
+            if l.tuned_cycles >= l.default_cycles {
+                continue;
+            }
+            let shape = l.shape.map_or(String::new(), |s| format!(" {}x{}", s.rows, s.chs));
+            t.row(vec![
+                node.layer.name.clone(),
+                format!("{} x{}{}", l.isa, l.n_cores, shape),
+                l.default_cycles.to_string(),
+                l.tuned_cycles.to_string(),
+                f((1.0 - l.tuned_cycles as f64 / l.default_cycles.max(1) as f64) * 100.0, 1),
+            ]);
+        }
+        print!("{}", t.render());
+        println!(
+            "{}: measured per-inference cycles {} (analytic) → {} (tuned), {}% saved  [{wall:.1}s tune]\n",
+            net.name,
+            tuning.total_default_cycles(),
+            tuning.total_tuned_cycles(),
+            f(tuning.gain_fraction() * 100.0, 2),
+        );
+        cache.insert(PlanKey::for_network(&net, isa, budget, n_cores), tuning);
+    }
+    if let Some(path) = flag_str(args, "--out") {
+        std::fs::write(path, cache.to_text()).unwrap_or_else(|e| {
+            eprintln!("cannot write {path}: {e}");
+            std::process::exit(1);
+        });
+        println!("tune cache written to {path} ({} networks)", cache.len());
     }
 }
 

@@ -75,8 +75,38 @@ impl ClassRow {
     }
 }
 
+/// Autotune totals over the models the tuner processed this run
+/// (zeroed when tuning is off): the measured per-inference cycle cost
+/// of the analytic default plans vs the selected tuned plans — the
+/// tuner's own metric ([`crate::dory::autotune`]), surfaced so a tuned
+/// fleet report shows what tuning bought.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TunedSummary {
+    /// Models autotuned (0 without `ServeConfig::tuned`).
+    pub models: usize,
+    /// Σ measured cycles of the analytic default per-layer plans.
+    pub default_cycles: u64,
+    /// Σ measured cycles of the tuned plans (≤ `default_cycles` by
+    /// construction — the default is always a candidate).
+    pub tuned_cycles: u64,
+    /// Layers that measured strictly faster than their default plan.
+    pub improved_layers: usize,
+}
+
+impl TunedSummary {
+    /// Fraction of the default plans' measured cycles the tuned plans
+    /// save.
+    pub fn gain_fraction(&self) -> f64 {
+        if self.default_cycles == 0 {
+            0.0
+        } else {
+            (self.default_cycles - self.tuned_cycles) as f64 / self.default_cycles as f64
+        }
+    }
+}
+
 /// Everything [`FleetMetrics::collect`] reads, bundled (the engine owns
-/// all of it; the borrow is one struct instead of nine arguments).
+/// all of it; the borrow is one struct instead of ten arguments).
 pub(crate) struct CollectInputs<'a> {
     pub completions: &'a [Completion],
     pub names: &'a [String],
@@ -87,6 +117,7 @@ pub(crate) struct CollectInputs<'a> {
     pub shed: &'a [ShedEvent],
     pub occupancy: &'a [(u64, usize)],
     pub scaler: Option<&'a Autoscaler>,
+    pub tuned: TunedSummary,
 }
 
 /// The fleet-level report of one serving run.
@@ -141,6 +172,9 @@ pub struct FleetMetrics {
     pub fastpath_func: u64,
     /// Simulator windows cycle-simulated and recorded.
     pub fastpath_miss: u64,
+    /// Autotune tuned-vs-default measured cycle deltas (zeroed without
+    /// `ServeConfig::tuned`).
+    pub tuned: TunedSummary,
     pub rows: Vec<ModelRow>,
     /// Per-SLO-class latency and violation breakdown (single "default"
     /// row when no class table was installed).
@@ -186,6 +220,7 @@ impl FleetMetrics {
             shed,
             occupancy,
             scaler,
+            tuned,
         } = inp;
         let served = completions.len();
         let mut latencies: Vec<u64> = completions.iter().map(|c| c.latency_cycles()).collect();
@@ -306,6 +341,7 @@ impl FleetMetrics {
             fastpath_pure: fp_pure,
             fastpath_func: fp_func,
             fastpath_miss: fp_miss,
+            tuned,
             rows,
             class_rows,
         }
@@ -413,6 +449,16 @@ impl FleetMetrics {
             f(self.mean_batch, 1),
             self.model_switches,
         ));
+        if self.tuned.models > 0 {
+            out.push_str(&format!(
+                "autotune: {} models, measured per-inference cycles {} → {} ({}% saved, {} layers improved)\n",
+                self.tuned.models,
+                self.tuned.default_cycles,
+                self.tuned.tuned_cycles,
+                f(self.tuned.gain_fraction() * 100.0, 1),
+                self.tuned.improved_layers,
+            ));
+        }
         let fp_total = self.fastpath_pure + self.fastpath_func + self.fastpath_miss;
         if fp_total > 0 {
             out.push_str(&format!(

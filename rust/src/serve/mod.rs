@@ -71,7 +71,7 @@ pub mod workload;
 pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleAction};
 pub use batcher::BatchPolicy;
 pub use cache::PlanCache;
-pub use metrics::{ClassRow, FleetMetrics, ModelRow};
+pub use metrics::{ClassRow, FleetMetrics, ModelRow, TunedSummary};
 pub use queue::RequestQueue;
 pub use request::{Completion, Request, ShedEvent};
 pub use shard::Shard;
@@ -79,7 +79,8 @@ pub use workload::{SloClass, TraceShape, WorkloadSpec};
 
 use std::sync::Arc;
 
-use crate::dory::deploy::{deploy, Deployment};
+use crate::dory::autotune::{self, TuneCache, TuneConfig};
+use crate::dory::deploy::{deploy, deploy_tuned, Deployment};
 use crate::dory::{MemBudget, PlanKey};
 use crate::isa::IsaVariant;
 use crate::power::EnergyModel;
@@ -120,6 +121,13 @@ pub struct ServeConfig {
     /// `min_shards` and `max_shards` from queue pressure and idleness
     /// ([`autoscale`]). `None` keeps all `shards` active (static fleet).
     pub autoscale: Option<AutoscaleConfig>,
+    /// Autotuned deployments: on the first dispatch of a model, run the
+    /// simulator-in-the-loop tuner ([`crate::dory::autotune`]) and
+    /// compile the plan with [`deploy_tuned`] instead of [`deploy`].
+    /// Tuning is deterministic and cached fleet-wide (once per model,
+    /// like the plan cache), so this changes measured per-layer plans —
+    /// never outputs, and never determinism (`serve-bench --tuned`).
+    pub tuned: bool,
     pub isa: IsaVariant,
     pub budget: MemBudget,
 }
@@ -137,6 +145,7 @@ impl Default for ServeConfig {
             fastpath: true,
             crosscheck: false,
             autoscale: None,
+            tuned: false,
             isa: IsaVariant::FlexV,
             budget: MemBudget::default(),
         }
@@ -180,6 +189,10 @@ pub struct Engine {
     pub cfg: ServeConfig,
     models: Vec<ModelEntry>,
     pub cache: PlanCache,
+    /// Per-model tunings (populated lazily when `cfg.tuned`), keyed by
+    /// the same [`PlanKey`] as the plan cache so both agree on model
+    /// identity.
+    tune: TuneCache,
     pub queue: RequestQueue,
     shards: Vec<Shard>,
     scaler: Option<Autoscaler>,
@@ -229,6 +242,7 @@ impl Engine {
         Engine {
             models: Vec::new(),
             cache: PlanCache::new(),
+            tune: TuneCache::new(),
             queue: RequestQueue::new(cfg.queue_capacity),
             shards,
             scaler,
@@ -273,6 +287,12 @@ impl Engine {
     /// decision order (part of the deterministic event stream).
     pub fn shed_events(&self) -> &[ShedEvent] {
         &self.shed_log
+    }
+
+    /// The fleet's autotune cache (empty unless `cfg.tuned`); tunings
+    /// are keyed by the same [`PlanKey`] as the plan cache.
+    pub fn tuning(&self) -> &TuneCache {
+        &self.tune
     }
 
     /// Shard-occupancy timeline: `(cycle, active shards)` at start and
@@ -399,8 +419,24 @@ impl Engine {
             let model = batch[0].model;
             let (key, dep) = {
                 let entry = &self.models[model];
-                let (isa, budget) = (self.cfg.isa, self.cfg.budget);
-                let dep = self.cache.get_or_build(entry.key, || deploy(&entry.net, isa, budget));
+                let (isa, budget, n_cores) = (self.cfg.isa, self.cfg.budget, self.cfg.n_cores);
+                let dep = if self.cfg.tuned {
+                    // Tune once per model (deterministic, cached
+                    // fleet-wide), then compile the tuned plan once.
+                    let tuning = self.tune.get_or_tune(entry.key, || {
+                        autotune::tune_network(
+                            &entry.net,
+                            isa,
+                            budget,
+                            n_cores,
+                            &TuneConfig::default(),
+                        )
+                    });
+                    self.cache
+                        .get_or_build(entry.key, || deploy_tuned(&entry.net, isa, budget, tuning))
+                } else {
+                    self.cache.get_or_build(entry.key, || deploy(&entry.net, isa, budget))
+                };
                 (entry.key, dep)
             };
             assignments.push(Assignment { shard: si, model, key, dep, batch });
@@ -529,6 +565,17 @@ impl Engine {
     /// Build the fleet report from everything served so far.
     pub fn metrics(&self) -> FleetMetrics {
         let names: Vec<String> = self.models.iter().map(|m| m.name.clone()).collect();
+        // Tuned-vs-default measured cycle deltas of every model the
+        // autotuner has processed (the tuner's own per-layer metric).
+        let mut tuned = metrics::TunedSummary::default();
+        for m in &self.models {
+            if let Some(t) = self.tune.get(m.key) {
+                tuned.models += 1;
+                tuned.default_cycles += t.total_default_cycles();
+                tuned.tuned_cycles += t.total_tuned_cycles();
+                tuned.improved_layers += t.improved_layers();
+            }
+        }
         FleetMetrics::collect(metrics::CollectInputs {
             completions: &self.completions,
             names: &names,
@@ -539,6 +586,7 @@ impl Engine {
             shed: &self.shed_log,
             occupancy: &self.occupancy,
             scaler: self.scaler.as_ref(),
+            tuned,
         })
     }
 
@@ -715,6 +763,56 @@ mod tests {
         assert_eq!(base, run(4, false), "threading changed results");
         assert_eq!(base, run(0, true), "fast path changed results");
         assert_eq!(base, run(2, true));
+    }
+
+    /// Tuned mode: the tuner runs once per model, the tuned plans carry
+    /// exec overrides, the per-layer measured cost never regresses, and
+    /// exact-mode outputs stay bit-identical to the untuned fleet.
+    #[test]
+    fn tuned_mode_tunes_once_and_keeps_outputs_bit_identical() {
+        // inputs depend only on the seed, so both runs see the same trace
+        let trace_for = |a: usize, b: usize| {
+            let mut rng = Prng::new(40);
+            (0..6)
+                .map(|i| {
+                    item(
+                        i as u64 * 80,
+                        if i % 2 == 0 { a } else { b },
+                        0,
+                        QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let run = |tuned: bool| {
+            let cfg = ServeConfig { tuned, exact: true, ..small_cfg() };
+            let mut eng = Engine::new(cfg);
+            let a = eng.register(tiny("tn-a", 38));
+            let b = eng.register(tiny("tn-b", 39));
+            let trace = trace_for(a, b);
+            let m = eng.run_trace(trace);
+            let mut outs: Vec<(u64, Vec<u8>)> =
+                eng.completions().iter().map(|c| (c.id, c.output.clone())).collect();
+            outs.sort();
+            (m, outs, eng.tuning().len(), eng.tuning().misses)
+        };
+        let (mt, outs_t, tuned_entries, tuner_runs) = run(true);
+        let (mu, outs_u, untuned_entries, _) = run(false);
+        assert_eq!(tuned_entries, 2, "one tuning per model");
+        assert_eq!(tuner_runs, 2, "tuner must run once per model, then cache");
+        assert_eq!(untuned_entries, 0);
+        assert_eq!(mt.tuned.models, 2);
+        assert!(
+            mt.tuned.tuned_cycles <= mt.tuned.default_cycles,
+            "tuned measured cycles regressed: {:?}",
+            mt.tuned
+        );
+        assert_eq!(mu.tuned, TunedSummary::default());
+        assert_eq!(outs_t, outs_u, "tuning changed a model output");
+        assert_eq!((mt.served, mu.served), (6, 6));
+        // the tuned report carries the autotune line, the untuned not
+        assert!(mt.render().contains("autotune:"), "{}", mt.render());
+        assert!(!mu.render().contains("autotune:"));
     }
 
     #[test]

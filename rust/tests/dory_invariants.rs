@@ -2,9 +2,14 @@
 //! produces must keep tiles inside the memory map, byte-aligned, and
 //! collectively covering each layer's output exactly.
 
-use flexv::dory::deploy::deploy;
+use flexv::dory::deploy::{deploy, w_row_pitch};
+use flexv::dory::tiler::{
+    buf_bits, conv_tile_bytes, dma_cost, enumerate_conv_tilings, solve_conv_tiling,
+    solve_dw_tiling,
+};
 use flexv::dory::MemBudget;
 use flexv::isa::IsaVariant;
+use flexv::kernels::im2col::ConvGeom;
 use flexv::models::{mobilenet_v1, resnet20, Profile};
 use flexv::qnn::layer::Network;
 use flexv::qnn::Layer;
@@ -119,4 +124,102 @@ fn prop_random_conv_chains_deploy_cleanly() {
 
 fn shape_bits(net: &Network) -> u8 {
     net.nodes.last().map(|n| n.layer.quant.out_bits).unwrap_or(net.input_bits)
+}
+
+/// Tiler invariants under *random L1 budgets* as well as random
+/// geometries: every shape the analytic solver — and the autotuner's
+/// candidate enumerator — emits must satisfy the double-buffered L1
+/// working-set budget (including the per-core im2col scratch), the
+/// channel-multiple-of-4 rule, and `chs * out_bits % 8 == 0`; the
+/// enumerator must be analytic-cost-sorted with the solver's choice
+/// first, and must be empty exactly when the solver finds nothing.
+#[test]
+fn prop_tiler_and_enumerator_respect_budget_and_alignment() {
+    proptest::check(
+        proptest::Config { cases: 64, base_seed: 0x71_E2 },
+        |rng: &mut Prng| {
+            let h = rng.range(4, 48);
+            let cin = rng.range(1, 16) * 4;
+            let cout = rng.range(1, 32) * 4;
+            let a_bits = *rng.pick(&[2u8, 4, 8]);
+            let w_bits = *rng.pick(&[2u8, 4, 8]);
+            let out_bits = *rng.pick(&[2u8, 4, 8]);
+            let k = *rng.pick(&[1usize, 3]);
+            let isa = *rng.pick(&IsaVariant::ALL);
+            let l1 = rng.range(8 * 1024, 128 * 1024);
+            let g = ConvGeom::square(h, h, cin, cout, k, k, 1, k / 2, a_bits);
+            (g, w_bits, out_bits, isa, l1)
+        },
+        |&(g, w_bits, out_bits, isa, l1)| {
+            let w_pitch = w_row_pitch(g.k(), buf_bits(&g, isa), w_bits) as usize;
+            let shapes = enumerate_conv_tilings(&g, isa, w_pitch, out_bits, l1, 8);
+            let solved = solve_conv_tiling(&g, isa, w_pitch, out_bits, l1);
+            match (solved, shapes.first()) {
+                (None, None) => return Ok(()), // nothing fits: consistent
+                (Some(s), Some(&first)) if s == first => {}
+                (s, f) => return Err(format!("solver {s:?} != enumerator head {f:?}")),
+            }
+            let scratch = flexv::CLUSTER_CORES
+                * isa.unroll().buffers
+                * ((g.k() * buf_bits(&g, isa) as usize).div_ceil(32) * 4);
+            let mut prev_cost = 0u64;
+            for (i, &shape) in shapes.iter().enumerate() {
+                if shape.chs % 4 != 0 || shape.chs * out_bits as usize % 8 != 0 {
+                    return Err(format!("{shape:?} misaligned"));
+                }
+                if shape.rows > g.out_h() || shape.chs > g.cout {
+                    return Err(format!("{shape:?} exceeds the layer"));
+                }
+                let tb = conv_tile_bytes(&g, w_pitch, out_bits, shape);
+                let need = 2 * (tb.input + tb.weights + tb.output + tb.quant) + scratch;
+                if need > l1 {
+                    return Err(format!("{shape:?} needs {need} B of {l1} B budget"));
+                }
+                let cost = dma_cost(&g, w_pitch, out_bits, shape);
+                if i > 0 && cost < prev_cost {
+                    return Err(format!("candidates not cost-sorted at {i}: {cost} < {prev_cost}"));
+                }
+                prev_cost = cost;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The depthwise row-strip solver obeys the same budget rule (its
+/// working set is double-buffered by `l1_layout` too).
+#[test]
+fn prop_dw_solver_respects_budget() {
+    proptest::check(
+        proptest::Config { cases: 48, base_seed: 0xD_0E5 },
+        |rng: &mut Prng| {
+            let h = rng.range(4, 64);
+            let c = rng.range(1, 32) * 4;
+            let a_bits = *rng.pick(&[2u8, 4, 8]);
+            let w_bits = *rng.pick(&[2u8, 4, 8]);
+            let stride = *rng.pick(&[1usize, 2]);
+            let l1 = rng.range(4 * 1024, 128 * 1024);
+            (h, c, a_bits, w_bits, stride, l1)
+        },
+        |&(h, c, a_bits, w_bits, stride, l1)| {
+            let oh = (h + 2 - 3) / stride + 1;
+            match solve_dw_tiling(h, h, c, 3, stride, a_bits, w_bits, a_bits, oh, l1) {
+                None => Ok(()),
+                Some(rows) => {
+                    if rows == 0 || rows > oh {
+                        return Err(format!("rows {rows} outside 1..={oh}"));
+                    }
+                    let in_rows = (rows - 1) * stride + 3;
+                    let input = in_rows * h * c * a_bits as usize / 8;
+                    let weights = 9 * c * w_bits as usize / 8;
+                    let output = rows * h * c * a_bits as usize / 8;
+                    let need = 2 * (input + weights + output + c * 8) + 64;
+                    if need > l1 {
+                        return Err(format!("rows {rows} needs {need} B of {l1} B"));
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
 }

@@ -62,12 +62,17 @@ struct Fingerprint {
 }
 
 fn run(workers: usize, fastpath: bool, crosscheck: bool) -> Fingerprint {
+    run_cfg(workers, fastpath, crosscheck, false)
+}
+
+fn run_cfg(workers: usize, fastpath: bool, crosscheck: bool, tuned: bool) -> Fingerprint {
     let cfg = ServeConfig {
         shards: 3,
         n_cores: 4,
         workers,
         fastpath,
         crosscheck,
+        tuned,
         autoscale: Some(autoscale_cfg()),
         ..ServeConfig::default()
     };
@@ -153,6 +158,41 @@ fn fastpath_soak_bursty_crosscheck_zero_divergence() {
     let checked = run(1, true, true);
     let reference = run(1, false, false);
     assert_eq!(checked, reference, "crosschecked fast path diverged from slow path");
+}
+
+/// Regression gate for the autotuner (satellite): the same adversarial
+/// autoscaled bursty SLO scenario with **tuning enabled** — tuning runs
+/// once per model on the engine thread, so the whole event stream
+/// (completions, sheds, occupancy) must stay bit-identical across
+/// worker counts and fast-path settings, exactly like the untuned
+/// fleet.
+#[test]
+fn tuned_autoscaled_bursty_trace_is_bit_deterministic() {
+    let reference = run_cfg(1, false, false, true);
+    assert!(reference.served > 0, "nothing served");
+    assert_eq!(
+        reference.served + reference.shed_count as usize,
+        18,
+        "every request is either served or shed"
+    );
+    assert_eq!(reference, run_cfg(4, false, false, true), "worker count changed tuned results");
+    assert_eq!(reference, run_cfg(1, true, false, true), "fast path changed tuned results");
+    assert_eq!(
+        reference,
+        run_cfg(4, true, false, true),
+        "workers + fast path changed tuned results"
+    );
+}
+
+/// Fast-path crosscheck soak over **tuned plans**: every replayed
+/// window of the tuned deployments is re-simulated and compared on a
+/// forked cluster (any divergence panics), and the results still match
+/// the tuned no-fastpath run bit-for-bit.
+#[test]
+fn tuned_fastpath_soak_crosscheck_zero_divergence() {
+    let checked = run_cfg(1, true, true, true);
+    let reference = run_cfg(1, false, false, true);
+    assert_eq!(checked, reference, "crosschecked fast path diverged on tuned plans");
 }
 
 /// The workload trace generator and the engine agree end-to-end on SLO

@@ -4,7 +4,11 @@
 //!   3. TCDM banking           (16 banks vs 8 vs 4: conflict sensitivity)
 //!   4. hardware mixed support (Flex-V vs SW unpack on the same core)
 //!
-//!     cargo bench --bench ablation
+//! Pass `--artifact FILE` to also persist the `kernels` benchmark
+//! artifact (the ablation cells are drawn from the same Table III /
+//! Fig. 7 grid the `kernels` suite serializes).
+//!
+//!     cargo bench --bench ablation [-- --artifact BENCH_kernels.json]
 
 use flexv::isa::IsaVariant;
 use flexv::qnn::Precision;
@@ -35,4 +39,8 @@ fn main() {
         let cv = conv_fig7_stats(IsaVariant::FlexV, prec).macs_per_cycle();
         println!("  {prec}: MatMul {mm:.1} -> conv {cv:.1} MAC/cyc ({:.0}% overhead)", (1.0 - cv / mm) * 100.0);
     }
+    flexv::report::bench::write_artifact_from_args(
+        "kernels",
+        &flexv::report::bench::BenchOptions::default(),
+    );
 }

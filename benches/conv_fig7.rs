@@ -1,7 +1,11 @@
 //! Bench: Fig. 7 — full convolution layers (im2col + MatMul + requant)
 //! across the precision grid and all cores, with speedup ratios.
 //!
-//!     cargo bench --bench conv_fig7
+//! Pass `--artifact FILE` to also persist the `kernels` benchmark
+//! artifact (via the shared `report::bench` suite builder, so these
+//! numbers and `flexv bench-report` can never diverge).
+//!
+//!     cargo bench --bench conv_fig7 [-- --artifact BENCH_kernels.json]
 
 use flexv::isa::IsaVariant;
 use flexv::power::EnergyModel;
@@ -36,4 +40,8 @@ fn main() {
             get(3) / get(0), get(3) / get(1), get(3) / get(2)
         );
     }
+    flexv::report::bench::write_artifact_from_args(
+        "kernels",
+        &flexv::report::bench::BenchOptions::default(),
+    );
 }

@@ -1,7 +1,11 @@
 //! Bench: Table IV — end-to-end networks through the DORY flow.
 //! Pass --full for 224x224 MobileNet inputs (default 96x96 quick mode).
 //!
-//!     cargo bench --bench e2e_table4 [-- --full]
+//! Pass `--artifact FILE` to also persist the `e2e` benchmark artifact
+//! (via the shared `report::bench` suite builder, so these numbers and
+//! `flexv bench-report` can never diverge; `--full` carries over).
+//!
+//!     cargo bench --bench e2e_table4 [-- --full] [-- --artifact BENCH_e2e.json]
 
 use flexv::isa::IsaVariant;
 use flexv::models::{mobilenet_v1, resnet20, Profile};
@@ -32,4 +36,8 @@ fn main() {
     }
     println!("(paper rows: XpulpV2 5.6/3.2/4.8, XpulpNN 6.0/2.7/4.4, Flex-V 6.0/5.8/11.2,");
     println!(" STM32H7 0.33/0.30/-; see EXPERIMENTS.md for the deviation discussion)");
+    flexv::report::bench::write_artifact_from_args(
+        "e2e",
+        &flexv::report::bench::BenchOptions { full, ..Default::default() },
+    );
 }

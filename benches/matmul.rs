@@ -2,7 +2,11 @@
 //! rows (MAC/cycle / TOPS/W per precision × core) and reports simulator
 //! wall-time per cell.
 //!
-//!     cargo bench --bench matmul
+//! Pass `--artifact FILE` to also persist the `kernels` benchmark
+//! artifact (via the shared `report::bench` suite builder, so these
+//! numbers and `flexv bench-report` can never diverge).
+//!
+//!     cargo bench --bench matmul [-- --artifact BENCH_kernels.json]
 
 use flexv::isa::IsaVariant;
 use flexv::power::EnergyModel;
@@ -33,4 +37,8 @@ fn main() {
             );
         }
     }
+    flexv::report::bench::write_artifact_from_args(
+        "kernels",
+        &flexv::report::bench::BenchOptions::default(),
+    );
 }

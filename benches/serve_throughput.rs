@@ -15,7 +15,13 @@
 //! reporting the tuner's measured default → tuned cycle totals — which
 //! can never regress, since the analytic plan is always a candidate.
 //!
+//! Pass `--artifact FILE` to also persist the `serve` benchmark
+//! artifact (via the shared `report::bench` suite builder, so these
+//! numbers and `flexv bench-report` can never diverge; `--full`
+//! carries over).
+//!
 //!     cargo bench --bench serve_throughput [-- --full] [-- --baseline] [-- --tuned]
+//!                                          [-- --artifact BENCH_serve.json]
 
 use flexv::serve::{
     standard_mix, AutoscaleConfig, Engine, FleetMetrics, ServeConfig, SloClass, TraceShape,
@@ -228,4 +234,8 @@ fn main() {
         tuned_row(hw, requests);
     }
     scenario_matrix(hw, requests);
+    flexv::report::bench::write_artifact_from_args(
+        "serve",
+        &flexv::report::bench::BenchOptions { full, ..Default::default() },
+    );
 }

@@ -12,7 +12,11 @@
 //! (asserted); only wall-clock time may differ. Target: ≥ 5x effective
 //! speed-up in steady state.
 //!
-//!     cargo bench --bench sim_speed
+//! Pass `--artifact FILE` to also persist the `kernels` benchmark
+//! artifact (only the deterministic simulated quantities — wall-clock
+//! rates never enter an artifact).
+//!
+//!     cargo bench --bench sim_speed [-- --artifact BENCH_kernels.json]
 
 use flexv::isa::IsaVariant;
 use flexv::qnn::Precision;
@@ -71,4 +75,8 @@ fn main() {
         fp.func_hits
     );
     println!("  (§Perf target: >= 50 M instr/s cycle-exact; >= 5x steady-state speed-up)");
+    flexv::report::bench::write_artifact_from_args(
+        "kernels",
+        &flexv::report::bench::BenchOptions::default(),
+    );
 }

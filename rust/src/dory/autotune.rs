@@ -54,6 +54,7 @@ use crate::coordinator::{run_layer_memoized, TileMemo};
 use crate::isa::IsaVariant;
 use crate::kernels::im2col::ConvGeom;
 use crate::qnn::layer::{Layer, LayerKind, Network};
+use crate::report::artifact::{MetricRow, MetricSource};
 use crate::sim::Cluster;
 
 /// Search-space knobs of one tuning run.
@@ -134,6 +135,44 @@ impl NetworkTuning {
         } else {
             (d - self.total_tuned_cycles()) as f64 / d as f64
         }
+    }
+}
+
+/// A [`NetworkTuning`] labelled with its model name — the autotuner's
+/// [`MetricSource`] for the `autotune` benchmark artifact. All rows are
+/// exact: tuning is a deterministic cycle-accurate measurement.
+pub struct TunedModelMetrics<'a> {
+    /// Registry name of the tuned model ([`crate::models::MODEL_NAMES`]).
+    pub model: &'a str,
+    pub tuning: &'a NetworkTuning,
+}
+
+impl MetricSource for TunedModelMetrics<'_> {
+    fn metric_rows(&self) -> Vec<MetricRow> {
+        let p = format!("autotune/{}", self.model);
+        vec![
+            MetricRow::exact(format!("{p}/layers"), self.tuning.layers.len() as f64, "layers"),
+            MetricRow::exact(
+                format!("{p}/improved_layers"),
+                self.tuning.improved_layers() as f64,
+                "layers",
+            ),
+            MetricRow::exact(
+                format!("{p}/default_cycles"),
+                self.tuning.total_default_cycles() as f64,
+                "cycles",
+            ),
+            MetricRow::exact(
+                format!("{p}/tuned_cycles"),
+                self.tuning.total_tuned_cycles() as f64,
+                "cycles",
+            ),
+            MetricRow::exact(
+                format!("{p}/saved_percent"),
+                self.tuning.gain_fraction() * 100.0,
+                "%",
+            ),
+        ]
     }
 }
 

@@ -47,7 +47,10 @@
 //!   autoscaling, per-class fleet metrics (workload → queue → batcher →
 //!   shard pool → metrics; see `serve/README.md`).
 //! - [`report`] — regenerates every table and figure of the paper's
-//!   evaluation section (Tables I-IV, Fig. 7).
+//!   evaluation section (Tables I-IV, Fig. 7), and persists every
+//!   number as machine-readable `BENCH_<suite>.json` artifacts
+//!   ([`report::artifact`], [`report::bench`]) gated against committed
+//!   baselines by [`report::regress`] (CLI `bench-report` / `regress`).
 //!
 //! `ARCHITECTURE.md` at the repository root maps each module to the
 //! paper section/figure it reproduces and draws the data flow from

@@ -57,6 +57,24 @@ COMMANDS:
                     --tuned autotunes each model's per-layer plans on
                     first dispatch (deterministic, once per model) and
                     reports the measured tuned-vs-default cycle delta
+  bench-report [--suite kernels|e2e|autotune|serve|all] [--out FILE]
+               [--out-dir DIR] [--full] [--workers N]
+                    run benchmark suites and write machine-readable
+                    BENCH_<suite>.json artifacts (git rev, seed, sim
+                    config, one row per metric: MAC/cycle, TOPS/W,
+                    cycles, uJ/req, p50/p99, tuned-vs-default deltas).
+                    Deterministic: two runs on one commit emit
+                    identical bytes; --workers moves wall-clock only
+  regress [--suite ...] [--baseline DIR] [--current DIR]
+          [--tol-cycles N] [--tol-power PCT] [--bless] [--full]
+                    compare fresh artifacts (or --current DIR) against
+                    committed baselines: exact (simulated-cycle) rows
+                    must match within --tol-cycles (default 0), analog
+                    (energy-model) rows within --tol-power (default
+                    2%); prints a per-metric drift table and the
+                    reproduction distance from the paper's Table III/IV
+                    anchors, exits 1 on drift. --bless (re)pins the
+                    baselines to the current run
   validate [dir]    cross-check simulator vs AOT golden artifacts (PJRT)
 
 ISAs: ri5cy | mpic | xpulpnn | flexv"
@@ -169,6 +187,8 @@ fn main() {
             run_net_verbose(isa, &net, fastpath);
         }
         Some("tune") => run_tune(&args),
+        Some("bench-report") => run_bench_report(&args),
+        Some("regress") => run_regress(&args),
         Some("serve-bench") => {
             let full = args.iter().any(|a| a == "--full");
             let exact = args.iter().any(|a| a == "--exact");
@@ -328,6 +348,153 @@ fn main() {
             eprintln!("missing command\n");
             usage()
         }
+    }
+}
+
+/// Suites selected by `--suite` (default: all four, canonical order).
+fn selected_suites(args: &[String]) -> Vec<&'static str> {
+    use flexv::report::bench::SUITE_NAMES;
+    match flag_str(args, "--suite") {
+        None => SUITE_NAMES.to_vec(),
+        Some("all") => SUITE_NAMES.to_vec(),
+        Some(s) => match SUITE_NAMES.iter().copied().find(|n| *n == s) {
+            Some(n) => vec![n],
+            None => {
+                eprintln!("unknown suite '{s}' (expected {} | all)", SUITE_NAMES.join(" | "));
+                usage()
+            }
+        },
+    }
+}
+
+/// Shared `--full` / `--workers` knobs of the artifact suites.
+fn bench_options(args: &[String]) -> flexv::report::bench::BenchOptions {
+    flexv::report::bench::BenchOptions {
+        full: args.iter().any(|a| a == "--full"),
+        workers: if args.iter().any(|a| a == "--sequential") {
+            1
+        } else {
+            flag_val(args, "--workers").unwrap_or(0)
+        },
+    }
+}
+
+/// The `bench-report` subcommand: run the selected suites and write one
+/// `BENCH_<suite>.json` per suite (deterministic bytes — CI diffs two
+/// consecutive runs byte-for-byte).
+fn run_bench_report(args: &[String]) {
+    use flexv::report::artifact::BenchArtifact;
+    use flexv::report::{bench, regress};
+    let opts = bench_options(args);
+    let suites = selected_suites(args);
+    let out_dir = flag_str(args, "--out-dir").unwrap_or(".");
+    let single_out = flag_str(args, "--out");
+    if single_out.is_some() && suites.len() != 1 {
+        eprintln!("--out needs a single --suite; use --out-dir for several");
+        usage()
+    }
+    if std::fs::create_dir_all(out_dir).is_err() {
+        eprintln!("cannot create --out-dir {out_dir}");
+        std::process::exit(1);
+    }
+    for suite in suites {
+        let t0 = std::time::Instant::now();
+        let art = bench::run_suite(suite, &opts).expect("selected_suites validated the name");
+        let path = single_out
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("{out_dir}/{}", BenchArtifact::file_name(suite)));
+        if let Err(e) = std::fs::write(&path, art.to_json()) {
+            eprintln!("cannot write {path}: {e}");
+            std::process::exit(1);
+        }
+        println!(
+            "bench-report {suite}: {} metrics -> {path}  [{:.1}s]",
+            art.rows.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        if let Some(t) = regress::paper_distance(&art) {
+            print!("{t}");
+        }
+    }
+}
+
+/// Parse `--tol-power` (`2`, `2%`, `0.5%` — percent either way).
+fn parse_tol_power(args: &[String]) -> f64 {
+    match flag_str(args, "--tol-power") {
+        None => 0.02,
+        Some(s) => match s.trim_end_matches('%').parse::<f64>() {
+            Ok(v) if v >= 0.0 => v / 100.0,
+            _ => {
+                eprintln!("bad --tol-power '{s}', expected a percentage like 2%");
+                usage()
+            }
+        },
+    }
+}
+
+/// The `regress` subcommand: gate the current run against committed
+/// baselines, or `--bless` the baselines to the current run.
+fn run_regress(args: &[String]) {
+    use flexv::report::artifact::BenchArtifact;
+    use flexv::report::{bench, regress};
+    let opts = bench_options(args);
+    let suites = selected_suites(args);
+    let baseline_dir = flag_str(args, "--baseline").unwrap_or("baselines");
+    let current_dir = flag_str(args, "--current");
+    let bless = args.iter().any(|a| a == "--bless");
+    let tol = regress::Tolerance {
+        exact_abs: flag_val(args, "--tol-cycles").unwrap_or(0) as f64,
+        analog_frac: parse_tol_power(args),
+    };
+    let read_artifact = |path: &str| -> BenchArtifact {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("cannot read {path}: {e}");
+            std::process::exit(1);
+        });
+        BenchArtifact::from_json(&text).unwrap_or_else(|e| {
+            eprintln!("{path}: {e}");
+            std::process::exit(1);
+        })
+    };
+    let mut failed = false;
+    for suite in suites {
+        let file = BenchArtifact::file_name(suite);
+        let current = match current_dir {
+            Some(d) => read_artifact(&format!("{d}/{file}")),
+            None => bench::run_suite(suite, &opts).expect("selected_suites validated the name"),
+        };
+        let base_path = format!("{baseline_dir}/{file}");
+        if bless {
+            if std::fs::create_dir_all(baseline_dir).is_err() {
+                eprintln!("cannot create baseline dir {baseline_dir}");
+                std::process::exit(1);
+            }
+            if let Err(e) = std::fs::write(&base_path, current.to_json()) {
+                eprintln!("cannot write {base_path}: {e}");
+                std::process::exit(1);
+            }
+            println!("regress {suite}: blessed {} metrics -> {base_path}", current.rows.len());
+            continue;
+        }
+        if !std::path::Path::new(&base_path).exists() {
+            eprintln!(
+                "regress {suite}: no baseline at {base_path} — run `flexv regress --bless` \
+                 and commit the result"
+            );
+            failed = true;
+            continue;
+        }
+        let baseline = read_artifact(&base_path);
+        let report = regress::compare(&current, &baseline, &tol);
+        print!("{}", report.render());
+        if let Some(t) = regress::paper_distance(&current) {
+            print!("{t}");
+        }
+        failed |= report.failed();
+    }
+    if failed {
+        eprintln!("regress: FAILED (see drift tables above)");
+        std::process::exit(1);
     }
 }
 

@@ -1,0 +1,708 @@
+//! Machine-readable benchmark artifacts (`BENCH_<suite>.json`).
+//!
+//! Every number the repo reports — kernel MAC/cycle grids, end-to-end
+//! network runs, autotuner totals, serve-fleet metrics — historically
+//! only existed as pretty-printed tables. This module gives them a
+//! persistent, versioned, machine-diffable form:
+//!
+//! - [`Json`]: a tiny zero-dependency JSON value (writer + parser), so
+//!   the offline build needs no serde;
+//! - [`MetricRow`]: one metric — a stable id, a value, a unit, and a
+//!   [`MetricKind`] deciding how `regress` compares it against a
+//!   baseline (`Exact`: simulated-cycle metrics are bit-deterministic
+//!   and compare exactly; `Analog`: energy-model outputs such as TOPS/W
+//!   and µJ/request get a tolerance band), plus an optional paper
+//!   reference value for reproduction-distance reporting;
+//! - [`BenchArtifact`]: a suite of rows plus run metadata (git
+//!   revision, seed, simulated-cluster config), serialized to a stable
+//!   pretty-printed JSON document. Serialization is bit-deterministic:
+//!   two runs of the same binary on the same commit produce identical
+//!   bytes (asserted by CI's double-run gate);
+//! - [`MetricSource`]: the one trait every metric producer implements
+//!   ([`crate::serve::FleetMetrics`], the autotuner's
+//!   [`crate::dory::autotune::TunedModelMetrics`], and the kernel/e2e
+//!   sources in [`crate::report::bench`]) so tables, benches, and
+//!   artifacts all draw from the same rows and can never diverge.
+//!
+//! Schema stability: unknown object fields are ignored on parse
+//! (forward compatibility for added fields), while a `schema_version`
+//! above [`SCHEMA_VERSION`] is rejected (a newer writer may have
+//! changed the meaning of existing fields). Duplicate row ids are
+//! rejected on both ends. See `rust/tests/bench_artifact.rs`.
+
+/// Current artifact schema version. Bump when the meaning of existing
+/// fields changes; purely additive fields do not need a bump.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// The `"schema"` tag stamped into every artifact.
+pub const SCHEMA_NAME: &str = "flexv-bench-artifact";
+
+// ---------------------------------------------------------------------------
+// JSON value: writer + parser (zero-dependency).
+// ---------------------------------------------------------------------------
+
+/// A JSON value. Objects preserve insertion order (a `Vec`, not a map),
+/// which is what makes rendering deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Pretty-print with 2-space indentation (committed baselines stay
+    /// line-diffable). Deterministic: field order is insertion order and
+    /// numbers use Rust's shortest round-trip formatting.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => out.push_str(&fmt_num(*v)),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    item.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a JSON document (exactly one value plus whitespace).
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing garbage at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Field of an object (`None` for missing keys or non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= u64::MAX as f64 => {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Shortest round-trip decimal of a finite f64 (Rust's `Display`
+/// contract); JSON has no NaN/Inf, so non-finite values become `null`.
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn push_indent(out: &mut String, n: usize) {
+    for _ in 0..n {
+        out.push_str("  ");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => {
+                self.i += 1;
+                Ok(Json::Str(self.string()?))
+            }
+            Some(b'[') => {
+                self.i += 1;
+                let mut items = Vec::new();
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    self.ws();
+                    items.push(self.value()?);
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.i += 1;
+                let mut fields = Vec::new();
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.ws();
+                    self.expect(b'"')?;
+                    let key = self.string()?;
+                    self.ws();
+                    self.expect(b':')?;
+                    self.ws();
+                    let val = self.value()?;
+                    fields.push((key, val));
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+                    }
+                }
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected byte at {}", self.i)),
+        }
+    }
+
+    /// Body of a string; the opening quote is already consumed.
+    fn string(&mut self) -> Result<String, String> {
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                return Err("unterminated string".to_string());
+            };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err("unterminated escape".to_string());
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair: expect \uDC00..DFFF
+                                if self.peek() == Some(b'\\') {
+                                    self.i += 1;
+                                    self.expect(b'u')?;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        return Err("bad low surrogate".to_string());
+                                    }
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    return Err("lone high surrogate".to_string());
+                                }
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| format!("bad codepoint {cp:#x}"))?,
+                            );
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i - 1)),
+                    }
+                }
+                c if c < 0x80 => out.push(c as char),
+                b0 => {
+                    // Multibyte character: decode exactly its UTF-8
+                    // width (the input is a valid &str, so the lead
+                    // byte's width lands on a char boundary).
+                    self.i -= 1;
+                    let len = match b0 {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let end = (self.i + len).min(self.b.len());
+                    let s = std::str::from_utf8(&self.b[self.i..end])
+                        .map_err(|e| e.to_string())?;
+                    let ch = s.chars().next().ok_or("bad utf-8 sequence")?;
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("truncated \\u escape".to_string());
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4]).map_err(|e| e.to_string())?;
+        let v = u32::from_str_radix(s, 16).map_err(|e| format!("bad \\u escape: {e}"))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        s.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number '{s}': {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metric rows.
+// ---------------------------------------------------------------------------
+
+/// How `regress` compares a metric against its baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// A pure function of simulated cycles/counters — bit-deterministic,
+    /// compared exactly (modulo `--tol-cycles`, default 0).
+    Exact,
+    /// Output of the calibrated analog/energy model (TOPS/W, µJ, mW) —
+    /// compared within the `--tol-power` relative band.
+    Analog,
+}
+
+impl MetricKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricKind::Exact => "exact",
+            MetricKind::Analog => "analog",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<MetricKind> {
+        match s {
+            "exact" => Some(MetricKind::Exact),
+            "analog" => Some(MetricKind::Analog),
+            _ => None,
+        }
+    }
+}
+
+/// One metric of a benchmark artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricRow {
+    /// Stable, unique, slash-separated id (e.g.
+    /// `kernels/matmul/flexv/a2w2/mac_per_cycle`).
+    pub id: String,
+    pub value: f64,
+    /// Human-readable unit (`cycles`, `MAC/cycle`, `TOPS/W`, `uJ/req`…).
+    pub unit: String,
+    pub kind: MetricKind,
+    /// The paper's reported value for this metric, where it reports one
+    /// (Table III/IV anchors) — drives the reproduction-distance table.
+    pub paper: Option<f64>,
+}
+
+impl MetricRow {
+    pub fn exact(id: impl Into<String>, value: f64, unit: &str) -> MetricRow {
+        MetricRow { id: id.into(), value, unit: unit.into(), kind: MetricKind::Exact, paper: None }
+    }
+
+    pub fn analog(id: impl Into<String>, value: f64, unit: &str) -> MetricRow {
+        MetricRow { id: id.into(), value, unit: unit.into(), kind: MetricKind::Analog, paper: None }
+    }
+
+    pub fn with_paper(mut self, v: f64) -> MetricRow {
+        self.paper = Some(v);
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id".to_string(), Json::Str(self.id.clone())),
+            ("value".to_string(), Json::Num(self.value)),
+            ("unit".to_string(), Json::Str(self.unit.clone())),
+            ("kind".to_string(), Json::Str(self.kind.name().to_string())),
+        ];
+        if let Some(p) = self.paper {
+            fields.push(("paper".to_string(), Json::Num(p)));
+        }
+        Json::Obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Result<MetricRow, String> {
+        let id = j
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or("row missing string 'id'")?
+            .to_string();
+        let value = j
+            .get("value")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("row '{id}' missing numeric 'value'"))?;
+        let unit = j.get("unit").and_then(Json::as_str).unwrap_or("").to_string();
+        let kind = match j.get("kind").and_then(Json::as_str) {
+            Some(k) => MetricKind::from_name(k)
+                .ok_or_else(|| format!("row '{id}': unknown kind '{k}'"))?,
+            None => MetricKind::Exact,
+        };
+        let paper = j.get("paper").and_then(Json::as_f64);
+        Ok(MetricRow { id, value, unit, kind, paper })
+    }
+}
+
+/// Anything that can emit artifact rows. Implemented by the serve
+/// fleet report, the autotuner's per-model summary, and the kernel /
+/// end-to-end sources — the single path every table, bench, and
+/// `bench-report` run draws numbers from.
+pub trait MetricSource {
+    /// Stable, fully-qualified metric rows. Only simulated
+    /// (host-independent) quantities may appear here — never wall-clock
+    /// times or host-side cache counters.
+    fn metric_rows(&self) -> Vec<MetricRow>;
+}
+
+// ---------------------------------------------------------------------------
+// Run metadata + the artifact itself.
+// ---------------------------------------------------------------------------
+
+/// Provenance of one artifact run. `regress` ignores all of it (only
+/// rows are compared); it exists so a checked-in or uploaded artifact
+/// is self-describing.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct RunMeta {
+    /// `git rev-parse` of the producing tree (`unknown` outside a repo).
+    pub git_rev: String,
+    /// Primary PRNG seed of the suite's workloads.
+    pub seed: u64,
+    /// Quick-mode inputs (96×96 MobileNet) vs the paper's full 224×224.
+    pub quick: bool,
+    /// Simulated-cluster configuration summary.
+    pub sim: String,
+}
+
+impl RunMeta {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("git_rev".to_string(), Json::Str(self.git_rev.clone())),
+            ("seed".to_string(), Json::Num(self.seed as f64)),
+            ("quick".to_string(), Json::Bool(self.quick)),
+            ("sim".to_string(), Json::Str(self.sim.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> RunMeta {
+        RunMeta {
+            git_rev: j.get("git_rev").and_then(Json::as_str).unwrap_or("unknown").to_string(),
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            quick: j.get("quick").and_then(Json::as_bool).unwrap_or(false),
+            sim: j.get("sim").and_then(Json::as_str).unwrap_or("").to_string(),
+        }
+    }
+}
+
+/// One benchmark suite's metric rows plus run metadata, serializable to
+/// a stable `BENCH_<suite>.json` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchArtifact {
+    pub suite: String,
+    pub schema_version: u32,
+    /// A committed baseline that has not been pinned to measured values
+    /// yet (its rows are paper targets only): `regress` reports
+    /// reproduction distance but does not gate on it until
+    /// `regress --bless` replaces it with measured numbers.
+    pub pending: bool,
+    pub meta: RunMeta,
+    pub rows: Vec<MetricRow>,
+}
+
+impl BenchArtifact {
+    pub fn new(suite: impl Into<String>, meta: RunMeta) -> BenchArtifact {
+        BenchArtifact {
+            suite: suite.into(),
+            schema_version: SCHEMA_VERSION,
+            pending: false,
+            meta,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Canonical file name of a suite's artifact.
+    pub fn file_name(suite: &str) -> String {
+        format!("BENCH_{suite}.json")
+    }
+
+    /// Append every row of a source. Panics on duplicate ids — row ids
+    /// are the join key of the whole regression pipeline.
+    pub fn push_source(&mut self, src: &dyn MetricSource) {
+        for row in src.metric_rows() {
+            assert!(
+                self.row(&row.id).is_none(),
+                "duplicate metric id '{}' in suite '{}'",
+                row.id,
+                self.suite
+            );
+            self.rows.push(row);
+        }
+    }
+
+    /// Look up a row by id.
+    pub fn row(&self, id: &str) -> Option<&MetricRow> {
+        self.rows.iter().find(|r| r.id == id)
+    }
+
+    /// Serialize to the canonical JSON document (deterministic bytes).
+    pub fn to_json(&self) -> String {
+        let mut fields = vec![
+            ("schema".to_string(), Json::Str(SCHEMA_NAME.to_string())),
+            ("schema_version".to_string(), Json::Num(self.schema_version as f64)),
+            ("suite".to_string(), Json::Str(self.suite.clone())),
+        ];
+        if self.pending {
+            fields.push(("pending".to_string(), Json::Bool(true)));
+        }
+        fields.push(("meta".to_string(), self.meta.to_json()));
+        fields.push(("rows".to_string(), Json::Arr(self.rows.iter().map(|r| r.to_json()).collect())));
+        Json::Obj(fields).render()
+    }
+
+    /// Parse an artifact document. Unknown fields are ignored (forward
+    /// compatibility); a newer `schema_version`, a missing `suite`, or
+    /// duplicate row ids are errors.
+    pub fn from_json(s: &str) -> Result<BenchArtifact, String> {
+        let j = Json::parse(s)?;
+        let version = j
+            .get("schema_version")
+            .and_then(Json::as_u64)
+            .ok_or("missing numeric 'schema_version'")?;
+        if version > SCHEMA_VERSION as u64 {
+            return Err(format!(
+                "artifact schema v{version} is newer than this binary's v{SCHEMA_VERSION} — \
+                 rebuild or regenerate the artifact"
+            ));
+        }
+        let suite = j
+            .get("suite")
+            .and_then(Json::as_str)
+            .ok_or("missing string 'suite'")?
+            .to_string();
+        let pending = j.get("pending").and_then(Json::as_bool).unwrap_or(false);
+        let meta = j.get("meta").map(RunMeta::from_json).unwrap_or_default();
+        let rows_json = j.get("rows").and_then(Json::as_arr).ok_or("missing array 'rows'")?;
+        let mut rows = Vec::with_capacity(rows_json.len());
+        for rj in rows_json {
+            let row = MetricRow::from_json(rj)?;
+            if rows.iter().any(|r: &MetricRow| r.id == row.id) {
+                return Err(format!("duplicate row id '{}'", row.id));
+            }
+            rows.push(row);
+        }
+        Ok(BenchArtifact { suite, schema_version: version as u32, pending, meta, rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrips_values() {
+        let doc = r#"{"a": [1, -2.5, 1e3], "b": {"c": "x\nyé"}, "d": true, "e": null}"#;
+        let v = Json::parse(doc).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[0], Json::Num(1.0));
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[2], Json::Num(1000.0));
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str().unwrap(), "x\nyé");
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("e"), Some(&Json::Null));
+        // render → parse is the identity
+        assert_eq!(Json::parse(&v.render()).unwrap(), v);
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{}{}").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+        assert!(Json::parse(r#""unterminated"#).is_err());
+    }
+
+    #[test]
+    fn float_formatting_is_shortest_roundtrip() {
+        for v in [0.1, 1.0 / 3.0, 91.5, 3.26, 12345678901234.0, -0.0625] {
+            let j = Json::Num(v);
+            let back = Json::parse(j.render().trim()).unwrap();
+            assert_eq!(back.as_f64().unwrap().to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn artifact_roundtrip_and_unknown_fields() {
+        let mut a = BenchArtifact::new(
+            "kernels",
+            RunMeta { git_rev: "abc".into(), seed: 7, quick: true, sim: "8 cores".into() },
+        );
+        a.rows.push(MetricRow::exact("kernels/x/cycles", 12345.0, "cycles"));
+        a.rows.push(MetricRow::analog("kernels/x/tops_w", 3.26, "TOPS/W").with_paper(3.26));
+        let text = a.to_json();
+        let b = BenchArtifact::from_json(&text).unwrap();
+        assert_eq!(a, b);
+        // serialization is deterministic
+        assert_eq!(text, b.to_json());
+    }
+
+    #[test]
+    fn version_and_duplicate_handling() {
+        let newer = r#"{"schema_version": 999, "suite": "x", "rows": []}"#;
+        assert!(BenchArtifact::from_json(newer).is_err());
+        let dup = r#"{"schema_version": 1, "suite": "x", "rows": [
+            {"id": "a", "value": 1}, {"id": "a", "value": 2}]}"#;
+        assert!(BenchArtifact::from_json(dup).is_err());
+        let missing_suite = r#"{"schema_version": 1, "rows": []}"#;
+        assert!(BenchArtifact::from_json(missing_suite).is_err());
+    }
+}

@@ -2,7 +2,17 @@
 //! (§V): Tables I-IV and Fig. 7. Each function runs the corresponding
 //! workload on the simulator and renders rows directly comparable with
 //! the paper's.
+//!
+//! Beyond the pretty-printed tables, the same measurements feed the
+//! machine-readable benchmark-artifact pipeline: [`artifact`] defines
+//! the `BENCH_<suite>.json` schema and the [`artifact::MetricSource`]
+//! trait, [`bench`] runs the four suites (kernels / e2e / autotune /
+//! serve) through the *same* cell functions the tables render from, and
+//! [`regress`] gates a fresh run against committed baselines.
 
+pub mod artifact;
+pub mod bench;
+pub mod regress;
 pub mod workloads;
 
 use crate::isa::IsaVariant;
@@ -208,6 +218,47 @@ pub fn table1() -> String {
     t.render() + "(paper This-Work row: 25 - 85 Gop/s, 610 - 3K Gop/s/W)\n"
 }
 
+/// One measured Table IV cell: a full network deployed and run
+/// end-to-end on one ISA (the data behind both [`table4`] and the `e2e`
+/// benchmark artifact — `bench-report` and the rendered table can never
+/// diverge because both read these cells).
+#[derive(Clone, Debug)]
+pub struct E2eCell {
+    /// Registry name ([`crate::models::MODEL_NAMES`]).
+    pub model: &'static str,
+    pub isa: IsaVariant,
+    /// Total simulated cycles of one inference.
+    pub cycles: u64,
+    /// Total MACs of one inference.
+    pub macs: u64,
+}
+
+impl E2eCell {
+    pub fn macs_per_cycle(&self) -> f64 {
+        self.macs as f64 / self.cycles.max(1) as f64
+    }
+}
+
+/// The ISAs of Table IV's measured rows (the paper omits MPIC there).
+pub const TABLE4_ISAS: [IsaVariant; 3] =
+    [IsaVariant::Ri5cy, IsaVariant::XpulpNn, IsaVariant::FlexV];
+
+/// Measure every Table IV cell (model-major, ISA-minor). `quick`
+/// shrinks MobileNet's input to 96×96 (MAC/cycle is
+/// input-size-insensitive).
+pub fn table4_cells(quick: bool) -> Vec<E2eCell> {
+    let hw = if quick { 96 } else { 224 };
+    let mut out = Vec::new();
+    for model in crate::models::MODEL_NAMES {
+        let net = crate::models::by_name(model, hw).expect("registry model");
+        for isa in TABLE4_ISAS {
+            let (cycles, macs) = workloads::e2e_stats(isa, &net);
+            out.push(E2eCell { model, isa, cycles, macs });
+        }
+    }
+    out
+}
+
 /// Table IV: end-to-end networks. `quick` shrinks MobileNet's input to
 /// 96×96 to keep the run short (MAC/cycle is input-size-insensitive).
 pub fn table4(quick: bool) -> String {
@@ -253,14 +304,20 @@ pub fn table4(quick: bool) -> String {
         "0.30".into(),
         "-".into(),
     ]);
-    // Measured MAC/cycle rows per ISA.
-    for isa in [IsaVariant::Ri5cy, IsaVariant::XpulpNn, IsaVariant::FlexV] {
+    // Measured MAC/cycle rows per ISA — the same cells the `e2e`
+    // benchmark artifact serializes ([`table4_cells`]).
+    let cells = table4_cells(quick);
+    for isa in TABLE4_ISAS {
         let mut row = vec![match isa {
             IsaVariant::Ri5cy => "XpulpV2 (RI5CY)".to_string(),
             other => other.name().to_string(),
         }];
-        for (_, net, _) in &nets {
-            row.push(f(workloads::e2e_macs_per_cycle(isa, net), 1));
+        for model in crate::models::MODEL_NAMES {
+            let cell = cells
+                .iter()
+                .find(|c| c.model == model && c.isa == isa)
+                .expect("every (model, isa) cell is measured");
+            row.push(f(cell.macs_per_cycle(), 1));
         }
         t.row(row);
     }

@@ -1,0 +1,446 @@
+//! Perf-regression gating: compare a freshly measured [`BenchArtifact`]
+//! against a committed baseline and render a per-metric drift table.
+//!
+//! Comparison semantics follow [`MetricKind`]:
+//!
+//! - `Exact` rows are bit-deterministic simulated quantities; they must
+//!   match within `tol_exact_abs` **absolute** units (`--tol-cycles`,
+//!   default 0 — i.e. bit-equal after the shortest-round-trip JSON
+//!   round trip);
+//! - `Analog` rows come from the calibrated energy model; they must
+//!   match within the `tol_analog_frac` **relative** band
+//!   (`--tol-power`, default 2%).
+//!
+//! A metric present in the baseline but missing from the current run is
+//! a failure (a number silently disappeared); a new current-only metric
+//! is reported but does not fail (additive evolution). Baselines marked
+//! `pending` carry paper targets instead of measured values: they never
+//! gate, they only feed the reproduction-distance report, until
+//! `regress --bless` pins them to measured numbers.
+
+use std::collections::BTreeMap;
+
+use super::artifact::{BenchArtifact, MetricKind, MetricRow};
+use crate::util::table::{f, Table};
+
+/// Comparison tolerances (CLI: `--tol-cycles`, `--tol-power`).
+#[derive(Clone, Copy, Debug)]
+pub struct Tolerance {
+    /// Absolute slack for `Exact` rows (0 = bit-equal).
+    pub exact_abs: f64,
+    /// Relative slack for `Analog` rows (0.02 = ±2%).
+    pub analog_frac: f64,
+}
+
+impl Default for Tolerance {
+    fn default() -> Self {
+        Tolerance { exact_abs: 0.0, analog_frac: 0.02 }
+    }
+}
+
+/// Outcome of one metric's comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftStatus {
+    /// Bit-equal.
+    Match,
+    /// Unequal but inside the tolerance band.
+    InTolerance,
+    /// Outside the tolerance band — fails the gate.
+    Drift,
+    /// In the baseline, absent from the current run — fails the gate.
+    MissingInCurrent,
+    /// In the current run, absent from the baseline — reported only.
+    NewInCurrent,
+    /// Baseline is `pending` (paper targets, not measured values):
+    /// informational only.
+    Unpinned,
+}
+
+impl DriftStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            DriftStatus::Match => "match",
+            DriftStatus::InTolerance => "in-tol",
+            DriftStatus::Drift => "DRIFT",
+            DriftStatus::MissingInCurrent => "MISSING",
+            DriftStatus::NewInCurrent => "new",
+            DriftStatus::Unpinned => "unpinned",
+        }
+    }
+
+    fn fails(self) -> bool {
+        matches!(self, DriftStatus::Drift | DriftStatus::MissingInCurrent)
+    }
+}
+
+/// One row of the drift report.
+#[derive(Clone, Debug)]
+pub struct DriftRow {
+    pub id: String,
+    pub unit: String,
+    pub kind: MetricKind,
+    pub baseline: Option<f64>,
+    pub current: Option<f64>,
+    pub status: DriftStatus,
+}
+
+impl DriftRow {
+    /// Signed relative delta current vs baseline (`None` when either
+    /// side is missing or the baseline is 0 while current is not).
+    pub fn rel_delta(&self) -> Option<f64> {
+        match (self.baseline, self.current) {
+            (Some(b), Some(c)) if b != 0.0 => Some((c - b) / b),
+            (Some(b), Some(c)) if b == 0.0 && c == 0.0 => Some(0.0),
+            _ => None,
+        }
+    }
+}
+
+/// The full result of comparing one suite against its baseline.
+#[derive(Clone, Debug)]
+pub struct RegressReport {
+    pub suite: String,
+    /// The baseline was `pending` (never gates).
+    pub pending_baseline: bool,
+    /// Set when current and baseline were measured in different
+    /// quick/full modes — the usual cause of a wall of drift rows, so
+    /// the report names it up front (the gate itself is unaffected;
+    /// meta is never compared).
+    pub mode_note: Option<String>,
+    pub rows: Vec<DriftRow>,
+}
+
+impl RegressReport {
+    /// True when any row fails the gate.
+    pub fn failed(&self) -> bool {
+        !self.pending_baseline && self.rows.iter().any(|r| r.status.fails())
+    }
+
+    pub fn count(&self, status: DriftStatus) -> usize {
+        self.rows.iter().filter(|r| r.status == status).count()
+    }
+
+    /// Render the drift table (only non-matching rows, or a one-line
+    /// all-clear) plus the summary line.
+    pub fn render(&self) -> String {
+        let interesting: Vec<&DriftRow> =
+            self.rows.iter().filter(|r| r.status != DriftStatus::Match).collect();
+        let mut out = String::new();
+        if let Some(note) = &self.mode_note {
+            out.push_str(note);
+            out.push('\n');
+        }
+        if self.pending_baseline {
+            // No drift table for a pending baseline: its rows are paper
+            // targets, not measured values, so value deltas are the
+            // reproduction-distance report's job, not drift.
+            out.push_str(&format!(
+                "regress {}: baseline is PENDING (paper targets only) — not gating; \
+                 {} target rows, {} current metrics. Run `flexv regress --bless` and \
+                 commit baselines/ to pin measured values\n",
+                self.suite,
+                self.rows.iter().filter(|r| r.baseline.is_some()).count(),
+                self.rows.iter().filter(|r| r.current.is_some()).count(),
+            ));
+            return out;
+        }
+        if interesting.is_empty() {
+            out.push_str(&format!(
+                "regress {}: OK — {} metrics, all bit-equal to baseline\n",
+                self.suite,
+                self.rows.len()
+            ));
+            return out;
+        }
+        let mut t = Table::new(format!("regress {} — per-metric drift", self.suite)).header(&[
+            "metric", "kind", "baseline", "current", "delta%", "status",
+        ]);
+        for r in &interesting {
+            t.row(vec![
+                r.id.clone(),
+                r.kind.name().to_string(),
+                r.baseline.map_or("-".to_string(), |v| f(v, 4)),
+                r.current.map_or("-".to_string(), |v| f(v, 4)),
+                r.rel_delta().map_or("-".to_string(), |d| f(d * 100.0, 3)),
+                r.status.name().to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "regress {}: {} metrics — {} match, {} in-tolerance, {} drifted, {} missing, {} new{}\n",
+            self.suite,
+            self.rows.len(),
+            self.count(DriftStatus::Match),
+            self.count(DriftStatus::InTolerance),
+            self.count(DriftStatus::Drift),
+            self.count(DriftStatus::MissingInCurrent),
+            self.count(DriftStatus::NewInCurrent),
+            if self.failed() { " — FAIL" } else { "" },
+        ));
+        out
+    }
+}
+
+/// Compare `current` against `baseline` under `tol`.
+pub fn compare(
+    current: &BenchArtifact,
+    baseline: &BenchArtifact,
+    tol: &Tolerance,
+) -> RegressReport {
+    let cur: BTreeMap<&str, &MetricRow> =
+        current.rows.iter().map(|r| (r.id.as_str(), r)).collect();
+    let base: BTreeMap<&str, &MetricRow> =
+        baseline.rows.iter().map(|r| (r.id.as_str(), r)).collect();
+    let mut rows = Vec::new();
+    for (id, b) in &base {
+        let status_and_cur = match cur.get(id) {
+            None => (DriftStatus::MissingInCurrent, None),
+            Some(c) => {
+                let status = if baseline.pending {
+                    DriftStatus::Unpinned
+                } else if c.kind != b.kind || c.unit != b.unit {
+                    // Tolerance semantics come from the *baseline*: a
+                    // change that reclassifies a metric (exact → analog)
+                    // or renames its unit would otherwise loosen its own
+                    // gate in the very run that gates it. Re-bless to
+                    // change a metric's comparison semantics.
+                    DriftStatus::Drift
+                } else if c.value == b.value {
+                    DriftStatus::Match
+                } else {
+                    let within = match b.kind {
+                        // `--tol-cycles` is an *absolute* slack in
+                        // cycle/count units; exact ratio rows
+                        // (MAC/cycle, fractions) always compare
+                        // bit-exactly — an absolute cycle budget would
+                        // otherwise un-gate them entirely.
+                        MetricKind::Exact => {
+                            let slack = if matches!(b.unit.as_str(), "cycles" | "MACs") {
+                                tol.exact_abs
+                            } else {
+                                0.0
+                            };
+                            (c.value - b.value).abs() <= slack
+                        }
+                        MetricKind::Analog => {
+                            let denom = b.value.abs().max(f64::MIN_POSITIVE);
+                            (c.value - b.value).abs() / denom <= tol.analog_frac
+                        }
+                    };
+                    if within {
+                        DriftStatus::InTolerance
+                    } else {
+                        DriftStatus::Drift
+                    }
+                };
+                (status, Some(c.value))
+            }
+        };
+        rows.push(DriftRow {
+            id: (*id).to_string(),
+            unit: b.unit.clone(),
+            kind: b.kind,
+            baseline: Some(b.value),
+            current: status_and_cur.1,
+            status: status_and_cur.0,
+        });
+    }
+    for (id, c) in &cur {
+        if !base.contains_key(id) {
+            rows.push(DriftRow {
+                id: (*id).to_string(),
+                unit: c.unit.clone(),
+                kind: c.kind,
+                baseline: None,
+                current: Some(c.value),
+                status: DriftStatus::NewInCurrent,
+            });
+        }
+    }
+    let mode = |quick: bool| if quick { "quick" } else { "full" };
+    let mode_note = (current.meta.quick != baseline.meta.quick).then(|| {
+        format!(
+            "note: {} — current measured in {} mode, baseline in {} mode; every sized \
+             metric will drift. Re-pin with `regress --bless{}`",
+            current.suite,
+            mode(current.meta.quick),
+            mode(baseline.meta.quick),
+            if current.meta.quick { "" } else { " --full" },
+        )
+    });
+    RegressReport { suite: current.suite.clone(), pending_baseline: baseline.pending, mode_note, rows }
+}
+
+/// Reproduction distance from the paper: every current row that carries
+/// a paper reference, with the measured/paper ratio. Informational only
+/// — the gate compares against measured baselines, not the paper.
+pub fn paper_distance(current: &BenchArtifact) -> Option<String> {
+    let refs: Vec<&MetricRow> = current.rows.iter().filter(|r| r.paper.is_some()).collect();
+    if refs.is_empty() {
+        return None;
+    }
+    let mut t = Table::new(format!("{} — reproduction distance from the paper", current.suite))
+        .header(&["metric", "paper", "measured", "measured/paper"]);
+    for r in refs {
+        let p = r.paper.expect("filtered on is_some");
+        t.row(vec![
+            r.id.clone(),
+            f(p, 2),
+            f(r.value, 2),
+            if p != 0.0 { format!("{}x", f(r.value / p, 2)) } else { "-".to_string() },
+        ]);
+    }
+    Some(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::artifact::RunMeta;
+
+    fn art(suite: &str, rows: Vec<MetricRow>) -> BenchArtifact {
+        let mut a = BenchArtifact::new(suite, RunMeta::default());
+        a.rows = rows;
+        a
+    }
+
+    #[test]
+    fn identical_artifacts_match() {
+        let a = art(
+            "s",
+            vec![
+                MetricRow::exact("s/cycles", 1000.0, "cycles"),
+                MetricRow::analog("s/tops_w", 3.26, "TOPS/W"),
+            ],
+        );
+        let rep = compare(&a, &a.clone(), &Tolerance::default());
+        assert!(!rep.failed());
+        assert_eq!(rep.count(DriftStatus::Match), 2);
+        assert!(rep.render().contains("all bit-equal"));
+    }
+
+    #[test]
+    fn exact_drift_fails_with_zero_cycle_tolerance() {
+        let base = art("s", vec![MetricRow::exact("s/cycles", 1000.0, "cycles")]);
+        let cur = art("s", vec![MetricRow::exact("s/cycles", 1001.0, "cycles")]);
+        let rep = compare(&cur, &base, &Tolerance::default());
+        assert!(rep.failed());
+        assert_eq!(rep.count(DriftStatus::Drift), 1);
+        let rendered = rep.render();
+        assert!(rendered.contains("s/cycles") && rendered.contains("DRIFT"), "{rendered}");
+        // a +1 cycle slack accepts it as in-tolerance
+        let rep2 = compare(&cur, &base, &Tolerance { exact_abs: 1.0, analog_frac: 0.0 });
+        assert!(!rep2.failed());
+        assert_eq!(rep2.count(DriftStatus::InTolerance), 1);
+    }
+
+    #[test]
+    fn analog_tolerance_band_is_relative() {
+        let base = art("s", vec![MetricRow::analog("s/w", 10.0, "mW")]);
+        let ok = art("s", vec![MetricRow::analog("s/w", 10.19, "mW")]);
+        let bad = art("s", vec![MetricRow::analog("s/w", 10.3, "mW")]);
+        let tol = Tolerance::default(); // 2%
+        assert!(!compare(&ok, &base, &tol).failed());
+        let rep = compare(&bad, &base, &tol);
+        assert!(rep.failed());
+        assert_eq!(rep.count(DriftStatus::Drift), 1);
+    }
+
+    #[test]
+    fn missing_fails_new_does_not() {
+        let base = art(
+            "s",
+            vec![MetricRow::exact("s/a", 1.0, ""), MetricRow::exact("s/b", 2.0, "")],
+        );
+        let cur = art(
+            "s",
+            vec![MetricRow::exact("s/a", 1.0, ""), MetricRow::exact("s/c", 3.0, "")],
+        );
+        let rep = compare(&cur, &base, &Tolerance::default());
+        assert!(rep.failed(), "metric vanished from the current run");
+        assert_eq!(rep.count(DriftStatus::MissingInCurrent), 1);
+        assert_eq!(rep.count(DriftStatus::NewInCurrent), 1);
+        let only_new = compare(&cur, &art("s", vec![MetricRow::exact("s/a", 1.0, "")]), &Tolerance::default());
+        assert!(!only_new.failed(), "new metrics are additive, not drift");
+    }
+
+    #[test]
+    fn cycle_slack_never_ungates_ratio_rows() {
+        let base = art(
+            "s",
+            vec![
+                MetricRow::exact("s/mac", 6.0, "MAC/cycle"),
+                MetricRow::exact("s/cyc", 100.0, "cycles"),
+            ],
+        );
+        let cur = art(
+            "s",
+            vec![
+                MetricRow::exact("s/mac", 5.0, "MAC/cycle"),
+                MetricRow::exact("s/cyc", 102.0, "cycles"),
+            ],
+        );
+        let tol = Tolerance { exact_abs: 5.0, analog_frac: 0.0 };
+        let rep = compare(&cur, &base, &tol);
+        assert!(rep.failed(), "a MAC/cycle drop must not hide behind --tol-cycles");
+        assert!(rep
+            .rows
+            .iter()
+            .any(|r| r.id == "s/cyc" && r.status == DriftStatus::InTolerance));
+        assert!(rep.rows.iter().any(|r| r.id == "s/mac" && r.status == DriftStatus::Drift));
+    }
+
+    #[test]
+    fn reclassifying_a_metric_cannot_loosen_its_own_gate() {
+        // Baseline says exact cycles; the current run re-emits the same
+        // id as analog with a value inside the 2% band. The comparison
+        // must use the baseline's semantics and fail on the mismatch.
+        let base = art("s", vec![MetricRow::exact("s/cycles", 1000.0, "cycles")]);
+        let cur = art("s", vec![MetricRow::analog("s/cycles", 1010.0, "cycles")]);
+        let rep = compare(&cur, &base, &Tolerance::default());
+        assert!(rep.failed(), "kind reclassification must require a re-bless");
+        assert_eq!(rep.count(DriftStatus::Drift), 1);
+        // a unit rename is a mismatch too, even with identical values
+        let cur2 = art("s", vec![MetricRow::exact("s/cycles", 1000.0, "Mcycles")]);
+        assert!(compare(&cur2, &base, &Tolerance::default()).failed());
+    }
+
+    #[test]
+    fn mode_mismatch_is_named_in_the_report() {
+        let mut base = art("s", vec![MetricRow::exact("s/cyc", 100.0, "cycles")]);
+        base.meta.quick = true;
+        let cur = art("s", vec![MetricRow::exact("s/cyc", 100.0, "cycles")]);
+        let rep = compare(&cur, &base, &Tolerance::default());
+        let note = rep.mode_note.as_deref().expect("mode mismatch must be noted");
+        assert!(note.contains("full") && note.contains("quick"), "{note}");
+        assert!(rep.render().contains("note:"));
+        // same-mode comparison carries no note
+        assert!(compare(&cur, &cur.clone(), &Tolerance::default()).mode_note.is_none());
+    }
+
+    #[test]
+    fn pending_baseline_never_gates() {
+        let mut base = art("s", vec![MetricRow::exact("s/a", 91.5, "MAC/cycle")]);
+        base.pending = true;
+        let cur = art("s", vec![MetricRow::exact("s/a", 80.0, "MAC/cycle")]);
+        let rep = compare(&cur, &base, &Tolerance::default());
+        assert!(!rep.failed());
+        assert_eq!(rep.count(DriftStatus::Unpinned), 1);
+        assert!(rep.render().contains("PENDING"));
+    }
+
+    #[test]
+    fn paper_distance_lists_referenced_rows() {
+        let a = art(
+            "kernels",
+            vec![
+                MetricRow::exact("kernels/x/mac", 85.0, "MAC/cycle").with_paper(91.5),
+                MetricRow::exact("kernels/x/cycles", 100.0, "cycles"),
+            ],
+        );
+        let t = paper_distance(&a).unwrap();
+        assert!(t.contains("kernels/x/mac") && t.contains("91.5"), "{t}");
+        assert!(!t.contains("kernels/x/cycles"));
+        assert!(paper_distance(&art("s", vec![])).is_none());
+    }
+}

@@ -126,16 +126,24 @@ pub fn conv_fig7_stats(isa: IsaVariant, prec: Precision) -> ClusterStats {
     cl.run()
 }
 
-/// Deploy + run a network end-to-end, returning cluster MAC/cycle
-/// (Table IV's metric).
-pub fn e2e_macs_per_cycle(isa: IsaVariant, net: &Network) -> f64 {
+/// Deploy + run a network end-to-end, returning the total simulated
+/// `(cycles, MACs)` of one inference — the raw Table IV measurement
+/// shared by the rendered table and the `e2e` benchmark artifact.
+pub fn e2e_stats(isa: IsaVariant, net: &Network) -> (u64, u64) {
     let dep = deploy(net, isa, MemBudget::default());
     let mut coord = Coordinator::new(crate::CLUSTER_CORES);
     coord.memoize_tiles = true;
     let mut rng = Prng::new(0xE2E);
     let input = QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng);
     let res = coord.run(&dep, &input);
-    res.macs_per_cycle()
+    (res.total_cycles(), res.total_macs())
+}
+
+/// Deploy + run a network end-to-end, returning cluster MAC/cycle
+/// (Table IV's metric).
+pub fn e2e_macs_per_cycle(isa: IsaVariant, net: &Network) -> f64 {
+    let (cycles, macs) = e2e_stats(isa, net);
+    macs as f64 / cycles.max(1) as f64
 }
 
 #[cfg(test)]

@@ -13,6 +13,7 @@
 //! describe how the simulation was computed (and can vary with thread
 //! interleaving on a shared window cache), never what it computed.
 
+use crate::report::artifact::{MetricRow, MetricSource};
 use crate::report::F_TYP_MHZ;
 use crate::util::table::{f, Table};
 
@@ -470,6 +471,130 @@ impl FleetMetrics {
             ));
         }
         out
+    }
+}
+
+/// Metric-id token of a model/class name: lowercase, non
+/// `[a-z0-9._-]` bytes collapsed to `-` (ids are slash-separated).
+fn id_token(name: &str) -> String {
+    name.to_lowercase()
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '-' })
+        .collect()
+}
+
+impl MetricSource for FleetMetrics {
+    /// The fleet report's **simulated** fields as artifact rows.
+    ///
+    /// Everything here is covered by the engine's determinism contract
+    /// (a pure function of the trace — identical for any worker count
+    /// or fast-path setting), so the rows are `Exact` wherever they
+    /// derive from cycles/counts alone. Energy rows come through the
+    /// calibrated [`crate::power::EnergyModel`] and are `Analog`. The
+    /// host-side fast-path counters (`fastpath_*`) are deliberately
+    /// excluded: they describe how the simulation was computed, can
+    /// vary with thread interleaving, and must never gate a perf check.
+    fn metric_rows(&self) -> Vec<MetricRow> {
+        let mut rows = vec![
+            MetricRow::exact("serve/fleet/served", self.served as f64, "requests"),
+            MetricRow::exact("serve/fleet/rejected", self.rejected as f64, "requests"),
+            MetricRow::exact("serve/fleet/shed", self.shed as f64, "requests"),
+            MetricRow::exact(
+                "serve/fleet/deadline_misses",
+                self.deadline_misses as f64,
+                "requests",
+            ),
+            MetricRow::exact("serve/fleet/span_cycles", self.span_cycles as f64, "cycles"),
+            MetricRow::exact("serve/fleet/p50_cycles", self.p50_cycles as f64, "cycles"),
+            MetricRow::exact("serve/fleet/p99_cycles", self.p99_cycles as f64, "cycles"),
+            MetricRow::exact(
+                "serve/fleet/mean_latency_cycles",
+                self.mean_latency_cycles,
+                "cycles",
+            ),
+            MetricRow::exact(
+                "serve/fleet/requests_per_sec",
+                self.requests_per_sec,
+                "req/s",
+            ),
+            MetricRow::exact(
+                "serve/fleet/agg_mac_per_cycle",
+                self.aggregate_macs_per_cycle,
+                "MAC/cycle",
+            ),
+            MetricRow::exact(
+                "serve/fleet/busy_mac_per_cycle",
+                self.busy_macs_per_cycle,
+                "MAC/cycle",
+            ),
+            MetricRow::exact("serve/fleet/utilization", self.shard_utilization, "fraction"),
+            MetricRow::exact("serve/fleet/peak_queue_depth", self.peak_queue_depth as f64, "requests"),
+            MetricRow::exact("serve/fleet/batches", self.batches as f64, "batches"),
+            MetricRow::exact("serve/fleet/mean_batch", self.mean_batch, "requests"),
+            MetricRow::exact("serve/fleet/model_switches", self.model_switches as f64, "switches"),
+            MetricRow::exact("serve/fleet/cache_hits", self.cache_hits as f64, "lookups"),
+            MetricRow::exact("serve/fleet/cache_misses", self.cache_misses as f64, "lookups"),
+            MetricRow::exact("serve/fleet/scale_ups", self.scale_ups as f64, "actions"),
+            MetricRow::exact("serve/fleet/scale_downs", self.scale_downs as f64, "actions"),
+            MetricRow::exact(
+                "serve/fleet/mean_active_shards",
+                self.mean_active_shards(),
+                "shards",
+            ),
+        ];
+        for r in &self.rows {
+            let p = format!("serve/model/{}", id_token(&r.name));
+            rows.push(MetricRow::exact(format!("{p}/served"), r.served as f64, "requests"));
+            rows.push(MetricRow::exact(format!("{p}/p50_cycles"), r.p50_cycles as f64, "cycles"));
+            rows.push(MetricRow::exact(format!("{p}/p99_cycles"), r.p99_cycles as f64, "cycles"));
+            rows.push(MetricRow::exact(
+                format!("{p}/mean_exec_cycles"),
+                r.mean_exec_cycles,
+                "cycles",
+            ));
+            rows.push(MetricRow::exact(
+                format!("{p}/mac_per_cycle"),
+                r.macs_per_cycle,
+                "MAC/cycle",
+            ));
+            rows.push(MetricRow::analog(format!("{p}/energy_uj"), r.energy_uj, "uJ/req"));
+        }
+        for c in &self.class_rows {
+            let p = format!("serve/class/{}", id_token(&c.name));
+            rows.push(MetricRow::exact(format!("{p}/served"), c.served as f64, "requests"));
+            rows.push(MetricRow::exact(format!("{p}/missed"), c.missed as f64, "requests"));
+            rows.push(MetricRow::exact(format!("{p}/shed"), c.shed as f64, "requests"));
+            rows.push(MetricRow::exact(format!("{p}/p50_cycles"), c.p50_cycles as f64, "cycles"));
+            rows.push(MetricRow::exact(format!("{p}/p99_cycles"), c.p99_cycles as f64, "cycles"));
+            rows.push(MetricRow::exact(
+                format!("{p}/violation_rate"),
+                c.violation_rate(),
+                "fraction",
+            ));
+        }
+        if self.tuned.models > 0 {
+            rows.push(MetricRow::exact(
+                "serve/autotune/models",
+                self.tuned.models as f64,
+                "models",
+            ));
+            rows.push(MetricRow::exact(
+                "serve/autotune/default_cycles",
+                self.tuned.default_cycles as f64,
+                "cycles",
+            ));
+            rows.push(MetricRow::exact(
+                "serve/autotune/tuned_cycles",
+                self.tuned.tuned_cycles as f64,
+                "cycles",
+            ));
+            rows.push(MetricRow::exact(
+                "serve/autotune/improved_layers",
+                self.tuned.improved_layers as f64,
+                "layers",
+            ));
+        }
+        rows
     }
 }
 

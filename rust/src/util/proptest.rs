@@ -19,7 +19,15 @@ pub struct Config {
 
 impl Default for Config {
     fn default() -> Self {
-        Config { cases: 64, base_seed: 0xF1E2_D3C4 }
+        // `PROPTEST_CASES` (the env var the real proptest crate honours)
+        // scales every default-config property: per-PR CI keeps the small
+        // default, the nightly workflow raises it for extended sweeps.
+        let cases = std::env::var("PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(64);
+        Config { cases, base_seed: 0xF1E2_D3C4 }
     }
 }
 

@@ -1,0 +1,320 @@
+//! Tier-1 suite for the benchmark-artifact pipeline: JSON round-trip
+//! and schema stability of `BenchArtifact`, `regress` comparison
+//! semantics (exact match / in-tolerance / failing drift / missing
+//! metric / pending baseline), and the `MetricSource` impls that feed
+//! the suites — including an injected cycle regression that must fail
+//! the gate with a rendered per-metric drift table, which is the CI
+//! `perf-gate` job's failure path exercised hermetically.
+
+use flexv::qnn::{Layer, Network, QTensor};
+use flexv::report::artifact::{
+    BenchArtifact, Json, MetricKind, MetricRow, MetricSource, RunMeta, SCHEMA_VERSION,
+};
+use flexv::report::regress::{compare, paper_distance, DriftStatus, Tolerance};
+use flexv::serve::{Engine, ServeConfig, TraceItem};
+use flexv::util::Prng;
+
+fn sample_artifact() -> BenchArtifact {
+    let mut a = BenchArtifact::new(
+        "kernels",
+        RunMeta {
+            git_rev: "deadbeef0123".into(),
+            seed: 0x7AB3,
+            quick: true,
+            sim: "8 cores, 128 kB TCDM, 16 banks".into(),
+        },
+    );
+    a.rows = vec![
+        MetricRow::exact("kernels/matmul/flexv/a2w2/cycles", 42_123.0, "cycles"),
+        MetricRow::exact("kernels/matmul/flexv/a2w2/mac_per_cycle", 88.25, "MAC/cycle")
+            .with_paper(91.5),
+        MetricRow::analog("kernels/matmul/flexv/a2w2/tops_per_watt", 3.11, "TOPS/W")
+            .with_paper(3.26),
+    ];
+    a
+}
+
+// ---------------------------------------------------------------------------
+// Schema round-trip and stability.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serialize_parse_equal() {
+    let a = sample_artifact();
+    let text = a.to_json();
+    let b = BenchArtifact::from_json(&text).expect("round-trip parse");
+    assert_eq!(a, b);
+    // and the bytes themselves are deterministic
+    assert_eq!(text, b.to_json());
+}
+
+#[test]
+fn float_values_roundtrip_bit_exactly() {
+    // Shortest-round-trip formatting: awkward fractions survive the
+    // JSON round trip down to the last bit (what lets Exact rows gate
+    // with --tol-cycles 0).
+    let mut a = BenchArtifact::new("s", RunMeta::default());
+    for (i, v) in [0.1, 1.0 / 3.0, 2.0_f64.powi(-40), 91.5, 12_345_678_901_234.0]
+        .into_iter()
+        .enumerate()
+    {
+        a.rows.push(MetricRow::exact(format!("s/m{i}"), v, ""));
+    }
+    let b = BenchArtifact::from_json(&a.to_json()).unwrap();
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.value.to_bits(), rb.value.to_bits(), "{}", ra.id);
+    }
+}
+
+#[test]
+fn unknown_fields_are_ignored() {
+    // A future writer may add fields; this parser must skip them.
+    let text = r#"{
+      "schema": "flexv-bench-artifact",
+      "schema_version": 1,
+      "suite": "kernels",
+      "flux_capacitance": [1, 2, 3],
+      "meta": {"git_rev": "abc", "seed": 5, "quick": true, "sim": "x", "extra": null},
+      "rows": [
+        {"id": "kernels/a", "value": 7, "unit": "cycles", "kind": "exact", "note": "hi"}
+      ]
+    }"#;
+    let a = BenchArtifact::from_json(text).expect("unknown fields tolerated");
+    assert_eq!(a.suite, "kernels");
+    assert_eq!(a.meta.seed, 5);
+    assert_eq!(a.rows.len(), 1);
+    assert_eq!(a.rows[0].value, 7.0);
+    assert_eq!(a.rows[0].kind, MetricKind::Exact);
+}
+
+#[test]
+fn newer_schema_version_is_rejected() {
+    let newer = format!(
+        r#"{{"schema_version": {}, "suite": "x", "rows": []}}"#,
+        SCHEMA_VERSION + 1
+    );
+    let err = BenchArtifact::from_json(&newer).unwrap_err();
+    assert!(err.contains("newer"), "unhelpful error: {err}");
+    // the current version (and, by construction, older ones) parse
+    let ok = format!(r#"{{"schema_version": {SCHEMA_VERSION}, "suite": "x", "rows": []}}"#);
+    assert!(BenchArtifact::from_json(&ok).is_ok());
+}
+
+#[test]
+fn malformed_documents_are_rejected() {
+    for bad in [
+        "",
+        "not json",
+        r#"{"schema_version": 1}"#,                        // no suite
+        r#"{"suite": "x", "rows": []}"#,                   // no version
+        r#"{"schema_version": 1, "suite": "x"}"#,          // no rows
+        r#"{"schema_version": 1, "suite": "x", "rows": [{"value": 1}]}"#, // row without id
+    ] {
+        assert!(BenchArtifact::from_json(bad).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn json_value_api_covers_the_schema() {
+    let v = Json::parse(r#"{"a": [true, null, "s"], "n": -2.5e3}"#).unwrap();
+    assert_eq!(v.get("n").unwrap().as_f64(), Some(-2500.0));
+    assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+    assert_eq!(v.get("missing"), None);
+    // u64 accessor refuses fractions and negatives
+    assert_eq!(Json::Num(1.5).as_u64(), None);
+    assert_eq!(Json::Num(-1.0).as_u64(), None);
+    assert_eq!(Json::Num(3.0).as_u64(), Some(3));
+}
+
+// ---------------------------------------------------------------------------
+// regress semantics.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn identical_runs_pass_with_zero_tolerance() {
+    let a = sample_artifact();
+    let rep = compare(&a, &a.clone(), &Tolerance::default());
+    assert!(!rep.failed());
+    assert_eq!(rep.count(DriftStatus::Match), a.rows.len());
+}
+
+#[test]
+fn injected_cycle_regression_fails_the_gate() {
+    // The satellite check: a deliberate cycle regression must fail
+    // `regress` and render a per-metric drift table naming the metric.
+    let base = sample_artifact();
+    let mut cur = base.clone();
+    let row = cur
+        .rows
+        .iter_mut()
+        .find(|r| r.id.ends_with("/cycles"))
+        .expect("sample has a cycles row");
+    row.value += 257.0; // the injected regression
+    let rep = compare(&cur, &base, &Tolerance::default());
+    assert!(rep.failed(), "a +257-cycle regression must fail --tol-cycles 0");
+    assert_eq!(rep.count(DriftStatus::Drift), 1);
+    let table = rep.render();
+    assert!(
+        table.contains("kernels/matmul/flexv/a2w2/cycles") && table.contains("DRIFT"),
+        "drift table must name the regressed metric:\n{table}"
+    );
+    assert!(table.contains("FAIL"), "{table}");
+}
+
+#[test]
+fn analog_rows_get_a_tolerance_band_exact_rows_do_not() {
+    let base = sample_artifact();
+    let mut cur = base.clone();
+    // +1% on the analog TOPS/W row: inside the default 2% band
+    let eff = cur.rows.iter_mut().find(|r| r.kind == MetricKind::Analog).unwrap();
+    eff.value *= 1.01;
+    let rep = compare(&cur, &base, &Tolerance::default());
+    assert!(!rep.failed());
+    assert_eq!(rep.count(DriftStatus::InTolerance), 1);
+    // the same 1% on an exact cycles row fails at --tol-cycles 0
+    let mut cur2 = base.clone();
+    let cyc = cur2.rows.iter_mut().find(|r| r.id.ends_with("/cycles")).unwrap();
+    cyc.value *= 1.01;
+    assert!(compare(&cur2, &base, &Tolerance::default()).failed());
+    // ...and passes once --tol-cycles covers the delta
+    let tol = Tolerance { exact_abs: 1_000.0, analog_frac: 0.02 };
+    assert!(!compare(&cur2, &base, &tol).failed());
+}
+
+#[test]
+fn vanished_metric_fails_new_metric_reports_only() {
+    let base = sample_artifact();
+    let mut cur = base.clone();
+    cur.rows.remove(0);
+    cur.rows.push(MetricRow::exact("kernels/new/metric", 1.0, ""));
+    let rep = compare(&cur, &base, &Tolerance::default());
+    assert!(rep.failed(), "a metric that vanished must fail the gate");
+    assert_eq!(rep.count(DriftStatus::MissingInCurrent), 1);
+    assert_eq!(rep.count(DriftStatus::NewInCurrent), 1);
+}
+
+#[test]
+fn pending_baseline_reports_but_never_gates() {
+    let mut base = sample_artifact();
+    base.pending = true;
+    // wildly different current values: still no gate failure
+    let mut cur = sample_artifact();
+    for r in &mut cur.rows {
+        r.value *= 3.0;
+    }
+    let rep = compare(&cur, &base, &Tolerance::default());
+    assert!(!rep.failed());
+    assert!(rep.pending_baseline);
+    assert!(rep.render().contains("PENDING"));
+    // the pending flag round-trips through JSON
+    let b2 = BenchArtifact::from_json(&base.to_json()).unwrap();
+    assert!(b2.pending);
+}
+
+#[test]
+fn paper_distance_table_lists_only_referenced_rows() {
+    let a = sample_artifact();
+    let t = paper_distance(&a).expect("sample carries paper refs");
+    assert!(t.contains("91.5") && t.contains("mac_per_cycle"), "{t}");
+    assert!(!t.contains("kernels/matmul/flexv/a2w2/cycles"), "{t}");
+}
+
+// ---------------------------------------------------------------------------
+// MetricSource impls (tiny workloads only — tier-1 stays fast).
+// ---------------------------------------------------------------------------
+
+fn tiny(name: &str, seed: u64) -> Network {
+    let mut rng = Prng::new(seed);
+    let mut net = Network::new(name, [8, 8, 8], 8);
+    net.push(Layer::conv("c1", [8, 8, 8], 8, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+    net.push(Layer::conv("c2", [8, 8, 8], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+    net
+}
+
+/// Run a small 2-model fleet and return its metric rows.
+fn tiny_fleet_rows(workers: usize) -> Vec<MetricRow> {
+    let cfg = ServeConfig {
+        shards: 2,
+        n_cores: 4,
+        queue_capacity: 32,
+        max_batch: 4,
+        workers,
+        ..ServeConfig::default()
+    };
+    let mut eng = Engine::new(cfg);
+    let a = eng.register(tiny("art-a", 21));
+    let b = eng.register(tiny("art-b", 22));
+    let mut rng = Prng::new(23);
+    let trace: Vec<TraceItem> = (0..6)
+        .map(|i| TraceItem {
+            at: i as u64 * 90,
+            model: if i % 3 == 0 { b } else { a },
+            class: 0,
+            priority: 0,
+            deadline: None,
+            input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+        })
+        .collect();
+    eng.run_trace(trace).metric_rows()
+}
+
+#[test]
+fn fleet_metric_rows_are_simulated_only_unique_and_worker_independent() {
+    let rows = tiny_fleet_rows(1);
+    assert!(rows.len() > 20, "expected a full fleet row set, got {}", rows.len());
+    // unique ids (the regress join key)
+    let mut ids: Vec<&str> = rows.iter().map(|r| r.id.as_str()).collect();
+    ids.sort_unstable();
+    let n = ids.len();
+    ids.dedup();
+    assert_eq!(n, ids.len(), "duplicate metric ids");
+    // host-side counters must never appear
+    assert!(
+        rows.iter().all(|r| !r.id.contains("fastpath")),
+        "fast-path counters are host-side and must not be artifact rows"
+    );
+    // per-model and per-class breakdowns present, with sanitized ids
+    assert!(rows.iter().any(|r| r.id == "serve/model/art-a/p99_cycles"));
+    assert!(rows.iter().any(|r| r.id.starts_with("serve/class/")));
+    // energy is the only analog family in the serve suite
+    for r in &rows {
+        if r.kind == MetricKind::Analog {
+            assert!(r.id.ends_with("/energy_uj"), "unexpected analog row {}", r.id);
+        }
+    }
+    // worker count must not move a single row (the determinism contract
+    // the perf gate leans on)
+    let rows4 = tiny_fleet_rows(4);
+    assert_eq!(rows.len(), rows4.len());
+    for (x, y) in rows.iter().zip(&rows4) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.value.to_bits(), y.value.to_bits(), "{} moved with workers", x.id);
+    }
+}
+
+#[test]
+fn tuned_model_metrics_rows_are_consistent() {
+    use flexv::dory::autotune::{tune_network, TuneConfig, TunedModelMetrics};
+    use flexv::dory::MemBudget;
+    use flexv::isa::IsaVariant;
+    let net = tiny("tune-art", 24);
+    let tuning =
+        tune_network(&net, IsaVariant::FlexV, MemBudget::default(), 8, &TuneConfig::default());
+    let rows = TunedModelMetrics { model: "tune-art", tuning: &tuning }.metric_rows();
+    let get = |suffix: &str| {
+        rows.iter()
+            .find(|r| r.id == format!("autotune/tune-art/{suffix}"))
+            .unwrap_or_else(|| panic!("missing row {suffix}"))
+            .value
+    };
+    assert_eq!(get("layers"), net.nodes.len() as f64);
+    assert!(get("tuned_cycles") <= get("default_cycles"), "tuner can never regress");
+    assert!(get("improved_layers") <= get("layers"));
+    assert!(rows.iter().all(|r| r.kind == MetricKind::Exact));
+    // rows drop into an artifact without id collisions
+    let mut art = BenchArtifact::new("autotune", RunMeta::default());
+    art.push_source(&TunedModelMetrics { model: "tune-art", tuning: &tuning });
+    assert_eq!(art.rows.len(), rows.len());
+    let round = BenchArtifact::from_json(&art.to_json()).unwrap();
+    assert_eq!(art, round);
+}

@@ -190,6 +190,47 @@ fn tuned_row(hw: usize, requests: usize) {
     );
 }
 
+/// Tracing-overhead figure: run one ResNet-20 inference with the trace
+/// sink detached (the no-op default) and once with a recording sink
+/// attached, and report cycles/sec for both. The sink lives outside the
+/// simulated machine, so it must cost **zero simulated cycles** — the
+/// cycle totals and outputs are asserted bit-equal; only host wall
+/// clock may move.
+fn tracing_overhead(hw: usize) {
+    use flexv::coordinator::Coordinator;
+    use flexv::dory::deploy::deploy;
+    use flexv::dory::MemBudget;
+    use flexv::qnn::QTensor;
+    use flexv::util::Prng;
+    let net = flexv::models::by_name("resnet20-4b2b", hw).expect("known model");
+    let dep = deploy(&net, flexv::isa::IsaVariant::FlexV, MemBudget::default());
+    let run = |traced: bool| {
+        let mut coord = Coordinator::new(flexv::CLUSTER_CORES);
+        coord.memoize_tiles = false;
+        if traced {
+            coord.cluster.tracer = Some(Box::default());
+        }
+        let mut rng = Prng::new(0xE2E);
+        let input = QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng);
+        let t0 = Instant::now();
+        let res = coord.run(&dep, &input);
+        let wall = t0.elapsed().as_secs_f64();
+        let events = coord.cluster.tracer.as_ref().map_or(0, |r| r.len());
+        (res.total_cycles(), res.output, wall, events)
+    };
+    let (cyc_off, out_off, wall_off, _) = run(false);
+    let (cyc_on, out_on, wall_on, events) = run(true);
+    assert_eq!(cyc_off, cyc_on, "tracing changed simulated cycles");
+    assert_eq!(out_off, out_on, "tracing changed the network output");
+    println!();
+    println!(
+        "tracing overhead: {:.1} M cyc/s sink off vs {:.1} M cyc/s sink on \
+         ({events} events, 0 simulated-cycle cost)",
+        cyc_off as f64 / wall_off.max(1e-9) / 1e6,
+        cyc_on as f64 / wall_on.max(1e-9) / 1e6,
+    );
+}
+
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let baseline = std::env::args().any(|a| a == "--baseline");
@@ -234,6 +275,7 @@ fn main() {
         tuned_row(hw, requests);
     }
     scenario_matrix(hw, requests);
+    tracing_overhead(hw);
     flexv::report::bench::write_artifact_from_args(
         "serve",
         &flexv::report::bench::BenchOptions { full, ..Default::default() },

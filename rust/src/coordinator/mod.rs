@@ -164,10 +164,14 @@ pub fn execute_deployment(
         let (isa, nc) = plan
             .exec
             .map_or((dep.isa, n_cores), |e| (e.isa, e.n_cores.min(n_cores)));
+        let layer_start = cluster.cycle;
         let stats = match memo.as_mut() {
             Some(m) => run_layer_memoized(cluster, isa, plan, nc, &mut **m),
             None => run_layer_full(cluster, isa, plan, nc),
         };
+        if cluster.tracer.is_some() {
+            trace_layer_span(cluster, plan, isa, nc, layer_start, &stats);
+        }
         layers.push(LayerMetrics {
             name: plan.name.clone(),
             macs: plan.macs,
@@ -298,8 +302,10 @@ pub fn run_layer_memoized(
         if total.cores.len() < c.kernel.cores.len() {
             total.cores.resize(c.kernel.cores.len(), Default::default());
         }
+        // Same discipline as `ClusterStats::extend_serial`: event
+        // counters sum, per-core `cycles` stays the longest window.
         for (a, b) in total.cores.iter_mut().zip(&c.kernel.cores) {
-            a.add(b);
+            a.merge_parallel(b);
         }
         total.dma_busy_cycles += c.kernel.dma_busy_cycles;
     }
@@ -310,6 +316,48 @@ pub fn run_layer_memoized(
         total.cycles += last.store_cycles;
     }
     total
+}
+
+/// Emit the enclosing layer span onto the cluster's trace, covering the
+/// window `[start, cluster.cycle]` the layer advanced the clock by.
+///
+/// In full (non-memoized) execution that window equals the layer's
+/// `stats.cycles`, so the layer span exactly encloses the per-window
+/// kernel/DMA spans the cluster emitted inside it. Memoized execution
+/// advances the clock only for measured representatives (repeated tiles
+/// replay timing without running), so profiling/tracing drivers run with
+/// memoization off — `run-net --trace-out` and `profile` do.
+fn trace_layer_span(
+    cluster: &mut Cluster,
+    plan: &LayerPlan,
+    isa: IsaVariant,
+    n_cores: usize,
+    start: u64,
+    stats: &ClusterStats,
+) {
+    use crate::trace::{track, Arg, Scope};
+    let wall = cluster.cycle - start;
+    let dma_overlap = if wall == 0 {
+        0.0
+    } else {
+        stats.dma_busy_cycles.min(wall) as f64 / wall as f64
+    };
+    let tracer = cluster.tracer.as_mut().expect("caller checked");
+    tracer.span(
+        Scope::Sim,
+        track(0, 0),
+        plan.name.clone(),
+        start,
+        wall,
+        vec![
+            ("macs", Arg::U64(plan.macs)),
+            ("mac_per_cycle", Arg::F64(stats.macs_per_cycle())),
+            ("isa", Arg::Str(isa.to_string())),
+            ("n_cores", Arg::U64(n_cores as u64)),
+            ("dma_busy", Arg::U64(stats.dma_busy_cycles)),
+            ("dma_overlap", Arg::F64(dma_overlap)),
+        ],
+    );
 }
 
 /// Structural key of a tile (see [`PlanKey::for_tile`]).

@@ -101,6 +101,15 @@ impl LayerTuning {
     pub fn gain(&self) -> u64 {
         self.default_cycles - self.tuned_cycles
     }
+
+    /// Human-readable summary of the tuned plan, e.g. `"Flex-V x4, tile
+    /// 16x16"` — the `profile --tuned` report uses it to explain each
+    /// win alongside the measured stall breakdown.
+    pub fn describe(&self) -> String {
+        let shape =
+            self.shape.map_or(String::new(), |s| format!(", tile {}x{}", s.rows, s.chs));
+        format!("{} x{}{}", self.isa, self.n_cores, shape)
+    }
 }
 
 /// Per-layer tunings of one network, indexed by node id.

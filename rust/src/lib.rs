@@ -51,6 +51,11 @@
 //!   number as machine-readable `BENCH_<suite>.json` artifacts
 //!   ([`report::artifact`], [`report::bench`]) gated against committed
 //!   baselines by [`report::regress`] (CLI `bench-report` / `regress`).
+//! - [`trace`] — deterministic cycle-domain tracing and per-layer
+//!   profiling: a recording sink on the simulated-cycle clock, a
+//!   Perfetto-loadable Chrome trace-event exporter, the fleet-timeline
+//!   builder for [`serve`], and the `profile` CLI report
+//!   ([`trace::profile::NetworkProfile`]).
 //!
 //! `ARCHITECTURE.md` at the repository root maps each module to the
 //! paper section/figure it reproduces and draws the data flow from
@@ -112,6 +117,7 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 /// Number of cores in the PULP cluster evaluated by the paper.

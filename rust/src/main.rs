@@ -26,6 +26,19 @@ COMMANDS:
   dump-kernel <isa> <aXwY> [n]  disassemble the generated MatMul kernel
                            (first n instructions, default 60; cf. Fig. 5)
   run-net <isa> <mnv1-8b|mnv1-8b4b|resnet20-4b2b> [--quick] [--no-fastpath]
+          [--trace-out FILE]
+                    run one network end-to-end; --trace-out writes a
+                    Chrome-trace JSON (load in ui.perfetto.dev) of the
+                    cycle-domain timeline: per-core kernel spans with
+                    stall counters, DMA spans, per-layer spans
+  profile <model> [--isa I] [--tuned] [--full]
+                    per-layer cycle profile of one network: cycles,
+                    MAC/cycle, stall breakdown (conflict / load-use /
+                    branch / barrier %), DMA overlap %, and the chosen
+                    kernel lowering. With --tuned, also runs the
+                    autotuner and explains each per-layer win (what
+                    changed, which stalls went away). <model> may be a
+                    unique prefix, e.g. `profile resnet20`
   tune [<model>|all] [--isa I] [--full] [--out FILE]
                     simulator-in-the-loop autotuner: per layer, measure
                     candidate plans (tile shapes, kernel lowerings incl.
@@ -38,6 +51,7 @@ COMMANDS:
               [--workers N] [--sequential] [--no-fastpath] [--tuned]
               [--trace steady|poisson|bursty|diurnal] [--slo]
               [--autoscale MIN:MAX] [--mean-gap CYCLES] [--seed N]
+              [--trace-out FILE]
                     replay a mixed 3-model traffic trace on a
                     multi-cluster serving fleet; reports req/s, p50/p99
                     latency, MAC/cycle, energy/request, plan-cache hits.
@@ -56,7 +70,11 @@ COMMANDS:
                     wall-clock time, never a simulated number.
                     --tuned autotunes each model's per-layer plans on
                     first dispatch (deterministic, once per model) and
-                    reports the measured tuned-vs-default cycle delta
+                    reports the measured tuned-vs-default cycle delta.
+                    --trace-out FILE writes a Chrome-trace JSON of the
+                    fleet timeline (request lifecycles, batches, shard
+                    occupancy, shed/park/wake events) — byte-identical
+                    across --workers and fast-path settings
   bench-report [--suite kernels|e2e|autotune|serve|all] [--out FILE]
                [--out-dir DIR] [--full] [--workers N]
                     run benchmark suites and write machine-readable
@@ -184,8 +202,10 @@ fn main() {
                 usage()
             });
             let fastpath = !args.iter().any(|a| a == "--no-fastpath");
-            run_net_verbose(isa, &net, fastpath);
+            let trace_out = flag_str(&args, "--trace-out");
+            run_net_verbose(isa, &net, fastpath, trace_out);
         }
+        Some("profile") => run_profile(&args),
         Some("tune") => run_tune(&args),
         Some("bench-report") => run_bench_report(&args),
         Some("regress") => run_regress(&args),
@@ -288,6 +308,9 @@ fn main() {
                 "(host: {wall:.1}s wall, {:.1} M simulated cycles/s)",
                 m.span_cycles as f64 / wall.max(1e-9) / 1e6
             );
+            if let Some(path) = flag_str(&args, "--trace-out") {
+                write_trace(path, &eng.build_trace());
+            }
         }
         Some("dump-kernel") => {
             if args.len() < 3 {
@@ -575,7 +598,124 @@ fn run_tune(args: &[String]) {
     }
 }
 
-fn run_net_verbose(isa: IsaVariant, net: &flexv::qnn::Network, fastpath: bool) {
+/// Render a recorded trace as Chrome-trace JSON and write it to `path`.
+fn write_trace(path: &str, rec: &flexv::trace::Recorder) {
+    let json = flexv::trace::chrome::to_chrome_json(rec);
+    if let Err(e) = std::fs::write(path, json) {
+        eprintln!("cannot write {path}: {e}");
+        std::process::exit(1);
+    }
+    println!("trace written to {path} ({} events)", rec.len());
+}
+
+/// Resolve a model name that may be a unique prefix of one of
+/// [`flexv::models::MODEL_NAMES`] (`resnet20` -> `resnet20-4b2b`).
+fn resolve_model(name: &str) -> &'static str {
+    let names = flexv::models::MODEL_NAMES;
+    if let Some(exact) = names.iter().copied().find(|n| *n == name) {
+        return exact;
+    }
+    let matches: Vec<&'static str> =
+        names.iter().copied().filter(|n| n.starts_with(name)).collect();
+    match matches.as_slice() {
+        [one] => one,
+        [] => {
+            eprintln!("unknown network '{name}' (expected one of: {})", names.join(" | "));
+            usage()
+        }
+        many => {
+            eprintln!("ambiguous network '{name}' (matches: {})", many.join(" | "));
+            usage()
+        }
+    }
+}
+
+/// The `profile` subcommand: run one network non-memoized with the
+/// trace sink attached and print the per-layer cycle/stall/DMA profile.
+/// With `--tuned`, run the autotuner, profile the tuned deployment too,
+/// and explain each per-layer win in terms of the profile deltas.
+fn run_profile(args: &[String]) {
+    use flexv::coordinator::Coordinator;
+    use flexv::dory::autotune::{tune_network, TuneConfig};
+    use flexv::dory::deploy::{deploy, deploy_tuned};
+    use flexv::dory::MemBudget;
+    use flexv::qnn::QTensor;
+    use flexv::trace::profile::NetworkProfile;
+    use flexv::util::table::f;
+    use flexv::util::Prng;
+    let full = args.iter().any(|a| a == "--full");
+    let tuned = args.iter().any(|a| a == "--tuned");
+    let hw = if full { 224 } else { 96 };
+    let isa = flag_str(args, "--isa").map(parse_isa).unwrap_or(IsaVariant::FlexV);
+    let name = args
+        .get(1)
+        .filter(|s| !s.starts_with("--"))
+        .map(|s| s.as_str())
+        .unwrap_or_else(|| {
+            eprintln!("profile: missing <model>\n");
+            usage()
+        });
+    let name = resolve_model(name);
+    let net = flexv::models::by_name(name, hw).expect("resolve_model returned a known name");
+    let n_cores = flexv::CLUSTER_CORES;
+    let budget = MemBudget::default();
+    let run_profiled = |dep: &flexv::dory::deploy::Deployment| -> NetworkProfile {
+        let mut coord = Coordinator::with_fastpath(n_cores);
+        // per-layer stall breakdowns need every tile executed, not the
+        // memoized representative only
+        coord.memoize_tiles = false;
+        coord.cluster.tracer = Some(Box::default());
+        let mut rng = Prng::new(0xE2E);
+        let input = QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng);
+        let res = coord.run(dep, &input);
+        NetworkProfile::from_run(&res, dep, n_cores)
+    };
+    let dep = deploy(&net, isa, budget);
+    let base = run_profiled(&dep);
+    print!("{}", base.render(&format!("{} on {} — per-layer profile", net.name, isa)));
+    if !tuned {
+        return;
+    }
+    println!();
+    let tuning = tune_network(&net, isa, budget, n_cores, &TuneConfig::default());
+    let tdep = deploy_tuned(&net, isa, budget, &tuning);
+    let prof = run_profiled(&tdep);
+    print!("{}", prof.render(&format!("{} on {} — tuned profile", net.name, isa)));
+    println!("\nautotuner wins, explained by the profile deltas:");
+    let mut wins = 0usize;
+    for ((t, b), p) in tuning.layers.iter().zip(&base.layers).zip(&prof.layers) {
+        if t.tuned_cycles >= t.default_cycles {
+            continue;
+        }
+        wins += 1;
+        println!(
+            "  {:<12} {} ({}% fewer cycles): stall {}% -> {}%, dma-ovl {}% -> {}%",
+            p.name,
+            t.describe(),
+            f((1.0 - t.tuned_cycles as f64 / t.default_cycles.max(1) as f64) * 100.0, 1),
+            f(b.total_stall_pct(), 1),
+            f(p.total_stall_pct(), 1),
+            f(b.dma_overlap_pct, 1),
+            f(p.dma_overlap_pct, 1),
+        );
+    }
+    if wins == 0 {
+        println!("  (none — the analytic default already matches the best measured plan)");
+    }
+    println!(
+        "total: {} cycles (default) -> {} cycles (tuned), {}% saved",
+        base.total_cycles(),
+        prof.total_cycles(),
+        f(tuning.gain_fraction() * 100.0, 2),
+    );
+}
+
+fn run_net_verbose(
+    isa: IsaVariant,
+    net: &flexv::qnn::Network,
+    fastpath: bool,
+    trace_out: Option<&str>,
+) {
     use flexv::coordinator::Coordinator;
     use flexv::dory::deploy::deploy;
     use flexv::dory::MemBudget;
@@ -590,7 +730,12 @@ fn run_net_verbose(isa: IsaVariant, net: &flexv::qnn::Network, fastpath: bool) {
     } else {
         Coordinator::new(flexv::CLUSTER_CORES)
     };
-    coord.memoize_tiles = true;
+    // tile memoization advances the clock only for measured
+    // representatives — a trace needs the full cycle-domain timeline
+    coord.memoize_tiles = trace_out.is_none();
+    if trace_out.is_some() {
+        coord.cluster.tracer = Some(Box::default());
+    }
     let mut rng = Prng::new(0xE2E);
     let input = QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng);
     let t0 = std::time::Instant::now();
@@ -613,4 +758,9 @@ fn run_net_verbose(isa: IsaVariant, net: &flexv::qnn::Network, fastpath: bool) {
         res.macs_per_cycle(),
         wall.as_secs_f64()
     );
+    if let Some(path) = trace_out {
+        let mut rec = *coord.cluster.tracer.take().expect("tracer was attached above");
+        rec.canonicalize();
+        write_trace(path, &rec);
+    }
 }

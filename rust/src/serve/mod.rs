@@ -301,6 +301,34 @@ impl Engine {
         &self.occupancy
     }
 
+    /// Build the fleet timeline as a canonicalized trace recorder
+    /// (export with [`crate::trace::chrome::to_chrome_json`], or the
+    /// CLI's `serve-bench --trace-out`).
+    ///
+    /// The timeline is reconstructed **post hoc** from the engine's
+    /// deterministic records (completions, sheds, occupancy) — shard
+    /// worker threads never touch a sink, so tracing cannot perturb
+    /// scheduling, and the export is byte-identical across
+    /// [`ServeConfig::workers`] and [`ServeConfig::fastpath`] settings
+    /// (gated by `rust/tests/trace_determinism.rs` and CI). Track layout
+    /// is documented in [`crate::trace::serve`].
+    pub fn build_trace(&self) -> crate::trace::Recorder {
+        use crate::trace::serve::{build_fleet_trace, FleetTraceInputs};
+        let names: Vec<String> = self.models.iter().map(|m| m.name.clone()).collect();
+        let mut rec = build_fleet_trace(&FleetTraceInputs {
+            completions: &self.completions,
+            shed: &self.shed_log,
+            occupancy: &self.occupancy,
+            model_names: &names,
+            classes: &self.classes,
+            shards: self.shards.len(),
+            plan_cache: (self.cache.hits, self.cache.misses),
+            tune_cache: (self.tune.hits, self.tune.misses),
+        });
+        rec.canonicalize();
+        rec
+    }
+
     /// Install the SLO class table used for per-class metrics (index =
     /// `Request::class`/`TraceItem::class`). [`Engine::workload_trace`]
     /// does this automatically.

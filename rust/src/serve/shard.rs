@@ -19,6 +19,13 @@
 //! [`Shard::wake`] pays the full model cold-load (switch) cost. The
 //! cluster itself — including its share of the fleet window cache — is
 //! kept, since parking models a scheduling decision, not a teardown.
+//!
+//! **Batch timing contract** (relied on by the post-hoc trace
+//! reconstruction in [`crate::trace::serve`]): a batch starts at
+//! `max(arrival, busy_until)`, the model-switch cost is charged once on
+//! the batch's first member, and each completion's execution occupies
+//! the contiguous window `[finish_cycle - exec_cycles, finish_cycle]` —
+//! so `Completion`s alone suffice to rebuild the shard timeline.
 
 use crate::coordinator::{execute_deployment, preload_deployment, TileMemo};
 use crate::dory::deploy::Deployment;

@@ -10,10 +10,11 @@
 
 use super::core::{Core, CoreState};
 use super::dma::{Dma, DmaRequest};
-use super::fastpath::{self, FastEntry, FastPath};
+use super::fastpath::{self, FastEntry, FastPath, WindowOutcome};
 use super::mem::ClusterMem;
 use super::stats::{ClusterStats, CoreStats};
 use crate::isa::Program;
+use crate::trace::Recorder;
 use crate::{CLUSTER_CORES, TCDM_BANKS};
 
 /// The cluster simulator.
@@ -33,6 +34,17 @@ pub struct Cluster {
     granted: Vec<bool>,
     /// Steady-state window memo (None = every window cycle-simulated).
     fastpath: Option<Box<FastPath>>,
+    /// Cycle-domain trace sink (None = tracing disabled, zero overhead).
+    ///
+    /// Spans are emitted per [`Cluster::run`] window *from the returned
+    /// [`ClusterStats`]* — which every fast-path tier reproduces
+    /// bit-exactly — so a replayed window re-emits exactly the spans its
+    /// recording did and traces stay byte-identical across fast-path
+    /// settings. The tracer is never part of the fast-path structural
+    /// key and never affects a simulated number; [`Cluster::reset`]
+    /// deliberately preserves it (a serve-style driver resets between
+    /// requests without losing the trace).
+    pub tracer: Option<Box<Recorder>>,
 }
 
 impl Cluster {
@@ -47,6 +59,7 @@ impl Cluster {
             want: vec![None; n_cores],
             granted: vec![false; n_cores],
             fastpath: None,
+            tracer: None,
         }
     }
 
@@ -192,11 +205,107 @@ impl Cluster {
     /// this window (cycles counted from the call). With the fast path
     /// enabled, previously-seen windows are replayed from the memo
     /// instead of re-simulated (bit-exact; see [`super::fastpath`]).
+    ///
+    /// With a [`Cluster::tracer`] attached, one set of spans per
+    /// non-empty window is emitted from the returned stats (see the
+    /// field docs for why that keeps traces replay-invariant).
     pub fn run(&mut self) -> ClusterStats {
-        if self.fastpath.is_some() {
+        let start = self.cycle;
+        // Captured before the window: after it, ran cores sit halted and
+        // indistinguishable from cores that never started.
+        let ran: Option<Vec<bool>> = self
+            .tracer
+            .is_some()
+            .then(|| self.cores.iter().map(|c| c.state == CoreState::Running).collect());
+        let (stats, outcome) = if self.fastpath.is_some() {
             self.run_fast()
         } else {
-            self.run_slow()
+            (self.run_slow(), None)
+        };
+        if let Some(ran) = ran {
+            if stats.cycles > 0 {
+                self.trace_window(start, &ran, &stats, outcome);
+            }
+        }
+        stats
+    }
+
+    /// Emit the spans of one completed window: a cluster-level window
+    /// span, one span per core that ran (stall-breakdown args from its
+    /// [`CoreStats`]), a DMA span when the window moved bytes, and — for
+    /// fast-path windows — a host-scope outcome instant (excluded from
+    /// the default export; see [`crate::trace::Scope::Host`]).
+    fn trace_window(
+        &mut self,
+        start: u64,
+        ran: &[bool],
+        stats: &ClusterStats,
+        outcome: Option<WindowOutcome>,
+    ) {
+        use crate::trace::{track, Arg, Scope};
+        let window_name = ran
+            .iter()
+            .position(|&r| r)
+            .map(|i| self.cores[i].program_name().to_string())
+            .unwrap_or_else(|| "dma-drain".to_string());
+        let names: Vec<String> =
+            self.cores.iter().map(|c| c.program_name().to_string()).collect();
+        let n_cores = self.cores.len();
+        let crosschecked = self.fastpath.as_deref().is_some_and(|f| f.crosscheck);
+        let tracer = self.tracer.as_mut().expect("caller checked");
+        tracer.name_process(0, "cluster");
+        tracer.name_thread(track(0, 0), "cluster");
+        tracer.span(
+            Scope::Sim,
+            track(0, 0),
+            window_name,
+            start,
+            stats.cycles,
+            vec![
+                ("macs", Arg::U64(stats.total_macs())),
+                ("mac_per_cycle", Arg::F64(stats.macs_per_cycle())),
+            ],
+        );
+        for (i, &r) in ran.iter().enumerate() {
+            if !r {
+                continue;
+            }
+            let t = track(0, i as u32 + 1);
+            tracer.name_thread(t, format!("core{i}"));
+            let c = stats.cores[i];
+            tracer.span(
+                Scope::Sim,
+                t,
+                names[i].clone(),
+                start,
+                c.cycles.min(stats.cycles),
+                vec![
+                    ("instrs", Arg::U64(c.instrs)),
+                    ("macs", Arg::U64(c.macs)),
+                    ("conflict_stalls", Arg::U64(c.conflict_stalls)),
+                    ("loaduse_stalls", Arg::U64(c.loaduse_stalls)),
+                    ("branch_stalls", Arg::U64(c.branch_stalls)),
+                    ("barrier_wait", Arg::U64(c.barrier_cycles)),
+                ],
+            );
+        }
+        if stats.dma_bytes > 0 {
+            let t = track(0, n_cores as u32 + 1);
+            tracer.name_thread(t, "dma");
+            tracer.span(
+                Scope::Sim,
+                t,
+                "dma",
+                start,
+                stats.dma_busy_cycles.min(stats.cycles),
+                vec![("bytes", Arg::U64(stats.dma_bytes))],
+            );
+        }
+        if let Some(o) = outcome {
+            tracer.instant(Scope::Host, track(0, 0), o.name(), start, vec![]);
+            if crosschecked && o != WindowOutcome::Recorded {
+                tracer.instant(Scope::Host, track(0, 0), "fastpath_crosscheck", start, vec![]);
+            }
         }
     }
 
@@ -222,12 +331,13 @@ impl Cluster {
     }
 
     /// Fast-path window dispatch: pure replay, functional replay, or
-    /// record (see [`super::fastpath`] for the three tiers).
-    fn run_fast(&mut self) -> ClusterStats {
+    /// record (see [`super::fastpath`] for the three tiers). Also
+    /// returns how the window was served, for the host-scope trace.
+    fn run_fast(&mut self) -> (ClusterStats, Option<WindowOutcome>) {
         let any_active = self.cores.iter().any(|c| c.state != CoreState::Halted);
         if !any_active && self.dma.idle() {
             // Idle window: nothing to memoize; mirrors run_slow exactly.
-            return self.run_slow();
+            return (self.run_slow(), None);
         }
         let key = self.structural_key();
         // Take the fast path out of self so replay methods can borrow
@@ -239,24 +349,24 @@ impl Cluster {
             let cache = fp.cache.0.read().expect("fastpath cache poisoned");
             cache.get(&key).cloned()
         };
-        let stats = if let Some(entry) = entry {
+        let (stats, outcome) = if let Some(entry) = entry {
             let shadow = if fp.crosscheck { Some(self.fork_for_crosscheck()) } else { None };
             let pure_ok = entry.arch_sig == self.arch_sig()
                 && entry.dma_sig.iter().eq(self.dma.queued())
                 && fastpath::hash_mem_ranges(&self.mem, &entry.reads) == entry.read_hash;
-            let stats = if pure_ok {
-                fp.pure_hits += 1;
-                self.replay_pure(&entry)
+            let (stats, outcome) = if pure_ok {
+                fp.note(WindowOutcome::PureReplay);
+                (self.replay_pure(&entry), WindowOutcome::PureReplay)
             } else {
-                fp.func_hits += 1;
-                self.replay_functional(&entry)
+                fp.note(WindowOutcome::FunctionalReplay);
+                (self.replay_functional(&entry), WindowOutcome::FunctionalReplay)
             };
             if let Some(shadow) = shadow {
                 self.crosscheck_against(shadow, &stats);
             }
-            stats
+            (stats, outcome)
         } else {
-            fp.misses += 1;
+            fp.note(WindowOutcome::Recorded);
             let dma_sig: Vec<DmaRequest> = self.dma.queued().copied().collect();
             let arch_sig = self.arch_sig();
             let ran: Vec<bool> =
@@ -286,10 +396,10 @@ impl Cluster {
             }
             cache.insert(key, std::sync::Arc::new(entry));
             drop(cache);
-            stats
+            (stats, WindowOutcome::Recorded)
         };
         self.fastpath = Some(fp);
-        stats
+        (stats, Some(outcome))
     }
 
     /// Tier 1: the window's exact environment matches the recording —
@@ -390,6 +500,7 @@ impl Cluster {
             want: vec![None; self.cores.len()],
             granted: vec![false; self.cores.len()],
             fastpath: None,
+            tracer: None,
         }
     }
 

@@ -100,6 +100,12 @@ impl Core {
         self.state == CoreState::Halted
     }
 
+    /// Label of the loaded program (the kernel name — the cycle-domain
+    /// trace uses it to name window spans).
+    pub fn program_name(&self) -> &str {
+        &self.prog.label
+    }
+
     fn reg(&self, r: u8) -> u32 {
         self.regs[r as usize]
     }

@@ -9,6 +9,12 @@
 //! strides on both sides, covering HWC tile extraction), a fixed programming
 //! latency per request, lowest-priority access to TCDM banks (it yields the
 //! cycle whenever a core was granted one of the banks it would touch).
+//!
+//! Busy/byte counters accumulate into `ClusterStats::dma_busy_cycles` /
+//! `dma_bytes`, which is all the trace layer needs: each window's DMA
+//! span ([`crate::sim::Cluster::run`]'s tracer) and the per-layer DMA
+//! overlap % ([`crate::trace::profile`]) are derived from those deltas,
+//! never from extra instrumentation inside the engine.
 
 use super::mem::ClusterMem;
 

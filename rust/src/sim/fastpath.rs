@@ -127,10 +127,46 @@ pub struct FastPath {
     pub misses: u64,
 }
 
+/// How the fast path served one non-trivial window — the host-scope
+/// trace event emitted per window ([`Scope::Host`], excluded from the
+/// default Chrome export because record-vs-replay varies with cache
+/// state across runs even though simulated results do not).
+///
+/// [`Scope::Host`]: crate::trace::Scope::Host
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WindowOutcome {
+    /// Memoized writes and timing applied directly.
+    PureReplay,
+    /// Memoized timing + fast functional re-execution.
+    FunctionalReplay,
+    /// Simulated cycle-by-cycle and recorded.
+    Recorded,
+}
+
+impl WindowOutcome {
+    /// Stable event name of the outcome.
+    pub fn name(self) -> &'static str {
+        match self {
+            WindowOutcome::PureReplay => "fastpath_pure_replay",
+            WindowOutcome::FunctionalReplay => "fastpath_functional_replay",
+            WindowOutcome::Recorded => "fastpath_record",
+        }
+    }
+}
+
 impl FastPath {
     /// Distinct windows memoized (in the possibly-shared cache).
     pub fn entries(&self) -> usize {
         self.cache.entries()
+    }
+
+    /// Bump the per-cluster counter matching a window outcome.
+    pub(crate) fn note(&mut self, o: WindowOutcome) {
+        match o {
+            WindowOutcome::PureReplay => self.pure_hits += 1,
+            WindowOutcome::FunctionalReplay => self.func_hits += 1,
+            WindowOutcome::Recorded => self.misses += 1,
+        }
     }
 
     /// Fraction of non-trivial windows served without cycle simulation.

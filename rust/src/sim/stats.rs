@@ -31,9 +31,41 @@ pub struct CoreStats {
 }
 
 impl CoreStats {
-    pub fn add(&mut self, o: &CoreStats) {
+    /// Merge counters from a run that *overlapped in time* with this one
+    /// (the same core across serial tile windows of one layer, or
+    /// per-tile representatives replayed into a layer total): event
+    /// counters sum, but `cycles` is **max-reduced** — the merged value
+    /// answers "how long was this core's longest single window", not
+    /// "how long did it run in total" (wall time lives in
+    /// [`ClusterStats::cycles`]).
+    ///
+    /// The asymmetry is deliberate and load-bearing: [`crate::power`]
+    /// derives a core's active cycles as `cycles - barrier_cycles`, and
+    /// percentage consumers must divide stall counters by
+    /// `ClusterStats::cycles × n_cores` (as [`crate::trace::profile`]
+    /// does) — never by this field, which summed counters can exceed.
+    /// Use [`CoreStats::accumulate`] when concatenating disjoint runs
+    /// where `cycles` should sum too.
+    pub fn merge_parallel(&mut self, o: &CoreStats) {
         self.instrs += o.instrs;
         self.cycles = self.cycles.max(o.cycles);
+        self.macs += o.macs;
+        self.dotp_instrs += o.dotp_instrs;
+        self.macload_instrs += o.macload_instrs;
+        self.tcdm_accesses += o.tcdm_accesses;
+        self.conflict_stalls += o.conflict_stalls;
+        self.loaduse_stalls += o.loaduse_stalls;
+        self.branch_stalls += o.branch_stalls;
+        self.barrier_cycles += o.barrier_cycles;
+        self.csr_writes += o.csr_writes;
+    }
+
+    /// Sum *every* counter, `cycles` included — sequential concatenation
+    /// of runs that did not overlap in time. Counterpart of
+    /// [`CoreStats::merge_parallel`]; see its docs for when each applies.
+    pub fn accumulate(&mut self, o: &CoreStats) {
+        self.instrs += o.instrs;
+        self.cycles += o.cycles;
         self.macs += o.macs;
         self.dotp_instrs += o.dotp_instrs;
         self.macload_instrs += o.macload_instrs;
@@ -91,8 +123,11 @@ impl ClusterStats {
         if self.cores.len() < o.cores.len() {
             self.cores.resize(o.cores.len(), CoreStats::default());
         }
+        // Per-core `cycles` stays max-reduced (longest single window):
+        // wall time accumulates in `self.cycles` above, and the energy
+        // model's `cycles - barrier_cycles` stays meaningful per window.
         for (a, b) in self.cores.iter_mut().zip(&o.cores) {
-            a.add(b);
+            a.merge_parallel(b);
         }
         self.dma_busy_cycles += o.dma_busy_cycles;
         self.dma_bytes += o.dma_bytes;
@@ -150,6 +185,77 @@ mod tests {
         assert_eq!(r.cores[0].macs, 35);
         assert_eq!(r.dma_bytes, 20);
         assert!((r.macs_per_cycle() - s.macs_per_cycle()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_parallel_maxes_cycles_and_sums_events() {
+        let mut a = CoreStats { cycles: 100, conflict_stalls: 10, macs: 50, ..Default::default() };
+        let b = CoreStats { cycles: 60, conflict_stalls: 7, macs: 5, ..Default::default() };
+        a.merge_parallel(&b);
+        assert_eq!(a.cycles, 100, "cycles must max-reduce");
+        assert_eq!(a.conflict_stalls, 17);
+        assert_eq!(a.macs, 55);
+    }
+
+    #[test]
+    fn accumulate_sums_everything_including_cycles() {
+        let mut a = CoreStats { cycles: 100, conflict_stalls: 10, macs: 50, ..Default::default() };
+        let b = CoreStats { cycles: 60, conflict_stalls: 7, macs: 5, ..Default::default() };
+        a.accumulate(&b);
+        assert_eq!(a.cycles, 160, "cycles must sum");
+        assert_eq!(a.conflict_stalls, 17);
+        assert_eq!(a.macs, 55);
+    }
+
+    /// The invariant behind the profile report's percentages: across a
+    /// serial merge, a core's summed stall counters stay bounded by the
+    /// accumulated wall cycles (each window's stalls fit in that window).
+    #[test]
+    fn serial_merge_keeps_stalls_bounded_by_wall() {
+        let windows = [
+            ClusterStats {
+                cycles: 40,
+                cores: vec![CoreStats {
+                    cycles: 40,
+                    conflict_stalls: 12,
+                    barrier_cycles: 8,
+                    ..Default::default()
+                }],
+                ..Default::default()
+            },
+            ClusterStats {
+                cycles: 25,
+                cores: vec![CoreStats {
+                    cycles: 25,
+                    conflict_stalls: 5,
+                    barrier_cycles: 20,
+                    ..Default::default()
+                }],
+                ..Default::default()
+            },
+            ClusterStats {
+                cycles: 70,
+                cores: vec![CoreStats {
+                    cycles: 70,
+                    conflict_stalls: 1,
+                    barrier_cycles: 2,
+                    ..Default::default()
+                }],
+                ..Default::default()
+            },
+        ];
+        let mut total = ClusterStats::default();
+        for w in &windows {
+            total.extend_serial(w);
+        }
+        let c = &total.cores[0];
+        assert_eq!(total.cycles, 135);
+        assert_eq!(c.cycles, 70, "per-core cycles is the longest window, not the sum");
+        // Stall counters summed across all three windows (12+5+1 and
+        // 8+20+2) against a max-reduced `c.cycles` — mixing those two in
+        // one ratio is exactly the >100% bug the split methods prevent.
+        assert_eq!((c.conflict_stalls, c.barrier_cycles), (18, 30));
+        assert!(c.conflict_stalls + c.barrier_cycles <= total.cycles);
     }
 
     #[test]

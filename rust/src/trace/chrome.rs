@@ -1,0 +1,189 @@
+//! Chrome trace-event JSON exporter.
+//!
+//! Serializes a [`Recorder`] into the Chrome trace-event format (the
+//! JSON-object flavour with a `traceEvents` array), loadable in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`. Timestamps are the
+//! recorder's simulated cycles written into the format's microsecond
+//! `ts` field one-to-one — one displayed microsecond is one cycle, which
+//! keeps every number exact (`f64` holds integers up to 2^53, far beyond
+//! any simulated span).
+//!
+//! Serialization reuses the byte-deterministic [`Json`] writer from
+//! [`crate::report::artifact`]: insertion-ordered objects, shortest
+//! round-trip numbers, fixed two-space layout. Export a canonicalized
+//! recorder ([`Recorder::canonicalize`]) and the bytes are a pure
+//! function of the recorded events — the CI trace gate byte-diffs
+//! exports across worker counts and fast-path settings.
+//!
+//! [`to_chrome_json`] emits [`Scope::Sim`] events only — the
+//! deterministic cycle-domain payload. [`to_chrome_json_with_host`]
+//! additionally includes host-scope events (fast-path record/replay
+//! outcomes, cross-checks) for debugging; those vary with the fast-path
+//! setting by nature, so they are excluded from determinism artifacts.
+
+use super::{Arg, Event, Payload, Recorder, Scope};
+use crate::report::artifact::Json;
+
+/// Export the recorder's sim-scope events as Chrome trace-event JSON
+/// (deterministic bytes; see the module docs).
+pub fn to_chrome_json(rec: &Recorder) -> String {
+    render(rec, false)
+}
+
+/// Export all events including host-scope ones (debugging aid; not
+/// byte-stable across fast-path settings).
+pub fn to_chrome_json_with_host(rec: &Recorder) -> String {
+    render(rec, true)
+}
+
+fn render(rec: &Recorder, include_host: bool) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    // Naming metadata first, sorted by id so the export never depends on
+    // the order tracks were first touched.
+    let mut procs: Vec<(u32, &str)> =
+        rec.processes().iter().map(|(p, n)| (*p, n.as_str())).collect();
+    procs.sort();
+    for (pid, name) in procs {
+        events.push(meta_event("process_name", pid, 0, name));
+    }
+    let mut threads: Vec<(u32, u32, &str)> =
+        rec.threads().iter().map(|(p, t, n)| (*p, *t, n.as_str())).collect();
+    threads.sort();
+    for (pid, tid, name) in threads {
+        events.push(meta_event("thread_name", pid, tid, name));
+    }
+    for ev in rec.events() {
+        if ev.scope == Scope::Host && !include_host {
+            continue;
+        }
+        events.push(event_json(ev));
+    }
+    Json::Obj(vec![
+        ("displayTimeUnit".to_string(), Json::Str("ms".to_string())),
+        ("traceEvents".to_string(), Json::Arr(events)),
+    ])
+    .render()
+}
+
+/// A `"M"` metadata event naming a process or thread.
+fn meta_event(kind: &str, pid: u32, tid: u32, name: &str) -> Json {
+    Json::Obj(vec![
+        ("name".to_string(), Json::Str(kind.to_string())),
+        ("ph".to_string(), Json::Str("M".to_string())),
+        ("pid".to_string(), Json::Num(pid as f64)),
+        ("tid".to_string(), Json::Num(tid as f64)),
+        (
+            "args".to_string(),
+            Json::Obj(vec![("name".to_string(), Json::Str(name.to_string()))]),
+        ),
+    ])
+}
+
+fn arg_json(a: &Arg) -> Json {
+    match a {
+        Arg::U64(v) => Json::Num(*v as f64),
+        Arg::F64(v) => Json::Num(*v),
+        Arg::Str(s) => Json::Str(s.clone()),
+    }
+}
+
+fn event_json(ev: &Event) -> Json {
+    let cat = match ev.scope {
+        Scope::Sim => "sim",
+        Scope::Host => "host",
+    };
+    let mut o: Vec<(String, Json)> = vec![
+        ("name".to_string(), Json::Str(ev.name.clone())),
+        ("cat".to_string(), Json::Str(cat.to_string())),
+    ];
+    let ph = match ev.payload {
+        Payload::Span { .. } => "X",
+        Payload::Instant => "i",
+        Payload::Counter { .. } => "C",
+    };
+    o.push(("ph".to_string(), Json::Str(ph.to_string())));
+    o.push(("ts".to_string(), Json::Num(ev.at as f64)));
+    if let Payload::Span { dur } = ev.payload {
+        o.push(("dur".to_string(), Json::Num(dur as f64)));
+    }
+    o.push(("pid".to_string(), Json::Num(ev.track.pid as f64)));
+    o.push(("tid".to_string(), Json::Num(ev.track.tid as f64)));
+    if let Payload::Instant = ev.payload {
+        // thread-scoped instant (the small arrow marker)
+        o.push(("s".to_string(), Json::Str("t".to_string())));
+    }
+    let mut args: Vec<(String, Json)> = Vec::new();
+    if let Payload::Counter { value } = ev.payload {
+        // counter tracks plot each args series; ours carry one value
+        args.push(("value".to_string(), Json::Num(value)));
+    }
+    for (k, a) in &ev.args {
+        args.push(((*k).to_string(), arg_json(a)));
+    }
+    if !args.is_empty() {
+        o.push(("args".to_string(), Json::Obj(args)));
+    }
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::track;
+
+    fn sample() -> Recorder {
+        let mut r = Recorder::new();
+        r.name_process(0, "cluster");
+        r.name_thread(track(0, 1), "core0");
+        r.span(Scope::Sim, track(0, 1), "conv", 10, 90, vec![("macs", Arg::U64(128))]);
+        r.instant(Scope::Host, track(0, 0), "fastpath_record", 10, vec![]);
+        r.counter(Scope::Sim, track(0, 0), "active_shards", 10, 2.0);
+        r.canonicalize();
+        r
+    }
+
+    #[test]
+    fn export_is_valid_json_with_expected_fields() {
+        let s = to_chrome_json(&sample());
+        let j = Json::parse(&s).expect("exporter must emit parseable JSON");
+        let evs = j.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+        // 2 metadata + span + counter; the host instant is excluded
+        assert_eq!(evs.len(), 4);
+        for ev in evs {
+            assert!(ev.get("name").is_some() && ev.get("ph").is_some());
+            assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+        }
+        let span = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .expect("one span");
+        assert_eq!(span.get("ts").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(span.get("dur").and_then(Json::as_f64), Some(90.0));
+        assert_eq!(
+            span.get("args").and_then(|a| a.get("macs")).and_then(Json::as_f64),
+            Some(128.0)
+        );
+        let counter = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+            .expect("one counter");
+        assert_eq!(
+            counter.get("args").and_then(|a| a.get("value")).and_then(Json::as_f64),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn host_events_only_in_debug_export() {
+        let rec = sample();
+        let plain = to_chrome_json(&rec);
+        let debug = to_chrome_json_with_host(&rec);
+        assert!(!plain.contains("fastpath_record"));
+        assert!(debug.contains("fastpath_record"));
+    }
+
+    #[test]
+    fn export_bytes_are_reproducible() {
+        assert_eq!(to_chrome_json(&sample()), to_chrome_json(&sample()));
+    }
+}

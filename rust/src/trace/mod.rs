@@ -1,0 +1,390 @@
+//! Deterministic cycle-domain structured tracing.
+//!
+//! The trace clock is the **simulated cycle counter** ([`crate::sim::Cluster::cycle`]
+//! for the sim layer, the serve engine's discrete-event clock for the
+//! fleet layer), never the host clock. Because every simulated number in
+//! this crate is a pure function of its inputs (see the determinism
+//! contract in [`crate::serve`]), a recorded trace inherits that
+//! property: the exported bytes are identical for any worker count and
+//! any fast-path setting, which makes traces *testable determinism
+//! artifacts* (`rust/tests/trace_determinism.rs` and the CI trace gate
+//! byte-diff them).
+//!
+//! Two clock domains coexist and are kept apart by [`Scope`]:
+//!
+//! - [`Scope::Sim`] events carry simulated-cycle timestamps and are the
+//!   deterministic payload. The Chrome exporter ([`chrome`]) emits only
+//!   these by default.
+//! - [`Scope::Host`] events mark host-side machinery (fast-path
+//!   record/replay outcomes, cross-checks). They are deterministic in
+//!   *time* (stamped with the window's start cycle) but not in *kind*
+//!   across fast-path settings — a window that records on one run
+//!   replays on the next — so the default export excludes them.
+//!
+//! Instrumentation points build events only when a sink is attached
+//! (`Cluster::tracer` is an `Option`), so the disabled cost is one
+//! branch and zero simulated cycles — asserted by
+//! `benches/serve_throughput.rs`. The serve layer does not sink events
+//! from shard worker threads at all: [`crate::serve::Engine::build_trace`]
+//! reconstructs the fleet timeline *post hoc* from the deterministic
+//! completion/shed/occupancy records, so tracing can never perturb
+//! scheduling.
+//!
+//! Submodules: [`chrome`] (Perfetto-loadable trace-event JSON),
+//! [`profile`] (per-layer profile report), [`serve`] (fleet trace
+//! builder).
+
+pub mod chrome;
+pub mod profile;
+pub mod serve;
+
+/// Clock domain of an event (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scope {
+    /// Simulated-cycle domain: deterministic, exported by default.
+    Sim,
+    /// Host-side machinery (fast-path outcomes, cross-checks): excluded
+    /// from the default export because record-vs-replay varies with the
+    /// fast-path setting.
+    Host,
+}
+
+/// One argument value attached to an event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arg {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+/// A (process, thread) pair identifying one timeline track. The Chrome
+/// exporter maps `pid` to a shard (or the single cluster) and `tid` to
+/// a core / DMA / fleet lane within it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Track {
+    pub pid: u32,
+    pub tid: u32,
+}
+
+/// Shorthand constructor for a [`Track`].
+pub const fn track(pid: u32, tid: u32) -> Track {
+    Track { pid, tid }
+}
+
+/// Event payload: what kind of mark this is on its track.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Payload {
+    /// A duration event covering `[at, at + dur]` cycles (`"X"` in the
+    /// Chrome trace-event format). `dur` is unsigned, so `end >= begin`
+    /// holds by construction; [`check_well_nested`] additionally rejects
+    /// overflowing ends.
+    Span { dur: u64 },
+    /// A point event (`"i"`).
+    Instant,
+    /// A counter sample (`"C"`): the track plots `value` over time.
+    Counter { value: f64 },
+}
+
+/// One trace event, stamped in simulated cycles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub name: String,
+    pub scope: Scope,
+    pub track: Track,
+    /// Timestamp in simulated cycles.
+    pub at: u64,
+    pub payload: Payload,
+    pub args: Vec<(&'static str, Arg)>,
+}
+
+impl Event {
+    /// Span duration (0 for instants and counters) — the canonical-order
+    /// tie-break so enclosing spans sort before their children.
+    fn dur(&self) -> u64 {
+        match self.payload {
+            Payload::Span { dur } => dur,
+            _ => 0,
+        }
+    }
+}
+
+/// Where instrumentation points deliver events. The default
+/// implementation contract is [`NopSink`]: `enabled()` lets callers skip
+/// building events entirely when nothing records them.
+pub trait TraceSink {
+    /// Record one event.
+    fn event(&mut self, ev: Event);
+    /// Whether delivered events are kept. Instrumentation points should
+    /// branch on this (or on an `Option<Recorder>` being `Some`) before
+    /// constructing events.
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// The zero-overhead default sink: drops everything and reports itself
+/// disabled, so instrumentation never builds events for it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NopSink;
+
+impl NopSink {
+    pub fn new() -> Self {
+        NopSink
+    }
+}
+
+impl TraceSink for NopSink {
+    fn event(&mut self, _ev: Event) {}
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// The recording sink: an in-memory event list plus process/thread
+/// naming metadata, exported by [`chrome::to_chrome_json`].
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    events: Vec<Event>,
+    /// `(pid, name)` process-naming metadata, first name wins.
+    processes: Vec<(u32, String)>,
+    /// `(pid, tid, name)` thread-naming metadata, first name wins.
+    threads: Vec<(u32, u32, String)>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    /// Name a process track (first call per `pid` wins — repeat calls
+    /// from per-window instrumentation are cheap no-ops).
+    pub fn name_process(&mut self, pid: u32, name: impl Into<String>) {
+        if !self.processes.iter().any(|(p, _)| *p == pid) {
+            self.processes.push((pid, name.into()));
+        }
+    }
+
+    /// Name a thread track (first call per `(pid, tid)` wins).
+    pub fn name_thread(&mut self, t: Track, name: impl Into<String>) {
+        if !self.threads.iter().any(|(p, i, _)| (*p, *i) == (t.pid, t.tid)) {
+            self.threads.push((t.pid, t.tid, name.into()));
+        }
+    }
+
+    /// Record a duration event covering `[at, at + dur]`.
+    pub fn span(
+        &mut self,
+        scope: Scope,
+        t: Track,
+        name: impl Into<String>,
+        at: u64,
+        dur: u64,
+        args: Vec<(&'static str, Arg)>,
+    ) {
+        self.events.push(Event {
+            name: name.into(),
+            scope,
+            track: t,
+            at,
+            payload: Payload::Span { dur },
+            args,
+        });
+    }
+
+    /// Record a point event.
+    pub fn instant(
+        &mut self,
+        scope: Scope,
+        t: Track,
+        name: impl Into<String>,
+        at: u64,
+        args: Vec<(&'static str, Arg)>,
+    ) {
+        self.events.push(Event {
+            name: name.into(),
+            scope,
+            track: t,
+            at,
+            payload: Payload::Instant,
+            args,
+        });
+    }
+
+    /// Record a counter sample.
+    pub fn counter(
+        &mut self,
+        scope: Scope,
+        t: Track,
+        name: impl Into<String>,
+        at: u64,
+        value: f64,
+    ) {
+        self.events.push(Event {
+            name: name.into(),
+            scope,
+            track: t,
+            at,
+            payload: Payload::Counter { value },
+            args: Vec::new(),
+        });
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn processes(&self) -> &[(u32, String)] {
+        &self.processes
+    }
+
+    pub fn threads(&self) -> &[(u32, u32, String)] {
+        &self.threads
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Sort events into the canonical export order — by track, then
+    /// timestamp, with longer spans first at equal timestamps so
+    /// enclosing spans precede their children; naming metadata sorts by
+    /// id. Stable, so ties keep emission order. Idempotent: exporting a
+    /// canonicalized recorder twice yields identical bytes.
+    pub fn canonicalize(&mut self) {
+        self.processes.sort();
+        self.threads.sort();
+        self.events.sort_by(|a, b| {
+            (a.track, a.at).cmp(&(b.track, b.at)).then_with(|| b.dur().cmp(&a.dur()))
+        });
+    }
+}
+
+impl TraceSink for Recorder {
+    fn event(&mut self, ev: Event) {
+        self.events.push(ev);
+    }
+}
+
+/// Check the structural soundness of recorded span events: per
+/// `(pid, tid)` track, spans must be pairwise nested or disjoint
+/// (touching endpoints count as disjoint), and every span end must be
+/// representable (`at + dur` must not overflow — `end >= begin` then
+/// holds by construction). Instants and counters are ignored. Returns
+/// the first violation found.
+pub fn check_well_nested(events: &[Event]) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    let mut tracks: BTreeMap<Track, Vec<(u64, u64, &str)>> = BTreeMap::new();
+    for ev in events {
+        if let Payload::Span { dur } = ev.payload {
+            let end = ev
+                .at
+                .checked_add(dur)
+                .ok_or_else(|| format!("span '{}' at {} overflows u64", ev.name, ev.at))?;
+            tracks.entry(ev.track).or_default().push((ev.at, end, &ev.name));
+        }
+    }
+    for (t, mut spans) in tracks {
+        spans.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut stack: Vec<(u64, u64)> = Vec::new();
+        for (b, e, name) in spans {
+            while stack.last().is_some_and(|&(_, pe)| pe <= b) {
+                stack.pop();
+            }
+            if let Some(&(pb, pe)) = stack.last() {
+                if e > pe {
+                    return Err(format!(
+                        "track ({},{}): span '{name}' [{b},{e}] straddles enclosing [{pb},{pe}]",
+                        t.pid, t.tid
+                    ));
+                }
+            }
+            stack.push((b, e));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span_ev(tid: u32, at: u64, dur: u64) -> Event {
+        Event {
+            name: format!("s{at}"),
+            scope: Scope::Sim,
+            track: track(0, tid),
+            at,
+            payload: Payload::Span { dur },
+            args: vec![],
+        }
+    }
+
+    #[test]
+    fn nop_sink_is_disabled() {
+        let mut s = NopSink::new();
+        assert!(!s.enabled());
+        s.event(span_ev(0, 0, 1)); // dropped
+    }
+
+    #[test]
+    fn recorder_collects_and_names_first_wins() {
+        let mut r = Recorder::new();
+        assert!(r.is_empty());
+        r.name_process(0, "cluster");
+        r.name_process(0, "ignored");
+        r.name_thread(track(0, 1), "core0");
+        r.name_thread(track(0, 1), "ignored");
+        r.span(Scope::Sim, track(0, 1), "k", 5, 10, vec![("macs", Arg::U64(7))]);
+        r.instant(Scope::Host, track(0, 0), "i", 5, vec![]);
+        r.counter(Scope::Sim, track(0, 0), "c", 6, 2.5);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.processes(), &[(0, "cluster".to_string())]);
+        assert_eq!(r.threads(), &[(0, 1, "core0".to_string())]);
+        assert_eq!(r.events()[0].args, vec![("macs", Arg::U64(7))]);
+    }
+
+    #[test]
+    fn canonicalize_orders_enclosing_spans_first_and_is_idempotent() {
+        let mut r = Recorder::new();
+        // child emitted before its enclosing span (the sim layer emits
+        // window spans during the run, the layer span after it)
+        r.span(Scope::Sim, track(0, 0), "child", 10, 5, vec![]);
+        r.span(Scope::Sim, track(0, 0), "layer", 10, 50, vec![]);
+        r.span(Scope::Sim, track(0, 0), "early", 0, 3, vec![]);
+        r.canonicalize();
+        let names: Vec<&str> = r.events().iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["early", "layer", "child"]);
+        let once: Vec<Event> = r.events().to_vec();
+        r.canonicalize();
+        assert_eq!(r.events(), &once[..]);
+    }
+
+    #[test]
+    fn well_nested_accepts_nesting_and_touching() {
+        let evs = vec![
+            span_ev(0, 0, 100),
+            span_ev(0, 0, 40),  // nested, shared begin
+            span_ev(0, 40, 60), // nested, touching the previous child
+            span_ev(0, 100, 5), // disjoint, touching the enclosing end
+            span_ev(1, 50, 500), // other track: independent
+        ];
+        check_well_nested(&evs).unwrap();
+    }
+
+    #[test]
+    fn well_nested_rejects_straddling_spans() {
+        let evs = vec![span_ev(0, 0, 10), span_ev(0, 5, 10)];
+        let err = check_well_nested(&evs).unwrap_err();
+        assert!(err.contains("straddles"), "{err}");
+    }
+
+    #[test]
+    fn well_nested_rejects_overflowing_end() {
+        let evs = vec![span_ev(0, u64::MAX, 2)];
+        assert!(check_well_nested(&evs).unwrap_err().contains("overflows"));
+    }
+}

@@ -1,0 +1,222 @@
+//! Per-layer profile report: where the cycles of one inference went.
+//!
+//! Condenses a [`RunResult`] into one [`LayerProfile`] row per layer —
+//! cycles, MAC/cycle, a stall breakdown (TCDM conflicts, load-use
+//! hazards, taken-branch bubbles, barrier waits) as percentages of the
+//! layer's aggregate core-cycle budget, DMA overlap, and the kernel
+//! lowering the layer actually ran. This is the table the paper reasons
+//! with when explaining MAC/cycle gaps (§V: Mac&Load inner loops vs.
+//! load-use stalls), and the `profile --tuned` report pairs two of them
+//! to explain each autotuned win.
+//!
+//! # Percentage denominators
+//!
+//! Stall percentages divide by `layer cycles × cores running the layer`
+//! — the layer's total core-cycle budget — never by a single core's
+//! `cycles` counter. Per-core stall counters are summed across serial
+//! tile windows while wall cycles accumulate in
+//! [`ClusterStats::cycles`], so this is the one denominator under which
+//! each breakdown (and their sum) is guaranteed ≤ 100%; see
+//! [`crate::sim::stats::CoreStats::merge_parallel`] for the merge
+//! semantics behind that invariant.
+
+use crate::coordinator::RunResult;
+use crate::dory::deploy::Deployment;
+use crate::util::table::{f, Table};
+
+/// Profile of one executed layer.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    /// Layer name from the deployment plan.
+    pub name: String,
+    /// Kernel lowering the layer ran (the plan's exec override, else the
+    /// deployment-wide target).
+    pub isa: String,
+    /// Cores the layer's programs were generated for.
+    pub n_cores: usize,
+    /// Wall cycles of the layer window.
+    pub cycles: u64,
+    /// MAC operations of the layer.
+    pub macs: u64,
+    /// MACs per wall cycle.
+    pub macs_per_cycle: f64,
+    /// Cycles lost to TCDM bank conflicts, % of the core-cycle budget.
+    pub conflict_pct: f64,
+    /// Cycles lost to load-use hazards, % of the core-cycle budget.
+    pub loaduse_pct: f64,
+    /// Cycles lost to taken-branch bubbles, % of the core-cycle budget.
+    pub branch_pct: f64,
+    /// Cycles spent waiting at barriers, % of the core-cycle budget.
+    pub barrier_pct: f64,
+    /// DMA busy cycles overlapped with the layer window, % of the window.
+    pub dma_overlap_pct: f64,
+}
+
+impl LayerProfile {
+    /// Sum of the four stall breakdowns (≤ 100 by construction).
+    pub fn total_stall_pct(&self) -> f64 {
+        self.conflict_pct + self.loaduse_pct + self.branch_pct + self.barrier_pct
+    }
+}
+
+/// Per-layer profiles of one inference, in plan order.
+#[derive(Clone, Debug)]
+pub struct NetworkProfile {
+    pub layers: Vec<LayerProfile>,
+}
+
+impl NetworkProfile {
+    /// Build the profile by pairing a run's measured layer stats with the
+    /// deployment that produced them. `default_cores` is the cluster
+    /// width (layers without an exec override ran on all of it).
+    pub fn from_run(res: &RunResult, dep: &Deployment, default_cores: usize) -> NetworkProfile {
+        let layers = res
+            .layers
+            .iter()
+            .zip(&dep.plans)
+            .map(|(l, plan)| {
+                // Same override resolution as `execute_deployment`.
+                let (isa, nc) = plan
+                    .exec
+                    .map_or((dep.isa, default_cores), |e| (e.isa, e.n_cores.min(default_cores)));
+                let budget = (l.stats.cycles * nc as u64) as f64;
+                let pct = |counter: fn(&crate::sim::CoreStats) -> u64| {
+                    if budget == 0.0 {
+                        0.0
+                    } else {
+                        l.stats.cores.iter().map(counter).sum::<u64>() as f64 / budget * 100.0
+                    }
+                };
+                let dma_overlap_pct = if l.stats.cycles == 0 {
+                    0.0
+                } else {
+                    l.stats.dma_busy_cycles.min(l.stats.cycles) as f64 / l.stats.cycles as f64
+                        * 100.0
+                };
+                LayerProfile {
+                    name: l.name.clone(),
+                    isa: isa.to_string(),
+                    n_cores: nc,
+                    cycles: l.stats.cycles,
+                    macs: l.macs,
+                    macs_per_cycle: l.macs_per_cycle(),
+                    conflict_pct: pct(|c| c.conflict_stalls),
+                    loaduse_pct: pct(|c| c.loaduse_stalls),
+                    branch_pct: pct(|c| c.branch_stalls),
+                    barrier_pct: pct(|c| c.barrier_cycles),
+                    dma_overlap_pct,
+                }
+            })
+            .collect();
+        NetworkProfile { layers }
+    }
+
+    /// Σ wall cycles over layers.
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+
+    /// Render as an aligned text table with a TOTAL row.
+    pub fn render(&self, title: &str) -> String {
+        let mut t = Table::new(title).header(&[
+            "layer", "lowering", "cores", "cycles", "MAC/cyc", "conflict%", "loaduse%",
+            "branch%", "barrier%", "dma-ovl%",
+        ]);
+        for l in &self.layers {
+            t.row(vec![
+                l.name.clone(),
+                l.isa.clone(),
+                l.n_cores.to_string(),
+                l.cycles.to_string(),
+                f(l.macs_per_cycle, 2),
+                f(l.conflict_pct, 1),
+                f(l.loaduse_pct, 1),
+                f(l.branch_pct, 1),
+                f(l.barrier_pct, 1),
+                f(l.dma_overlap_pct, 1),
+            ]);
+        }
+        let total_cycles = self.total_cycles();
+        let total_macs: u64 = self.layers.iter().map(|l| l.macs).sum();
+        let mpc = if total_cycles == 0 { 0.0 } else { total_macs as f64 / total_cycles as f64 };
+        t.row(vec![
+            "TOTAL".to_string(),
+            String::new(),
+            String::new(),
+            total_cycles.to_string(),
+            f(mpc, 2),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Coordinator;
+    use crate::dory::deploy::deploy;
+    use crate::dory::MemBudget;
+    use crate::isa::IsaVariant;
+    use crate::qnn::layer::{Layer, Network};
+    use crate::qnn::QTensor;
+    use crate::util::Prng;
+
+    #[test]
+    fn percentages_are_bounded_on_a_real_layer() {
+        let mut rng = Prng::new(0x9F0);
+        let mut net = Network::new("prof", [10, 10, 8], 8);
+        net.push(Layer::conv("c1", [10, 10, 8], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        net.push(Layer::conv("c2", [10, 10, 16], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+        net.validate().unwrap();
+        let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+        let input = QTensor::random(&[10, 10, 8], 8, false, &mut rng);
+        let mut coord = Coordinator::new(4);
+        let res = coord.run(&dep, &input);
+        let prof = NetworkProfile::from_run(&res, &dep, 4);
+        assert_eq!(prof.layers.len(), 2);
+        for l in &prof.layers {
+            assert!(l.cycles > 0 && l.macs_per_cycle > 0.0, "{l:?}");
+            for p in [l.conflict_pct, l.loaduse_pct, l.branch_pct, l.barrier_pct] {
+                assert!((0.0..=100.0).contains(&p), "{l:?}");
+            }
+            assert!(l.total_stall_pct() <= 100.0 + 1e-9, "{l:?}");
+            assert!((0.0..=100.0).contains(&l.dma_overlap_pct), "{l:?}");
+            assert_eq!(l.isa, IsaVariant::FlexV.to_string());
+            assert_eq!(l.n_cores, 4);
+        }
+        assert_eq!(prof.total_cycles(), res.total_cycles());
+        let table = prof.render("test profile");
+        assert!(table.contains("c1") && table.contains("TOTAL"));
+    }
+
+    #[test]
+    fn exec_overrides_show_in_the_profile() {
+        use crate::dory::autotune::{LayerTuning, NetworkTuning};
+        use crate::dory::deploy::deploy_tuned;
+        let mut rng = Prng::new(0x9F1);
+        let mut net = Network::new("prof-ovr", [10, 10, 8], 8);
+        net.push(Layer::conv("c1", [10, 10, 8], 8, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        net.validate().unwrap();
+        let tuning = NetworkTuning {
+            layers: vec![LayerTuning {
+                isa: IsaVariant::Ri5cy,
+                n_cores: 4,
+                shape: None,
+                tuned_cycles: 0,
+                default_cycles: 0,
+            }],
+        };
+        let dep = deploy_tuned(&net, IsaVariant::FlexV, MemBudget::default(), &tuning);
+        let input = QTensor::random(&[10, 10, 8], 8, false, &mut rng);
+        let mut coord = Coordinator::new(8);
+        let res = coord.run(&dep, &input);
+        let prof = NetworkProfile::from_run(&res, &dep, 8);
+        assert_eq!(prof.layers[0].isa, IsaVariant::Ri5cy.to_string());
+        assert_eq!(prof.layers[0].n_cores, 4);
+    }
+}

@@ -1,0 +1,299 @@
+//! Fleet-timeline builder for the serving engine.
+//!
+//! The serve engine never threads a sink through its worker pool —
+//! instead it keeps deterministic records of everything that happened
+//! ([`Completion`]s, [`ShedEvent`]s, the shard-occupancy series) and this
+//! module rebuilds the timeline from them **post hoc**. Because those
+//! records are already part of the engine's determinism contract (merged
+//! by `(finish_cycle, shard, id)` regardless of worker count or
+//! fast-path setting), the trace inherits byte-identity across
+//! `workers` × fastpath for free; the CI determinism gate diffs exactly
+//! this export.
+//!
+//! Track layout (Chrome pid/tid):
+//! - pid 0 `fleet` — tid 1 `arrivals` (one instant per request entering
+//!   the queue, shed ones included), tid 2 `sheds` (shed decisions at
+//!   the cycle they were made), tid 3 `autoscale` (park/wake instants
+//!   plus an `active_shards` counter), tid 4 `caches` (plan/tune cache
+//!   hit/miss totals as end-of-run counters).
+//! - pid `s+1` `shard{s}` — tid 1 `exec`: one `batch` span per dispatch
+//!   with the `model_switch` span and per-request exec spans nested
+//!   inside it (the batch timeline of [`crate::serve::shard`]: switch
+//!   charged up front, per-request windows contiguous to the batch end).
+
+use std::collections::BTreeMap;
+
+use super::{track, Arg, Recorder, Scope};
+use crate::serve::request::{Completion, ShedEvent};
+use crate::serve::workload::SloClass;
+
+/// Everything the builder needs, borrowed from the engine's records
+/// (see [`crate::serve::Engine::build_trace`] for the assembly).
+pub struct FleetTraceInputs<'a> {
+    pub completions: &'a [Completion],
+    pub shed: &'a [ShedEvent],
+    /// `(cycle, active shard count)` series, one entry per change.
+    pub occupancy: &'a [(u64, usize)],
+    /// Registry-ordered model names (`Completion::model` indexes it).
+    pub model_names: &'a [String],
+    /// SLO class table (`Completion::class` indexes it).
+    pub classes: &'a [SloClass],
+    /// Total shard slots of the fleet.
+    pub shards: usize,
+    /// Plan-cache `(hits, misses)` totals.
+    pub plan_cache: (u64, u64),
+    /// Tune-cache `(hits, misses)` totals.
+    pub tune_cache: (u64, u64),
+}
+
+const TID_ARRIVALS: u32 = 1;
+const TID_SHEDS: u32 = 2;
+const TID_AUTOSCALE: u32 = 3;
+const TID_CACHES: u32 = 4;
+
+fn model_name(names: &[String], idx: usize) -> &str {
+    names.get(idx).map_or("?", |s| s.as_str())
+}
+
+fn class_name(classes: &[SloClass], idx: u8) -> &str {
+    classes.get(idx as usize).map_or("?", |c| c.name.as_str())
+}
+
+/// Build the fleet timeline. All events are [`Scope::Sim`] — every
+/// timestamp is a simulated cycle from the deterministic record stream.
+/// The caller should [`Recorder::canonicalize`] before export.
+pub fn build_fleet_trace(inp: &FleetTraceInputs) -> Recorder {
+    let mut rec = Recorder::new();
+    rec.name_process(0, "fleet");
+    rec.name_thread(track(0, TID_ARRIVALS), "arrivals");
+    rec.name_thread(track(0, TID_SHEDS), "sheds");
+    rec.name_thread(track(0, TID_AUTOSCALE), "autoscale");
+    rec.name_thread(track(0, TID_CACHES), "caches");
+    for s in 0..inp.shards {
+        rec.name_process(s as u32 + 1, format!("shard{s}"));
+        rec.name_thread(track(s as u32 + 1, 1), "exec");
+    }
+
+    // Arrivals: every request that entered the queue, completed or shed.
+    for c in inp.completions {
+        rec.instant(
+            Scope::Sim,
+            track(0, TID_ARRIVALS),
+            model_name(inp.model_names, c.model),
+            c.arrival_cycle,
+            vec![
+                ("id", Arg::U64(c.id)),
+                ("class", Arg::Str(class_name(inp.classes, c.class).to_string())),
+            ],
+        );
+    }
+    for s in inp.shed {
+        rec.instant(
+            Scope::Sim,
+            track(0, TID_ARRIVALS),
+            model_name(inp.model_names, s.model),
+            s.arrival_cycle,
+            vec![
+                ("id", Arg::U64(s.id)),
+                ("class", Arg::Str(class_name(inp.classes, s.class).to_string())),
+            ],
+        );
+        rec.instant(
+            Scope::Sim,
+            track(0, TID_SHEDS),
+            "shed",
+            s.shed_cycle,
+            vec![
+                ("id", Arg::U64(s.id)),
+                ("model", Arg::Str(model_name(inp.model_names, s.model).to_string())),
+                ("missed_deadline", Arg::U64(s.deadline)),
+            ],
+        );
+    }
+
+    // Autoscale: park/wake instants at occupancy changes, plus the
+    // active-shard counter series.
+    for (cycle, n) in inp.occupancy {
+        rec.counter(Scope::Sim, track(0, TID_AUTOSCALE), "active_shards", *cycle, *n as f64);
+    }
+    for w in inp.occupancy.windows(2) {
+        let ((_, from), (cycle, to)) = (w[0], w[1]);
+        if to != from {
+            let name = if to > from { "wake_shards" } else { "park_shards" };
+            rec.instant(
+                Scope::Sim,
+                track(0, TID_AUTOSCALE),
+                name,
+                cycle,
+                vec![("from", Arg::U64(from as u64)), ("to", Arg::U64(to as u64))],
+            );
+        }
+    }
+
+    // Cache totals as end-of-run counters (the end of the last batch; 0
+    // on an empty run).
+    let end = inp.completions.iter().map(|c| c.finish_cycle).max().unwrap_or(0);
+    for (name, v) in [
+        ("plan_cache_hits", inp.plan_cache.0),
+        ("plan_cache_misses", inp.plan_cache.1),
+        ("tune_cache_hits", inp.tune_cache.0),
+        ("tune_cache_misses", inp.tune_cache.1),
+    ] {
+        rec.counter(Scope::Sim, track(0, TID_CACHES), name, end, v as f64);
+    }
+
+    // Per-shard batches: group completions by (shard, batch start); the
+    // BTreeMap makes emission order deterministic.
+    let mut batches: BTreeMap<(usize, u64), Vec<&Completion>> = BTreeMap::new();
+    for c in inp.completions {
+        batches.entry((c.shard, c.start_cycle)).or_default().push(c);
+    }
+    for ((shard, start), mut group) in batches {
+        group.sort_by_key(|c| (c.finish_cycle, c.id));
+        let t = track(shard as u32 + 1, 1);
+        let end = group.last().expect("non-empty group").finish_cycle;
+        let first = group[0];
+        rec.span(
+            Scope::Sim,
+            t,
+            "batch",
+            start,
+            end - start,
+            vec![
+                ("size", Arg::U64(first.batch_size as u64)),
+                ("model", Arg::Str(model_name(inp.model_names, first.model).to_string())),
+            ],
+        );
+        if first.switch_cycles > 0 {
+            rec.span(Scope::Sim, t, "model_switch", start, first.switch_cycles, vec![]);
+        }
+        for c in group {
+            let mut args = vec![
+                ("id", Arg::U64(c.id)),
+                ("class", Arg::Str(class_name(inp.classes, c.class).to_string())),
+                ("batch_size", Arg::U64(c.batch_size as u64)),
+                ("queue_cycles", Arg::U64(c.queue_cycles())),
+                ("macs", Arg::U64(c.macs)),
+            ];
+            if let Some(d) = c.deadline {
+                args.push(("deadline", Arg::U64(d)));
+                args.push(("missed", Arg::U64(c.missed_deadline() as u64)));
+            }
+            rec.span(
+                Scope::Sim,
+                t,
+                model_name(inp.model_names, c.model),
+                c.finish_cycle - c.exec_cycles,
+                c.exec_cycles,
+                args,
+            );
+        }
+    }
+    rec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{check_well_nested, Payload};
+
+    fn completion(
+        id: u64,
+        shard: usize,
+        start: u64,
+        finish: u64,
+        exec: u64,
+        switch: u64,
+    ) -> Completion {
+        Completion {
+            id,
+            model: 0,
+            class: 0,
+            shard,
+            arrival_cycle: start.saturating_sub(5),
+            deadline: Some(finish + 100),
+            start_cycle: start,
+            finish_cycle: finish,
+            exec_cycles: exec,
+            switch_cycles: switch,
+            batch_size: 2,
+            macs: 1000,
+            energy_pj: 1.0,
+            layer_cycles: vec![exec],
+            output: vec![],
+        }
+    }
+
+    fn inputs<'a>(
+        completions: &'a [Completion],
+        shed: &'a [ShedEvent],
+        occupancy: &'a [(u64, usize)],
+        names: &'a [String],
+    ) -> FleetTraceInputs<'a> {
+        FleetTraceInputs {
+            completions,
+            shed,
+            occupancy,
+            model_names: names,
+            classes: &[],
+            shards: 2,
+            plan_cache: (3, 1),
+            tune_cache: (0, 0),
+        }
+    }
+
+    #[test]
+    fn batch_switch_and_exec_spans_nest() {
+        // One batch on shard 0: switch 10 cycles, then two contiguous
+        // 40-cycle exec windows.
+        let comps = vec![
+            completion(1, 0, 100, 150, 40, 10),
+            completion(2, 0, 100, 190, 40, 0),
+        ];
+        let names = vec!["mnv1".to_string()];
+        let mut rec = build_fleet_trace(&inputs(&comps, &[], &[(0, 2)], &names));
+        rec.canonicalize();
+        check_well_nested(rec.events()).expect("spans must nest");
+        let spans: Vec<_> = rec
+            .events()
+            .iter()
+            .filter(|e| matches!(e.payload, Payload::Span { .. }))
+            .collect();
+        // batch + model_switch + 2 exec
+        assert_eq!(spans.len(), 4);
+        assert!(spans.iter().any(|e| e.name == "batch"));
+        assert!(spans.iter().any(|e| e.name == "model_switch"));
+        assert_eq!(spans.iter().filter(|e| e.name == "mnv1").count(), 2);
+    }
+
+    #[test]
+    fn sheds_and_autoscale_become_instants_and_counters() {
+        let shed = vec![ShedEvent {
+            id: 7,
+            model: 0,
+            class: 0,
+            priority: 1,
+            arrival_cycle: 50,
+            deadline: 80,
+            shed_cycle: 60,
+        }];
+        let names = vec!["mnv1".to_string()];
+        let occ = [(0u64, 1usize), (500, 2), (900, 1)];
+        let mut rec = build_fleet_trace(&inputs(&[], &shed, &occ, &names));
+        rec.canonicalize();
+        let names_of = |p: fn(&Payload) -> bool| -> Vec<&str> {
+            rec.events()
+                .iter()
+                .filter(|e| p(&e.payload))
+                .map(|e| e.name.as_str())
+                .collect()
+        };
+        let instants = names_of(|p| matches!(p, Payload::Instant));
+        assert!(instants.contains(&"shed"));
+        assert!(instants.contains(&"wake_shards"));
+        assert!(instants.contains(&"park_shards"));
+        let counters = names_of(|p| matches!(p, Payload::Counter { .. }));
+        assert_eq!(counters.iter().filter(|n| *n == "active_shards").count(), 3);
+        assert!(counters.contains(&"plan_cache_hits"));
+    }
+}

@@ -1,0 +1,159 @@
+//! The trace layer's own determinism contract: the exported Chrome
+//! trace JSON is a pure function of the workload, byte-identical across
+//! `workers` counts and fast-path settings — because every timestamp is
+//! the simulated cycle counter and the sim/serve layers only record
+//! numbers they already guarantee bit-identical. Plus structural
+//! properties: spans are well-nested per track and never overflow.
+
+use flexv::coordinator::Coordinator;
+use flexv::dory::deploy::deploy;
+use flexv::dory::MemBudget;
+use flexv::isa::IsaVariant;
+use flexv::qnn::layer::Network;
+use flexv::qnn::{Layer, QTensor};
+use flexv::report::artifact::Json;
+use flexv::serve::{AutoscaleConfig, Engine, ServeConfig, SloClass, TraceShape, WorkloadSpec};
+use flexv::sim::WindowCache;
+use flexv::trace::chrome::to_chrome_json;
+use flexv::trace::{check_well_nested, Recorder};
+use flexv::util::proptest::{check, Config};
+use flexv::util::Prng;
+
+fn tiny(name: &str, seed: u64) -> Network {
+    let mut rng = Prng::new(seed);
+    let mut net = Network::new(name, [10, 10, 8], 8);
+    net.push(Layer::conv("c1", [10, 10, 8], 16, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+    net.push(Layer::conv("c2", [10, 10, 16], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+    net
+}
+
+/// A bursty, SLO-classed, autoscaled serve run — the configuration that
+/// exercises every trace emitter at once (batches, exec spans, sheds,
+/// park/wake instants, occupancy counters) — exported as Chrome JSON.
+fn serve_trace_json(workers: usize, fastpath: bool) -> String {
+    let mut ac = AutoscaleConfig::range(1, 3);
+    // park aggressively so the short trace actually scales down
+    ac.idle_cycles_down = 200_000;
+    ac.cooldown_cycles = 0;
+    let cfg = ServeConfig {
+        shards: 3,
+        workers,
+        fastpath,
+        autoscale: Some(ac),
+        ..ServeConfig::default()
+    };
+    let mut eng = Engine::new(cfg);
+    eng.register(tiny("tr-a", 61));
+    eng.register(tiny("tr-b", 62));
+    let mut spec = WorkloadSpec::new(TraceShape::Bursty, 12, 40_000, 2);
+    spec.mix = vec![0.6, 0.4];
+    spec.seed = 0x7ACE;
+    // tight deadlines: the burst must shed something so shed instants
+    // appear in the trace
+    spec.classes = SloClass::standard_tiers(5_000_000);
+    let trace = eng.workload_trace(&spec);
+    eng.run_trace(trace);
+    to_chrome_json(&eng.build_trace())
+}
+
+/// Tentpole guarantee: the exported bytes do not move when the host
+/// execution strategy does.
+#[test]
+fn serve_trace_bytes_are_execution_invariant() {
+    let reference = serve_trace_json(1, true);
+    assert_eq!(reference, serve_trace_json(4, true), "worker count moved the trace bytes");
+    assert_eq!(reference, serve_trace_json(1, false), "fast path moved the trace bytes");
+    assert_eq!(reference, serve_trace_json(4, false), "workers x fastpath moved the trace bytes");
+    // and the bytes are a loadable Chrome trace with actual content
+    let json = Json::parse(&reference).expect("exported trace must be valid JSON");
+    let events = json.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty(), "trace exported no events");
+    let complete = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .count();
+    assert!(complete > 0, "no complete (span) events in the serve trace");
+}
+
+/// Fast-path replay re-emits the very same sim spans it recorded:
+/// window spans are built from the returned `ClusterStats`, which all
+/// replay tiers reproduce bit-exactly, and the host-scope
+/// record/replay outcome instants are excluded from the default export.
+#[test]
+fn fastpath_replay_reemits_identical_sim_spans() {
+    let net = tiny("fp", 63);
+    let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+    let input = QTensor::random(&[10, 10, 8], 8, false, &mut Prng::new(7));
+    let run = |cache: Option<WindowCache>| -> String {
+        let mut coord = Coordinator::new(4);
+        coord.memoize_tiles = false;
+        if let Some(c) = cache {
+            coord.cluster.enable_fastpath_shared(c);
+        }
+        coord.cluster.tracer = Some(Box::default());
+        coord.run(&dep, &input);
+        let mut rec = *coord.cluster.tracer.take().expect("tracer still attached");
+        rec.canonicalize();
+        to_chrome_json(&rec)
+    };
+    let slow = run(None);
+    let cache = WindowCache::default();
+    let recorded = run(Some(cache.clone()));
+    assert!(cache.entries() > 0, "first fast-path run memoized nothing");
+    let replayed = run(Some(cache));
+    assert_eq!(slow, recorded, "recording pass diverged from the slow path");
+    assert_eq!(slow, replayed, "replay pass diverged from the slow path");
+}
+
+/// Every track of a serve trace is a proper call stack: spans nest,
+/// ends never precede begins.
+#[test]
+fn serve_trace_spans_are_well_nested() {
+    let mut eng = Engine::new(ServeConfig { shards: 2, ..ServeConfig::default() });
+    let a = eng.register(tiny("nest-a", 64));
+    let b = eng.register(tiny("nest-b", 65));
+    let trace = eng.synthetic_trace(10, 30_000, &[0.5, 0.5], 0x4E57);
+    eng.run_trace(trace);
+    let rec = eng.build_trace();
+    assert!(a != b && !rec.is_empty());
+    check_well_nested(rec.events()).expect("serve trace must be well-nested");
+}
+
+/// Property: for random single-conv networks, the sim-layer trace is
+/// well-nested, overflow-free, and its canonical form is stable (a
+/// second canonicalize changes nothing).
+#[test]
+fn sim_traces_are_well_nested_for_random_layers() {
+    check(
+        Config { cases: 5, base_seed: 0x7E57 },
+        |rng| {
+            let seed = rng.range(1, 1 << 20) as u64;
+            let cout = [8usize, 16][rng.range(0, 2)];
+            let wbits = [2u8, 4, 8][rng.range(0, 3)];
+            (seed, cout, wbits)
+        },
+        |&(seed, cout, wbits)| {
+            let mut rng = Prng::new(seed);
+            let mut net = Network::new("prop", [8, 8, 8], 8);
+            net.push(Layer::conv("p1", [8, 8, 8], cout, 3, 3, 1, 1, 8, wbits, 8, &mut rng));
+            let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+            let mut coord = Coordinator::new(4);
+            coord.memoize_tiles = false;
+            coord.cluster.tracer = Some(Box::default());
+            let input = QTensor::random(&[8, 8, 8], 8, false, &mut rng);
+            coord.run(&dep, &input);
+            let mut rec: Recorder = *coord.cluster.tracer.take().expect("tracer attached");
+            rec.canonicalize();
+            if rec.is_empty() {
+                return Err("traced run recorded no events".into());
+            }
+            check_well_nested(rec.events())?;
+            let once = to_chrome_json(&rec);
+            rec.canonicalize();
+            if once != to_chrome_json(&rec) {
+                return Err("canonicalize is not idempotent".into());
+            }
+            Ok(())
+        },
+    );
+}

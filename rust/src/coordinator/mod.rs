@@ -406,6 +406,15 @@ impl Coordinator {
         c
     }
 
+    /// A coordinator whose cluster runs under core timing tier `f`
+    /// (functional results are tier-independent; cycle counts are not —
+    /// see [`crate::sim::pipeline`]).
+    pub fn with_fidelity(n_cores: usize, f: crate::sim::CoreFidelity) -> Self {
+        let mut c = Self::new(n_cores);
+        c.cluster.set_fidelity(f);
+        c
+    }
+
     /// Run one inference. `input` must match the deployed network's input
     /// shape/bits.
     pub fn run(&mut self, dep: &Deployment, input: &QTensor) -> RunResult {

@@ -26,7 +26,11 @@
 //!    and the untuned default — always candidate 0 — wins full ties, so
 //!    a tuned plan is *never worse than the analytic plan by the
 //!    measured metric* (`tuned_cycles <= default_cycles` per layer, by
-//!    construction).
+//!    construction). With [`TuneConfig::confirm_fidelity`] set, each
+//!    non-default winner is additionally re-measured against the
+//!    default under the pipeline-accurate core tier
+//!    ([`crate::sim::CoreFidelity::Pipeline`]) and discarded if the win
+//!    does not survive there — search cheap, confirm accurate.
 //!
 //! Results land in a [`NetworkTuning`] (one [`LayerTuning`] per node)
 //! collected in a [`TuneCache`] keyed like the plan cache
@@ -70,11 +74,23 @@ pub struct TuneConfig {
     /// Kernel lowerings to try; `None` = everything the target core can
     /// execute ([`IsaVariant::compatible_lowerings`]).
     pub isas: Option<Vec<IsaVariant>>,
+    /// Re-confirm each layer's winner under a second core timing tier
+    /// ([`crate::sim::CoreFidelity`]) before accepting it. The search
+    /// itself always measures on the layer cluster as built (the fast
+    /// tier — cheap, memoizable); when this is `Some`, any layer whose
+    /// winner is not the untuned default is re-measured against the
+    /// default on a separate cluster at the confirm tier, and the win
+    /// is discarded if it does not survive there. `None` (the default)
+    /// skips the pass entirely. Recorded `tuned_cycles`/
+    /// `default_cycles` are always the search-tier numbers, so the
+    /// `tuned <= default` invariant and the cache text format are
+    /// unchanged.
+    pub confirm_fidelity: Option<crate::sim::CoreFidelity>,
 }
 
 impl Default for TuneConfig {
     fn default() -> Self {
-        TuneConfig { core_counts: vec![4, 8], max_shapes: 2, isas: None }
+        TuneConfig { core_counts: vec![4, 8], max_shapes: 2, isas: None, confirm_fidelity: None }
     }
 }
 
@@ -314,6 +330,11 @@ pub fn tune_network(
     net.validate().expect("invalid network");
     let mut cluster = Cluster::new(max_cores);
     let mut memo = TileMemo::new();
+    // Confirm tier: a separate cluster (and a separate memo — TileMemo
+    // keys assume a single timing tier per memo) that re-measures
+    // non-default winners under `cfg.confirm_fidelity`.
+    let mut confirm: Option<(Cluster, TileMemo)> =
+        cfg.confirm_fidelity.map(|f| (Cluster::with_fidelity(max_cores, f), TileMemo::new()));
     let mut layers = Vec::with_capacity(net.nodes.len());
     for node in &net.nodes {
         let l = &node.layer;
@@ -339,6 +360,31 @@ pub fn tune_network(
         for i in 1..cands.len() {
             if (measured[i], cands[i].analytic) < (measured[best], cands[best].analytic) {
                 best = i;
+            }
+        }
+        // Confirm pass: a non-default winner must also beat the default
+        // when both are re-measured at the confirm tier, else the layer
+        // keeps the untuned default (a tie at the confirm tier keeps
+        // the win — the search tier already broke it).
+        if best != 0 {
+            if let Some((ccl, cmemo)) = confirm.as_mut() {
+                let plan_of = |c: &Candidate| {
+                    &plans.iter().find(|(k, _)| *k == (c.isa, c.shape)).expect("measured").1
+                };
+                let d =
+                    run_layer_memoized(ccl, cands[0].isa, plan_of(&cands[0]), cands[0].n_cores, cmemo)
+                        .cycles;
+                let w = run_layer_memoized(
+                    ccl,
+                    cands[best].isa,
+                    plan_of(&cands[best]),
+                    cands[best].n_cores,
+                    cmemo,
+                )
+                .cycles;
+                if w > d {
+                    best = 0;
+                }
             }
         }
         let c = &cands[best];
@@ -569,6 +615,37 @@ mod tests {
             );
         }
         assert!(a.total_tuned_cycles() <= a.total_default_cycles());
+    }
+
+    #[test]
+    fn pipeline_confirm_is_deterministic_and_keeps_invariants() {
+        use crate::sim::CoreFidelity;
+        let net = small_net(36);
+        let cfg = TuneConfig {
+            confirm_fidelity: Some(CoreFidelity::Pipeline),
+            ..TuneConfig::default()
+        };
+        let a = tune_network(&net, IsaVariant::FlexV, MemBudget::default(), 8, &cfg);
+        let b = tune_network(&net, IsaVariant::FlexV, MemBudget::default(), 8, &cfg);
+        assert_eq!(a, b, "confirmed tuning must stay a pure function of its inputs");
+        // Recorded numbers are search-tier (fast) measurements, so the
+        // cache invariant holds regardless of confirm outcomes...
+        for (i, l) in a.layers.iter().enumerate() {
+            assert!(l.tuned_cycles <= l.default_cycles, "layer {i}");
+        }
+        // ...and the text format roundtrips unchanged.
+        let key = PlanKey::for_network(&net, IsaVariant::FlexV, MemBudget::default(), 8);
+        let mut cache = TuneCache::new();
+        cache.insert(key, a.clone());
+        let parsed = TuneCache::from_text(&cache.to_text()).expect("roundtrip");
+        assert_eq!(parsed.get(key), Some(&a));
+        // Every confirmed winner deploys bit-exactly.
+        let mut rng = Prng::new(37);
+        let input = QTensor::random(&[10, 10, 8], 8, false, &mut rng);
+        let golden_out = golden::run_network(&net, &input);
+        let dep = deploy_tuned(&net, IsaVariant::FlexV, MemBudget::default(), &a);
+        let mut coord = Coordinator::new(8);
+        assert_eq!(coord.run(&dep, &input).output, golden_out.last().unwrap().data);
     }
 
     #[test]

@@ -26,8 +26,11 @@ COMMANDS:
   dump-kernel <isa> <aXwY> [n]  disassemble the generated MatMul kernel
                            (first n instructions, default 60; cf. Fig. 5)
   run-net <isa> <mnv1-8b|mnv1-8b4b|resnet20-4b2b> [--quick] [--no-fastpath]
-          [--trace-out FILE]
-                    run one network end-to-end; --trace-out writes a
+          [--fidelity fast|pipeline] [--trace-out FILE]
+                    run one network end-to-end; --fidelity picks the
+                    core timing tier (pipeline adds Mac&Load write-back
+                    port and sub-word realignment stalls; outputs are
+                    bit-identical across tiers); --trace-out writes a
                     Chrome-trace JSON (load in ui.perfetto.dev) of the
                     cycle-domain timeline: per-core kernel spans with
                     stall counters, DMA spans, per-layer spans
@@ -39,16 +42,21 @@ COMMANDS:
                     autotuner and explains each per-layer win (what
                     changed, which stalls went away). <model> may be a
                     unique prefix, e.g. `profile resnet20`
-  tune [<model>|all] [--isa I] [--full] [--out FILE]
+  tune [<model>|all] [--isa I] [--full] [--fidelity fast|pipeline]
+       [--out FILE]
                     simulator-in-the-loop autotuner: per layer, measure
                     candidate plans (tile shapes, kernel lowerings incl.
                     sw-unpack, core counts 4/8) on the cluster simulator
                     and pick by measured cycles; prints the per-layer
                     wins and the measured default → tuned totals (tuned
                     is never worse — the analytic default is always a
-                    candidate). --out persists the TuneCache as text
+                    candidate). --fidelity pipeline re-confirms each
+                    non-default winner under the pipeline-accurate core
+                    tier and drops wins that do not survive there.
+                    --out persists the TuneCache as text
   serve-bench [--shards N] [--requests N] [--max-batch N] [--full] [--exact]
               [--workers N] [--sequential] [--no-fastpath] [--tuned]
+              [--fidelity fast|pipeline]
               [--trace steady|poisson|bursty|diurnal] [--slo]
               [--autoscale MIN:MAX] [--mean-gap CYCLES] [--seed N]
               [--trace-out FILE]
@@ -77,12 +85,16 @@ COMMANDS:
                     across --workers and fast-path settings
   bench-report [--suite kernels|e2e|autotune|serve|all] [--out FILE]
                [--out-dir DIR] [--full] [--workers N]
+               [--fidelity fast|pipeline]
                     run benchmark suites and write machine-readable
                     BENCH_<suite>.json artifacts (git rev, seed, sim
                     config, one row per metric: MAC/cycle, TOPS/W,
                     cycles, uJ/req, p50/p99, tuned-vs-default deltas).
                     Deterministic: two runs on one commit emit
-                    identical bytes; --workers moves wall-clock only
+                    identical bytes; --workers moves wall-clock only.
+                    --fidelity pipeline re-measures the kernels suite
+                    under the pipeline-accurate core tier (keep its
+                    artifact out of baselines/ — those are fast-tier)
   regress [--suite ...] [--baseline DIR] [--current DIR]
           [--tol-cycles N] [--tol-power PCT] [--bless] [--full]
                     compare fresh artifacts (or --current DIR) against
@@ -135,6 +147,17 @@ fn parse_isa(s: &str) -> IsaVariant {
         eprintln!("unknown ISA '{s}'");
         usage()
     })
+}
+
+/// Core timing tier from `--fidelity fast|pipeline` (default fast).
+fn parse_fidelity(args: &[String]) -> flexv::sim::CoreFidelity {
+    match flag_str(args, "--fidelity") {
+        None => flexv::sim::CoreFidelity::Fast,
+        Some(s) => flexv::sim::CoreFidelity::from_name(s).unwrap_or_else(|| {
+            eprintln!("unknown fidelity '{s}' (expected fast | pipeline)");
+            usage()
+        }),
+    }
 }
 
 fn parse_prec(s: &str) -> Precision {
@@ -203,7 +226,7 @@ fn main() {
             });
             let fastpath = !args.iter().any(|a| a == "--no-fastpath");
             let trace_out = flag_str(&args, "--trace-out");
-            run_net_verbose(isa, &net, fastpath, trace_out);
+            run_net_verbose(isa, &net, fastpath, parse_fidelity(&args), trace_out);
         }
         Some("profile") => run_profile(&args),
         Some("tune") => run_tune(&args),
@@ -262,6 +285,7 @@ fn main() {
                 fastpath,
                 autoscale,
                 tuned,
+                fidelity: parse_fidelity(&args),
                 ..ServeConfig::default()
             };
             let mut eng = Engine::new(cfg);
@@ -390,7 +414,9 @@ fn selected_suites(args: &[String]) -> Vec<&'static str> {
     }
 }
 
-/// Shared `--full` / `--workers` knobs of the artifact suites.
+/// Shared `--full` / `--workers` / `--fidelity` knobs of the artifact
+/// suites (baselines are fast-tier — gate pipeline artifacts only
+/// against pipeline artifacts).
 fn bench_options(args: &[String]) -> flexv::report::bench::BenchOptions {
     flexv::report::bench::BenchOptions {
         full: args.iter().any(|a| a == "--full"),
@@ -399,6 +425,7 @@ fn bench_options(args: &[String]) -> flexv::report::bench::BenchOptions {
         } else {
             flag_val(args, "--workers").unwrap_or(0)
         },
+        fidelity: parse_fidelity(args),
     }
 }
 
@@ -545,7 +572,13 @@ fn run_tune(args: &[String]) {
     };
     let budget = MemBudget::default();
     let n_cores = flexv::CLUSTER_CORES;
-    let cfg = TuneConfig::default();
+    let fidelity = parse_fidelity(args);
+    let cfg = TuneConfig {
+        // Search on the fast tier, confirm non-default winners at the
+        // requested tier (fast == no confirm pass).
+        confirm_fidelity: (fidelity != flexv::sim::CoreFidelity::Fast).then_some(fidelity),
+        ..TuneConfig::default()
+    };
     let mut cache = TuneCache::new();
     for name in names {
         let net = flexv::models::by_name(name, hw).unwrap_or_else(|| {
@@ -714,6 +747,7 @@ fn run_net_verbose(
     isa: IsaVariant,
     net: &flexv::qnn::Network,
     fastpath: bool,
+    fidelity: flexv::sim::CoreFidelity,
     trace_out: Option<&str>,
 ) {
     use flexv::coordinator::Coordinator;
@@ -730,6 +764,10 @@ fn run_net_verbose(
     } else {
         Coordinator::new(flexv::CLUSTER_CORES)
     };
+    coord.cluster.set_fidelity(fidelity);
+    if fidelity != flexv::sim::CoreFidelity::Fast {
+        println!("core timing tier: {fidelity}");
+    }
     // tile memoization advances the clock only for measured
     // representatives — a trace needs the full cycle-domain timeline
     coord.memoize_tiles = trace_out.is_none();

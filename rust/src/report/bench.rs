@@ -25,7 +25,7 @@
 //!   and `--workers 4` and diffs the artifacts byte-for-byte.
 
 use super::artifact::{BenchArtifact, MetricRow, MetricSource, RunMeta};
-use super::workloads::{conv_fig7_stats, matmul_table3_stats};
+use super::workloads::{conv_fig7_stats_fid, matmul_table3_stats_fid};
 use super::{table4_cells, E2eCell};
 use crate::dory::autotune::{tune_network, TuneConfig, TunedModelMetrics};
 use crate::dory::MemBudget;
@@ -35,7 +35,7 @@ use crate::qnn::Precision;
 use crate::serve::{
     standard_mix, AutoscaleConfig, Engine, ServeConfig, SloClass, TraceShape, WorkloadSpec,
 };
-use crate::sim::ClusterStats;
+use crate::sim::{ClusterStats, CoreFidelity};
 
 /// The suites `bench-report` / `regress` know, in canonical order.
 pub const SUITE_NAMES: [&str; 4] = ["kernels", "e2e", "autotune", "serve"];
@@ -50,11 +50,18 @@ pub struct BenchOptions {
     pub full: bool,
     /// Host threads for the serve suite (0 = auto). Wall-clock only.
     pub workers: usize,
+    /// Core timing tier of the kernels suite's clusters
+    /// ([`crate::sim::CoreFidelity`]): MAC counts are tier-independent,
+    /// cycle rows are not. The default fast tier keeps the artifact
+    /// byte-identical to the committed baselines; the pipeline tier's
+    /// artifact is compared across worker counts, never against the
+    /// fast baseline.
+    pub fidelity: CoreFidelity,
 }
 
 impl Default for BenchOptions {
     fn default() -> Self {
-        BenchOptions { full: false, workers: 0 }
+        BenchOptions { full: false, workers: 0, fidelity: CoreFidelity::Fast }
     }
 }
 
@@ -226,14 +233,20 @@ impl MetricSource for KernelCellSource {
 /// × precision, 48 short cluster simulations.
 pub fn kernels_suite(opts: &BenchOptions) -> BenchArtifact {
     let em = EnergyModel::default();
-    let mut art = BenchArtifact::new("kernels", meta(0x7AB3, opts));
+    let mut run_meta = meta(0x7AB3, opts);
+    // Mark non-default tiers in the metadata only: the default fast
+    // artifact must stay byte-identical to the committed baselines.
+    if opts.fidelity != CoreFidelity::Fast {
+        run_meta.sim = format!("{}, {} core tier", run_meta.sim, opts.fidelity);
+    }
+    let mut art = BenchArtifact::new("kernels", run_meta);
     for kernel in ["matmul", "conv"] {
         for isa in IsaVariant::ALL {
             for prec in Precision::grid() {
                 let stats = if kernel == "matmul" {
-                    matmul_table3_stats(isa, prec)
+                    matmul_table3_stats_fid(isa, prec, opts.fidelity)
                 } else {
-                    conv_fig7_stats(isa, prec)
+                    conv_fig7_stats_fid(isa, prec, opts.fidelity)
                 };
                 let tops_per_watt = em.tops_per_watt(isa, &stats, prec.a_bits.max(prec.w_bits));
                 let (paper_macs, paper_eff) = paper_kernel_refs(kernel, isa, prec);

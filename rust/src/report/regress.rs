@@ -15,8 +15,16 @@
 //! a failure (a number silently disappeared); a new current-only metric
 //! is reported but does not fail (additive evolution). Baselines marked
 //! `pending` carry paper targets instead of measured values: they never
-//! gate, they only feed the reproduction-distance report, until
-//! `regress --bless` pins them to measured numbers.
+//! gate, they only feed the reproduction-distance report
+//! ([`paper_distance`]), until `regress --bless` pins them to measured
+//! numbers.
+//!
+//! Baselines are always fast-tier measurements; a pipeline-tier artifact
+//! (`bench-report --fidelity pipeline`, see [`crate::sim::pipeline`]) is
+//! never compared against them. Instead [`paper_distance`] renders each
+//! artifact's own paper-anchored rows, so running the kernels suite once
+//! per tier yields a fast-vs-pipeline-vs-paper view of every Table III
+//! cell (CI's `pipeline-crosscheck` job prints both).
 
 use std::collections::BTreeMap;
 

@@ -11,7 +11,7 @@ use crate::kernels::im2col::ConvGeom;
 use crate::kernels::matmul::{gen_matmul, MatMulTask};
 use crate::kernels::requant::RequantCfg;
 use crate::qnn::{Network, Precision, QTensor};
-use crate::sim::{Cluster, ClusterStats, TCDM_BASE};
+use crate::sim::{Cluster, ClusterStats, CoreFidelity, TCDM_BASE};
 use crate::util::Prng;
 
 /// Benchmark tile geometry of Fig. 7 / Table III.
@@ -22,7 +22,19 @@ pub fn bench_geom(a_bits: u8) -> ConvGeom {
 /// Table III: the conv expressed as its MatMul (im2col'd A resident in
 /// TCDM): M = 256 output pixels, K = 288, N = 64 filters.
 pub fn matmul_table3_stats(isa: IsaVariant, prec: Precision) -> ClusterStats {
+    matmul_table3_stats_fid(isa, prec, CoreFidelity::Fast)
+}
+
+/// [`matmul_table3_stats`] under an explicit core timing tier (the
+/// `bench-report --fidelity` path; [`CoreFidelity::Fast`] is
+/// bit-identical to the plain form).
+pub fn matmul_table3_stats_fid(
+    isa: IsaVariant,
+    prec: Precision,
+    fid: CoreFidelity,
+) -> ClusterStats {
     let mut cl = Cluster::pulp();
+    cl.set_fidelity(fid);
     matmul_table3_stats_on(&mut cl, isa, prec)
 }
 
@@ -80,6 +92,13 @@ pub fn matmul_table3_stats_on(cl: &mut Cluster, isa: IsaVariant, prec: Precision
 /// Fig. 7: the full convolution (im2col + MatMul + requant) on the
 /// benchmark tile.
 pub fn conv_fig7_stats(isa: IsaVariant, prec: Precision) -> ClusterStats {
+    conv_fig7_stats_fid(isa, prec, CoreFidelity::Fast)
+}
+
+/// [`conv_fig7_stats`] under an explicit core timing tier (the
+/// `bench-report --fidelity` path; [`CoreFidelity::Fast`] is
+/// bit-identical to the plain form).
+pub fn conv_fig7_stats_fid(isa: IsaVariant, prec: Precision, fid: CoreFidelity) -> ClusterStats {
     let mut rng = Prng::new(0xF160 + prec.a_bits as u64 * 10 + prec.w_bits as u64);
     let g = bench_geom(prec.a_bits);
     let e_bits = crate::dory::tiler::buf_bits(&g, isa);
@@ -109,6 +128,7 @@ pub fn conv_fig7_stats(isa: IsaVariant, prec: Precision) -> ClusterStats {
         "fig7 workload must fit TCDM ({isa:?} {prec})"
     );
     let mut cl = Cluster::pulp();
+    cl.set_fidelity(fid);
     let x = QTensor::random(&[g.h, g.w, g.cin], prec.a_bits, false, &mut rng);
     let w = QTensor::random(
         &[g.cout, w_pitch as usize * 8 / prec.w_bits as usize],
@@ -162,6 +182,20 @@ mod tests {
         assert!(a4w4 > 35.0 && a4w4 < 64.0, "a4w4 {a4w4} (paper 50.6)");
         assert!(a8w8 > 20.0 && a8w8 < 32.0, "a8w8 {a8w8} (paper 26.9)");
         assert!(a2w2 > a4w4 && a4w4 > a8w8);
+    }
+
+    #[test]
+    fn pipeline_tier_never_speeds_up_table3() {
+        // Mac&Load inner loops dodge both pipeline-only hazards by
+        // design (§III: the NN-RF has its own write port), so the
+        // refined tier can only add cycles — and the functional result
+        // (MAC count) is tier-independent.
+        for prec in [Precision::new(2, 2), Precision::new(4, 4), Precision::new(8, 8)] {
+            let f = matmul_table3_stats(IsaVariant::FlexV, prec);
+            let p = matmul_table3_stats_fid(IsaVariant::FlexV, prec, CoreFidelity::Pipeline);
+            assert_eq!(f.total_macs(), p.total_macs(), "{prec}");
+            assert!(p.cycles >= f.cycles, "{prec}: pipeline {} < fast {}", p.cycles, f.cycles);
+        }
     }
 
     #[test]

@@ -86,6 +86,7 @@ use crate::isa::IsaVariant;
 use crate::power::EnergyModel;
 use crate::qnn::layer::Network;
 use crate::qnn::QTensor;
+use crate::sim::CoreFidelity;
 use crate::util::Prng;
 
 /// Fleet configuration.
@@ -117,6 +118,13 @@ pub struct ServeConfig {
     /// Re-simulate every fast-path replay and panic on divergence (soak
     /// tests; implies heavy slowdown; no-op without `fastpath`).
     pub crosscheck: bool,
+    /// Core timing tier of every shard cluster
+    /// ([`crate::sim::CoreFidelity`]). Functional results — and with
+    /// them the whole determinism contract — are tier-independent;
+    /// cycle counts (latencies, deadline misses, occupancy) are not.
+    /// With `tuned`, a non-fast tier also makes the autotuner confirm
+    /// each winner at that tier before accepting it.
+    pub fidelity: CoreFidelity,
     /// Elastic shard pool: walk the active shard count between
     /// `min_shards` and `max_shards` from queue pressure and idleness
     /// ([`autoscale`]). `None` keeps all `shards` active (static fleet).
@@ -144,6 +152,7 @@ impl Default for ServeConfig {
             workers: 0,
             fastpath: true,
             crosscheck: false,
+            fidelity: CoreFidelity::Fast,
             autoscale: None,
             tuned: false,
             isa: IsaVariant::FlexV,
@@ -219,8 +228,13 @@ impl Engine {
         let windows = crate::sim::fastpath::WindowCache::default();
         let mut shards: Vec<Shard> = (0..cfg.shards)
             .map(|i| {
-                let mut s =
-                    Shard::new(i, cfg.n_cores, cfg.exact, cfg.fastpath.then(|| windows.clone()));
+                let mut s = Shard::new(
+                    i,
+                    cfg.n_cores,
+                    cfg.exact,
+                    cfg.fastpath.then(|| windows.clone()),
+                    cfg.fidelity,
+                );
                 if cfg.crosscheck {
                     s.set_crosscheck(true);
                 }
@@ -451,14 +465,15 @@ impl Engine {
                 let dep = if self.cfg.tuned {
                     // Tune once per model (deterministic, cached
                     // fleet-wide), then compile the tuned plan once.
+                    // The search measures on the fast tier; a non-fast
+                    // fleet re-confirms each winner at its own tier.
+                    let tune_cfg = TuneConfig {
+                        confirm_fidelity: (self.cfg.fidelity != CoreFidelity::Fast)
+                            .then_some(self.cfg.fidelity),
+                        ..TuneConfig::default()
+                    };
                     let tuning = self.tune.get_or_tune(entry.key, || {
-                        autotune::tune_network(
-                            &entry.net,
-                            isa,
-                            budget,
-                            n_cores,
-                            &TuneConfig::default(),
-                        )
+                        autotune::tune_network(&entry.net, isa, budget, n_cores, &tune_cfg)
                     });
                     self.cache
                         .get_or_build(entry.key, || deploy_tuned(&entry.net, isa, budget, tuning))
@@ -841,6 +856,45 @@ mod tests {
         // the tuned report carries the autotune line, the untuned not
         assert!(mt.render().contains("autotune:"), "{}", mt.render());
         assert!(!mu.render().contains("autotune:"));
+    }
+
+    /// The pipeline timing tier changes cycle numbers only: the served
+    /// outputs are bit-identical to the fast tier, and no request
+    /// executes in fewer cycles than it did there.
+    #[test]
+    fn pipeline_fidelity_changes_timing_never_outputs() {
+        let run = |fidelity: CoreFidelity| {
+            let cfg = ServeConfig { fidelity, exact: true, ..small_cfg() };
+            let mut eng = Engine::new(cfg);
+            let a = eng.register(tiny("fid-a", 50));
+            let b = eng.register(tiny("fid-b", 51));
+            let mut rng = Prng::new(52);
+            let trace: Vec<TraceItem> = (0..6)
+                .map(|i| {
+                    item(
+                        i as u64 * 70,
+                        if i % 2 == 0 { a } else { b },
+                        0,
+                        QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+                    )
+                })
+                .collect();
+            eng.run_trace(trace);
+            let mut comps: Vec<(u64, Vec<u8>, u64)> = eng
+                .completions()
+                .iter()
+                .map(|c| (c.id, c.output.clone(), c.exec_cycles))
+                .collect();
+            comps.sort();
+            comps
+        };
+        let fast = run(CoreFidelity::Fast);
+        let pipe = run(CoreFidelity::Pipeline);
+        assert_eq!(fast.len(), pipe.len());
+        for ((fid, fout, fcyc), (pid, pout, pcyc)) in fast.iter().zip(&pipe) {
+            assert_eq!((fid, fout), (pid, pout), "fidelity changed an output");
+            assert!(pcyc >= fcyc, "request {pid}: pipeline {pcyc} < fast {fcyc}");
+        }
     }
 
     #[test]

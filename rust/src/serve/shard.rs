@@ -32,7 +32,7 @@ use crate::dory::deploy::Deployment;
 use crate::dory::PlanKey;
 use crate::power::EnergyModel;
 use crate::sim::fastpath::WindowCache;
-use crate::sim::Cluster;
+use crate::sim::{Cluster, CoreFidelity};
 
 use super::request::{Completion, Request};
 
@@ -70,9 +70,20 @@ pub struct Shard {
 impl Shard {
     /// `fastpath: Some(cache)` enables the steady-state fast path on
     /// this shard's cluster; the engine passes every shard a clone of
-    /// one [`WindowCache`], so recordings pool across the fleet.
-    pub fn new(id: usize, n_cores: usize, exact: bool, fastpath: Option<WindowCache>) -> Self {
+    /// one [`WindowCache`], so recordings pool across the fleet (the
+    /// window memo is fidelity-keyed, so mixed-tier fleets sharing one
+    /// cache stay correct). `fidelity` picks the cluster's core timing
+    /// tier ([`crate::sim::CoreFidelity`]) — outputs are
+    /// tier-independent, cycle counts are not.
+    pub fn new(
+        id: usize,
+        n_cores: usize,
+        exact: bool,
+        fastpath: Option<WindowCache>,
+        fidelity: CoreFidelity,
+    ) -> Self {
         let mut cluster = Cluster::new(n_cores);
+        cluster.set_fidelity(fidelity);
         if let Some(cache) = fastpath {
             cluster.enable_fastpath_shared(cache);
         }
@@ -237,7 +248,8 @@ mod tests {
         let budget = MemBudget::default();
         let dep = deploy(&net, IsaVariant::FlexV, budget);
         let key = PlanKey::for_network(&net, IsaVariant::FlexV, budget, 8);
-        let mut shard = Shard::new(0, 8, false, Some(WindowCache::default()));
+        let mut shard =
+            Shard::new(0, 8, false, Some(WindowCache::default()), CoreFidelity::Fast);
         let em = EnergyModel::default();
         let mut rng = Prng::new(4);
         let mk = |id: u64, rng: &mut Prng| Request {

@@ -12,6 +12,7 @@ use super::core::{Core, CoreState};
 use super::dma::{Dma, DmaRequest};
 use super::fastpath::{self, FastEntry, FastPath, WindowOutcome};
 use super::mem::ClusterMem;
+use super::pipeline::CoreFidelity;
 use super::stats::{ClusterStats, CoreStats};
 use crate::isa::Program;
 use crate::trace::Recorder;
@@ -32,6 +33,10 @@ pub struct Cluster {
     /// — see EXPERIMENTS.md §Perf).
     want: Vec<Option<usize>>,
     granted: Vec<bool>,
+    /// Core timing tier ([`CoreFidelity::Fast`] by default). Part of the
+    /// fast-path structural key: windows recorded under one tier never
+    /// replay under the other.
+    fidelity: CoreFidelity,
     /// Steady-state window memo (None = every window cycle-simulated).
     fastpath: Option<Box<FastPath>>,
     /// Cycle-domain trace sink (None = tracing disabled, zero overhead).
@@ -58,6 +63,7 @@ impl Cluster {
             max_cycles: 20_000_000_000,
             want: vec![None; n_cores],
             granted: vec![false; n_cores],
+            fidelity: CoreFidelity::Fast,
             fastpath: None,
             tracer: None,
         }
@@ -66,6 +72,31 @@ impl Cluster {
     /// Standard 8-core cluster.
     pub fn pulp() -> Self {
         Self::new(CLUSTER_CORES)
+    }
+
+    /// A cluster whose cores run under timing tier `f` (see
+    /// [`super::pipeline`]).
+    pub fn with_fidelity(n_cores: usize, f: CoreFidelity) -> Self {
+        let mut cl = Self::new(n_cores);
+        cl.set_fidelity(f);
+        cl
+    }
+
+    /// Switch the core timing tier fleet-wide. Functional results are
+    /// tier-independent; cycle counts are not — callers comparing
+    /// measurements must keep the tier fixed across them (the autotuner
+    /// measures on [`CoreFidelity::Fast`] and confirms winners on a
+    /// separate pipeline cluster for exactly this reason).
+    pub fn set_fidelity(&mut self, f: CoreFidelity) {
+        self.fidelity = f;
+        for c in &mut self.cores {
+            c.set_fidelity(f);
+        }
+    }
+
+    /// The active core timing tier.
+    pub fn fidelity(&self) -> CoreFidelity {
+        self.fidelity
     }
 
     /// Enable the steady-state fast path with a private window cache
@@ -116,6 +147,9 @@ impl Cluster {
         self.mem.trace = None;
         let n = self.cores.len();
         self.cores = (0..n).map(Core::new).collect();
+        for c in &mut self.cores {
+            c.set_fidelity(self.fidelity);
+        }
         self.dma = Dma::new();
         self.rr = 0;
         self.cycle = 0;
@@ -285,6 +319,8 @@ impl Cluster {
                     ("conflict_stalls", Arg::U64(c.conflict_stalls)),
                     ("loaduse_stalls", Arg::U64(c.loaduse_stalls)),
                     ("branch_stalls", Arg::U64(c.branch_stalls)),
+                    ("wbport_stalls", Arg::U64(c.wbport_stalls)),
+                    ("align_stalls", Arg::U64(c.align_stalls)),
                     ("barrier_wait", Arg::U64(c.barrier_cycles)),
                 ],
             );
@@ -310,10 +346,26 @@ impl Cluster {
     }
 
     /// The cycle-by-cycle simulation loop.
+    ///
+    /// Under [`CoreFidelity::Pipeline`], the cores charge their extra
+    /// hazard bubbles (WB-port contention, sub-word realignment) into
+    /// their modeled per-core cycle counts at retire time without
+    /// inserting ticks (see [`super::pipeline`] for why). The window's
+    /// wall cycles are then the tick span plus the *slowest* core's
+    /// extra charges — the lock-step cluster finishes when its most
+    /// delayed core does — and the global clock advances by the same
+    /// amount so window boundaries stay consistent with the memoized
+    /// replay path.
     fn run_slow(&mut self) -> ClusterStats {
         let start_cycle = self.cycle;
         let start_dma_busy = self.dma.busy_cycles;
         let start_dma_bytes = self.dma.bytes_moved;
+        let pipe_base: Option<Vec<u64>> = (self.fidelity == CoreFidelity::Pipeline).then(|| {
+            self.cores
+                .iter()
+                .map(|c| c.stats.wbport_stalls + c.stats.align_stalls)
+                .collect()
+        });
         while self.step() {
             if self.max_cycles > 0 && self.cycle - start_cycle > self.max_cycles {
                 panic!(
@@ -322,8 +374,20 @@ impl Cluster {
                 );
             }
         }
+        let mut cycles = self.cycle - start_cycle;
+        if let Some(base) = pipe_base {
+            let window_extra = self
+                .cores
+                .iter()
+                .zip(&base)
+                .map(|(c, b)| c.stats.wbport_stalls + c.stats.align_stalls - b)
+                .max()
+                .unwrap_or(0);
+            self.cycle += window_extra;
+            cycles += window_extra;
+        }
         ClusterStats {
-            cycles: self.cycle - start_cycle,
+            cycles,
             cores: self.cores.iter().map(|c| c.stats).collect(),
             dma_busy_cycles: self.dma.busy_cycles - start_dma_busy,
             dma_bytes: self.dma.bytes_moved - start_dma_bytes,
@@ -499,6 +563,7 @@ impl Cluster {
             max_cycles: self.max_cycles,
             want: vec![None; self.cores.len()],
             granted: vec![false; self.cores.len()],
+            fidelity: self.fidelity,
             fastpath: None,
             tracer: None,
         }
@@ -744,6 +809,95 @@ mod tests {
         let a = fastpath_round(&mut slow, 11);
         let b = fastpath_round(&mut fast, 11);
         assert_eq!(a, b);
+    }
+
+    /// Both fidelity tiers agree bit-for-bit on architectural state;
+    /// the pipeline tier's window cycles are the fast tier's plus the
+    /// slowest core's hazard charges, and the memo keyed per tier
+    /// replays each tier's own timing.
+    #[test]
+    fn pipeline_fidelity_state_identical_cycles_inflated() {
+        use crate::isa::{Csr, MlChannel};
+        use crate::sim::pipeline::CoreFidelity;
+        // Core program with both pipeline-only hazards: a sub-word
+        // load-use pair and an NN-RF WB load followed by a GP load.
+        fn prog(i: usize) -> Program {
+            let mut p = Program::new("hazards");
+            p.push(Instr::CsrW { csr: Csr::WStride, imm: 4 });
+            p.push(Instr::CsrW { csr: Csr::WBase, imm: (TCDM_BASE + 4 * i as u32) as i32 });
+            p.push(Instr::Li { rd: 1, imm: (TCDM_BASE + 64 + 4 * i as u32) as i32 });
+            p.push(Instr::NnLoad { ch: MlChannel::Wgt, slot: 0 });
+            p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+            p.push(Instr::Lbu { rd: 3, base: 1, off: 0, post_inc: 0 });
+            p.push(Instr::AluI { op: AluOp::Add, rd: 4, rs1: 3, imm: 1 });
+            p.push(Instr::Sw { rs: 4, base: 1, off: 128, post_inc: 0 });
+            p.push(Instr::Halt);
+            p
+        }
+        let run = |fid: CoreFidelity| {
+            let mut cl = Cluster::with_fidelity(2, fid);
+            for i in 0..8u32 {
+                cl.mem.store_u32(TCDM_BASE + 4 * i, 0x0101_0101 * (i + 1));
+                cl.mem.store_u32(TCDM_BASE + 64 + 4 * i, 7 + i);
+            }
+            cl.load_programs(vec![prog(0), prog(1)]);
+            let stats = cl.run();
+            (stats, cl)
+        };
+        let (fast, cl_f) = run(CoreFidelity::Fast);
+        let (pipe, cl_p) = run(CoreFidelity::Pipeline);
+        // identical architectural state
+        assert!(cl_f.mem.tcdm == cl_p.mem.tcdm, "TCDM diverged between tiers");
+        for (a, b) in cl_f.cores.iter().zip(&cl_p.cores) {
+            assert_eq!(a.regs, b.regs);
+            assert_eq!(a.nnrf, b.nnrf);
+        }
+        // the hazards actually fired, and only on the pipeline tier
+        for c in &fast.cores {
+            assert_eq!((c.wbport_stalls, c.align_stalls), (0, 0));
+        }
+        for c in &pipe.cores {
+            assert_eq!(c.wbport_stalls, 1, "{c:?}");
+            assert_eq!(c.align_stalls, 1, "{c:?}");
+        }
+        // window cycles = fast tick span + slowest core's extra charges
+        let extra = pipe
+            .cores
+            .iter()
+            .map(|c| c.wbport_stalls + c.align_stalls)
+            .max()
+            .unwrap();
+        assert_eq!(pipe.cycles, fast.cycles + extra);
+        assert_eq!(cl_p.cycle, cl_f.cycle + extra, "global clock must track the charges");
+        // per-core accounting identity holds on both tiers
+        for s in [&fast, &pipe] {
+            for c in &s.cores {
+                assert_eq!(c.cycles, c.instrs + c.stall_cycles() + c.barrier_cycles);
+            }
+        }
+        // reset preserves the tier
+        let mut cl = cl_p;
+        cl.reset();
+        assert_eq!(cl.fidelity(), CoreFidelity::Pipeline);
+    }
+
+    /// The fast-path memo distinguishes tiers: the same window replayed
+    /// under each fidelity reproduces that fidelity's own cycle count.
+    #[test]
+    fn fastpath_memo_is_fidelity_keyed() {
+        use crate::sim::pipeline::CoreFidelity;
+        let mut cl = Cluster::with_fidelity(1, CoreFidelity::Pipeline);
+        cl.set_fastpath_crosscheck(true);
+        let (d1, k1, y1) = fastpath_round(&mut cl, 100);
+        let (d2, k2, y2) = fastpath_round(&mut cl, 100);
+        assert_eq!((d1, k1, y1), (d2, k2, y2), "pipeline-tier replay must be bit-exact");
+        assert!(cl.fastpath().unwrap().pure_hits >= 2);
+        // A fast-tier cluster sharing nothing still yields the same
+        // functional output with cycles <= the pipeline tier's.
+        let mut fast = Cluster::new(1);
+        let (df, kf, yf) = fastpath_round(&mut fast, 100);
+        assert_eq!(yf, y1);
+        assert!(df <= d1 && kf <= k1, "fast tier may never exceed pipeline cycles");
     }
 
     #[test]

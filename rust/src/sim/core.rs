@@ -10,9 +10,17 @@
 //! [`Core::mem_request`] peeks whether the next instruction needs a TCDM
 //! port (and which bank), the cluster arbitrates, then [`Core::tick`]
 //! either retires the instruction or records a conflict stall.
+//!
+//! Timing fidelity is tiered ([`CoreFidelity`], see [`super::pipeline`]):
+//! the fast tier charges the flat RI5CY costs above; the pipeline tier
+//! additionally charges Mac&Load write-back port contention and sub-word
+//! realignment bubbles — as retire-time modeled-cycle charges, never as
+//! extra ticks, so functional behavior and arbitration are identical
+//! across tiers.
 
 use super::mem::ClusterMem;
 use super::mlc::MlcChannel;
+use super::pipeline::{is_gp_lsu, is_nn_wb_load, CoreFidelity, PipeState};
 use super::stats::CoreStats;
 use crate::isa::{
     AluOp, Cond, Csr, Instr, MlChannel, MlUpdate, Program, SimdFmt,
@@ -58,6 +66,12 @@ pub struct Core {
     pending_stall: u32,
     /// Destination of the load retired in the previous cycle (load-use).
     hazard_reg: Option<u8>,
+    /// Timing tier this core charges (functional semantics are tier-
+    /// independent; see [`super::pipeline`]).
+    fidelity: CoreFidelity,
+    /// Pipeline-tier micro-state (WB-port claim, sub-word hazard flavor);
+    /// stays default in the fast tier.
+    pipe: PipeState,
     /// Cached TCDM request of the instruction at `pc` (recomputed after
     /// every architectural change — saves a full decode per cycle, see
     /// EXPERIMENTS.md §Perf).
@@ -80,9 +94,17 @@ impl Core {
             state: CoreState::Halted,
             pending_stall: 0,
             hazard_reg: None,
+            fidelity: CoreFidelity::Fast,
+            pipe: PipeState::default(),
             cached_req: None,
             stats: CoreStats::default(),
         }
+    }
+
+    /// Select the timing tier (the cluster applies it fleet-wide; see
+    /// [`super::Cluster::set_fidelity`]).
+    pub(crate) fn set_fidelity(&mut self, f: CoreFidelity) {
+        self.fidelity = f;
     }
 
     /// Load a program and reset architectural state (keeps stats).
@@ -93,6 +115,7 @@ impl Core {
         self.state = CoreState::Running;
         self.pending_stall = 0;
         self.hazard_reg = None;
+        self.pipe = PipeState::default();
         self.refresh_req();
     }
 
@@ -193,6 +216,9 @@ impl Core {
         self.stats.cycles += 1;
         if self.pending_stall > 0 {
             self.pending_stall -= 1;
+            // Branch bubbles drain the pipe; no WB-port claim survives
+            // them (the claimant retired at least a cycle ago).
+            self.pipe.wb_load_armed = false;
             return false;
         }
         let instr = self.prog.instrs[self.pc];
@@ -201,13 +227,39 @@ impl Core {
             if reads_reg(&instr, h) {
                 self.hazard_reg = None;
                 self.stats.loaduse_stalls += 1;
+                if self.fidelity == CoreFidelity::Pipeline {
+                    // Sub-word loads realign in WB: their consumer pays a
+                    // 2-cycle penalty. The extra cycle is charged into the
+                    // modeled count only — never as a tick — so the
+                    // cluster's arbitration is tier-independent (see
+                    // super::pipeline).
+                    if self.pipe.hazard_subword {
+                        self.stats.align_stalls += 1;
+                        self.stats.cycles += 1;
+                    }
+                    // The bubble also releases any WB-port claim.
+                    self.pipe = PipeState::default();
+                }
                 return false;
             }
         }
         self.hazard_reg = None;
         if instr.is_mem() && !mem_granted {
             self.stats.conflict_stalls += 1;
+            // A conflict bubble separates the WB slots too.
+            self.pipe.wb_load_armed = false;
             return false;
+        }
+        if self.fidelity == CoreFidelity::Pipeline {
+            // Mac&Load WB-port contention: a GP-LSU memory op retiring
+            // cycle-adjacent behind an NN-RF write-back load bubbles once
+            // (modeled-cycle charge; same no-tick rule as above).
+            if self.pipe.wb_load_armed && is_gp_lsu(&instr) {
+                self.stats.wbport_stalls += 1;
+                self.stats.cycles += 1;
+            }
+            self.pipe.wb_load_armed = is_nn_wb_load(&instr);
+            self.pipe.hazard_subword = matches!(instr, Instr::Lbu { .. });
         }
         self.execute(instr, mem);
         true
@@ -427,10 +479,12 @@ impl Core {
                 self.id
             );
         }
-        // Pipeline micro-state (branch bubbles, load-use hazards) is not
-        // modeled functionally; normalize it to a drained pipeline.
+        // Pipeline micro-state (branch bubbles, load-use hazards, WB-port
+        // claims) is not modeled functionally; normalize it to a drained
+        // pipeline.
         self.pending_stall = 0;
         self.hazard_reg = None;
+        self.pipe = PipeState::default();
     }
 
     /// Hash the core's **structural** identity for the fast-path window
@@ -553,7 +607,16 @@ mod tests {
     }
 
     fn run_single_with_mem(prog: Program, mem: &mut ClusterMem) -> (Core, ClusterMem) {
+        run_single_fid(prog, mem, CoreFidelity::Fast)
+    }
+
+    fn run_single_fid(
+        prog: Program,
+        mem: &mut ClusterMem,
+        fid: CoreFidelity,
+    ) -> (Core, ClusterMem) {
         let mut c = Core::new(0);
+        c.set_fidelity(fid);
         c.load_program(prog);
         let mut guard = 0;
         while !c.halted() {
@@ -747,6 +810,91 @@ mod tests {
         let (c, _) = run_single(p);
         assert_eq!(c.regs[1], 3);
         assert_eq!(c.stats.branch_stalls, 4); // 2 taken branches * 2 bubbles
+    }
+
+    /// NN-RF write-back load followed cycle-adjacent by a GP-LSU memory
+    /// op: the pipeline tier charges one WB-port bubble; the fast tier
+    /// charges nothing. Architectural state is identical either way.
+    #[test]
+    fn wbport_contention_pipeline_only() {
+        let prog = || {
+            let mut p = Program::new("t");
+            p.push(Instr::CsrW { csr: Csr::WStride, imm: 4 });
+            p.push(Instr::CsrW { csr: Csr::WBase, imm: TCDM_BASE });
+            p.push(Instr::Li { rd: 1, imm: (TCDM_BASE + 64) as i32 });
+            p.push(Instr::NnLoad { ch: MlChannel::Wgt, slot: 0 });
+            p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+            p.push(Instr::Halt);
+            p
+        };
+        let mut m1 = ClusterMem::new();
+        m1.store_u32(TCDM_BASE, 0x11223344);
+        m1.store_u32(TCDM_BASE + 64, 7);
+        let mut m2 = m1.clone();
+        let (fast, _) = run_single_fid(prog(), &mut m1, CoreFidelity::Fast);
+        let (pipe, _) = run_single_fid(prog(), &mut m2, CoreFidelity::Pipeline);
+        assert_eq!(fast.regs, pipe.regs);
+        assert_eq!(fast.nnrf, pipe.nnrf);
+        assert_eq!(fast.stats.wbport_stalls, 0);
+        assert_eq!(pipe.stats.wbport_stalls, 1);
+        assert_eq!(pipe.stats.cycles, fast.stats.cycles + 1);
+    }
+
+    /// Back-to-back Mac&Load WB loads do *not* contend (the NN-RF has
+    /// its own write port — the §III design point), and an intervening
+    /// non-memory instruction clears the WB-port claim.
+    #[test]
+    fn wbport_claim_spares_macload_chains_and_expires() {
+        let mut p = Program::new("t");
+        p.push(Instr::CsrW { csr: Csr::WStride, imm: 4 });
+        p.push(Instr::CsrW { csr: Csr::WBase, imm: TCDM_BASE });
+        p.push(Instr::Li { rd: 1, imm: (TCDM_BASE + 64) as i32 });
+        p.push(Instr::NnLoad { ch: MlChannel::Wgt, slot: 0 });
+        p.push(Instr::NnLoad { ch: MlChannel::Wgt, slot: 1 }); // NN->NN: free
+        p.push(Instr::AluI { op: AluOp::Add, rd: 3, rs1: 0, imm: 1 }); // drains claim
+        p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 }); // not adjacent
+        p.push(Instr::Halt);
+        let mut mem = ClusterMem::new();
+        let (c, _) = run_single_fid(p, &mut mem, CoreFidelity::Pipeline);
+        assert_eq!(c.stats.wbport_stalls, 0);
+        assert_eq!(c.stats.align_stalls, 0);
+    }
+
+    /// Sub-word (`lbu`) load-use costs 2 cycles on the pipeline tier:
+    /// the shared 1-cycle load-use stall plus one realignment cycle.
+    #[test]
+    fn subword_load_use_costs_extra_cycle_on_pipeline() {
+        let prog = || {
+            let mut p = Program::new("t");
+            p.push(Instr::Li { rd: 1, imm: TCDM_BASE as i32 });
+            p.push(Instr::Lbu { rd: 2, base: 1, off: 0, post_inc: 0 });
+            p.push(Instr::AluI { op: AluOp::Add, rd: 3, rs1: 2, imm: 1 });
+            p.push(Instr::Halt);
+            p
+        };
+        let mut m1 = ClusterMem::new();
+        m1.store_u8(TCDM_BASE, 9);
+        let mut m2 = m1.clone();
+        let (fast, _) = run_single_fid(prog(), &mut m1, CoreFidelity::Fast);
+        let (pipe, _) = run_single_fid(prog(), &mut m2, CoreFidelity::Pipeline);
+        assert_eq!(fast.regs[3], 10);
+        assert_eq!(pipe.regs[3], 10);
+        assert_eq!((fast.stats.loaduse_stalls, fast.stats.align_stalls), (1, 0));
+        assert_eq!((pipe.stats.loaduse_stalls, pipe.stats.align_stalls), (1, 1));
+        assert_eq!(pipe.stats.cycles, fast.stats.cycles + 1);
+
+        // word-load consumer pays no realignment cycle on either tier
+        let word = || {
+            let mut p = Program::new("t");
+            p.push(Instr::Li { rd: 1, imm: TCDM_BASE as i32 });
+            p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 });
+            p.push(Instr::AluI { op: AluOp::Add, rd: 3, rs1: 2, imm: 1 });
+            p.push(Instr::Halt);
+            p
+        };
+        let mut m3 = ClusterMem::new();
+        let (w, _) = run_single_fid(word(), &mut m3, CoreFidelity::Pipeline);
+        assert_eq!((w.stats.loaduse_stalls, w.stats.align_stalls), (1, 0));
     }
 
     #[test]

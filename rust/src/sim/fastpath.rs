@@ -28,10 +28,11 @@
 //!    completed as bulk copies. Outputs stay bit-exact; only the cost of
 //!    simulating stalls, arbitration, and barrier spins is saved.
 //!
-//! The structural key covers: core count, arbiter rotation, each core's
-//! run-state + pc + instruction stream, and the timing-relevant DMA
-//! descriptor fields (TCDM-side layout; the L2-side address never
-//! affects a cycle). The retired-instruction invariant is asserted on
+//! The structural key covers: core count, the core timing tier
+//! ([`super::pipeline::CoreFidelity`] — memoized cycle counts are
+//! tier-specific), arbiter rotation, each core's run-state + pc +
+//! instruction stream, and the timing-relevant DMA descriptor fields
+//! (TCDM-side layout; the L2-side address never affects a cycle). The retired-instruction invariant is asserted on
 //! every functional replay, and [`FastPath::crosscheck`] re-simulates
 //! each replayed window on a forked cluster and compares all observable
 //! state — tests run the serve determinism suites in this mode.
@@ -200,6 +201,10 @@ impl Cluster {
         use std::hash::Hash;
         let mut h = DefaultHasher::new();
         self.cores.len().hash(&mut h);
+        // The core timing tier changes the memoized per-core cycle
+        // counts, so windows recorded under one fidelity must never
+        // replay under the other.
+        self.fidelity().hash(&mut h);
         self.rr.hash(&mut h);
         for c in &self.cores {
             c.hash_structure(&mut h);

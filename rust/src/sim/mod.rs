@@ -18,6 +18,13 @@
 //! - barriers clock-gate waiting cores and release one cycle after the
 //!   last core arrives.
 //!
+//! Timing fidelity is tiered ([`CoreFidelity`], module [`pipeline`]):
+//! the default fast tier charges the flat costs above; the pipeline
+//! tier refines them with an explicit IF/ID/EX/WB model adding Mac&Load
+//! write-back port contention and sub-word realignment stalls. The two
+//! tiers are bit-identical on all architectural state by construction
+//! and differ only in cycle accounting.
+//!
 //! Functional model: exact integer semantics for every instruction — kernel
 //! outputs are compared bit-exactly against [`crate::qnn::golden`] and
 //! against the AOT JAX/Pallas artifacts through [`crate::runtime`].
@@ -36,6 +43,7 @@ pub mod dma;
 pub mod fastpath;
 pub mod mem;
 pub mod mlc;
+pub mod pipeline;
 pub mod stats;
 
 pub use cluster::Cluster;
@@ -44,4 +52,5 @@ pub use dma::{Dma, DmaRequest};
 pub use fastpath::{FastPath, WindowCache};
 pub use mem::{AccessTrace, ClusterMem, L2_BASE, TCDM_BASE};
 pub use mlc::MlcChannel;
+pub use pipeline::CoreFidelity;
 pub use stats::{ClusterStats, CoreStats};

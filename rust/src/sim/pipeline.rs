@@ -1,0 +1,199 @@
+//! Core timing-fidelity tiers: the flat cost model vs. the 4-stage
+//! pipeline model.
+//!
+//! The default tier ([`CoreFidelity::Fast`]) charges the RI5CY costs the
+//! cluster has always modeled — one issue per cycle, a 1-cycle load-use
+//! penalty, 2 taken-branch bubbles, TCDM conflict stalls — as flat
+//! per-instruction costs. [`CoreFidelity::Pipeline`] refines this into
+//! an explicit 4-stage in-order pipeline (IF/ID/EX/WB) with a register
+//! scoreboard and forwarding paths:
+//!
+//! ```text
+//!        IF ──► ID ──► EX ──► WB
+//!               │      │      │
+//!               │      └──────┴── EX/WB → ID forwarding (ALU results
+//!               │                 bypass the RF; no hazard)
+//!               ├── scoreboard: a load's rd is busy for one cycle
+//!               │   (consumer in ID stalls — load-use, both tiers);
+//!               │   sub-word loads realign in WB, so their consumer
+//!               │   stalls one cycle longer (Pipeline tier only)
+//!               └── Mac&Load WB port: an NN-RF write-back load occupies
+//!                   the LSU write-back port; a GP-LSU memory op retiring
+//!                   back-to-back behind it bubbles once (Pipeline only)
+//! ```
+//!
+//! Two hazards exist only in the pipeline model:
+//!
+//! - **Write-back port contention** ([`CoreStats::wbport_stalls`]): the
+//!   Mac&Load controller performs its NN-RF load in the WB stage (§III,
+//!   Fig. 4), sharing the LSU write-back port. Consecutive Mac&Load ops
+//!   do *not* contend (the NN-RF has its own write port — that is the
+//!   point of the design), but a regular GP-LSU memory instruction
+//!   (`lw`/`lbu`/`sw`/`sb`) issued cycle-adjacent behind an NN-RF
+//!   write-back load loses the port for one cycle.
+//! - **Sub-word realignment** ([`CoreStats::align_stalls`]): `lbu`
+//!   results pass through the byte-align/extend network in WB, so a
+//!   dependent consumer pays a 2-cycle load-use penalty instead of 1.
+//!   The first cycle is charged as the regular load-use stall (both
+//!   tiers agree on it); the extra cycle lands in `align_stalls`.
+//!
+//! # Why the tiers are bit-identical by construction
+//!
+//! The pipeline tier does **not** insert extra stall ticks into the
+//! lock-step cluster simulation — it charges its hazard bubbles into the
+//! per-core [`CoreStats`] (and the window's cycle total) at retire time.
+//! Tick-domain behavior — instruction order, TCDM requests, arbitration,
+//! barrier release — is therefore *identical* between tiers, which makes
+//! two properties structural rather than empirical:
+//!
+//! 1. **Bit-identical architectural state.** Both tiers execute the same
+//!    instructions in the same order against the same memory; registers,
+//!    NN-RF, TCDM, L2 and outputs cannot diverge.
+//! 2. **`pipeline_cycles >= fast_cycles`.** Pipeline cycles are the fast
+//!    tier's tick count plus non-negative hazard charges.
+//!
+//! The alternative — real inserted bubbles — would shift multi-core
+//! arbitration phase, could *reduce* cluster cycles through accidental
+//! conflict avoidance, and would break the window-memo equivalence the
+//! steady-state fast path relies on. The retire-time model keeps one
+//! tick-domain simulation shared by both tiers; the fidelity only
+//! selects which charges are accounted. Windows are still memoized per
+//! fidelity (the knob is part of the fast-path structural key), so
+//! replayed timing always matches the tier that recorded it.
+//!
+//! [`CoreStats::wbport_stalls`]: super::stats::CoreStats::wbport_stalls
+//! [`CoreStats::align_stalls`]: super::stats::CoreStats::align_stalls
+//! [`CoreStats`]: super::stats::CoreStats
+
+use crate::isa::{Instr, MlUpdate};
+
+/// Which timing model a core (and the cluster owning it) runs under.
+/// Functional semantics are identical across tiers; only cycle
+/// accounting differs (see the module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum CoreFidelity {
+    /// Flat per-instruction cost model (the historical default):
+    /// load-use, branch and conflict stalls only.
+    #[default]
+    Fast,
+    /// 4-stage IF/ID/EX/WB pipeline model: adds Mac&Load write-back
+    /// port contention and sub-word realignment stalls on top of the
+    /// fast tier's charges.
+    Pipeline,
+}
+
+impl CoreFidelity {
+    /// Parse a CLI token (`"fast"` / `"pipeline"`).
+    pub fn from_name(s: &str) -> Option<CoreFidelity> {
+        match s {
+            "fast" => Some(CoreFidelity::Fast),
+            "pipeline" => Some(CoreFidelity::Pipeline),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase token (inverse of [`CoreFidelity::from_name`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            CoreFidelity::Fast => "fast",
+            CoreFidelity::Pipeline => "pipeline",
+        }
+    }
+}
+
+impl std::fmt::Display for CoreFidelity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Pipeline micro-state carried between retires (Pipeline tier only;
+/// stays default in the fast tier). Like `pending_stall`/`hazard_reg`
+/// this is timing micro-state, not architectural state: it is reset by
+/// `load_program`, normalized by the fast path's functional execution,
+/// and excluded from the architectural hash.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct PipeState {
+    /// The instruction retired last cycle performed an NN-RF write-back
+    /// load (`NnLoad`, or `MlSdotp` with a `Load` update) — the WB port
+    /// is claimed for the cycle behind it. Any intervening bubble
+    /// (stall, barrier) drains the pipe and clears the claim.
+    pub wb_load_armed: bool,
+    /// The pending load-use hazard (`hazard_reg`) came from a sub-word
+    /// load, whose consumer pays the extra realignment cycle. Set and
+    /// cleared in lockstep with `hazard_reg`.
+    pub hazard_subword: bool,
+}
+
+/// GP-LSU memory instructions — the class that contends with an NN-RF
+/// write-back load for the WB port. NN-RF loads themselves are excluded:
+/// back-to-back Mac&Load issue is the §III design point.
+pub(crate) fn is_gp_lsu(i: &Instr) -> bool {
+    matches!(
+        i,
+        Instr::Lw { .. } | Instr::Lbu { .. } | Instr::Sw { .. } | Instr::Sb { .. }
+    )
+}
+
+/// Instructions that load into the NN-RF during write-back: `NnLoad`
+/// and the fused Mac&Load (`MlSdotp` with a `Load` update).
+pub(crate) fn is_nn_wb_load(i: &Instr) -> bool {
+    matches!(
+        i,
+        Instr::NnLoad { .. } | Instr::MlSdotp { upd: MlUpdate::Load { .. }, .. }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{AluOp, MlChannel, SimdFmt};
+
+    #[test]
+    fn fidelity_token_roundtrip() {
+        for f in [CoreFidelity::Fast, CoreFidelity::Pipeline] {
+            assert_eq!(CoreFidelity::from_name(f.name()), Some(f));
+            assert_eq!(format!("{f}"), f.name());
+        }
+        assert_eq!(CoreFidelity::from_name("cycle"), None);
+        assert_eq!(CoreFidelity::default(), CoreFidelity::Fast);
+    }
+
+    #[test]
+    fn hazard_classes_partition_the_memory_instructions() {
+        let gp = [
+            Instr::Lw { rd: 1, base: 2, off: 0, post_inc: 0 },
+            Instr::Lbu { rd: 1, base: 2, off: 0, post_inc: 0 },
+            Instr::Sw { rs: 1, base: 2, off: 0, post_inc: 0 },
+            Instr::Sb { rs: 1, base: 2, off: 0, post_inc: 0 },
+        ];
+        for i in &gp {
+            assert!(is_gp_lsu(i), "{i:?}");
+            assert!(!is_nn_wb_load(i), "{i:?}");
+        }
+        let nn_load = Instr::NnLoad { ch: MlChannel::Wgt, slot: 0 };
+        let ml_load = Instr::MlSdotp {
+            acc: 5,
+            a_slot: 4,
+            w_slot: 0,
+            a_fmt: SimdFmt::Byte,
+            w_fmt: SimdFmt::Byte,
+            sub: 0,
+            upd: MlUpdate::Load { ch: MlChannel::Wgt, slot: 1 },
+        };
+        let ml_none = Instr::MlSdotp {
+            acc: 5,
+            a_slot: 4,
+            w_slot: 0,
+            a_fmt: SimdFmt::Byte,
+            w_fmt: SimdFmt::Byte,
+            sub: 0,
+            upd: MlUpdate::None,
+        };
+        assert!(is_nn_wb_load(&nn_load) && is_nn_wb_load(&ml_load));
+        assert!(!is_nn_wb_load(&ml_none), "plain MlSdotp has no WB load");
+        assert!(!is_gp_lsu(&nn_load) && !is_gp_lsu(&ml_load));
+        let alu = Instr::Alu { op: AluOp::Add, rd: 1, rs1: 2, rs2: 3 };
+        assert!(!is_gp_lsu(&alu) && !is_nn_wb_load(&alu));
+    }
+}

@@ -24,6 +24,12 @@ pub struct CoreStats {
     pub loaduse_stalls: u64,
     /// Cycles lost to taken-branch bubbles.
     pub branch_stalls: u64,
+    /// Cycles lost to Mac&Load write-back port contention (pipeline
+    /// fidelity tier only; see [`super::pipeline`]).
+    pub wbport_stalls: u64,
+    /// Cycles lost to sub-word load realignment (the second load-use
+    /// cycle of an `lbu` consumer; pipeline fidelity tier only).
+    pub align_stalls: u64,
     /// Cycles spent waiting at barriers (clock-gated).
     pub barrier_cycles: u64,
     /// CSR writes (MLC/MPC setup overhead).
@@ -56,8 +62,23 @@ impl CoreStats {
         self.conflict_stalls += o.conflict_stalls;
         self.loaduse_stalls += o.loaduse_stalls;
         self.branch_stalls += o.branch_stalls;
+        self.wbport_stalls += o.wbport_stalls;
+        self.align_stalls += o.align_stalls;
         self.barrier_cycles += o.barrier_cycles;
         self.csr_writes += o.csr_writes;
+    }
+
+    /// Σ of every stall category (barrier waits excluded — those are
+    /// clock-gated idling, not pipeline bubbles). On a single
+    /// uninterrupted run, `cycles == instrs + stall_cycles() +
+    /// barrier_cycles` holds exactly — the identity the profile report's
+    /// percentages and the stats proptests below rely on.
+    pub fn stall_cycles(&self) -> u64 {
+        self.conflict_stalls
+            + self.loaduse_stalls
+            + self.branch_stalls
+            + self.wbport_stalls
+            + self.align_stalls
     }
 
     /// Sum *every* counter, `cycles` included — sequential concatenation
@@ -73,6 +94,8 @@ impl CoreStats {
         self.conflict_stalls += o.conflict_stalls;
         self.loaduse_stalls += o.loaduse_stalls;
         self.branch_stalls += o.branch_stalls;
+        self.wbport_stalls += o.wbport_stalls;
+        self.align_stalls += o.align_stalls;
         self.barrier_cycles += o.barrier_cycles;
         self.csr_writes += o.csr_writes;
     }
@@ -150,6 +173,8 @@ impl ClusterStats {
             c.conflict_stalls *= n;
             c.loaduse_stalls *= n;
             c.branch_stalls *= n;
+            c.wbport_stalls *= n;
+            c.align_stalls *= n;
             c.barrier_cycles *= n;
             c.csr_writes *= n;
         }
@@ -256,6 +281,126 @@ mod tests {
         // one ratio is exactly the >100% bug the split methods prevent.
         assert_eq!((c.conflict_stalls, c.barrier_cycles), (18, 30));
         assert!(c.conflict_stalls + c.barrier_cycles <= total.cycles);
+    }
+
+    use crate::util::{proptest, Prng};
+
+    /// One randomly drawn core run, built by injecting the same events
+    /// the ISS charges: retires, each stall category (including the
+    /// pipeline tier's WB-port and realignment charges), barrier waits.
+    fn random_run(rng: &mut Prng) -> CoreStats {
+        let mut s = CoreStats::default();
+        for _ in 0..rng.range(1, 200) {
+            match rng.range(0, 7) {
+                0 => {
+                    // plain retire
+                    s.cycles += 1;
+                    s.instrs += 1;
+                }
+                1 => {
+                    // TCDM conflict stall tick
+                    s.cycles += 1;
+                    s.conflict_stalls += 1;
+                }
+                2 => {
+                    // word load-use stall tick
+                    s.cycles += 1;
+                    s.loaduse_stalls += 1;
+                }
+                3 => {
+                    // sub-word load-use: shared stall tick + realign charge
+                    s.cycles += 2;
+                    s.loaduse_stalls += 1;
+                    s.align_stalls += 1;
+                }
+                4 => {
+                    // taken branch: retire + two bubble ticks
+                    s.cycles += 3;
+                    s.instrs += 1;
+                    s.branch_stalls += 2;
+                }
+                5 => {
+                    // GP-LSU retire behind an NN-RF WB load: retire + charge
+                    s.cycles += 2;
+                    s.instrs += 1;
+                    s.wbport_stalls += 1;
+                }
+                _ => {
+                    // clock-gated barrier wait
+                    s.cycles += 1;
+                    s.barrier_cycles += 1;
+                }
+            }
+        }
+        s
+    }
+
+    /// Per-category stall cycles sum to `total - active` under random
+    /// stall injection: every non-retire, non-barrier cycle is claimed
+    /// by exactly one stall category — with the pipeline tier's new
+    /// categories included.
+    #[test]
+    fn prop_stall_categories_sum_to_total_minus_active() {
+        proptest::check_default(random_run, |s| {
+            let active = s.instrs + s.barrier_cycles;
+            if s.cycles - active == s.stall_cycles() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "cycles {} - active {} != stalls {}",
+                    s.cycles,
+                    active,
+                    s.stall_cycles()
+                ))
+            }
+        });
+    }
+
+    /// `accumulate` preserves the accounting identity exactly, and a
+    /// serial merge (`extend_serial` → `merge_parallel` per core) keeps
+    /// every core's stall + barrier cycles within the accumulated wall
+    /// budget — the ≤100% invariant the profile percentages divide by.
+    #[test]
+    fn prop_merge_and_accumulate_preserve_stall_bound() {
+        proptest::check_default(
+            |rng| {
+                (0..rng.range(1, 8))
+                    .map(|_| {
+                        let cores: Vec<CoreStats> =
+                            (0..4).map(|_| random_run(rng)).collect();
+                        ClusterStats {
+                            cycles: cores.iter().map(|c| c.cycles).max().unwrap(),
+                            cores,
+                            ..Default::default()
+                        }
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |windows| {
+                let mut acc = CoreStats::default();
+                for w in windows {
+                    acc.accumulate(&w.cores[0]);
+                }
+                if acc.cycles - (acc.instrs + acc.barrier_cycles) != acc.stall_cycles() {
+                    return Err("accumulate broke the stall identity".into());
+                }
+                let mut total = ClusterStats::default();
+                for w in windows {
+                    total.extend_serial(w);
+                }
+                for (i, c) in total.cores.iter().enumerate() {
+                    if c.stall_cycles() + c.barrier_cycles > total.cycles {
+                        return Err(format!(
+                            "core {i}: stalls {} + barrier {} exceed wall {}",
+                            c.stall_cycles(),
+                            c.barrier_cycles,
+                            total.cycles
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //!
 //! Condenses a [`RunResult`] into one [`LayerProfile`] row per layer —
 //! cycles, MAC/cycle, a stall breakdown (TCDM conflicts, load-use
-//! hazards, taken-branch bubbles, barrier waits) as percentages of the
+//! hazards, taken-branch bubbles, Mac&Load write-back port contention
+//! and sub-word realignment under the pipeline tier — see
+//! [`crate::sim::pipeline`] — and barrier waits) as percentages of the
 //! layer's aggregate core-cycle budget, DMA overlap, and the kernel
 //! lowering the layer actually ran. This is the table the paper reasons
 //! with when explaining MAC/cycle gaps (§V: Mac&Load inner loops vs.
@@ -46,6 +48,12 @@ pub struct LayerProfile {
     pub loaduse_pct: f64,
     /// Cycles lost to taken-branch bubbles, % of the core-cycle budget.
     pub branch_pct: f64,
+    /// Cycles lost to Mac&Load write-back port contention, % of the
+    /// core-cycle budget (always 0 on the fast tier).
+    pub wbport_pct: f64,
+    /// Cycles lost to sub-word load realignment, % of the core-cycle
+    /// budget (always 0 on the fast tier).
+    pub align_pct: f64,
     /// Cycles spent waiting at barriers, % of the core-cycle budget.
     pub barrier_pct: f64,
     /// DMA busy cycles overlapped with the layer window, % of the window.
@@ -53,9 +61,14 @@ pub struct LayerProfile {
 }
 
 impl LayerProfile {
-    /// Sum of the four stall breakdowns (≤ 100 by construction).
+    /// Sum of the six stall breakdowns (≤ 100 by construction).
     pub fn total_stall_pct(&self) -> f64 {
-        self.conflict_pct + self.loaduse_pct + self.branch_pct + self.barrier_pct
+        self.conflict_pct
+            + self.loaduse_pct
+            + self.branch_pct
+            + self.wbport_pct
+            + self.align_pct
+            + self.barrier_pct
     }
 }
 
@@ -103,6 +116,8 @@ impl NetworkProfile {
                     conflict_pct: pct(|c| c.conflict_stalls),
                     loaduse_pct: pct(|c| c.loaduse_stalls),
                     branch_pct: pct(|c| c.branch_stalls),
+                    wbport_pct: pct(|c| c.wbport_stalls),
+                    align_pct: pct(|c| c.align_stalls),
                     barrier_pct: pct(|c| c.barrier_cycles),
                     dma_overlap_pct,
                 }
@@ -120,7 +135,7 @@ impl NetworkProfile {
     pub fn render(&self, title: &str) -> String {
         let mut t = Table::new(title).header(&[
             "layer", "lowering", "cores", "cycles", "MAC/cyc", "conflict%", "loaduse%",
-            "branch%", "barrier%", "dma-ovl%",
+            "branch%", "wbport%", "align%", "barrier%", "dma-ovl%",
         ]);
         for l in &self.layers {
             t.row(vec![
@@ -132,6 +147,8 @@ impl NetworkProfile {
                 f(l.conflict_pct, 1),
                 f(l.loaduse_pct, 1),
                 f(l.branch_pct, 1),
+                f(l.wbport_pct, 1),
+                f(l.align_pct, 1),
                 f(l.barrier_pct, 1),
                 f(l.dma_overlap_pct, 1),
             ]);
@@ -145,6 +162,8 @@ impl NetworkProfile {
             String::new(),
             total_cycles.to_string(),
             f(mpc, 2),
+            String::new(),
+            String::new(),
             String::new(),
             String::new(),
             String::new(),
@@ -181,13 +200,22 @@ mod tests {
         assert_eq!(prof.layers.len(), 2);
         for l in &prof.layers {
             assert!(l.cycles > 0 && l.macs_per_cycle > 0.0, "{l:?}");
-            for p in [l.conflict_pct, l.loaduse_pct, l.branch_pct, l.barrier_pct] {
+            for p in [
+                l.conflict_pct,
+                l.loaduse_pct,
+                l.branch_pct,
+                l.wbport_pct,
+                l.align_pct,
+                l.barrier_pct,
+            ] {
                 assert!((0.0..=100.0).contains(&p), "{l:?}");
             }
             assert!(l.total_stall_pct() <= 100.0 + 1e-9, "{l:?}");
             assert!((0.0..=100.0).contains(&l.dma_overlap_pct), "{l:?}");
             assert_eq!(l.isa, IsaVariant::FlexV.to_string());
             assert_eq!(l.n_cores, 4);
+            // fast tier: the pipeline-only categories stay zero
+            assert_eq!((l.wbport_pct, l.align_pct), (0.0, 0.0), "{l:?}");
         }
         assert_eq!(prof.total_cycles(), res.total_cycles());
         let table = prof.render("test profile");

@@ -1,0 +1,274 @@
+//! Differential validation of the two core timing tiers
+//! ([`flexv::sim::CoreFidelity`]): random kernel programs across the
+//! ISA-variant × mixed-precision grid, plus end-to-end networks, run
+//! under both the flat-cost fast tier and the 4-stage pipeline tier.
+//!
+//! The contract under test is structural (see `flexv::sim::pipeline`):
+//! the pipeline tier charges its extra hazards — Mac&Load write-back
+//! port contention and sub-word realignment — as retire-time cycle
+//! charges, never as simulation ticks. Therefore
+//!
+//! 1. **all architectural state is bit-identical** across tiers
+//!    (registers, NN-RF, CSRs, TCDM contents, network outputs), and
+//! 2. **every other counter is identical too**: a pipeline-tier core's
+//!    stats reduce exactly to the fast-tier stats after subtracting its
+//!    `wbport_stalls + align_stalls` from `cycles`, and the cluster's
+//!    wall cycles grow by exactly the slowest core's extra charges.
+//!
+//! The Table III anchor cells get the same treatment in
+//! `report::workloads` (`pipeline_tier_never_speeds_up_table3`); this
+//! suite covers the randomized grid and the end-to-end models.
+
+use flexv::coordinator::Coordinator;
+use flexv::dory::deploy::{deploy, w_row_pitch};
+use flexv::dory::MemBudget;
+use flexv::isa::{Csr, Instr, IsaVariant, MlChannel, Program, SimdFmt};
+use flexv::kernels::matmul::{gen_matmul, MatMulTask};
+use flexv::kernels::requant::RequantCfg;
+use flexv::qnn::layer::Network;
+use flexv::qnn::{Precision, QTensor};
+use flexv::sim::{Cluster, ClusterStats, CoreFidelity, CoreStats, TCDM_BASE};
+use flexv::util::{proptest, Prng};
+
+/// Architectural state of one core after a run (everything the ISA
+/// exposes; timing micro-state is deliberately excluded).
+type CoreSnap = ([u32; 32], [u32; 6], [u32; 16], usize);
+
+/// Everything one tier produces for the differential comparison.
+struct TierRun {
+    stats: ClusterStats,
+    out: Vec<u8>,
+    cores: Vec<CoreSnap>,
+}
+
+/// A pipeline-tier core's stats with its tier-specific charges removed.
+/// If the retire-time model is implemented correctly this equals the
+/// fast-tier stats of the same run *exactly* — one `assert_eq!` then
+/// covers instrs, MACs, TCDM accesses, and every shared stall category.
+fn without_pipeline_charges(mut s: CoreStats) -> CoreStats {
+    s.cycles -= s.wbport_stalls + s.align_stalls;
+    s.wbport_stalls = 0;
+    s.align_stalls = 0;
+    s
+}
+
+/// Random-but-valid MatMul workload in the Table III layout: packed A
+/// rows, packed W rows (pitch from the deploy-side rule), per-channel
+/// requant tables, 8 cores splitting the output rows.
+#[derive(Debug)]
+struct MatMulCase {
+    isa: IsaVariant,
+    prec: Precision,
+    m: usize,
+    n: usize,
+    k: usize,
+    seed: u64,
+}
+
+fn run_matmul_tier(c: &MatMulCase, fid: CoreFidelity) -> TierRun {
+    let MatMulCase { isa, prec, m, n, k, seed } = *c;
+    let mut rng = Prng::new(seed);
+    // Effective kernel width decides W padding (see kernels::matmul).
+    let e_bits = if isa.native_fmts().contains(&SimdFmt::from_bits(prec.a_bits)) {
+        prec.a_bits
+    } else {
+        8
+    };
+    let a_pitch = (k.div_ceil(32 / prec.a_bits as usize) * 4) as u32;
+    let w_pitch = w_row_pitch(k, e_bits, prec.w_bits);
+    let a_base = TCDM_BASE;
+    let w_base = a_base + m as u32 * a_pitch;
+    let mult_base = w_base + n as u32 * w_pitch;
+    let bias_base = mult_base + 4 * n as u32;
+    let out_base = bias_base + 4 * n as u32;
+    assert!(
+        (out_base - TCDM_BASE) as usize + m * n <= flexv::TCDM_BYTES,
+        "generated workload must fit TCDM"
+    );
+    let mut cl = Cluster::with_fidelity(8, fid);
+    let a = QTensor::random(
+        &[m, a_pitch as usize * 8 / prec.a_bits as usize],
+        prec.a_bits,
+        false,
+        &mut rng,
+    );
+    let w = QTensor::random(
+        &[n, w_pitch as usize * 8 / prec.w_bits as usize],
+        prec.w_bits,
+        true,
+        &mut rng,
+    );
+    cl.mem.write_bytes(a_base, &a.data);
+    cl.mem.write_bytes(w_base, &w.data);
+    for ch in 0..n {
+        cl.mem.store_u32(mult_base + 4 * ch as u32, 1 + (ch as u32 % 3));
+        cl.mem.store_u32(bias_base + 4 * ch as u32, ch as u32);
+    }
+    let task = MatMulTask {
+        m,
+        n,
+        k,
+        prec,
+        a_base,
+        a_pitch,
+        w_base,
+        w_pitch,
+        out_base,
+        out_pitch: n as u32,
+        quant: RequantCfg { mult_base, bias_base, shift: 10, out_bits: 8 },
+    };
+    cl.load_programs((0..8).map(|core| gen_matmul(isa, &task, core, 8)).collect());
+    let stats = cl.run();
+    let out = (0..m * n).map(|i| cl.mem.load_u8(out_base + i as u32)).collect();
+    let cores = cl.cores.iter().map(|c| (c.regs, c.nnrf, c.csrs, c.pc)).collect();
+    TierRun { stats, out, cores }
+}
+
+/// The full differential contract between one fast-tier and one
+/// pipeline-tier run of the same workload.
+fn assert_tiers_agree(f: &TierRun, p: &TierRun, what: &str) -> Result<(), String> {
+    if f.out != p.out {
+        return Err(format!("{what}: output bytes diverge across tiers"));
+    }
+    if f.cores != p.cores {
+        return Err(format!("{what}: core architectural state diverges across tiers"));
+    }
+    for (i, (fc, pc)) in f.stats.cores.iter().zip(&p.stats.cores).enumerate() {
+        if fc.wbport_stalls != 0 || fc.align_stalls != 0 {
+            return Err(format!("{what}: core {i} charged pipeline stalls on the fast tier"));
+        }
+        let reduced = without_pipeline_charges(*pc);
+        if reduced != *fc {
+            return Err(format!(
+                "{what}: core {i} pipeline stats don't reduce to fast stats: {pc:?} vs {fc:?}"
+            ));
+        }
+    }
+    // Wall cycles grow by exactly the slowest core's extra charges
+    // (single window, no DMA in these runs).
+    let max_extra = p
+        .stats
+        .cores
+        .iter()
+        .map(|c| c.wbport_stalls + c.align_stalls)
+        .max()
+        .unwrap_or(0);
+    if p.stats.cycles != f.stats.cycles + max_extra {
+        return Err(format!(
+            "{what}: pipeline wall {} != fast wall {} + max core extra {}",
+            p.stats.cycles, f.stats.cycles, max_extra
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_random_matmuls_bit_identical_across_tiers() {
+    proptest::check(
+        proptest::Config { cases: 12, base_seed: 0xF1DE_17 },
+        |rng: &mut Prng| {
+            let grid = Precision::grid();
+            MatMulCase {
+                isa: *rng.pick(&IsaVariant::ALL),
+                prec: *rng.pick(&grid),
+                m: rng.range(1, 5) * 8,
+                n: rng.range(1, 5) * 4,
+                k: rng.range(1, 4) * 16,
+                seed: rng.below(1u64 << 32),
+            }
+        },
+        |case| {
+            let f = run_matmul_tier(case, CoreFidelity::Fast);
+            let p = run_matmul_tier(case, CoreFidelity::Pipeline);
+            let what = format!(
+                "{:?} {} m={} n={} k={}",
+                case.isa, case.prec, case.m, case.n, case.k
+            );
+            assert_tiers_agree(&f, &p, &what)
+        },
+    );
+}
+
+/// A handcrafted program in which both pipeline-only hazard classes
+/// provably fire: an NN-RF write-back load followed cycle-adjacent by a
+/// GP-LSU word load (WB-port contention), then a sub-word load feeding
+/// its consumer directly (realignment). The fast tier must charge
+/// neither; the pipeline tier must charge exactly one of each, and the
+/// architectural results must still match bit-for-bit.
+#[test]
+fn adversarial_hazard_program_fires_both_stall_classes() {
+    let run = |fid: CoreFidelity| {
+        let mut cl = Cluster::with_fidelity(1, fid);
+        cl.mem.store_u32(TCDM_BASE, 0x0102_0304); // NN-RF weight stream
+        cl.mem.store_u32(TCDM_BASE + 64, 7); // word operand
+        cl.mem.store_u8(TCDM_BASE + 68, 9); // sub-word operand
+        let mut p = Program::new("hazards");
+        p.push(Instr::CsrW { csr: Csr::WStride, imm: 4 });
+        p.push(Instr::CsrW { csr: Csr::WBase, imm: TCDM_BASE });
+        p.push(Instr::Li { rd: 1, imm: (TCDM_BASE + 64) as i32 });
+        p.push(Instr::NnLoad { ch: MlChannel::Wgt, slot: 0 });
+        p.push(Instr::Lw { rd: 2, base: 1, off: 0, post_inc: 0 }); // wbport
+        p.push(Instr::Lbu { rd: 3, base: 1, off: 4, post_inc: 0 });
+        p.push(Instr::Alu {
+            op: flexv::isa::AluOp::Add,
+            rd: 4,
+            rs1: 3,
+            rs2: 2,
+        }); // load-use + align
+        p.push(Instr::Halt);
+        cl.load_programs(vec![p]);
+        let stats = cl.run();
+        let c = &cl.cores[0];
+        ((c.regs, c.nnrf), stats)
+    };
+    let (fa, fs) = run(CoreFidelity::Fast);
+    let (pa, ps) = run(CoreFidelity::Pipeline);
+    assert_eq!(fa, pa, "architectural state must not depend on the tier");
+    assert_eq!(fa.0[4], 16, "9 + 7 through both hazards");
+    assert_eq!((fs.cores[0].wbport_stalls, fs.cores[0].align_stalls), (0, 0));
+    assert_eq!((ps.cores[0].wbport_stalls, ps.cores[0].align_stalls), (1, 1));
+    assert_eq!(fs.cores[0].loaduse_stalls, ps.cores[0].loaduse_stalls);
+    assert_eq!(ps.cycles, fs.cycles + 2, "one wbport + one align charge");
+}
+
+/// Deploy + run `net` end-to-end on both tiers with the same input and
+/// assert the strongest cross-tier statement the coordinator exposes:
+/// every node output bit-identical, every per-layer cycle count ordered
+/// pipeline ≥ fast.
+fn e2e_crosscheck(net: &Network, isa: IsaVariant, input_seed: u64) {
+    let dep = deploy(net, isa, MemBudget::default());
+    let mut rng = Prng::new(input_seed);
+    let input = QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng);
+    let mut cf = Coordinator::new(8);
+    let rf = cf.run(&dep, &input);
+    let mut cp = Coordinator::with_fidelity(8, CoreFidelity::Pipeline);
+    let rp = cp.run(&dep, &input);
+    assert_eq!(rf.output, rp.output, "{}: final output diverges", net.name);
+    assert_eq!(rf.node_outputs, rp.node_outputs, "{}: node outputs diverge", net.name);
+    for (i, (lf, lp)) in rf.layers.iter().zip(&rp.layers).enumerate() {
+        assert!(
+            lp.stats.cycles >= lf.stats.cycles,
+            "{}: layer {i} ({}) pipeline {} < fast {}",
+            net.name,
+            lf.name,
+            lp.stats.cycles,
+            lf.stats.cycles
+        );
+    }
+    assert!(rp.total_cycles() >= rf.total_cycles());
+    assert!(rf.total_cycles() > 0);
+}
+
+#[test]
+fn resnet20_e2e_bit_identical_across_tiers() {
+    let net = flexv::models::resnet20(flexv::models::Profile::Mixed4a2w, 5);
+    e2e_crosscheck(&net, IsaVariant::FlexV, 0xCC_01);
+}
+
+#[test]
+fn mnv1_e2e_bit_identical_across_tiers() {
+    // Reduced input resolution keeps the depthwise/pointwise chain
+    // (every kernel kind MNV1 exercises) at test-friendly cycle counts.
+    let net = flexv::models::by_name("mnv1-8b4b", 32).expect("model zoo");
+    e2e_crosscheck(&net, IsaVariant::FlexV, 0xCC_02);
+}

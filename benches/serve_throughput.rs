@@ -2,7 +2,10 @@
 //! traffic trace (MobileNetV1-8b / 8b4b / ResNet-20-4b2b) replayed on
 //! fleets of growing size, plus the trace-shape scenario matrix
 //! (steady / poisson / bursty / diurnal SLO workloads with per-class
-//! p99 and deadline-miss reporting, static vs autoscaled fleets).
+//! p99 and deadline-miss reporting, static vs autoscaled fleets), plus
+//! the federated-fleet row (2 regions behind the least-loaded router
+//! with a pinned shard failure, straggler window and live rollout —
+//! report asserted byte-identical across worker counts).
 //!
 //! The engine runs with its defaults: shard batches simulate on a host
 //! thread pool and the sim fast path replays steady-state windows. Pass
@@ -190,6 +193,37 @@ fn tuned_row(hw: usize, requests: usize) {
     );
 }
 
+/// Federated-fleet row: the shared `report::bench` federation scenario
+/// (2 least-loaded regions x 2 shards with a pinned shard failure, a
+/// straggler window and a live rollout), run once on the auto worker
+/// pool and once sequentially — the rendered report must match
+/// byte-for-byte (the fingerprint the CI `federation` job re-checks
+/// across worker counts and fast-path settings).
+fn federation_row(full: bool) {
+    use flexv::report::bench::{federation_scenario, BenchOptions};
+    println!();
+    let t0 = Instant::now();
+    let m = federation_scenario(&BenchOptions { full, ..Default::default() });
+    let wall = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let seq = federation_scenario(&BenchOptions { full, workers: 1, ..Default::default() });
+    let wall_seq = t1.elapsed().as_secs_f64();
+    assert_eq!(m.render(), seq.render(), "federation report diverged across worker counts");
+    assert!(m.failovers >= 1, "the pinned shard failure was not applied");
+    assert!(m.straggler_windows >= 1, "the pinned straggler was not applied");
+    let ro = m.rollout.as_ref().expect("the scenario always rolls out");
+    println!(
+        "federation: 2 regions x 2 shards (least-loaded), {} served, {} re-queued across {} \
+         fault events; rollout drained {} cycles, {} models migrated \
+         ({wall:.1}s auto-workers vs {wall_seq:.1}s sequential, identical report)",
+        m.total_served(),
+        m.requeued,
+        m.faults_injected,
+        ro.drain_cycles(),
+        ro.models_migrated,
+    );
+}
+
 /// Tracing-overhead figure: run one ResNet-20 inference with the trace
 /// sink detached (the no-op default) and once with a recording sink
 /// attached, and report cycles/sec for both. The sink lives outside the
@@ -275,6 +309,7 @@ fn main() {
         tuned_row(hw, requests);
     }
     scenario_matrix(hw, requests);
+    federation_row(full);
     tracing_overhead(hw);
     flexv::report::bench::write_artifact_from_args(
         "serve",

@@ -452,6 +452,15 @@ impl TuneCache {
         self.map.insert(key.raw(), t);
     }
 
+    /// Warm-migrate every tuning from `other`, overwriting same-key
+    /// entries (live rollout: install tunings computed off-path without
+    /// re-running the tuner). Accounting counters are untouched.
+    pub fn warm_from(&mut self, other: &TuneCache) {
+        for (k, t) in &other.map {
+            self.map.insert(*k, t.clone());
+        }
+    }
+
     /// Distinct tuned networks resident.
     pub fn len(&self) -> usize {
         self.map.len()

@@ -60,6 +60,8 @@ COMMANDS:
               [--trace steady|poisson|bursty|diurnal] [--slo]
               [--autoscale MIN:MAX] [--mean-gap CYCLES] [--seed N]
               [--trace-out FILE]
+              [--federation N] [--router hash|least-loaded|locality]
+              [--faults SPEC] [--rollout [CYCLE]]
                     replay a mixed 3-model traffic trace on a
                     multi-cluster serving fleet; reports req/s, p50/p99
                     latency, MAC/cycle, energy/request, plan-cache hits.
@@ -82,7 +84,20 @@ COMMANDS:
                     --trace-out FILE writes a Chrome-trace JSON of the
                     fleet timeline (request lifecycles, batches, shard
                     occupancy, shed/park/wake events) — byte-identical
-                    across --workers and fast-path settings
+                    across --workers and fast-path settings.
+                    --federation N federates N identical regions behind
+                    a deterministic router (--router, default hash);
+                    --faults injects a seeded fault schedule at fixed
+                    simulated cycles — comma-separated tokens
+                    fail@CYCLE:rR.sS+DUR (shard down, in-flight work
+                    re-queued), slow@CYCLE:rR.sSxF+DUR (Fx straggler,
+                    timing only), auto:K (K events from --seed) — with
+                    priority-preserving failover; --rollout [CYCLE]
+                    drains the last region at CYCLE (default mid-trace),
+                    compiles tuned plans off-path, and switches it warm
+                    with zero dropped requests. Reports, fault log and
+                    trace stay byte-identical across --workers and
+                    fast-path settings at a fixed seed and fault plan
   bench-report [--suite kernels|e2e|autotune|serve|all] [--out FILE]
                [--out-dir DIR] [--full] [--workers N]
                [--fidelity fast|pipeline]
@@ -288,6 +303,10 @@ fn main() {
                 fidelity: parse_fidelity(&args),
                 ..ServeConfig::default()
             };
+            if let Some(regions) = flag_val(&args, "--federation") {
+                run_serve_federation(&args, cfg, regions, hw, requests, mean_gap, seed, shape, slo);
+                return;
+            }
             let mut eng = Engine::new(cfg);
             for net in standard_mix(hw) {
                 eng.register(net);
@@ -628,6 +647,91 @@ fn run_tune(args: &[String]) {
             std::process::exit(1);
         });
         println!("tune cache written to {path} ({} networks)", cache.len());
+    }
+}
+
+/// The `serve-bench --federation N` path: N identical regions behind a
+/// deterministic router, with an optional seeded fault plan and live
+/// rollout. Shares every engine knob with the single-fleet path.
+#[allow(clippy::too_many_arguments)]
+fn run_serve_federation(
+    args: &[String],
+    cfg: flexv::serve::ServeConfig,
+    regions: usize,
+    hw: usize,
+    requests: usize,
+    mean_gap: u64,
+    seed: u64,
+    shape: Option<flexv::serve::TraceShape>,
+    slo: bool,
+) {
+    use flexv::serve::{
+        standard_mix, FaultPlan, Federation, FederationConfig, RolloutPlan, RouterPolicy, SloClass,
+        WorkloadSpec,
+    };
+    if regions == 0 {
+        eprintln!("--federation needs at least one region");
+        usage()
+    }
+    let policy = flag_str(args, "--router").map_or(RouterPolicy::ConsistentHash, |s| {
+        RouterPolicy::from_name(s).unwrap_or_else(|| {
+            eprintln!("unknown --router '{s}' (expected hash | least-loaded | locality)");
+            usage()
+        })
+    });
+    // `auto:K` fault cycles and the default rollout cycle scale with the
+    // approximate trace span
+    let span = mean_gap.saturating_mul(requests as u64).max(1);
+    let faults = match flag_str(args, "--faults") {
+        None => FaultPlan::none(),
+        Some(spec) => {
+            FaultPlan::parse(spec, seed, regions, cfg.shards, span).unwrap_or_else(|e| {
+                eprintln!("bad --faults '{spec}': {e}");
+                usage()
+            })
+        }
+    };
+    let rollout = args.iter().position(|a| a == "--rollout").map(|i| {
+        let at = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(span / 2);
+        RolloutPlan { at, canary: regions - 1 }
+    });
+    let n_faults = faults.len();
+    let mut fed =
+        Federation::new(FederationConfig { regions, engine: cfg, policy, faults, rollout });
+    for net in standard_mix(hw) {
+        fed.register(net);
+    }
+    println!(
+        "serve-bench: {requests} requests over 3 models, federated across {regions} regions x {} \
+         shards (router {}, {} fault events{}, MNV1 input {hw}x{hw}) ...",
+        cfg.shards,
+        policy.name(),
+        n_faults,
+        rollout.map_or(String::new(), |p| format!(", rollout canary r{} @{}", p.canary, p.at)),
+    );
+    let trace = match shape {
+        None => fed.region(0).synthetic_trace(requests, mean_gap, &[0.45, 0.30, 0.25], seed),
+        Some(shape) => {
+            let mut spec = WorkloadSpec::new(shape, requests, mean_gap, 3);
+            spec.mix = vec![0.45, 0.30, 0.25];
+            spec.seed = seed;
+            if slo {
+                spec.classes = SloClass::standard_tiers(mean_gap.saturating_mul(25));
+            }
+            fed.workload_trace(&spec)
+        }
+    };
+    let t0 = std::time::Instant::now();
+    let m = fed.run_trace(trace);
+    let wall = t0.elapsed().as_secs_f64();
+    print!("{}", m.render());
+    let span_cycles = m.regions.iter().map(|r| r.span_cycles).max().unwrap_or(0);
+    println!(
+        "(host: {wall:.1}s wall, {:.1} M simulated cycles/s)",
+        span_cycles as f64 / wall.max(1e-9) / 1e6
+    );
+    if let Some(path) = flag_str(args, "--trace-out") {
+        write_trace(path, &fed.build_trace());
     }
 }
 

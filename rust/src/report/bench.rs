@@ -19,10 +19,13 @@
 //! - **serve** — one bursty 3-tier SLO trace on an autoscaled 4-shard
 //!   fleet: every simulated [`crate::serve::FleetMetrics`] field
 //!   (latency percentiles in cycles, MAC/cycle, µJ/request, per-class
-//!   miss/shed counts…). Host-side knobs ([`BenchOptions::workers`])
-//!   change wall-clock time only; the emitted rows are bit-identical
-//!   for any value — CI's perf gate runs the suite at `--workers 1`
-//!   and `--workers 4` and diffs the artifacts byte-for-byte.
+//!   miss/shed counts…), plus a 2-region federated scenario with a
+//!   pinned shard failure, straggler window and live rollout
+//!   ([`federation_scenario`]: per-region, failure-mode and rollout
+//!   rows). Host-side knobs ([`BenchOptions::workers`]) change
+//!   wall-clock time only; the emitted rows are bit-identical for any
+//!   value — CI's perf gate runs the suite at `--workers 1` and
+//!   `--workers 4` and diffs the artifacts byte-for-byte.
 
 use super::artifact::{BenchArtifact, MetricRow, MetricSource, RunMeta};
 use super::workloads::{conv_fig7_stats_fid, matmul_table3_stats_fid};
@@ -400,12 +403,56 @@ pub fn serve_scenario(opts: &BenchOptions) -> crate::serve::FleetMetrics {
 /// Seed of the serve suite's workload spec.
 pub const SERVE_SUITE_SEED: u64 = 0x51EBE;
 
+/// The serve suite's federation scenario: the same 3-model mix spread
+/// over 2 least-loaded regions of 2 shards, with one mid-trace shard
+/// failure (in-flight work re-queued), one straggler window, and a live
+/// rollout of tuned plans onto region 1 — the source of the
+/// `serve/region*`, `serve/faults/*` and `serve/rollout/*` rows. Every
+/// fault cycle is pinned, so the report is a pure function of the spec
+/// (byte-identical across `opts.workers`, like [`serve_scenario`]).
+pub fn federation_scenario(opts: &BenchOptions) -> crate::serve::FederationMetrics {
+    use crate::serve::{FaultPlan, Federation, FederationConfig, RolloutPlan, RouterPolicy};
+    let hw = if opts.full { 224 } else { 96 };
+    let requests = if opts.full { 48 } else { 24 };
+    let cfg = ServeConfig { shards: 2, workers: opts.workers, ..ServeConfig::default() };
+    let span = 1_500_000u64 * requests as u64;
+    let fault_spec = format!(
+        "fail@{}:r0.s0+{},slow@{}:r1.s0x3+{}",
+        span / 8,
+        span / 4,
+        span / 4,
+        span / 4,
+    );
+    let faults = FaultPlan::parse(&fault_spec, SERVE_SUITE_SEED, 2, 2, span)
+        .expect("static fault spec parses");
+    let fed_cfg = FederationConfig {
+        regions: 2,
+        engine: cfg,
+        policy: RouterPolicy::LeastLoaded,
+        faults,
+        rollout: Some(RolloutPlan { at: span * 3 / 4, canary: 1 }),
+    };
+    let mut fed = Federation::new(fed_cfg);
+    for net in standard_mix(hw) {
+        fed.register(net);
+    }
+    let mut spec = WorkloadSpec::new(TraceShape::Bursty, requests, 1_500_000, 3);
+    spec.mix = vec![0.45, 0.30, 0.25];
+    spec.classes = SloClass::standard_tiers(40_000_000);
+    spec.seed = SERVE_SUITE_SEED;
+    let trace = fed.workload_trace(&spec);
+    fed.run_trace(trace)
+}
+
 /// The serve fleet under a bursty SLO workload, serialized through
 /// [`crate::serve::FleetMetrics`]'s [`MetricSource`] impl (simulated
-/// fields only — fast-path counters and wall-clock never appear).
+/// fields only — fast-path counters and wall-clock never appear), plus
+/// the federated scenario's per-region / failure-mode / rollout rows
+/// ([`federation_scenario`]).
 pub fn serve_suite(opts: &BenchOptions) -> BenchArtifact {
     let m = serve_scenario(opts);
     let mut art = BenchArtifact::new("serve", meta(SERVE_SUITE_SEED, opts));
     art.push_source(&m);
+    art.push_source(&federation_scenario(opts));
     art
 }

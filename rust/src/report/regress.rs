@@ -14,10 +14,13 @@
 //! A metric present in the baseline but missing from the current run is
 //! a failure (a number silently disappeared); a new current-only metric
 //! is reported but does not fail (additive evolution). Baselines marked
-//! `pending` carry paper targets instead of measured values: they never
-//! gate, they only feed the reproduction-distance report
-//! ([`paper_distance`]), until `regress --bless` pins them to measured
-//! numbers.
+//! `pending` carry paper targets instead of measured values: their rows
+//! never produce drift (value deltas are the reproduction-distance
+//! report's job, [`paper_distance`]), but a pending baseline **fails
+//! the gate itself** — an unpinned suite is an unguarded suite, and a
+//! silently green gate would hide that indefinitely. Run
+//! `regress --bless` and commit `baselines/` to pin measured values;
+//! blessing is the only non-failing path through a pending baseline.
 //!
 //! Baselines are always fast-tier measurements; a pipeline-tier artifact
 //! (`bench-report --fidelity pipeline`, see [`crate::sim::pipeline`]) is
@@ -108,7 +111,7 @@ impl DriftRow {
 #[derive(Clone, Debug)]
 pub struct RegressReport {
     pub suite: String,
-    /// The baseline was `pending` (never gates).
+    /// The baseline was `pending` (fails the gate until blessed).
     pub pending_baseline: bool,
     /// Set when current and baseline were measured in different
     /// quick/full modes — the usual cause of a wall of drift rows, so
@@ -119,9 +122,11 @@ pub struct RegressReport {
 }
 
 impl RegressReport {
-    /// True when any row fails the gate.
+    /// True when any row fails the gate — or the baseline itself is
+    /// still `pending` (an unpinned suite must not pass silently; see
+    /// the module docs).
     pub fn failed(&self) -> bool {
-        !self.pending_baseline && self.rows.iter().any(|r| r.status.fails())
+        self.pending_baseline || self.rows.iter().any(|r| r.status.fails())
     }
 
     pub fn count(&self, status: DriftStatus) -> usize {
@@ -141,11 +146,12 @@ impl RegressReport {
         if self.pending_baseline {
             // No drift table for a pending baseline: its rows are paper
             // targets, not measured values, so value deltas are the
-            // reproduction-distance report's job, not drift.
+            // reproduction-distance report's job, not drift. The gate
+            // still fails — see `failed()`.
             out.push_str(&format!(
-                "regress {}: baseline is PENDING (paper targets only) — not gating; \
-                 {} target rows, {} current metrics. Run `flexv regress --bless` and \
-                 commit baselines/ to pin measured values\n",
+                "regress {}: FAIL — baseline is PENDING (paper targets, no pinned \
+                 measurements); {} target rows, {} current metrics. Run `flexv regress \
+                 --bless` and commit baselines/ to pin measured values\n",
                 self.suite,
                 self.rows.iter().filter(|r| r.baseline.is_some()).count(),
                 self.rows.iter().filter(|r| r.current.is_some()).count(),
@@ -427,14 +433,21 @@ mod tests {
     }
 
     #[test]
-    fn pending_baseline_never_gates() {
+    fn pending_baseline_fails_the_gate_without_drift_rows() {
         let mut base = art("s", vec![MetricRow::exact("s/a", 91.5, "MAC/cycle")]);
         base.pending = true;
         let cur = art("s", vec![MetricRow::exact("s/a", 80.0, "MAC/cycle")]);
         let rep = compare(&cur, &base, &Tolerance::default());
-        assert!(!rep.failed());
+        // Unpinned rows never count as drift (the value came from the
+        // paper, not a measurement)…
         assert_eq!(rep.count(DriftStatus::Unpinned), 1);
-        assert!(rep.render().contains("PENDING"));
+        assert_eq!(rep.count(DriftStatus::Drift), 0);
+        // …but the gate fails anyway: a pending suite is unguarded, and
+        // `regress --bless` is the only non-failing path out.
+        assert!(rep.failed(), "pending baseline must fail a non-bless run");
+        let rendered = rep.render();
+        assert!(rendered.contains("PENDING") && rendered.contains("FAIL"), "{rendered}");
+        assert!(rendered.contains("--bless"), "{rendered}");
     }
 
     #[test]

@@ -112,7 +112,10 @@ impl Autoscaler {
 
         // Scale up: wake enough parked shards (lowest index first, so
         // the choice is deterministic) to serve the in-flight work plus
-        // one shard per up_queue_per_shard queued requests.
+        // one shard per up_queue_per_shard queued requests. Failed
+        // shards (fault injection, [`Shard::fail`]) are parked too but
+        // must stay down until they recover, so they are never victims
+        // of a wake.
         let per = self.cfg.up_queue_per_shard.max(f64::MIN_POSITIVE);
         let busy = shards.iter().filter(|s| s.active && !s.is_free(now)).count();
         let needed = busy + (queue_len as f64 / per).ceil() as usize;
@@ -123,7 +126,7 @@ impl Autoscaler {
                 if active + woken >= target {
                     break;
                 }
-                if !s.active {
+                if !s.active && !s.is_failed(now) {
                     s.wake();
                     woken += 1;
                 }
@@ -186,11 +189,12 @@ impl Autoscaler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::CoreFidelity;
 
     fn fleet(n: usize, active: usize) -> Vec<Shard> {
         (0..n)
             .map(|i| {
-                let mut s = Shard::new(i, 2, false, None);
+                let mut s = Shard::new(i, 2, false, None, CoreFidelity::Fast);
                 if i >= active {
                     s.park();
                 }
@@ -241,7 +245,7 @@ mod tests {
 
     #[test]
     fn parked_shard_loses_residency_and_pays_cold_load_on_wake() {
-        let mut s = Shard::new(0, 2, false, None);
+        let mut s = Shard::new(0, 2, false, None, CoreFidelity::Fast);
         s.resident_model = Some(1);
         s.park();
         assert!(!s.active);
@@ -249,6 +253,21 @@ mod tests {
         s.wake();
         assert!(s.active);
         assert_eq!(s.resident_model, None, "wake is cold: next batch pays the switch");
+    }
+
+    #[test]
+    fn failed_shards_are_never_woken() {
+        let mut shards = fleet(3, 1);
+        shards[1].fail(10_000);
+        let mut a = Autoscaler::new(AutoscaleConfig::range(1, 3));
+        // deep backlog: only the healthy parked shard wakes
+        assert_eq!(a.step(0, 100, &mut shards), Some(ScaleAction::Up(1)));
+        assert_eq!(active_ids(&shards), vec![0, 2]);
+        // after recovery the shard is a wake candidate again
+        shards[1].recover();
+        shards[1].park();
+        assert_eq!(a.step(11_000, 100, &mut shards), Some(ScaleAction::Up(1)));
+        assert_eq!(active_ids(&shards), vec![0, 1, 2]);
     }
 
     #[test]

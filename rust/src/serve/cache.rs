@@ -51,6 +51,18 @@ impl PlanCache {
         dep
     }
 
+    /// Warm-migrate every plan from `other`, overwriting same-key
+    /// entries (live rollout: tuned and default deployments share a
+    /// [`PlanKey`], so installing a tuned plan over the default *is*
+    /// the version switch — see `serve::federation::rollout`). Plans
+    /// are shared by `Arc`, not copied; accounting counters are
+    /// untouched (migration is not a lookup).
+    pub fn warm_from(&mut self, other: &PlanCache) {
+        for (k, dep) in &other.map {
+            self.map.insert(*k, dep.clone());
+        }
+    }
+
     /// Distinct compiled plans resident.
     pub fn len(&self) -> usize {
         self.map.len()

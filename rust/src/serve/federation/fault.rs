@@ -1,0 +1,310 @@
+//! Seeded, deterministic fault plans for the federation layer.
+//!
+//! A [`FaultPlan`] is a list of [`FaultEvent`]s pinned to **simulated
+//! cycles** — shard failures (down for a window, in-flight work
+//! retracted and re-queued) and stragglers (a shard runs N× slower for
+//! a window). Plans come from three equivalent sources: constructed in
+//! code, generated from a seed ([`FaultPlan::generate`]), or parsed
+//! from the CLI spec mini-language ([`FaultPlan::parse`]):
+//!
+//! ```text
+//! fail@CYCLE:rR.sS+DUR     shard S of region R fails at CYCLE for DUR cycles
+//! slow@CYCLE:rR.sSxF+DUR   shard S of region R runs F× slower for DUR cycles
+//! auto:K                   K seeded events over the plan span
+//! ```
+//!
+//! (comma-separated, e.g. `fail@1000:r0.s1+5000,slow@2000:r1.s0x3+8000`).
+//!
+//! Because every event is pinned to a simulated cycle and applied by the
+//! sequential federation event loop, the fault timeline — and everything
+//! downstream of it (completions, re-queues, metrics, the exported
+//! trace) — is part of the determinism contract: the same plan + seed
+//! produces bit-identical results for any worker count or fast-path
+//! setting (`rust/tests/federation_determinism.rs`).
+
+use crate::util::Prng;
+
+/// What goes wrong.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The shard goes down for `down_cycles`: in-flight work is
+    /// retracted and re-queued ([`crate::serve::Engine::fail_shard`]),
+    /// and the shard recovers cold at the end of the window.
+    ShardFail { region: usize, shard: usize, down_cycles: u64 },
+    /// Batches starting on the shard during the window run `factor`×
+    /// slower (timing overlay only — outputs, MACs and energy are
+    /// untouched; see [`crate::serve::Shard::slow`]).
+    Straggler { region: usize, shard: usize, factor: u64, slow_cycles: u64 },
+}
+
+/// One planned fault at an absolute simulated cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at: u64,
+    pub kind: FaultKind,
+}
+
+/// What the federation actually did at a cycle — the *applied* fault
+/// timeline ([`FaultPlan::timeline`] expands failures into an explicit
+/// fail + recover pair). Part of the run's fingerprint: rendered in the
+/// federation report and exported as trace instants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultRecord {
+    pub at: u64,
+    pub region: usize,
+    pub shard: usize,
+    pub action: FaultAction,
+}
+
+/// The applied half of [`FaultKind`] (recovery is its own record so the
+/// event loop — and the trace — see it as a first-class instant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    Fail { until: u64 },
+    Recover,
+    Slow { factor: u64, until: u64 },
+}
+
+/// A deterministic fault-injection schedule.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Planned events; [`FaultPlan::timeline`] orders them.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan (no faults — the default).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Seeded plan: `n` events over `[span/8, 7*span/8)`, alternating
+    /// failures and stragglers by coin flip. Same seed, same plan.
+    pub fn generate(seed: u64, regions: usize, shards: usize, n: usize, span: u64) -> Self {
+        assert!(regions >= 1 && shards >= 1, "need at least one region and shard");
+        let span = span.max(8);
+        let mut rng = Prng::new(seed);
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let at = span / 8 + rng.below((span * 3 / 4).max(1));
+            let region = rng.below(regions as u64) as usize;
+            let shard = rng.below(shards as u64) as usize;
+            let window = span / 8 + rng.below((span / 4).max(1));
+            let kind = if rng.chance(0.5) {
+                FaultKind::ShardFail { region, shard, down_cycles: window }
+            } else {
+                let factor = 2 + rng.below(3);
+                FaultKind::Straggler { region, shard, factor, slow_cycles: window }
+            };
+            events.push(FaultEvent { at, kind });
+        }
+        FaultPlan { events }
+    }
+
+    /// Parse the CLI spec mini-language (see module docs). `seed` and
+    /// `span` feed `auto:K` tokens; explicit tokens are validated
+    /// against `regions`/`shards`.
+    pub fn parse(
+        spec: &str,
+        seed: u64,
+        regions: usize,
+        shards: usize,
+        span: u64,
+    ) -> Result<Self, String> {
+        let mut plan = FaultPlan::none();
+        for token in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if let Some(k) = token.strip_prefix("auto:") {
+                let n: usize =
+                    k.parse().map_err(|_| format!("bad auto count in `{token}`"))?;
+                plan.events.extend(FaultPlan::generate(seed, regions, shards, n, span).events);
+                continue;
+            }
+            let (is_fail, rest) = if let Some(r) = token.strip_prefix("fail@") {
+                (true, r)
+            } else if let Some(r) = token.strip_prefix("slow@") {
+                (false, r)
+            } else {
+                return Err(format!(
+                    "bad fault token `{token}` (want fail@C:rR.sS+D, slow@C:rR.sSxF+D, or auto:K)"
+                ));
+            };
+            let (at_s, loc) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("missing `:` in `{token}`"))?;
+            let at: u64 = at_s.parse().map_err(|_| format!("bad cycle in `{token}`"))?;
+            let (loc, dur_s) = loc
+                .split_once('+')
+                .ok_or_else(|| format!("missing `+DUR` in `{token}`"))?;
+            let dur: u64 = dur_s.parse().map_err(|_| format!("bad duration in `{token}`"))?;
+            let (rs, rest) = loc
+                .strip_prefix('r')
+                .and_then(|l| l.split_once(".s"))
+                .ok_or_else(|| format!("bad location in `{token}` (want rR.sS)"))?;
+            let region: usize = rs.parse().map_err(|_| format!("bad region in `{token}`"))?;
+            let kind = if is_fail {
+                let shard: usize =
+                    rest.parse().map_err(|_| format!("bad shard in `{token}`"))?;
+                FaultKind::ShardFail { region, shard, down_cycles: dur }
+            } else {
+                let (ss, fs) = rest
+                    .split_once('x')
+                    .ok_or_else(|| format!("missing `xF` in `{token}`"))?;
+                let shard: usize = ss.parse().map_err(|_| format!("bad shard in `{token}`"))?;
+                let factor: u64 = fs.parse().map_err(|_| format!("bad factor in `{token}`"))?;
+                FaultKind::Straggler { region, shard, factor, slow_cycles: dur }
+            };
+            let (r, s) = match kind {
+                FaultKind::ShardFail { region, shard, .. }
+                | FaultKind::Straggler { region, shard, .. } => (region, shard),
+            };
+            if r >= regions || s >= shards {
+                return Err(format!(
+                    "fault `{token}` out of range (have {regions} regions x {shards} shards)"
+                ));
+            }
+            plan.events.push(FaultEvent { at, kind });
+        }
+        Ok(plan)
+    }
+
+    /// Expand into the applied-event timeline the federation loop walks:
+    /// every failure contributes an explicit recovery record at the end
+    /// of its window, and the whole list is stably ordered by cycle (so
+    /// same-cycle events apply in plan order).
+    pub fn timeline(&self) -> Vec<FaultRecord> {
+        let mut out = Vec::new();
+        for e in &self.events {
+            match e.kind {
+                FaultKind::ShardFail { region, shard, down_cycles } => {
+                    let until = e.at.saturating_add(down_cycles);
+                    out.push(FaultRecord {
+                        at: e.at,
+                        region,
+                        shard,
+                        action: FaultAction::Fail { until },
+                    });
+                    out.push(FaultRecord { at: until, region, shard, action: FaultAction::Recover });
+                }
+                FaultKind::Straggler { region, shard, factor, slow_cycles } => {
+                    out.push(FaultRecord {
+                        at: e.at,
+                        region,
+                        shard,
+                        action: FaultAction::Slow {
+                            factor,
+                            until: e.at.saturating_add(slow_cycles),
+                        },
+                    });
+                }
+            }
+        }
+        out.sort_by_key(|r| r.at);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic_and_in_bounds() {
+        let a = FaultPlan::generate(7, 2, 4, 16, 1_000_000);
+        let b = FaultPlan::generate(7, 2, 4, 16, 1_000_000);
+        assert_eq!(a, b, "same seed must produce the same plan");
+        assert_eq!(a.len(), 16);
+        for e in &a.events {
+            assert!(e.at >= 125_000 && e.at < 875_000, "at {} out of span", e.at);
+            match e.kind {
+                FaultKind::ShardFail { region, shard, down_cycles } => {
+                    assert!(region < 2 && shard < 4 && down_cycles > 0);
+                }
+                FaultKind::Straggler { region, shard, factor, slow_cycles } => {
+                    assert!(region < 2 && shard < 4 && slow_cycles > 0);
+                    assert!((2..5).contains(&factor));
+                }
+            }
+        }
+        assert_ne!(a, FaultPlan::generate(8, 2, 4, 16, 1_000_000), "seed must matter");
+    }
+
+    #[test]
+    fn parse_round_trips_both_kinds_and_auto() {
+        let plan =
+            FaultPlan::parse("fail@1000:r0.s1+5000, slow@2000:r1.s0x3+8000", 1, 2, 2, 100).unwrap();
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent {
+                    at: 1000,
+                    kind: FaultKind::ShardFail { region: 0, shard: 1, down_cycles: 5000 },
+                },
+                FaultEvent {
+                    at: 2000,
+                    kind: FaultKind::Straggler {
+                        region: 1,
+                        shard: 0,
+                        factor: 3,
+                        slow_cycles: 8000,
+                    },
+                },
+            ]
+        );
+        let auto = FaultPlan::parse("auto:5", 42, 2, 4, 1_000_000).unwrap();
+        assert_eq!(auto.events, FaultPlan::generate(42, 2, 4, 5, 1_000_000).events);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_and_out_of_range() {
+        for bad in [
+            "nonsense",
+            "fail@x:r0.s0+10",
+            "fail@5:r0.s0",
+            "slow@5:r0.s0+10", // missing xF
+            "fail@5:r9.s0+10", // region out of range
+            "fail@5:r0.s9+10", // shard out of range
+        ] {
+            assert!(FaultPlan::parse(bad, 0, 2, 2, 100).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn timeline_pairs_failures_with_recoveries_in_cycle_order() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    at: 500,
+                    kind: FaultKind::ShardFail { region: 1, shard: 0, down_cycles: 100 },
+                },
+                FaultEvent {
+                    at: 200,
+                    kind: FaultKind::Straggler {
+                        region: 0,
+                        shard: 1,
+                        factor: 2,
+                        slow_cycles: 50,
+                    },
+                },
+            ],
+        };
+        let tl = plan.timeline();
+        assert_eq!(tl.len(), 3, "fail expands to fail + recover");
+        assert_eq!(tl[0].at, 200);
+        assert_eq!(tl[0].action, FaultAction::Slow { factor: 2, until: 250 });
+        assert_eq!(tl[1].action, FaultAction::Fail { until: 600 });
+        assert_eq!(tl[2], FaultRecord {
+            at: 600,
+            region: 1,
+            shard: 0,
+            action: FaultAction::Recover,
+        });
+    }
+}

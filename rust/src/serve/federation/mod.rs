@@ -1,0 +1,768 @@
+//! Fleet **federation**: multiple serving-engine regions behind a
+//! deterministic router, with seeded fault injection and live rollouts.
+//!
+//! One [`Engine`] is a region — a pool of cluster shards with its own
+//! queue, plan cache and autoscaler. A [`Federation`] stacks several
+//! regions behind a [`RouterPolicy`] and drives them from **one
+//! sequential event loop** over simulated cycles:
+//!
+//! 1. apply fault-timeline events due at the clock
+//!    ([`FaultPlan::timeline`] → [`Engine::fail_shard`] /
+//!    [`Engine::recover_shard`] / [`Engine::slow_shard`]);
+//! 2. step the rollout controller ([`rollout`]): start draining the
+//!    canary at its cycle, switch it to warm tuned caches the moment it
+//!    is idle;
+//! 3. admit due arrivals, each routed by the policy over the current
+//!    eligibility mask (healthy, not draining);
+//! 4. pump every region ([`Engine::pump`]: shed → autoscale →
+//!    dispatch);
+//! 5. jump the clock to the next arrival, fault event, region wake, or
+//!    drain-complete cycle — O(events), independent of idle gaps.
+//!
+//! # Determinism, one layer up
+//!
+//! Every input to a routing, fault, or rollout decision is simulated
+//! state produced by the sequential loop (queue depths, busy-until
+//! cycles, the arrival counter, the fault plan) — never host state. The
+//! engines' own determinism contract (completion streams bit-identical
+//! across `workers` × `fastpath`) therefore lifts to the whole
+//! federation: per-region completions, [`FederationMetrics`] (render
+//! and rows), and the exported trace are byte-identical across those
+//! settings at a fixed seed and fault plan
+//! (`rust/tests/federation_determinism.rs`, CI `federation` job).
+
+pub mod fault;
+pub mod rollout;
+pub mod router;
+
+pub use fault::{FaultAction, FaultEvent, FaultKind, FaultPlan, FaultRecord};
+pub use rollout::{RolloutPlan, RolloutReport};
+pub use router::RouterPolicy;
+
+use rollout::RolloutPhase;
+
+use super::workload::{self, SloClass, WorkloadSpec};
+use super::{Engine, FleetMetrics, ServeConfig, TraceItem};
+use crate::qnn::layer::Network;
+use crate::report::artifact::{MetricRow, MetricSource};
+
+/// Federation-level configuration: identical regions behind one router.
+#[derive(Clone, Debug)]
+pub struct FederationConfig {
+    /// Number of regions (each one [`Engine`] built from `engine`).
+    pub regions: usize,
+    /// Per-region engine configuration.
+    /// [`ServeConfig::track_inflight`] is forced on — failover needs
+    /// the retraction pool.
+    pub engine: ServeConfig,
+    pub policy: RouterPolicy,
+    /// Deterministic fault schedule (empty = healthy run).
+    pub faults: FaultPlan,
+    /// Optional live rollout (canary drain → warm switch).
+    pub rollout: Option<RolloutPlan>,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            regions: 2,
+            engine: ServeConfig::default(),
+            policy: RouterPolicy::ConsistentHash,
+            faults: FaultPlan::none(),
+            rollout: None,
+        }
+    }
+}
+
+/// The federated fleet: regions + router + fault timeline + rollout
+/// controller, advanced by one sequential discrete-event loop.
+pub struct Federation {
+    cfg: FederationConfig,
+    regions: Vec<Engine>,
+    ring: router::Ring,
+    /// Applied-event schedule from the fault plan, cycle-ordered.
+    timeline: Vec<FaultRecord>,
+    next_event: usize,
+    /// Events applied so far (the run's fault fingerprint).
+    fault_log: Vec<FaultRecord>,
+    failovers: u64,
+    straggler_windows: u64,
+    /// Global arrival counter — the router's hash key, so routing is
+    /// independent of per-region request ids.
+    arrivals: u64,
+    /// Arrivals handed to each region (admitted or rejected there).
+    routed: Vec<u64>,
+    phase: RolloutPhase,
+    rollout_models: usize,
+    drain_started: u64,
+}
+
+impl Federation {
+    pub fn new(cfg: FederationConfig) -> Self {
+        assert!(cfg.regions >= 1, "need at least one region");
+        if let Some(p) = cfg.rollout {
+            assert!(p.canary < cfg.regions, "rollout canary {} out of range", p.canary);
+        }
+        let engine_cfg = ServeConfig { track_inflight: true, ..cfg.engine };
+        let regions: Vec<Engine> = (0..cfg.regions).map(|_| Engine::new(engine_cfg)).collect();
+        let timeline = cfg.faults.timeline();
+        for r in &timeline {
+            assert!(
+                r.region < cfg.regions && r.shard < cfg.engine.shards,
+                "fault at cycle {} targets r{}.s{} but the fleet is {} regions x {} shards",
+                r.at,
+                r.region,
+                r.shard,
+                cfg.regions,
+                cfg.engine.shards,
+            );
+        }
+        let ring = router::Ring::new(cfg.regions);
+        let routed = vec![0; cfg.regions];
+        Federation {
+            regions,
+            ring,
+            timeline,
+            next_event: 0,
+            fault_log: Vec::new(),
+            failovers: 0,
+            straggler_windows: 0,
+            arrivals: 0,
+            routed,
+            phase: RolloutPhase::Pending,
+            rollout_models: 0,
+            drain_started: 0,
+            cfg,
+        }
+    }
+
+    /// Register a model in **every** region; returns the (shared)
+    /// registry index.
+    pub fn register(&mut self, net: Network) -> usize {
+        let mut idx = 0;
+        for engine in &mut self.regions {
+            idx = engine.register(net.clone());
+        }
+        idx
+    }
+
+    /// Install the SLO class table fleet-wide.
+    pub fn set_classes(&mut self, classes: Vec<SloClass>) {
+        for engine in &mut self.regions {
+            engine.set_classes(classes.clone());
+        }
+    }
+
+    pub fn model_count(&self) -> usize {
+        self.regions[0].model_count()
+    }
+
+    /// One region's engine (read-only: completions, metrics, shards).
+    pub fn region(&self, r: usize) -> &Engine {
+        &self.regions[r]
+    }
+
+    pub fn regions(&self) -> &[Engine] {
+        &self.regions
+    }
+
+    /// Faults applied so far, in application order.
+    pub fn fault_log(&self) -> &[FaultRecord] {
+        &self.fault_log
+    }
+
+    /// Generate a deterministic arrival trace from `spec` over the
+    /// registered models and install `spec.classes` fleet-wide (the
+    /// federated analog of [`Engine::workload_trace`]).
+    pub fn workload_trace(&mut self, spec: &WorkloadSpec) -> Vec<TraceItem> {
+        assert_eq!(spec.mix.len(), self.model_count(), "one mix weight per model");
+        self.set_classes(spec.classes.clone());
+        let io: Vec<(Vec<usize>, u8)> = (0..self.model_count())
+            .map(|m| {
+                let (net, _) = self.regions[0].model_entry(m);
+                (net.input_shape.to_vec(), net.input_bits)
+            })
+            .collect();
+        workload::generate(spec, &io)
+    }
+
+    /// Per-region admission mask: healthy (some shard not failed) and
+    /// not draining. Degrades gracefully: if draining masks everything,
+    /// health alone decides; if the whole fleet is down, everything is
+    /// eligible (requests queue and wait for recovery).
+    fn eligibility(&self, now: u64) -> Vec<bool> {
+        let canary = match self.phase {
+            RolloutPhase::Draining { .. } => self.cfg.rollout.map(|p| p.canary),
+            _ => None,
+        };
+        let healthy: Vec<bool> = self
+            .regions
+            .iter()
+            .map(|e| e.shards().iter().any(|s| !s.is_failed(now)))
+            .collect();
+        let mut elig: Vec<bool> = healthy
+            .iter()
+            .enumerate()
+            .map(|(r, &h)| h && Some(r) != canary)
+            .collect();
+        if !elig.iter().any(|&e| e) {
+            elig = if healthy.iter().any(|&h| h) {
+                healthy
+            } else {
+                vec![true; self.regions.len()]
+            };
+        }
+        elig
+    }
+
+    fn admit(&mut self, t: TraceItem, now: u64) {
+        let eligible = self.eligibility(now);
+        let region = router::route(
+            self.cfg.policy,
+            &self.ring,
+            self.arrivals,
+            t.model,
+            &self.regions,
+            &eligible,
+            now,
+        );
+        self.arrivals += 1;
+        self.routed[region] += 1;
+        self.regions[region].submit(t);
+    }
+
+    fn apply_fault(&mut self, rec: FaultRecord) {
+        match rec.action {
+            FaultAction::Fail { until } => {
+                self.regions[rec.region].fail_shard(rec.shard, rec.at, until);
+                self.failovers += 1;
+            }
+            FaultAction::Recover => {
+                self.regions[rec.region].recover_shard(rec.shard, rec.at);
+            }
+            FaultAction::Slow { factor, until } => {
+                self.regions[rec.region].slow_shard(rec.shard, factor, until);
+                self.straggler_windows += 1;
+            }
+        }
+        self.fault_log.push(rec);
+    }
+
+    /// One rollout-controller step (see [`rollout`] for the phases).
+    fn rollout_step(&mut self, now: u64) {
+        let Some(plan) = self.cfg.rollout else { return };
+        match self.phase {
+            RolloutPhase::Pending if now >= plan.at => {
+                self.drain_started = now;
+                self.phase = RolloutPhase::Draining { since: now };
+                // an already-idle canary switches at the drain cycle
+                // itself (one recursion level, Draining never recurses)
+                self.rollout_step(now);
+            }
+            RolloutPhase::Draining { .. } if self.regions[plan.canary].is_idle(now) => {
+                let (plans, tunes) = rollout::stage_tuned_caches(&self.regions[plan.canary]);
+                let canary = &mut self.regions[plan.canary];
+                canary.warm_caches(&plans, &tunes);
+                canary.set_tuned(true);
+                self.rollout_models = canary.model_count();
+                self.phase = RolloutPhase::Live { switched: now };
+            }
+            _ => {}
+        }
+    }
+
+    /// While draining, the cycle the canary's last busy shard frees up
+    /// — the loop must visit it to run the switch even though the
+    /// canary's queue is empty.
+    fn drain_wake(&self, now: u64) -> Option<u64> {
+        let RolloutPhase::Draining { .. } = self.phase else { return None };
+        let canary = self.cfg.rollout?.canary;
+        self.regions[canary]
+            .shards()
+            .iter()
+            .map(|s| s.busy_until)
+            .filter(|&b| b > now)
+            .max()
+    }
+
+    /// Replay an arrival trace to completion across the fleet; returns
+    /// the federation report. See the module docs for the loop order.
+    pub fn run_trace(&mut self, mut trace: Vec<TraceItem>) -> FederationMetrics {
+        trace.sort_by_key(|t| t.at);
+        let mut it = trace.into_iter().peekable();
+        let mut clock = 0u64;
+        loop {
+            while self.next_event < self.timeline.len() && self.timeline[self.next_event].at <= clock
+            {
+                let rec = self.timeline[self.next_event];
+                self.next_event += 1;
+                self.apply_fault(rec);
+            }
+            self.rollout_step(clock);
+            while it.peek().map_or(false, |t| t.at <= clock) {
+                let t = it.next().unwrap();
+                self.admit(t, clock);
+            }
+            for engine in &mut self.regions {
+                engine.pump(clock);
+            }
+            // a pending rollout is a wake source too: the drain (and
+            // switch) must happen even if the trace finished earlier
+            let rollout_wake = match self.phase {
+                RolloutPhase::Pending => self.cfg.rollout.map(|p| p.at).filter(|&a| a > clock),
+                _ => None,
+            };
+            let candidates = [
+                it.peek().map(|t| t.at),
+                self.timeline.get(self.next_event).map(|r| r.at),
+                self.regions.iter().filter_map(|e| e.next_wake(clock)).min(),
+                self.drain_wake(clock),
+                rollout_wake,
+            ];
+            match candidates.into_iter().flatten().min() {
+                // `max(clock)`: region wakes may be `<= clock` (see
+                // `Engine::run_trace`); each same-cycle pass strictly
+                // shrinks pending work, so the loop terminates.
+                Some(c) => clock = c.max(clock),
+                None => break,
+            }
+        }
+        self.metrics()
+    }
+
+    /// Build the federation report (per-region fleet reports + fault
+    /// and rollout accounting).
+    pub fn metrics(&self) -> FederationMetrics {
+        let rollout = match self.phase {
+            RolloutPhase::Live { switched } => {
+                let canary = self.cfg.rollout.expect("live rollout has a plan").canary;
+                let (mut default_exec, mut tuned_exec) = (0u64, 0u64);
+                for c in self.regions[canary].completions() {
+                    if c.start_cycle >= switched {
+                        tuned_exec += c.exec_cycles;
+                    } else {
+                        default_exec += c.exec_cycles;
+                    }
+                }
+                Some(RolloutReport {
+                    canary,
+                    drain_started: self.drain_started,
+                    switched_at: switched,
+                    models_migrated: self.rollout_models,
+                    canary_default_exec: default_exec,
+                    canary_tuned_exec: tuned_exec,
+                })
+            }
+            _ => None,
+        };
+        FederationMetrics {
+            policy: self.cfg.policy,
+            regions: self.regions.iter().map(|e| e.metrics()).collect(),
+            routed: self.routed.clone(),
+            faults_injected: self.cfg.faults.len(),
+            failovers: self.failovers,
+            straggler_windows: self.straggler_windows,
+            requeued: self.regions.iter().map(|e| e.queue.requeued).sum(),
+            fault_log: self.fault_log.clone(),
+            rollout,
+        }
+    }
+
+    /// Build the federated timeline as a canonicalized trace recorder:
+    /// every region's fleet timeline at its own pid block, plus a
+    /// `federation` control process carrying fault and rollout instants
+    /// (layout in [`crate::trace::serve`]). Deterministic for the same
+    /// reasons as [`Engine::build_trace`].
+    pub fn build_trace(&self) -> crate::trace::Recorder {
+        use crate::trace::serve::{build_federation_trace, ControlInstant, FleetTraceInputs};
+        let names: Vec<String> =
+            (0..self.model_count()).map(|m| self.regions[0].model_name(m).to_string()).collect();
+        let inputs: Vec<FleetTraceInputs> = self
+            .regions
+            .iter()
+            .map(|e| FleetTraceInputs {
+                completions: e.completions(),
+                shed: e.shed_events(),
+                occupancy: e.occupancy(),
+                model_names: &names,
+                classes: e.classes(),
+                shards: e.shards().len(),
+                plan_cache: (e.cache.hits, e.cache.misses),
+                tune_cache: (e.tuning().hits, e.tuning().misses),
+            })
+            .collect();
+        let mut faults: Vec<ControlInstant> = Vec::new();
+        for rec in &self.fault_log {
+            let (r, s) = (rec.region as u64, rec.shard as u64);
+            match rec.action {
+                FaultAction::Fail { until } => faults.push(ControlInstant {
+                    at: rec.at,
+                    name: "shard_fail",
+                    args: vec![("region", r), ("shard", s), ("until", until)],
+                }),
+                FaultAction::Recover => faults.push(ControlInstant {
+                    at: rec.at,
+                    name: "shard_recover",
+                    args: vec![("region", r), ("shard", s)],
+                }),
+                FaultAction::Slow { factor, until } => {
+                    faults.push(ControlInstant {
+                        at: rec.at,
+                        name: "straggler_start",
+                        args: vec![("region", r), ("shard", s), ("factor", factor)],
+                    });
+                    faults.push(ControlInstant {
+                        at: until,
+                        name: "straggler_end",
+                        args: vec![("region", r), ("shard", s)],
+                    });
+                }
+            }
+        }
+        let mut rollout_instants: Vec<ControlInstant> = Vec::new();
+        if let Some(plan) = self.cfg.rollout {
+            match self.phase {
+                RolloutPhase::Draining { since } => rollout_instants.push(ControlInstant {
+                    at: since,
+                    name: "rollout_drain_start",
+                    args: vec![("canary", plan.canary as u64)],
+                }),
+                RolloutPhase::Live { switched } => {
+                    rollout_instants.push(ControlInstant {
+                        at: self.drain_started,
+                        name: "rollout_drain_start",
+                        args: vec![("canary", plan.canary as u64)],
+                    });
+                    rollout_instants.push(ControlInstant {
+                        at: switched,
+                        name: "rollout_switch",
+                        args: vec![
+                            ("canary", plan.canary as u64),
+                            ("models", self.rollout_models as u64),
+                        ],
+                    });
+                }
+                RolloutPhase::Pending => {}
+            }
+        }
+        let mut rec = build_federation_trace(&inputs, &faults, &rollout_instants);
+        rec.canonicalize();
+        rec
+    }
+}
+
+/// The federation-level report: per-region fleet reports plus routing,
+/// fault and rollout accounting. Renders deterministically (part of the
+/// cross-worker fingerprint) and exports per-region / failure-mode /
+/// rollout metric rows for the bench artifact.
+#[derive(Clone, Debug)]
+pub struct FederationMetrics {
+    pub policy: RouterPolicy,
+    pub regions: Vec<FleetMetrics>,
+    /// Arrivals handed to each region by the router.
+    pub routed: Vec<u64>,
+    /// Planned fault events (failures + stragglers).
+    pub faults_injected: usize,
+    /// Shard failures applied.
+    pub failovers: u64,
+    /// Straggler windows applied.
+    pub straggler_windows: u64,
+    /// Requests retracted from failed shards and re-queued, fleet-wide.
+    pub requeued: u64,
+    /// Events applied, in application order.
+    pub fault_log: Vec<FaultRecord>,
+    /// Present once the rollout switched.
+    pub rollout: Option<RolloutReport>,
+}
+
+impl FederationMetrics {
+    /// Requests served fleet-wide.
+    pub fn total_served(&self) -> usize {
+        self.regions.iter().map(|r| r.served).sum()
+    }
+
+    /// Human-readable federation report (regions, routing, faults,
+    /// rollout, then each region's fleet report).
+    pub fn render(&self) -> String {
+        let shards = self.regions.first().map_or(0, |r| r.shards);
+        let mut out = format!(
+            "=== federation: {} regions x {} shards, router {} ===\n",
+            self.regions.len(),
+            shards,
+            self.policy.name(),
+        );
+        out.push_str("routed:");
+        for (r, n) in self.routed.iter().enumerate() {
+            out.push_str(&format!(" r{r}={n}"));
+        }
+        out.push('\n');
+        if self.faults_injected > 0 {
+            out.push_str(&format!(
+                "faults: {} injected ({} failovers, {} straggler windows); {} requests re-queued\n",
+                self.faults_injected, self.failovers, self.straggler_windows, self.requeued,
+            ));
+            for rec in &self.fault_log {
+                let what = match rec.action {
+                    FaultAction::Fail { until } => format!("fail until {until}"),
+                    FaultAction::Recover => "recover".to_string(),
+                    FaultAction::Slow { factor, until } => format!("slow x{factor} until {until}"),
+                };
+                out.push_str(&format!("  @{} r{}.s{} {}\n", rec.at, rec.region, rec.shard, what));
+            }
+        }
+        if let Some(ro) = &self.rollout {
+            out.push_str(&format!(
+                "rollout: canary r{} drained {}..{} ({} cycles), {} models migrated; \
+                 exec cycles default {} -> tuned {}\n",
+                ro.canary,
+                ro.drain_started,
+                ro.switched_at,
+                ro.drain_cycles(),
+                ro.models_migrated,
+                ro.canary_default_exec,
+                ro.canary_tuned_exec,
+            ));
+        }
+        for (r, m) in self.regions.iter().enumerate() {
+            out.push_str(&format!("--- region {r} ---\n"));
+            out.push_str(&m.render());
+        }
+        out
+    }
+}
+
+impl MetricSource for FederationMetrics {
+    /// Per-region, failure-mode, and rollout rows (all exact: products
+    /// of the deterministic simulation, never host state).
+    fn metric_rows(&self) -> Vec<MetricRow> {
+        let mut rows = Vec::new();
+        for (r, m) in self.regions.iter().enumerate() {
+            let p = format!("serve/region{r}");
+            rows.push(MetricRow::exact(format!("{p}/served"), m.served as f64, "requests"));
+            rows.push(MetricRow::exact(format!("{p}/p99_cycles"), m.p99_cycles as f64, "cycles"));
+            rows.push(MetricRow::exact(format!("{p}/requeued"), m.requeued as f64, "requests"));
+        }
+        rows.push(MetricRow::exact(
+            "serve/faults/injected",
+            self.faults_injected as f64,
+            "events",
+        ));
+        rows.push(MetricRow::exact("serve/faults/failovers", self.failovers as f64, "events"));
+        rows.push(MetricRow::exact(
+            "serve/faults/straggler_windows",
+            self.straggler_windows as f64,
+            "events",
+        ));
+        rows.push(MetricRow::exact("serve/faults/requeued", self.requeued as f64, "requests"));
+        if let Some(ro) = &self.rollout {
+            rows.push(MetricRow::exact(
+                "serve/rollout/models_migrated",
+                ro.models_migrated as f64,
+                "models",
+            ));
+            rows.push(MetricRow::exact(
+                "serve/rollout/drain_cycles",
+                ro.drain_cycles() as f64,
+                "cycles",
+            ));
+            rows.push(MetricRow::exact(
+                "serve/rollout/canary_default_exec_cycles",
+                ro.canary_default_exec as f64,
+                "cycles",
+            ));
+            rows.push(MetricRow::exact(
+                "serve/rollout/canary_tuned_exec_cycles",
+                ro.canary_tuned_exec as f64,
+                "cycles",
+            ));
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::{Layer, QTensor};
+    use crate::util::Prng;
+
+    fn tiny(name: &str, seed: u64) -> Network {
+        let mut rng = Prng::new(seed);
+        let mut net = Network::new(name, [8, 8, 8], 8);
+        net.push(Layer::conv("c1", [8, 8, 8], 8, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+        net.push(Layer::conv("c2", [8, 8, 8], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+        net
+    }
+
+    fn small_engine() -> ServeConfig {
+        ServeConfig {
+            shards: 2,
+            n_cores: 4,
+            queue_capacity: 64,
+            max_batch: 4,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn item(at: u64, model: usize, rng: &mut Prng) -> TraceItem {
+        TraceItem {
+            at,
+            model,
+            class: 0,
+            priority: 0,
+            deadline: None,
+            input: QTensor::random(&[8, 8, 8], 8, false, rng),
+        }
+    }
+
+    fn mixed_trace(models: usize, n: usize, gap: u64, seed: u64) -> Vec<TraceItem> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|i| item(i as u64 * gap, i % models, &mut rng)).collect()
+    }
+
+    #[test]
+    fn every_policy_serves_the_whole_trace_across_regions() {
+        for policy in RouterPolicy::ALL {
+            let cfg = FederationConfig {
+                regions: 2,
+                engine: small_engine(),
+                policy,
+                ..FederationConfig::default()
+            };
+            let mut fed = Federation::new(cfg);
+            fed.register(tiny("fed-a", 1));
+            fed.register(tiny("fed-b", 2));
+            let m = fed.run_trace(mixed_trace(2, 10, 100, 3));
+            assert_eq!(m.total_served(), 10, "policy {} lost work", policy.name());
+            assert_eq!(m.routed.iter().sum::<u64>(), 10);
+            assert_eq!(m.requeued, 0);
+            assert!(m.render().contains("router"));
+            if policy == RouterPolicy::Locality {
+                // model m homes on region m % 2; with both regions
+                // healthy every arrival routes home.
+                for r in 0..2 {
+                    assert!(
+                        fed.region(r).completions().iter().all(|c| c.model % 2 == r),
+                        "locality sent a model away from home"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_failure_requeues_and_the_fleet_still_serves_everything() {
+        // Least-loaded routes the first arrival to region 0 (tie-break
+        // low), so its shard 0 is mid-batch when the fault lands at
+        // cycle 600 and stays down past the whole trace; the in-flight
+        // work re-queues.
+        let faults = FaultPlan::parse("fail@600:r0.s0+100000000", 0, 2, 2, 0).unwrap();
+        let cfg = FederationConfig {
+            regions: 2,
+            engine: small_engine(),
+            policy: RouterPolicy::LeastLoaded,
+            faults,
+            rollout: None,
+        };
+        let mut fed = Federation::new(cfg);
+        fed.register(tiny("flt-a", 4));
+        fed.register(tiny("flt-b", 5));
+        let m = fed.run_trace(mixed_trace(2, 12, 50, 6));
+        assert_eq!(m.total_served(), 12, "failover dropped admitted work");
+        assert!(m.requeued >= 1, "shard 0 had in-flight work at the fault");
+        assert_eq!((m.faults_injected, m.failovers), (1, 1));
+        // fail + recover are both in the applied log.
+        assert_eq!(fed.fault_log().len(), 2);
+        assert_eq!(fed.fault_log()[0].action, FaultAction::Fail { until: 100_000_600 });
+        let rendered = m.render();
+        assert!(rendered.contains("faults: 1 injected"), "{rendered}");
+        assert!(rendered.contains("re-queued"), "{rendered}");
+        // no completion is attributed to the failed shard during its
+        // down window (it recovers long after the last arrival).
+        assert!(m.regions[0].requeued >= 1);
+        let rows = m.metric_rows();
+        let ids: Vec<&str> = rows.iter().map(|r| r.id.as_str()).collect();
+        assert!(ids.contains(&"serve/faults/failovers"));
+        assert!(ids.contains(&"serve/region0/requeued"));
+    }
+
+    #[test]
+    fn straggler_stretches_latency_without_changing_what_is_served() {
+        let run = |faults: FaultPlan| {
+            let cfg = FederationConfig {
+                regions: 1,
+                engine: small_engine(),
+                policy: RouterPolicy::ConsistentHash,
+                faults,
+                rollout: None,
+            };
+            let mut fed = Federation::new(cfg);
+            fed.register(tiny("str-a", 7));
+            let m = fed.run_trace(mixed_trace(1, 6, 50, 8));
+            let outs: Vec<(u64, Vec<u8>)> =
+                fed.region(0).completions().iter().map(|c| (c.id, c.output.clone())).collect();
+            (m, outs)
+        };
+        let (healthy, outs_h) = run(FaultPlan::none());
+        let slow = FaultPlan::parse("slow@0:r0.s0x4+100000000", 0, 1, 2, 0).unwrap();
+        let (straggled, outs_s) = run(slow);
+        assert_eq!(straggled.total_served(), healthy.total_served());
+        assert_eq!(straggled.straggler_windows, 1);
+        assert!(
+            straggled.regions[0].span_cycles > healthy.regions[0].span_cycles,
+            "a 4x straggler on half the fleet must stretch the span ({} vs {})",
+            straggled.regions[0].span_cycles,
+            healthy.regions[0].span_cycles,
+        );
+        // functional results are untouched by the timing overlay
+        let sorted = |mut v: Vec<(u64, Vec<u8>)>| {
+            v.sort();
+            v
+        };
+        assert_eq!(sorted(outs_h), sorted(outs_s));
+    }
+
+    #[test]
+    fn rollout_drains_switches_warm_and_drops_nothing() {
+        // Locality policy homes model 1 on region 1 (the canary), so
+        // pre-drain and post-switch canary traffic is guaranteed.
+        let cfg = FederationConfig {
+            regions: 2,
+            engine: small_engine(),
+            policy: RouterPolicy::Locality,
+            faults: FaultPlan::none(),
+            rollout: Some(RolloutPlan { at: 1_000_000, canary: 1 }),
+        };
+        let mut fed = Federation::new(cfg);
+        fed.register(tiny("ro-a", 9));
+        fed.register(tiny("ro-b", 10));
+        let mut rng = Prng::new(11);
+        let mut trace: Vec<TraceItem> =
+            (0..8u64).map(|i| item(i * 60, (i % 2) as usize, &mut rng)).collect();
+        for i in 0..8u64 {
+            trace.push(item(3_000_000 + i * 60, (i % 2) as usize, &mut rng));
+        }
+        let m = fed.run_trace(trace);
+        assert_eq!(m.total_served(), 16, "rollout dropped admitted work");
+        let ro = m.rollout.expect("rollout must have switched");
+        assert_eq!(ro.canary, 1);
+        assert_eq!(ro.models_migrated, 2);
+        assert!(ro.drain_started >= 1_000_000);
+        assert!(ro.switched_at >= ro.drain_started);
+        assert!(ro.canary_default_exec > 0, "canary served default traffic pre-drain");
+        assert!(ro.canary_tuned_exec > 0, "canary served tuned traffic post-switch");
+        // the canary's report now carries the autotune summary; the
+        // default region's does not.
+        assert!(m.regions[1].tuned.models > 0);
+        assert_eq!(m.regions[0].tuned.models, 0);
+        let rendered = m.render();
+        assert!(rendered.contains("rollout: canary r1"), "{rendered}");
+        let ids: Vec<String> = m.metric_rows().into_iter().map(|r| r.id).collect();
+        assert!(ids.iter().any(|i| i == "serve/rollout/drain_cycles"));
+        // exported trace carries the control instants
+        let rec = fed.build_trace();
+        let names: Vec<&str> = rec.events().iter().map(|e| e.name.as_str()).collect();
+        assert!(names.contains(&"rollout_drain_start"));
+        assert!(names.contains(&"rollout_switch"));
+    }
+}

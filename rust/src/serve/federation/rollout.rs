@@ -1,0 +1,103 @@
+//! Live model rollout: canary a tuned deployment without dropping work.
+//!
+//! The controller ([`crate::serve::Federation`]'s event loop) walks a
+//! three-phase state machine per [`RolloutPlan`]:
+//!
+//! 1. **Drain** — from `plan.at`, the canary region stops receiving new
+//!    arrivals (router eligibility mask); queued and in-flight requests
+//!    finish normally. Nothing is cancelled, so "zero dropped requests"
+//!    holds by construction, not by recovery.
+//! 2. **Switch** — the first cycle the canary is idle
+//!    ([`crate::serve::Engine::is_idle`]), the new version is compiled
+//!    **off-path** ([`stage_tuned_caches`]: autotune + [`deploy_tuned`]
+//!    per model into staging caches) and installed warm
+//!    ([`crate::serve::Engine::warm_caches`] + `set_tuned(true)`).
+//!    Tuned and default deployments share a [`PlanKey`], so overwriting
+//!    the cache entry *is* the version switch — the first post-switch
+//!    batch hits a warm tuned plan, no cold compile on the serving path.
+//! 3. **Live** — the canary rejoins the router; its post-switch
+//!    completions run tuned plans while the other regions stay on the
+//!    default, giving the canary-vs-default cycle accounting in
+//!    [`RolloutReport`].
+//!
+//! Every phase edge is pinned to a simulated cycle, so rollouts are as
+//! deterministic as everything else in the federation.
+//!
+//! [`PlanKey`]: crate::dory::PlanKey
+//! [`deploy_tuned`]: crate::dory::deploy::deploy_tuned
+
+use crate::dory::autotune::{self, TuneCache, TuneConfig};
+use crate::dory::deploy::deploy_tuned;
+use crate::serve::{Engine, PlanCache};
+use crate::sim::CoreFidelity;
+
+/// A live-rollout request (`serve-bench --rollout`): canary `canary`
+/// onto tuned deployments, starting the drain at cycle `at`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RolloutPlan {
+    /// Simulated cycle at which the canary starts draining.
+    pub at: u64,
+    /// Region index that canaries the tuned version.
+    pub canary: usize,
+}
+
+/// Where the rollout stands (controller state).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum RolloutPhase {
+    /// Before `plan.at` (or no plan at all).
+    Pending,
+    /// Canary excluded from routing, waiting for it to go idle.
+    Draining { since: u64 },
+    /// Switched at `switched`; canary serves the tuned version.
+    Live { switched: u64 },
+}
+
+/// What the rollout did — rendered in the federation report and part of
+/// the deterministic fingerprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RolloutReport {
+    pub canary: usize,
+    /// Cycle the canary left the router.
+    pub drain_started: u64,
+    /// Cycle the warm caches were installed and routing resumed.
+    pub switched_at: u64,
+    /// Models compiled into the staging caches.
+    pub models_migrated: usize,
+    /// Σ exec cycles of canary completions dispatched pre-switch
+    /// (default plans).
+    pub canary_default_exec: u64,
+    /// Σ exec cycles of canary completions dispatched post-switch
+    /// (tuned plans). Filled when the report is read
+    /// ([`crate::serve::Federation::metrics`]).
+    pub canary_tuned_exec: u64,
+}
+
+impl RolloutReport {
+    /// Cycles the canary spent out of the router.
+    pub fn drain_cycles(&self) -> u64 {
+        self.switched_at - self.drain_started
+    }
+}
+
+/// Compile the tuned version of every registered model into fresh
+/// staging caches, off the serving path. Deterministic: the tuner
+/// configuration mirrors the engine's own tuned-dispatch path
+/// (fast-tier search, confirmed at the fleet's fidelity when non-fast),
+/// so a rollout lands the exact plans `ServeConfig::tuned` would have.
+pub(crate) fn stage_tuned_caches(engine: &Engine) -> (PlanCache, TuneCache) {
+    let cfg = engine.cfg;
+    let tune_cfg = TuneConfig {
+        confirm_fidelity: (cfg.fidelity != CoreFidelity::Fast).then_some(cfg.fidelity),
+        ..TuneConfig::default()
+    };
+    let mut plans = PlanCache::new();
+    let mut tunes = TuneCache::new();
+    for m in 0..engine.model_count() {
+        let (net, key) = engine.model_entry(m);
+        let tuning = tunes.get_or_tune(key, || {
+            autotune::tune_network(net, cfg.isa, cfg.budget, cfg.n_cores, &tune_cfg)
+        });
+        plans.get_or_build(key, || deploy_tuned(net, cfg.isa, cfg.budget, tuning));
+    }
+    (plans, tunes)
+}

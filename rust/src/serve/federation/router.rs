@@ -1,0 +1,215 @@
+//! Deterministic request routing across federation regions.
+//!
+//! Three policies, all pure functions of simulated state (the arrival
+//! counter, queue depths, busy shards, fault/drain eligibility) — never
+//! of the host, worker count, or fast-path setting, so the routing
+//! decision stream is part of the federation determinism contract:
+//!
+//! - [`RouterPolicy::ConsistentHash`] — a classic virtual-node hash
+//!   ring over the arrival counter: each region owns
+//!   [`VNODES`] pseudo-random arcs of the 64-bit ring, a request lands
+//!   on the first owner clockwise of its hash, and an ineligible
+//!   (failed / draining) region only remaps *its own* arcs — the rest
+//!   of the fleet keeps its assignments, which is the property that
+//!   makes failover cheap.
+//! - [`RouterPolicy::LeastLoaded`] — global shortest-queue: route to
+//!   the eligible region with the fewest queued + executing requests
+//!   (tie-break: lowest region index).
+//! - [`RouterPolicy::Locality`] — model affinity: each model has a home
+//!   region (`model % regions`, a stand-in for "the region whose L3
+//!   already holds the weights"); route home while it is eligible,
+//!   fall back to the hash ring otherwise. Maximizes warm model
+//!   residency at the cost of load balance.
+
+use super::super::Engine;
+
+/// Virtual nodes per region on the consistent-hash ring: enough that
+/// region arcs interleave (removals shed load to *several* survivors,
+/// not one neighbour), small enough that ring construction is free.
+pub(crate) const VNODES: usize = 16;
+
+/// Region-selection policy (`serve-bench --router POLICY`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    ConsistentHash,
+    LeastLoaded,
+    Locality,
+}
+
+impl RouterPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterPolicy::ConsistentHash => "hash",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::Locality => "locality",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "hash" => Some(RouterPolicy::ConsistentHash),
+            "least-loaded" => Some(RouterPolicy::LeastLoaded),
+            "locality" => Some(RouterPolicy::Locality),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [RouterPolicy; 3] =
+        [RouterPolicy::ConsistentHash, RouterPolicy::LeastLoaded, RouterPolicy::Locality];
+}
+
+/// SplitMix64 — the same finalizer family as [`crate::util::Prng`];
+/// good 64-bit avalanche, no state.
+pub(crate) fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The consistent-hash ring: `(point, region)` pairs sorted by point.
+#[derive(Clone, Debug)]
+pub(crate) struct Ring {
+    points: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    pub(crate) fn new(regions: usize) -> Self {
+        assert!(regions >= 1, "ring needs at least one region");
+        let mut points = Vec::with_capacity(regions * VNODES);
+        for r in 0..regions {
+            for v in 0..VNODES {
+                points.push((splitmix64(((r as u64) << 16) | v as u64), r));
+            }
+        }
+        points.sort_unstable();
+        Ring { points }
+    }
+
+    /// First eligible owner clockwise of `key`'s hash. Falls back to
+    /// the raw owner when nothing is eligible (the caller treats an
+    /// all-ineligible fleet as all-eligible before asking).
+    pub(crate) fn route(&self, key: u64, eligible: &[bool]) -> usize {
+        let h = splitmix64(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for i in 0..self.points.len() {
+            let (_, region) = self.points[(start + i) % self.points.len()];
+            if eligible.get(region).copied().unwrap_or(false) {
+                return region;
+            }
+        }
+        self.points[start % self.points.len()].1
+    }
+}
+
+/// Queued + executing requests of one region at `now` — the
+/// least-loaded signal.
+fn load(engine: &Engine, now: u64) -> usize {
+    let busy = engine.shards().iter().filter(|s| s.active && s.busy_until > now).count();
+    engine.queue.len() + busy
+}
+
+/// Route one arrival. `key` is the federation's arrival counter (stable
+/// across runs), `model` the registry index, `eligible` the per-region
+/// admission mask (healthy and not draining; at least one `true`).
+pub(crate) fn route(
+    policy: RouterPolicy,
+    ring: &Ring,
+    key: u64,
+    model: usize,
+    engines: &[Engine],
+    eligible: &[bool],
+    now: u64,
+) -> usize {
+    debug_assert!(eligible.iter().any(|&e| e), "route needs an eligible region");
+    match policy {
+        RouterPolicy::ConsistentHash => ring.route(key, eligible),
+        RouterPolicy::LeastLoaded => engines
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| eligible.get(*r).copied().unwrap_or(false))
+            .min_by_key(|(r, e)| (load(e, now), *r))
+            .map(|(r, _)| r)
+            .expect("at least one eligible region"),
+        RouterPolicy::Locality => {
+            let home = model % engines.len();
+            if eligible.get(home).copied().unwrap_or(false) {
+                home
+            } else {
+                ring.route(key, eligible)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ServeConfig;
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in RouterPolicy::ALL {
+            assert_eq!(RouterPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(RouterPolicy::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn ring_spreads_keys_and_only_remaps_the_removed_region() {
+        let ring = Ring::new(3);
+        let all = [true, true, true];
+        let routes: Vec<usize> = (0..300).map(|k| ring.route(k, &all)).collect();
+        for r in 0..3 {
+            assert!(routes.iter().any(|&x| x == r), "region {r} never routed");
+        }
+        // Remove region 1: its keys move, everyone else's stay put.
+        let without = [true, false, true];
+        let mut moved = 0;
+        for (k, &before) in routes.iter().enumerate() {
+            let after = ring.route(k as u64, &without);
+            if before == 1 {
+                assert_ne!(after, 1);
+                moved += 1;
+            } else {
+                assert_eq!(after, before, "key {k} remapped although its region survived");
+            }
+        }
+        assert!(moved > 0, "region 1 owned no keys — VNODES too small");
+    }
+
+    #[test]
+    fn least_loaded_prefers_empty_regions_and_breaks_ties_low() {
+        let cfg = ServeConfig { shards: 1, n_cores: 4, ..ServeConfig::default() };
+        let engines = vec![Engine::new(cfg), Engine::new(cfg)];
+        let ring = Ring::new(2);
+        // Equal (empty) load: tie-break picks region 0.
+        assert_eq!(
+            route(RouterPolicy::LeastLoaded, &ring, 9, 0, &engines, &[true, true], 0),
+            0
+        );
+        // Region 0 ineligible: routed past it regardless of load.
+        assert_eq!(
+            route(RouterPolicy::LeastLoaded, &ring, 9, 0, &engines, &[false, true], 0),
+            1
+        );
+    }
+
+    #[test]
+    fn locality_routes_home_until_home_is_ineligible() {
+        let cfg = ServeConfig { shards: 1, n_cores: 4, ..ServeConfig::default() };
+        let engines = vec![Engine::new(cfg), Engine::new(cfg), Engine::new(cfg)];
+        let ring = Ring::new(3);
+        let all = [true, true, true];
+        for model in 0..6 {
+            assert_eq!(
+                route(RouterPolicy::Locality, &ring, 0, model, &engines, &all, 0),
+                model % 3
+            );
+        }
+        // Home (model 1 -> region 1) down: falls back to the hash ring,
+        // which never picks an ineligible region.
+        let r = route(RouterPolicy::Locality, &ring, 77, 1, &engines, &[true, false, true], 0);
+        assert_ne!(r, 1);
+    }
+}

@@ -130,6 +130,9 @@ pub struct FleetMetrics {
     pub rejected: u64,
     /// Requests shed before simulation (unmeetable deadlines).
     pub shed: u64,
+    /// Requests retracted from a failed shard and re-queued (failover;
+    /// 0 unless faults were injected — see `Engine::fail_shard`).
+    pub requeued: u64,
     /// Completions that finished after their deadline.
     pub deadline_misses: u64,
     pub peak_queue_depth: usize,
@@ -314,6 +317,7 @@ impl FleetMetrics {
             enqueued: queue.enqueued,
             rejected: queue.rejected,
             shed: queue.shed,
+            requeued: queue.requeued,
             deadline_misses,
             peak_queue_depth: queue.peak_depth,
             span_cycles,
@@ -418,6 +422,12 @@ impl FleetMetrics {
                 self.deadline_misses,
                 f(self.miss_rate() * 100.0, 1),
                 self.shed,
+            ));
+        }
+        if self.requeued > 0 {
+            out.push_str(&format!(
+                "failover: {} requests retracted from failed shards and re-queued\n",
+                self.requeued,
             ));
         }
         if self.scale_ups + self.scale_downs > 0 || self.occupancy.len() > 1 {
@@ -534,6 +544,7 @@ impl MetricSource for FleetMetrics {
             MetricRow::exact("serve/fleet/model_switches", self.model_switches as f64, "switches"),
             MetricRow::exact("serve/fleet/cache_hits", self.cache_hits as f64, "lookups"),
             MetricRow::exact("serve/fleet/cache_misses", self.cache_misses as f64, "lookups"),
+            MetricRow::exact("serve/fleet/requeued", self.requeued as f64, "requests"),
             MetricRow::exact("serve/fleet/scale_ups", self.scale_ups as f64, "actions"),
             MetricRow::exact("serve/fleet/scale_downs", self.scale_downs as f64, "actions"),
             MetricRow::exact(

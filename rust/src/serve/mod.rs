@@ -62,6 +62,7 @@
 pub mod autoscale;
 pub mod batcher;
 pub mod cache;
+pub mod federation;
 pub mod metrics;
 pub mod queue;
 pub mod request;
@@ -71,6 +72,10 @@ pub mod workload;
 pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleAction};
 pub use batcher::BatchPolicy;
 pub use cache::PlanCache;
+pub use federation::{
+    FaultPlan, Federation, FederationConfig, FederationMetrics, RolloutPlan, RolloutReport,
+    RouterPolicy,
+};
 pub use metrics::{ClassRow, FleetMetrics, ModelRow, TunedSummary};
 pub use queue::RequestQueue;
 pub use request::{Completion, Request, ShedEvent};
@@ -136,6 +141,13 @@ pub struct ServeConfig {
     /// like the plan cache), so this changes measured per-layer plans —
     /// never outputs, and never determinism (`serve-bench --tuned`).
     pub tuned: bool,
+    /// Retain a clone of every dispatched request until its simulated
+    /// completion cycle passes, so a shard failure can retract and
+    /// re-queue exactly the work it was running
+    /// ([`Engine::fail_shard`]). Off by default: single-engine paths
+    /// never fail shards and the clones cost memory. The [`federation`]
+    /// layer turns it on.
+    pub track_inflight: bool,
     pub isa: IsaVariant,
     pub budget: MemBudget,
 }
@@ -155,6 +167,7 @@ impl Default for ServeConfig {
             fidelity: CoreFidelity::Fast,
             autoscale: None,
             tuned: false,
+            track_inflight: false,
             isa: IsaVariant::FlexV,
             budget: MemBudget::default(),
         }
@@ -191,6 +204,15 @@ struct Assignment {
     batch: Vec<Request>,
 }
 
+/// One dispatched request awaiting its simulated completion cycle —
+/// retained so a shard failure can retract and re-queue exactly the
+/// work the shard was running ([`Engine::fail_shard`]). Only populated
+/// under [`ServeConfig::track_inflight`].
+struct Inflight {
+    finish: u64,
+    req: Request,
+}
+
 /// The serving engine: model registry + queue + batcher + shard pool +
 /// plan cache (+ optional autoscaler), advanced by a deterministic
 /// discrete-event loop.
@@ -217,6 +239,9 @@ pub struct Engine {
     /// Minimum observed exec cycles per model (0 = never served): the
     /// deterministic lower bound the shed decision uses.
     min_exec: Vec<u64>,
+    /// Dispatched-but-not-yet-finished requests (failover retraction
+    /// pool); empty unless [`ServeConfig::track_inflight`].
+    inflight: Vec<Inflight>,
     next_id: u64,
 }
 
@@ -266,6 +291,7 @@ impl Engine {
             shed_log: Vec::new(),
             occupancy: vec![(0, active)],
             min_exec: Vec::new(),
+            inflight: Vec::new(),
             next_id: 0,
             cfg,
         }
@@ -313,6 +339,12 @@ impl Engine {
     /// after every scaling action.
     pub fn occupancy(&self) -> &[(u64, usize)] {
         &self.occupancy
+    }
+
+    /// The installed SLO class table (trace builders resolve class
+    /// names from it).
+    pub fn classes(&self) -> &[SloClass] {
+        &self.classes
     }
 
     /// Build the fleet timeline as a canonicalized trace recorder
@@ -487,6 +519,14 @@ impl Engine {
         if assignments.is_empty() {
             return;
         }
+        // Failover retraction pool: clone dispatched requests before
+        // execution consumes them (inputs are needed to re-run).
+        let mut pending: Vec<Request> = Vec::new();
+        if self.cfg.track_inflight {
+            for a in &assignments {
+                pending.extend(a.batch.iter().cloned());
+            }
+        }
         let em = self.em;
         let workers = if self.cfg.workers == 0 { assignments.len() } else { self.cfg.workers };
         let mut round: Vec<Completion> = Vec::new();
@@ -537,7 +577,145 @@ impl Engine {
                 *m = c.exec_cycles;
             }
         }
+        if self.cfg.track_inflight {
+            for c in &round {
+                let pos = pending
+                    .iter()
+                    .position(|r| r.id == c.id)
+                    .expect("every completion comes from this round's batches");
+                let req = pending.swap_remove(pos);
+                self.inflight.push(Inflight { finish: c.finish_cycle, req });
+            }
+        }
         self.completions.extend(round);
+    }
+
+    /// One engine step at simulated cycle `now`: shed unmeetable
+    /// requests, adjust the elastic pool, and dispatch batches to free
+    /// shards. [`Engine::run_trace`] is this plus the event-driven
+    /// clock; external drivers (the [`federation`] event loop) call it
+    /// directly so faults and rollouts can interleave between steps.
+    pub fn pump(&mut self, now: u64) {
+        if self.cfg.track_inflight {
+            self.inflight.retain(|f| f.finish > now);
+        }
+        self.shed_unmeetable(now);
+        self.autoscale_step(now);
+        self.dispatch_free_shards(now);
+    }
+
+    /// Earliest future cycle at which another [`Engine::pump`] could
+    /// make progress: the next shard-free event while work is queued,
+    /// or the next scale-down-eligibility event while idle (clamped to
+    /// `now`; see `run_trace`). `None` when nothing is pending — the
+    /// engine is drained (external arrivals aside).
+    pub fn next_wake(&self, now: u64) -> Option<u64> {
+        if self.queue.is_empty() {
+            self.scaler
+                .as_ref()
+                .and_then(|sc| sc.next_down_event(&self.shards))
+                .map(|t| t.max(now))
+        } else {
+            self.shards
+                .iter()
+                .filter(|s| s.active)
+                .map(|s| s.busy_until)
+                .filter(|&b| b > now)
+                .min()
+        }
+    }
+
+    /// Whether the engine has no queued or executing work at `now` —
+    /// drain complete (the rollout controller's switch gate).
+    pub fn is_idle(&self, now: u64) -> bool {
+        self.queue.is_empty() && self.shards.iter().all(|s| s.busy_until <= now)
+    }
+
+    /// Fault-inject: take `shard` down at cycle `now`, until `until`.
+    ///
+    /// Completions the shard would have produced after `now` are
+    /// retracted and their requests re-queued with original priority,
+    /// deadline, and arrival cycle ([`RequestQueue::requeue`]) — so
+    /// failover never drops admitted work and re-serves it in exactly
+    /// the order its SLO earns. Retraction happens in completion-stream
+    /// order (deterministic). The shard's timing bookkeeping rolls back
+    /// to `now` and it parks until [`Engine::recover_shard`]; the
+    /// autoscaler will not wake it while failed. Requires
+    /// [`ServeConfig::track_inflight`] (the engine otherwise does not
+    /// retain dispatched inputs).
+    pub fn fail_shard(&mut self, shard: usize, now: u64, until: u64) {
+        assert!(
+            self.cfg.track_inflight,
+            "fail_shard requires ServeConfig::track_inflight"
+        );
+        let retracted: Vec<u64> = self
+            .completions
+            .iter()
+            .filter(|c| c.shard == shard && c.finish_cycle > now)
+            .map(|c| c.id)
+            .collect();
+        self.completions.retain(|c| !(c.shard == shard && c.finish_cycle > now));
+        let s = &mut self.shards[shard];
+        s.served -= retracted.len() as u64;
+        if s.busy_until > now {
+            // Dispatch only ever starts a batch at or before the fault
+            // cycle, so the rollback window is `now..busy_until`.
+            s.busy_cycles -= s.busy_until - now;
+            s.busy_until = now;
+        }
+        s.fail(until);
+        for id in retracted {
+            let pos = self
+                .inflight
+                .iter()
+                .position(|f| f.req.id == id)
+                .expect("retracted completion has an in-flight record");
+            let f = self.inflight.swap_remove(pos);
+            self.queue.requeue(f.req);
+        }
+        let active = self.shards.iter().filter(|s| s.active).count();
+        self.occupancy.push((now, active));
+    }
+
+    /// Recover a failed shard at `now`: healthy and active again, cold
+    /// (the model image did not survive the failure).
+    pub fn recover_shard(&mut self, shard: usize, now: u64) {
+        self.shards[shard].recover();
+        let active = self.shards.iter().filter(|s| s.active).count();
+        self.occupancy.push((now, active));
+    }
+
+    /// Straggler-inject: batches starting on `shard` before `until` run
+    /// `factor`× slower (timing overlay only; see [`Shard::slow`]).
+    pub fn slow_shard(&mut self, shard: usize, factor: u64, until: u64) {
+        self.shards[shard].slow(factor, until);
+    }
+
+    /// Flip the engine's deployment mode (live rollout: the canary
+    /// switches to tuned plans). Affects models compiled after the
+    /// call; already-cached plans win on their [`PlanKey`], which is
+    /// exactly why rollouts install warm caches first
+    /// ([`Engine::warm_caches`]).
+    pub fn set_tuned(&mut self, tuned: bool) {
+        self.cfg.tuned = tuned;
+    }
+
+    /// Warm-migrate compiled plans and tunings from caches built
+    /// off-path (live rollout: the controller compiles the new version
+    /// outside the serving loop, then installs it without a cold
+    /// start). Entries overwrite same-key entries — tuned and default
+    /// deployments share a [`PlanKey`], so installing tuned plans over
+    /// the defaults *is* the version switch.
+    pub fn warm_caches(&mut self, plans: &PlanCache, tunes: &TuneCache) {
+        self.cache.warm_from(plans);
+        self.tune.warm_from(tunes);
+    }
+
+    /// A registered model's network and plan identity (rollout
+    /// controllers compile new versions off-path).
+    pub fn model_entry(&self, model: usize) -> (&Network, PlanKey) {
+        let m = &self.models[model];
+        (&m.net, m.key)
     }
 
     /// Replay an arrival trace to completion; returns the fleet report.
@@ -555,51 +733,24 @@ impl Engine {
                 let t = it.next().unwrap();
                 self.submit(t);
             }
-            self.shed_unmeetable(clock);
-            self.autoscale_step(clock);
-            self.dispatch_free_shards(clock);
+            self.pump(clock);
+            // Jump to the next event. With work queued, `next_wake` is
+            // the next shard-free cycle (every active shard is busy —
+            // dispatch drains otherwise). With the queue empty, it is
+            // the next cycle at which the autoscaler could park an idle
+            // shard, so valleys between bursts actually shrink the
+            // fleet instead of being skipped by the jump; it may be
+            // `<= clock` (zero cooldown right after a park, or
+            // eligibility reached while the queue was still non-empty),
+            // clamped to `clock` so the loop re-enters at the same
+            // cycle and parks the next shard — each such pass shrinks
+            // the pool, so this always terminates.
             let next_arrival = it.peek().map(|t| t.at);
-            let next_free = self
-                .shards
-                .iter()
-                .filter(|s| s.active)
-                .map(|s| s.busy_until)
-                .filter(|&b| b > clock)
-                .min();
-            if self.queue.is_empty() {
-                // Nothing queued: jump to the next arrival or to the next
-                // cycle at which the autoscaler could park an idle shard
-                // (so valleys between bursts actually shrink the fleet —
-                // the jump would otherwise skip the whole idle window).
-                // With no arrivals left, remaining parks only extend the
-                // occupancy timeline down to the configured floor.
-                // `next_down <= clock` is possible (zero cooldown right
-                // after a park, or eligibility reached while the queue
-                // was still non-empty): clamp to `clock` so the loop
-                // re-enters at the same cycle and the autoscaler parks
-                // the next shard — each such pass shrinks the pool, so
-                // this always terminates.
-                let next_down = self
-                    .scaler
-                    .as_ref()
-                    .and_then(|sc| sc.next_down_event(&self.shards))
-                    .map(|t| t.max(clock));
-                clock = match (next_arrival, next_down) {
-                    (Some(a), Some(d)) if d < a => d,
-                    (Some(a), _) => a,
-                    (None, Some(d)) => d,
-                    (None, None) => break,
-                };
-                continue;
-            }
-            // Queue non-empty ⇒ every active shard is busy (dispatch
-            // drains otherwise). Wake at the next shard-free or arrival
-            // event.
-            clock = match (next_free, next_arrival) {
-                (Some(f), Some(a)) => f.min(a),
-                (Some(f), None) => f,
-                (None, Some(a)) => a,
-                (None, None) => break, // unreachable: busy shards exist
+            clock = match (next_arrival, self.next_wake(clock)) {
+                (Some(a), Some(w)) => a.min(w),
+                (Some(a), None) => a,
+                (None, Some(w)) => w,
+                (None, None) => break,
             };
         }
         self.metrics()

@@ -21,7 +21,11 @@
 //!   crosses priority levels ([`RequestQueue::pop_lead`]);
 //! - requests whose deadline can provably no longer be met are **shed**
 //!   before they reach a shard ([`RequestQueue::shed_expired`],
-//!   shed-before-simulate) and counted separately from rejections.
+//!   shed-before-simulate) and counted separately from rejections;
+//! - requests retracted from a failed shard are **re-queued** past the
+//!   capacity bound ([`RequestQueue::requeue`]) — failover never drops
+//!   admitted work, and the retracted request keeps its priority and
+//!   deadline so it re-enters service in exactly the slot its SLO earns.
 
 use std::collections::VecDeque;
 
@@ -38,6 +42,9 @@ pub struct RequestQueue {
     /// Admitted requests later shed because their deadline became
     /// unmeetable (see [`RequestQueue::shed_expired`]).
     pub shed: u64,
+    /// Requests re-admitted after being retracted from a failed shard
+    /// (see [`RequestQueue::requeue`]).
+    pub requeued: u64,
     /// High-water mark of the depth.
     pub peak_depth: usize,
 }
@@ -50,6 +57,7 @@ impl RequestQueue {
             enqueued: 0,
             rejected: 0,
             shed: 0,
+            requeued: 0,
             peak_depth: 0,
         }
     }
@@ -76,6 +84,21 @@ impl RequestQueue {
         self.enqueued += 1;
         self.peak_depth = self.peak_depth.max(self.items.len());
         true
+    }
+
+    /// Re-admit a request retracted from a failed shard. Failover must
+    /// never drop admitted work, so this bypasses the capacity bound —
+    /// the depth may transiently exceed `capacity` (new arrivals are
+    /// still bounded by [`RequestQueue::push`]). The request keeps its
+    /// original priority, deadline, and arrival cycle, so
+    /// [`RequestQueue::pop_lead`] re-serves it in exactly the slot its
+    /// SLO earns: failover is priority-preserving by construction.
+    /// Counted in `requeued`, not `enqueued` (it was admitted once
+    /// already).
+    pub fn requeue(&mut self, req: Request) {
+        self.items.push_back(req);
+        self.requeued += 1;
+        self.peak_depth = self.peak_depth.max(self.items.len());
     }
 
     /// Remove and return the request that should lead the next batch:
@@ -272,6 +295,24 @@ mod tests {
         assert!(q.pop_lead(None).is_none());
         assert!(q.pop_lead(Some(0)).is_none());
         assert!(q.drain_model(0, 8).is_empty());
+    }
+
+    /// Failover re-admission: bypasses the capacity bound, keeps the
+    /// retracted request's priority/deadline service slot, and is
+    /// counted separately from first admissions.
+    #[test]
+    fn requeue_bypasses_capacity_and_preserves_priority() {
+        let mut q = RequestQueue::new(2);
+        assert!(q.push(req(0, 0, 0)));
+        assert!(q.push(req(1, 0, 0)));
+        // full: a failover retraction must still get back in
+        q.requeue(req_slo(2, 0, 2, 50));
+        assert_eq!((q.len(), q.requeued, q.enqueued, q.rejected), (3, 1, 2, 0));
+        assert_eq!(q.peak_depth, 3);
+        // its priority/deadline still lead the queue
+        assert_eq!(q.pop_lead(None).unwrap().id, 2);
+        // new arrivals remain bounded
+        assert!(!q.push(req(3, 0, 0)));
     }
 
     #[test]

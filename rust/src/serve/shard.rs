@@ -65,6 +65,15 @@ pub struct Shard {
     pub served: u64,
     pub batches: u64,
     pub model_switches: u64,
+    /// Fault injection: simulated cycle until which the shard is down
+    /// (0 = healthy). A failed shard is parked and must not be woken by
+    /// the autoscaler until it recovers ([`Shard::recover`]).
+    pub failed_until: u64,
+    /// Straggler window: batches *starting* before this cycle run
+    /// `slow_factor`× slower (0 = nominal).
+    pub slow_until: u64,
+    /// Slowdown multiplier inside the straggler window (≥ 1).
+    pub slow_factor: u64,
 }
 
 impl Shard {
@@ -100,6 +109,9 @@ impl Shard {
             served: 0,
             batches: 0,
             model_switches: 0,
+            failed_until: 0,
+            slow_until: 0,
+            slow_factor: 1,
         }
     }
 
@@ -125,6 +137,38 @@ impl Shard {
     /// Reactivate a parked shard (cold: no model resident).
     pub fn wake(&mut self) {
         self.active = true;
+    }
+
+    /// Fault-inject: take the shard down until `until`. The shard is
+    /// parked (its L2 model image is lost exactly like an autoscaler
+    /// park) and flagged failed, which blocks autoscaler wakes until
+    /// recovery. Retracting and re-queuing the work the shard had in
+    /// flight is the engine's job (`Engine::fail_shard`), since the
+    /// shard does not own the queue.
+    pub fn fail(&mut self, until: u64) {
+        self.park();
+        self.failed_until = until;
+    }
+
+    /// Recover from a fault: healthy and active again, cold like any
+    /// wake (the model image did not survive the failure).
+    pub fn recover(&mut self) {
+        self.failed_until = 0;
+        self.wake();
+    }
+
+    /// Whether the shard is failed (fault-injected down) at `now`.
+    pub fn is_failed(&self, now: u64) -> bool {
+        self.failed_until > now
+    }
+
+    /// Straggle: batches starting before `until` run `factor`× slower
+    /// (DMA contention, thermal throttling — anything that stretches
+    /// service time without corrupting results). Purely a timing
+    /// overlay: outputs, MACs, and energy are untouched.
+    pub fn slow(&mut self, factor: u64, until: u64) {
+        self.slow_factor = factor.max(1);
+        self.slow_until = until;
     }
 
     /// Enable the fast path's crosscheck mode on this shard's cluster:
@@ -168,8 +212,12 @@ impl Shard {
     ) -> Vec<Completion> {
         debug_assert!(self.is_free(now));
         let start = now.max(self.busy_until);
+        // Straggler overlay: a batch starting inside the slow window
+        // stretches uniformly — a pure function of (start, slow_until,
+        // slow_factor), all simulated state, so determinism holds.
+        let slow = if start < self.slow_until { self.slow_factor.max(1) } else { 1 };
         let switching = self.resident != Some(key);
-        let switch = if switching { Self::switch_cycles(dep) } else { 0 };
+        let switch = if switching { Self::switch_cycles(dep) * slow } else { 0 };
         if switching {
             self.model_switches += 1;
         }
@@ -195,7 +243,7 @@ impl Shard {
                 }
                 execute_deployment(&mut self.cluster, dep, &req.input, Some(&mut self.memo))
             };
-            let exec = res.total_cycles();
+            let exec = res.total_cycles() * slow;
             t += exec;
             out.push(Completion {
                 id: req.id,
@@ -275,5 +323,46 @@ mod tests {
         assert_eq!(comps2[0].switch_cycles, 0);
         assert_eq!(shard.model_switches, 1);
         assert_eq!(shard.served, 3);
+    }
+
+    /// The straggler overlay stretches timing only (outputs, MACs
+    /// untouched), and fail/recover round-trips through a cold park.
+    #[test]
+    fn straggler_stretches_timing_only_and_failure_parks() {
+        let net = tiny("f", 5);
+        let budget = MemBudget::default();
+        let dep = deploy(&net, IsaVariant::FlexV, budget);
+        let key = PlanKey::for_network(&net, IsaVariant::FlexV, budget, 8);
+        let em = EnergyModel::default();
+        let mut rng = Prng::new(6);
+        let r = Request {
+            id: 0,
+            model: 0,
+            class: 0,
+            priority: 0,
+            arrival_cycle: 0,
+            deadline: None,
+            input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+        };
+        let mut nominal =
+            Shard::new(0, 8, false, Some(WindowCache::default()), CoreFidelity::Fast);
+        let mut slowed =
+            Shard::new(1, 8, false, Some(WindowCache::default()), CoreFidelity::Fast);
+        slowed.slow(3, u64::MAX);
+        let a = nominal.run_batch(0, key, &dep, vec![r.clone()], 0, &em);
+        let b = slowed.run_batch(0, key, &dep, vec![r], 0, &em);
+        assert_eq!(b[0].output, a[0].output, "straggling must not corrupt results");
+        assert_eq!(b[0].macs, a[0].macs);
+        assert_eq!(b[0].exec_cycles, 3 * a[0].exec_cycles);
+        assert_eq!(b[0].switch_cycles, 3 * a[0].switch_cycles);
+        // fail parks the shard (model image lost) and blocks wakes
+        slowed.fail(500);
+        assert!(!slowed.active);
+        assert!(slowed.is_failed(100));
+        assert!(slowed.resident_model.is_none());
+        assert!(!slowed.is_failed(500), "failure window is half-open");
+        slowed.recover();
+        assert!(slowed.active);
+        assert_eq!(slowed.failed_until, 0);
     }
 }

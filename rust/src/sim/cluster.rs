@@ -454,12 +454,7 @@ impl Cluster {
                 rr_end: self.rr,
                 stats: stats.clone(),
             };
-            let mut cache = fp.cache.0.write().expect("fastpath cache poisoned");
-            if cache.len() >= fastpath::MAX_ENTRIES {
-                cache.clear();
-            }
-            cache.insert(key, std::sync::Arc::new(entry));
-            drop(cache);
+            fp.cache.insert_bounded(key, std::sync::Arc::new(entry));
             (stats, WindowOutcome::Recorded)
         };
         self.fastpath = Some(fp);

@@ -56,9 +56,15 @@ use super::mem::ClusterMem;
 use super::stats::ClusterStats;
 
 /// Cache-size backstop: a steady-state workload settles on at most a
-/// few hundred distinct windows; a runaway-diversity workload simply
-/// clears and re-records.
+/// few hundred distinct windows; a runaway-diversity workload sheds a
+/// bounded batch of entries per insert (see
+/// [`WindowCache::insert_bounded`]) instead of re-recording everything.
 pub(crate) const MAX_ENTRIES: usize = 8192;
+
+/// Entries evicted in one batch when the cache is at [`MAX_ENTRIES`].
+/// Bounded so one diverse shard can never wipe the whole fleet-shared
+/// cache; 1/8th keeps the steady-state working set resident.
+pub(crate) const EVICT_BATCH: usize = MAX_ENTRIES / 8;
 
 /// One memoized simulation window.
 #[derive(Clone, Debug)]
@@ -105,6 +111,28 @@ impl WindowCache {
     /// Distinct windows memoized.
     pub fn entries(&self) -> usize {
         self.0.read().expect("fastpath cache poisoned").len()
+    }
+
+    /// Insert `entry` under `key`, evicting a bounded batch of
+    /// [`EVICT_BATCH`] entries first when the cache is at
+    /// [`MAX_ENTRIES`]. Victims are the smallest structural keys —
+    /// keys are hashes, so this is an arbitrary-but-deterministic
+    /// choice that does not depend on `HashMap` iteration order, and
+    /// the surviving majority keeps serving hits for every other shard
+    /// sharing the cache (a wholesale `clear()` here caused fleet-wide
+    /// re-record storms). Cache contents only ever affect host
+    /// wall-clock time, never a simulated number, so eviction cannot
+    /// perturb determinism.
+    pub(crate) fn insert_bounded(&self, key: u64, entry: Arc<FastEntry>) {
+        let mut map = self.0.write().expect("fastpath cache poisoned");
+        if map.len() >= MAX_ENTRIES && !map.contains_key(&key) {
+            let mut keys: Vec<u64> = map.keys().copied().collect();
+            keys.sort_unstable();
+            for k in keys.into_iter().take(EVICT_BATCH) {
+                map.remove(&k);
+            }
+        }
+        map.insert(key, entry);
     }
 }
 
@@ -264,5 +292,50 @@ mod tests {
         let bytes = vec![7u8; 128];
         t.record_read(0x1000_0020, &bytes);
         assert_eq!(t.read_ranges(), vec![(0x1000_0020, 128)]);
+    }
+
+    fn blank_entry() -> Arc<FastEntry> {
+        Arc::new(FastEntry {
+            dma_sig: Vec::new(),
+            arch_sig: 0,
+            reads: Vec::new(),
+            read_hash: 0,
+            writes: Vec::new(),
+            ran: Vec::new(),
+            cores_end: Vec::new(),
+            rr_end: 0,
+            stats: ClusterStats::default(),
+        })
+    }
+
+    #[test]
+    fn full_cache_evicts_a_bounded_batch_and_keeps_serving_survivors() {
+        let cache = WindowCache::default();
+        for key in 0..MAX_ENTRIES as u64 {
+            cache.insert_bounded(key, blank_entry());
+        }
+        assert_eq!(cache.entries(), MAX_ENTRIES);
+        // the insert that used to clear() the whole fleet-shared cache
+        let newcomer = MAX_ENTRIES as u64;
+        cache.insert_bounded(newcomer, blank_entry());
+        assert_eq!(cache.entries(), MAX_ENTRIES - EVICT_BATCH + 1);
+        let map = cache.0.read().unwrap();
+        // victims are exactly the EVICT_BATCH smallest keys...
+        for k in 0..EVICT_BATCH as u64 {
+            assert!(!map.contains_key(&k), "victim {k} survived");
+        }
+        // ...every other key keeps serving hits, and the newcomer landed
+        for k in EVICT_BATCH as u64..=newcomer {
+            assert!(map.contains_key(&k), "survivor {k} was evicted");
+        }
+        drop(map);
+        // re-recording an already-cached key at capacity overwrites in
+        // place without evicting anything
+        let cache2 = WindowCache::default();
+        for key in 0..MAX_ENTRIES as u64 {
+            cache2.insert_bounded(key, blank_entry());
+        }
+        cache2.insert_bounded(0, blank_entry());
+        assert_eq!(cache2.entries(), MAX_ENTRIES);
     }
 }

@@ -10,7 +10,8 @@
 //! `workers` × fastpath for free; the CI determinism gate diffs exactly
 //! this export.
 //!
-//! Track layout (Chrome pid/tid):
+//! Track layout (Chrome pid/tid) for a single fleet
+//! ([`build_fleet_trace`]):
 //! - pid 0 `fleet` — tid 1 `arrivals` (one instant per request entering
 //!   the queue, shed ones included), tid 2 `sheds` (shed decisions at
 //!   the cycle they were made), tid 3 `autoscale` (park/wake instants
@@ -20,6 +21,15 @@
 //!   with the `model_switch` span and per-request exec spans nested
 //!   inside it (the batch timeline of [`crate::serve::shard`]: switch
 //!   charged up front, per-request windows contiguous to the batch end).
+//!
+//! A federated run ([`build_federation_trace`]) stacks one such block
+//! per region at a pid offset, plus a control process:
+//! - pid 0 `federation` — tid 1 `faults` (`shard_fail` /
+//!   `shard_recover` / `straggler_start` / `straggler_end` instants),
+//!   tid 2 `rollout` (`rollout_drain_start` / `rollout_switch`).
+//! - region `r` occupies pids `1 + r*(shards+1) ..`: its `r{r}/fleet`
+//!   process followed by its `r{r}/shard{s}` processes, with the exact
+//!   same intra-region layout as the single-fleet trace.
 
 use std::collections::BTreeMap;
 
@@ -64,21 +74,30 @@ fn class_name(classes: &[SloClass], idx: u8) -> &str {
 /// The caller should [`Recorder::canonicalize`] before export.
 pub fn build_fleet_trace(inp: &FleetTraceInputs) -> Recorder {
     let mut rec = Recorder::new();
-    rec.name_process(0, "fleet");
-    rec.name_thread(track(0, TID_ARRIVALS), "arrivals");
-    rec.name_thread(track(0, TID_SHEDS), "sheds");
-    rec.name_thread(track(0, TID_AUTOSCALE), "autoscale");
-    rec.name_thread(track(0, TID_CACHES), "caches");
+    emit_fleet_trace(&mut rec, inp, 0, "");
+    rec
+}
+
+/// Emit one fleet's timeline into `rec` with its pid block starting at
+/// `pid_base` and every process name prefixed (federation stacks one
+/// block per region; the single-fleet layout is `pid_base = 0`,
+/// empty prefix).
+fn emit_fleet_trace(rec: &mut Recorder, inp: &FleetTraceInputs, pid_base: u32, prefix: &str) {
+    rec.name_process(pid_base, format!("{prefix}fleet"));
+    rec.name_thread(track(pid_base, TID_ARRIVALS), "arrivals");
+    rec.name_thread(track(pid_base, TID_SHEDS), "sheds");
+    rec.name_thread(track(pid_base, TID_AUTOSCALE), "autoscale");
+    rec.name_thread(track(pid_base, TID_CACHES), "caches");
     for s in 0..inp.shards {
-        rec.name_process(s as u32 + 1, format!("shard{s}"));
-        rec.name_thread(track(s as u32 + 1, 1), "exec");
+        rec.name_process(pid_base + s as u32 + 1, format!("{prefix}shard{s}"));
+        rec.name_thread(track(pid_base + s as u32 + 1, 1), "exec");
     }
 
     // Arrivals: every request that entered the queue, completed or shed.
     for c in inp.completions {
         rec.instant(
             Scope::Sim,
-            track(0, TID_ARRIVALS),
+            track(pid_base, TID_ARRIVALS),
             model_name(inp.model_names, c.model),
             c.arrival_cycle,
             vec![
@@ -90,7 +109,7 @@ pub fn build_fleet_trace(inp: &FleetTraceInputs) -> Recorder {
     for s in inp.shed {
         rec.instant(
             Scope::Sim,
-            track(0, TID_ARRIVALS),
+            track(pid_base, TID_ARRIVALS),
             model_name(inp.model_names, s.model),
             s.arrival_cycle,
             vec![
@@ -100,7 +119,7 @@ pub fn build_fleet_trace(inp: &FleetTraceInputs) -> Recorder {
         );
         rec.instant(
             Scope::Sim,
-            track(0, TID_SHEDS),
+            track(pid_base, TID_SHEDS),
             "shed",
             s.shed_cycle,
             vec![
@@ -114,7 +133,7 @@ pub fn build_fleet_trace(inp: &FleetTraceInputs) -> Recorder {
     // Autoscale: park/wake instants at occupancy changes, plus the
     // active-shard counter series.
     for (cycle, n) in inp.occupancy {
-        rec.counter(Scope::Sim, track(0, TID_AUTOSCALE), "active_shards", *cycle, *n as f64);
+        rec.counter(Scope::Sim, track(pid_base, TID_AUTOSCALE), "active_shards", *cycle, *n as f64);
     }
     for w in inp.occupancy.windows(2) {
         let ((_, from), (cycle, to)) = (w[0], w[1]);
@@ -122,7 +141,7 @@ pub fn build_fleet_trace(inp: &FleetTraceInputs) -> Recorder {
             let name = if to > from { "wake_shards" } else { "park_shards" };
             rec.instant(
                 Scope::Sim,
-                track(0, TID_AUTOSCALE),
+                track(pid_base, TID_AUTOSCALE),
                 name,
                 cycle,
                 vec![("from", Arg::U64(from as u64)), ("to", Arg::U64(to as u64))],
@@ -139,7 +158,7 @@ pub fn build_fleet_trace(inp: &FleetTraceInputs) -> Recorder {
         ("tune_cache_hits", inp.tune_cache.0),
         ("tune_cache_misses", inp.tune_cache.1),
     ] {
-        rec.counter(Scope::Sim, track(0, TID_CACHES), name, end, v as f64);
+        rec.counter(Scope::Sim, track(pid_base, TID_CACHES), name, end, v as f64);
     }
 
     // Per-shard batches: group completions by (shard, batch start); the
@@ -150,7 +169,7 @@ pub fn build_fleet_trace(inp: &FleetTraceInputs) -> Recorder {
     }
     for ((shard, start), mut group) in batches {
         group.sort_by_key(|c| (c.finish_cycle, c.id));
-        let t = track(shard as u32 + 1, 1);
+        let t = track(pid_base + shard as u32 + 1, 1);
         let end = group.last().expect("non-empty group").finish_cycle;
         let first = group[0];
         rec.span(
@@ -188,6 +207,45 @@ pub fn build_fleet_trace(inp: &FleetTraceInputs) -> Recorder {
                 args,
             );
         }
+    }
+}
+
+/// One federation-control instant (fault or rollout event) at an
+/// absolute simulated cycle; args become `U64` trace args.
+pub struct ControlInstant {
+    pub at: u64,
+    pub name: &'static str,
+    pub args: Vec<(&'static str, u64)>,
+}
+
+const TID_FAULTS: u32 = 1;
+const TID_ROLLOUT: u32 = 2;
+
+/// Build the federated timeline: a `federation` control process (fault
+/// + rollout instants) at pid 0, then each region's full fleet layout
+/// at its own pid block (see module docs). The caller should
+/// [`Recorder::canonicalize`] before export; determinism is inherited
+/// from the per-region record streams exactly as in
+/// [`build_fleet_trace`].
+pub fn build_federation_trace(
+    regions: &[FleetTraceInputs],
+    faults: &[ControlInstant],
+    rollout: &[ControlInstant],
+) -> Recorder {
+    let mut rec = Recorder::new();
+    rec.name_process(0, "federation");
+    rec.name_thread(track(0, TID_FAULTS), "faults");
+    rec.name_thread(track(0, TID_ROLLOUT), "rollout");
+    for (tid, instants) in [(TID_FAULTS, faults), (TID_ROLLOUT, rollout)] {
+        for c in instants {
+            let args = c.args.iter().map(|&(k, v)| (k, Arg::U64(v))).collect();
+            rec.instant(Scope::Sim, track(0, tid), c.name, c.at, args);
+        }
+    }
+    let mut pid_base = 1u32;
+    for (r, inp) in regions.iter().enumerate() {
+        emit_fleet_trace(&mut rec, inp, pid_base, &format!("r{r}/"));
+        pid_base += inp.shards as u32 + 1;
     }
     rec
 }
@@ -264,6 +322,46 @@ mod tests {
         assert!(spans.iter().any(|e| e.name == "batch"));
         assert!(spans.iter().any(|e| e.name == "model_switch"));
         assert_eq!(spans.iter().filter(|e| e.name == "mnv1").count(), 2);
+    }
+
+    #[test]
+    fn federation_trace_stacks_regions_at_pid_blocks_with_control_instants() {
+        let comps = vec![completion(1, 0, 100, 150, 40, 10)];
+        let names = vec!["mnv1".to_string()];
+        let occ = [(0u64, 2usize)];
+        let regions = [inputs(&comps, &[], &occ, &names), inputs(&[], &[], &occ, &names)];
+        let faults = [ControlInstant {
+            at: 500,
+            name: "shard_fail",
+            args: vec![("region", 0), ("shard", 1), ("until", 900)],
+        }];
+        let rollout = [ControlInstant {
+            at: 700,
+            name: "rollout_switch",
+            args: vec![("canary", 1)],
+        }];
+        let mut rec = build_federation_trace(&regions, &faults, &rollout);
+        rec.canonicalize();
+        check_well_nested(rec.events()).expect("spans must nest");
+        // pid layout: 0 = federation, region 0 at 1..=3, region 1 at 4..=6
+        // (2 shards each => stride 3).
+        let procs = rec.processes();
+        let find = |pid: u32| procs.iter().find(|(p, _)| *p == pid).map(|(_, n)| n.as_str());
+        assert_eq!(find(0), Some("federation"));
+        assert_eq!(find(1), Some("r0/fleet"));
+        assert_eq!(find(2), Some("r0/shard0"));
+        assert_eq!(find(4), Some("r1/fleet"));
+        assert_eq!(find(6), Some("r1/shard1"));
+        let instants: Vec<&str> = rec
+            .events()
+            .iter()
+            .filter(|e| matches!(e.payload, Payload::Instant))
+            .map(|e| e.name.as_str())
+            .collect();
+        assert!(instants.contains(&"shard_fail"));
+        assert!(instants.contains(&"rollout_switch"));
+        // region 0 shard 0's batch span landed in its own pid block (pid 2)
+        assert!(rec.events().iter().any(|e| e.name == "batch" && e.track.pid == 2));
     }
 
     #[test]

@@ -62,8 +62,24 @@ impl Prng {
     }
 
     /// Random boolean with probability `p` (0.0..=1.0).
+    ///
+    /// Integer-threshold compare: the draw is tested against
+    /// `round(p * 2^64)` saturated to the `[0, 2^64]` range, so
+    /// `p = 1.0` is always `true` and `p = 0.0` is always `false`.
+    /// (The previous float compare `draw as f64 / u64::MAX as f64 < p`
+    /// rounded draws near `u64::MAX` up to exactly 1.0, so `p = 1.0`
+    /// could come up `false`.) Exactly one `next_u64` is consumed per
+    /// call regardless of `p`, keeping downstream draw streams aligned.
     pub fn chance(&mut self, p: f64) -> bool {
-        (self.next_u64() as f64 / u64::MAX as f64) < p
+        let draw = self.next_u64() as u128;
+        let threshold = if p <= 0.0 {
+            0u128
+        } else if p >= 1.0 {
+            1u128 << 64
+        } else {
+            (p * (1u128 << 64) as f64) as u128
+        };
+        draw < threshold
     }
 
     /// Random unsigned value of `bits` bits (0 ..= 2^bits - 1).
@@ -149,6 +165,33 @@ mod tests {
                 assert!(p.bits_unsigned(bits) <= hi);
             }
         }
+    }
+
+    #[test]
+    fn chance_edges_are_exact() {
+        let mut p = Prng::new(0xC0FFEE);
+        for _ in 0..4096 {
+            assert!(p.chance(1.0), "p = 1.0 must always be true");
+        }
+        for _ in 0..4096 {
+            assert!(!p.chance(0.0), "p = 0.0 must always be false");
+        }
+        // every call consumes exactly one draw regardless of p, so the
+        // stream stays aligned with a raw-draw twin
+        let mut a = Prng::new(7);
+        let mut b = Prng::new(7);
+        a.chance(0.0);
+        a.chance(1.0);
+        b.next_u64();
+        b.next_u64();
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn chance_mid_probability_is_roughly_fair() {
+        let mut p = Prng::new(42);
+        let hits = (0..10_000).filter(|_| p.chance(0.5)).count();
+        assert!((4_000..6_000).contains(&hits), "p = 0.5 hit {hits}/10000");
     }
 
     #[test]

@@ -194,18 +194,22 @@ fn vanished_metric_fails_new_metric_reports_only() {
 }
 
 #[test]
-fn pending_baseline_reports_but_never_gates() {
+fn pending_baseline_fails_the_gate_without_drift() {
     let mut base = sample_artifact();
     base.pending = true;
-    // wildly different current values: still no gate failure
+    // wildly different current values: no drift rows (targets are from
+    // the paper, not measurements) — but the gate fails because the
+    // suite is unpinned and only `regress --bless` clears that.
     let mut cur = sample_artifact();
     for r in &mut cur.rows {
         r.value *= 3.0;
     }
     let rep = compare(&cur, &base, &Tolerance::default());
-    assert!(!rep.failed());
+    assert!(rep.failed(), "pending baseline must fail a non-bless run");
+    assert_eq!(rep.count(DriftStatus::Drift), 0);
     assert!(rep.pending_baseline);
     assert!(rep.render().contains("PENDING"));
+    assert!(rep.render().contains("FAIL"));
     // the pending flag round-trips through JSON
     let b2 = BenchArtifact::from_json(&base.to_json()).unwrap();
     assert!(b2.pending);

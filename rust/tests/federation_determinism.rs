@@ -1,0 +1,176 @@
+//! The federation tentpole guarantee, one layer above the engine's own
+//! contract: with an **active fault plan** (shard failures + straggler
+//! windows, some seeded) and a live rollout, the entire federated
+//! fingerprint — per-region completion streams, shed events, the
+//! rendered federation report, and the exported Chrome-trace JSON
+//! bytes — is identical across host worker counts {1, 4} × sim
+//! fast-path on/off, for every router policy. Routing, failover and
+//! rollout decisions read only simulated state, so host parallelism can
+//! never leak into a simulated number.
+
+use flexv::qnn::layer::Network;
+use flexv::qnn::{Layer, QTensor};
+use flexv::serve::{
+    FaultPlan, Federation, FederationConfig, FederationMetrics, RolloutPlan, RouterPolicy,
+    ServeConfig, TraceItem,
+};
+use flexv::util::Prng;
+
+fn tiny(name: &str, seed: u64) -> Network {
+    let mut rng = Prng::new(seed);
+    let mut net = Network::new(name, [8, 8, 8], 8);
+    net.push(Layer::conv("c1", [8, 8, 8], 8, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+    net.push(Layer::conv("c2", [8, 8, 8], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+    net
+}
+
+fn item(at: u64, model: usize, rng: &mut Prng) -> TraceItem {
+    TraceItem {
+        at,
+        model,
+        class: 0,
+        priority: (at % 3) as u8,
+        deadline: None,
+        input: QTensor::random(&[8, 8, 8], 8, false, rng),
+    }
+}
+
+fn mixed_trace(models: usize, n: usize, gap: u64, seed: u64) -> Vec<TraceItem> {
+    let mut rng = Prng::new(seed);
+    (0..n).map(|i| item(i as u64 * gap, i % models, &mut rng)).collect()
+}
+
+/// Everything simulated, flattened to one string: per-region completion
+/// tuples (incl. outputs and per-layer cycles), shed events, the
+/// rendered report, and the exported trace bytes.
+fn fingerprint(fed: &Federation, m: &FederationMetrics) -> String {
+    let mut fp = String::new();
+    for (r, engine) in fed.regions().iter().enumerate() {
+        fp.push_str(&format!("region {r}\n"));
+        for c in engine.completions() {
+            fp.push_str(&format!(
+                "  c id={} model={} shard={} start={} finish={} exec={} switch={} batch={} \
+                 macs={} layers={:?} energy={:?} out={:?}\n",
+                c.id,
+                c.model,
+                c.shard,
+                c.start_cycle,
+                c.finish_cycle,
+                c.exec_cycles,
+                c.switch_cycles,
+                c.batch_size,
+                c.macs,
+                c.layer_cycles,
+                c.energy_pj,
+                c.output,
+            ));
+        }
+        for s in engine.shed_events() {
+            fp.push_str(&format!("  shed {s:?}\n"));
+        }
+    }
+    fp.push_str(&m.render());
+    fp.push_str(&flexv::trace::chrome::to_chrome_json(&fed.build_trace()));
+    fp
+}
+
+/// Run the standard federated scenario with the given execution knobs;
+/// every simulated input (fault plan, trace, fleet shape) is fixed.
+fn run_faulted(workers: usize, fastpath: bool, policy: RouterPolicy) -> String {
+    let engine = ServeConfig {
+        shards: 2,
+        n_cores: 4,
+        queue_capacity: 64,
+        max_batch: 4,
+        workers,
+        fastpath,
+        ..ServeConfig::default()
+    };
+    // two pinned faults (a mid-batch failure, a straggler window) plus
+    // two seeded ones — the plan is part of the fingerprint
+    let faults =
+        FaultPlan::parse("fail@500:r0.s0+40000,slow@2000:r1.s1x3+60000,auto:2", 0xFED5, 2, 2, 200_000)
+            .expect("static fault spec parses");
+    let cfg = FederationConfig { regions: 2, engine, policy, faults, rollout: None };
+    let mut fed = Federation::new(cfg);
+    fed.register(tiny("det-a", 21));
+    fed.register(tiny("det-b", 22));
+    let m = fed.run_trace(mixed_trace(2, 20, 80, 23));
+    assert_eq!(m.total_served(), 20, "faults must delay work, never drop it");
+    fingerprint(&fed, &m)
+}
+
+#[test]
+fn federated_fingerprint_is_identical_across_workers_and_fastpath() {
+    for policy in RouterPolicy::ALL {
+        let reference = run_faulted(1, false, policy);
+        for (workers, fastpath) in [(1usize, true), (4, false), (4, true)] {
+            let fp = run_faulted(workers, fastpath, policy);
+            assert!(
+                fp == reference,
+                "federated fingerprint diverged (policy {}, workers {workers}, fastpath {fastpath})",
+                policy.name(),
+            );
+        }
+    }
+}
+
+/// Rollout under fire: a shard failure mid-trace plus a canary drain +
+/// warm switch. Nothing is dropped, the canary's exec cycles split into
+/// pre-switch (default plans) and post-switch (tuned plans) buckets, and
+/// the whole thing is fingerprint-identical across execution knobs.
+fn run_rollout(workers: usize, fastpath: bool) -> (String, FederationMetrics) {
+    let engine = ServeConfig {
+        shards: 2,
+        n_cores: 4,
+        queue_capacity: 64,
+        max_batch: 4,
+        workers,
+        fastpath,
+        ..ServeConfig::default()
+    };
+    let faults = FaultPlan::parse("fail@600:r0.s0+100000", 0, 2, 2, 0).expect("spec parses");
+    let cfg = FederationConfig {
+        regions: 2,
+        engine,
+        // locality homes model 1 on region 1 (the canary), so canary
+        // traffic exists both pre-drain and post-switch
+        policy: RouterPolicy::Locality,
+        faults,
+        rollout: Some(RolloutPlan { at: 1_000_000, canary: 1 }),
+    };
+    let mut fed = Federation::new(cfg);
+    fed.register(tiny("ro-a", 31));
+    fed.register(tiny("ro-b", 32));
+    let mut rng = Prng::new(33);
+    let mut trace: Vec<TraceItem> =
+        (0..8u64).map(|i| item(i * 60, (i % 2) as usize, &mut rng)).collect();
+    for i in 0..8u64 {
+        trace.push(item(3_000_000 + i * 60, (i % 2) as usize, &mut rng));
+    }
+    let m = fed.run_trace(trace);
+    (fingerprint(&fed, &m), m)
+}
+
+#[test]
+fn rollout_under_faults_drops_nothing_and_stays_deterministic() {
+    let (reference, m) = run_rollout(1, false);
+    // zero dropped in-flight requests: every admitted request completes,
+    // including the ones retracted from the failed shard
+    assert_eq!(m.total_served(), 16, "rollout or failover dropped admitted work");
+    assert!(m.requeued >= 1, "the cycle-600 failure caught in-flight work");
+    // canary-vs-default cycle accounting
+    let ro = m.rollout.expect("rollout must have switched");
+    assert_eq!(ro.canary, 1);
+    assert_eq!(ro.models_migrated, 2);
+    assert!(ro.switched_at >= ro.drain_started);
+    assert!(ro.canary_default_exec > 0, "canary served default plans pre-drain");
+    assert!(ro.canary_tuned_exec > 0, "canary served tuned plans post-switch");
+    for (workers, fastpath) in [(4usize, true), (0, true)] {
+        let (fp, _) = run_rollout(workers, fastpath);
+        assert!(
+            fp == reference,
+            "rollout fingerprint diverged (workers {workers}, fastpath {fastpath})"
+        );
+    }
+}

@@ -20,7 +20,7 @@ use crate::dory::{KernelCall, LayerPlan, PlanKey, TileExec};
 use crate::isa::{IsaVariant, Program};
 use crate::kernels::conv::gen_conv;
 use crate::kernels::layers::{gen_add, gen_avgpool, gen_dwconv, gen_linear, gen_maxpool};
-use crate::power::EnergyModel;
+use crate::power::{EnergyModel, OperatingPoint};
 use crate::qnn::QTensor;
 use crate::sim::{Cluster, ClusterStats};
 
@@ -76,6 +76,15 @@ impl RunResult {
         self.layers
             .iter()
             .map(|l| em.energy_pj(isa, &l.stats, l.dotp_bits))
+            .sum()
+    }
+    /// [`RunResult::energy_pj`] billed at an explicit voltage/frequency
+    /// operating point (see [`EnergyModel::energy_pj_at`]); the serving
+    /// shard uses this to price DVFS'd batches.
+    pub fn energy_pj_at(&self, isa: IsaVariant, em: &EnergyModel, op: &OperatingPoint) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| em.energy_pj_at(isa, &l.stats, l.dotp_bits, op))
             .sum()
     }
 }

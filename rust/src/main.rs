@@ -62,6 +62,7 @@ COMMANDS:
               [--trace-out FILE]
               [--federation N] [--router hash|least-loaded|locality]
               [--faults SPEC] [--rollout [CYCLE]]
+              [--power-cap MW] [--dvfs race|steady|slo|fixed-point]
                     replay a mixed 3-model traffic trace on a
                     multi-cluster serving fleet; reports req/s, p50/p99
                     latency, MAC/cycle, energy/request, plan-cache hits.
@@ -91,11 +92,22 @@ COMMANDS:
                     simulated cycles — comma-separated tokens
                     fail@CYCLE:rR.sS+DUR (shard down, in-flight work
                     re-queued), slow@CYCLE:rR.sSxF+DUR (Fx straggler,
-                    timing only), auto:K (K events from --seed) — with
-                    priority-preserving failover; --rollout [CYCLE]
+                    timing only), throttle@CYCLE:rR.sS+DUR (thermal
+                    throttle: batches clamped to the efficiency
+                    operating point), auto:K (K events from --seed) —
+                    with priority-preserving failover; --rollout [CYCLE]
                     drains the last region at CYCLE (default mid-trace),
                     compiles tuned plans off-path, and switches it warm
-                    with zero dropped requests. Reports, fault log and
+                    with zero dropped requests.
+                    --dvfs picks the operating-point governor (race =
+                    race-to-idle at the boost point, steady = always
+                    efficiency, slo = per-priority tier, or pin one of
+                    boost|nominal|efficiency; default nominal, which
+                    reproduces pre-DVFS numbers exactly); --power-cap MW
+                    caps the fleet's busy-power bound — dispatch
+                    downgrades or defers batches so simulated power
+                    never exceeds it (with --federation the cap is split
+                    evenly across regions). Reports, fault log and
                     trace stay byte-identical across --workers and
                     fast-path settings at a fixed seed and fault plan
   bench-report [--suite kernels|e2e|autotune|serve|all] [--out FILE]
@@ -291,6 +303,22 @@ fn main() {
                 a
             });
             let hw = if full { 224 } else { 96 };
+            let power_cap_mw = flag_str(&args, "--power-cap").map(|s| {
+                s.parse::<f64>().ok().filter(|c| *c > 0.0).unwrap_or_else(|| {
+                    eprintln!("bad --power-cap '{s}', expected a positive mW value");
+                    usage()
+                })
+            });
+            let dvfs =
+                flag_str(&args, "--dvfs").map_or_else(flexv::power::DvfsPolicy::default, |s| {
+                    flexv::power::DvfsPolicy::from_name(s).unwrap_or_else(|| {
+                        eprintln!(
+                            "unknown --dvfs '{s}' (expected race | steady | slo | boost | \
+                             nominal | efficiency)"
+                        );
+                        usage()
+                    })
+                });
             use flexv::serve::{standard_mix, Engine, ServeConfig, SloClass, WorkloadSpec};
             let cfg = ServeConfig {
                 shards,
@@ -301,6 +329,8 @@ fn main() {
                 autoscale,
                 tuned,
                 fidelity: parse_fidelity(&args),
+                power_cap_mw,
+                dvfs,
                 ..ServeConfig::default()
             };
             if let Some(regions) = flag_val(&args, "--federation") {
@@ -313,7 +343,7 @@ fn main() {
             }
             println!(
                 "serve-bench: {requests} requests over 3 models on {shards} shards \
-                 (MNV1 input {hw}x{hw}{}, {}, {}, trace {}{}{}{}) ...",
+                 (MNV1 input {hw}x{hw}{}, {}, {}, trace {}{}{}{}{}{}) ...",
                 if exact { ", exact mode" } else { "" },
                 match workers {
                     0 => "auto workers".to_string(),
@@ -328,6 +358,12 @@ fn main() {
                     ", autoscale {}:{}",
                     a.min_shards, a.max_shards
                 )),
+                if dvfs == flexv::power::DvfsPolicy::default() {
+                    String::new()
+                } else {
+                    format!(", dvfs {}", dvfs.name())
+                },
+                power_cap_mw.map_or(String::new(), |c| format!(", power cap {c} mW")),
             );
             let trace = match shape {
                 None => eng.synthetic_trace(requests, mean_gap, &[0.45, 0.30, 0.25], seed),
@@ -656,7 +692,7 @@ fn run_tune(args: &[String]) {
 #[allow(clippy::too_many_arguments)]
 fn run_serve_federation(
     args: &[String],
-    cfg: flexv::serve::ServeConfig,
+    mut cfg: flexv::serve::ServeConfig,
     regions: usize,
     hw: usize,
     requests: usize,
@@ -673,6 +709,10 @@ fn run_serve_federation(
         eprintln!("--federation needs at least one region");
         usage()
     }
+    // --power-cap is the fleet budget: each region enforces an even
+    // share (regions are identical, so even split is the optimum).
+    let fleet_cap_mw = cfg.power_cap_mw;
+    cfg.power_cap_mw = fleet_cap_mw.map(|c| c / regions as f64);
     let policy = flag_str(args, "--router").map_or(RouterPolicy::ConsistentHash, |s| {
         RouterPolicy::from_name(s).unwrap_or_else(|| {
             eprintln!("unknown --router '{s}' (expected hash | least-loaded | locality)");
@@ -703,11 +743,19 @@ fn run_serve_federation(
     }
     println!(
         "serve-bench: {requests} requests over 3 models, federated across {regions} regions x {} \
-         shards (router {}, {} fault events{}, MNV1 input {hw}x{hw}) ...",
+         shards (router {}, {} fault events{}{}, MNV1 input {hw}x{hw}) ...",
         cfg.shards,
         policy.name(),
         n_faults,
         rollout.map_or(String::new(), |p| format!(", rollout canary r{} @{}", p.canary, p.at)),
+        match fleet_cap_mw {
+            Some(c) => format!(
+                ", fleet power cap {c} mW ({:.2} mW/region, dvfs {})",
+                c / regions as f64,
+                cfg.dvfs.name()
+            ),
+            None => String::new(),
+        },
     );
     let trace = match shape {
         None => fed.region(0).synthetic_trace(requests, mean_gap, &[0.45, 0.30, 0.25], seed),

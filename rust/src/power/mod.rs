@@ -1,4 +1,5 @@
-//! GF22FDX area / timing / energy model (§V-A, Table II).
+//! GF22FDX area / timing / energy model (§V-A, Table II), with DVFS
+//! operating points.
 //!
 //! The paper's silicon numbers are the calibration anchors; our simulator
 //! supplies the per-instruction-class activity. The model is deliberately
@@ -14,6 +15,48 @@
 //!   paper's efficiency corner. The same class energies are used for all
 //!   four cores — variant differences come from their instruction mixes
 //!   plus the small leakage deltas of Table II.
+//!
+//! # Static / dynamic split
+//!
+//! The two energy components scale differently and are kept separate:
+//!
+//! - **Dynamic energy** ([`EnergyModel::dynamic_energy_pj`]) is charged
+//!   per *event* (issued instruction, dotp, TCDM access, …). Per cycle it
+//!   is frequency-independent: running the same window faster spends the
+//!   same dynamic energy in less time, so dynamic *power* scales linearly
+//!   with frequency (and with `V²` across voltage corners).
+//! - **Static (leakage) power** is the Table II per-cluster `leak_mw` —
+//!   a property of the powered-on silicon, frequency-**independent**.
+//!   As energy it is charged per unit *time* (`cycles × period`), so the
+//!   leakage share per cycle grows as the clock slows down.
+//!
+//! `power_mw(.., f_mhz)` therefore is `P_dyn(f) + P_leak`, and
+//! [`EnergyModel::energy_pj`] (the historical single-corner entry point)
+//! equals [`EnergyModel::energy_pj_at`] at the nominal operating point.
+//!
+//! # Operating points
+//!
+//! [`operating_points`] derives three voltage/frequency pairs per variant
+//! from the Table II anchors, in the same spirit as the multi-corner
+//! evaluations of the related MPIC and Dustin clusters:
+//!
+//! - **boost**: 0.80 V at the variant's Table II worst-case `fmax`
+//!   (e.g. 463 MHz for Flex-V) — the sign-off corner.
+//! - **nominal**: 0.65 V at 250 MHz — the typical corner every historical
+//!   number in this repo is quoted at ([`crate::report::F_TYP_MHZ`]).
+//! - **efficiency**: 0.50 V at 125 MHz — the low-voltage corner where
+//!   TOPS/W peaks.
+//!
+//! Across corners, dynamic energy scales with `(V/V_nom)²` (CV² switching)
+//! and leakage power with `(V/V_nom)³` (DIBL makes leakage superlinear in
+//! V), so each point is physically consistent: slower corners always cost
+//! less energy per inference, faster corners always finish sooner.
+//!
+//! The serving fleet keeps its clock in **nominal-period ticks** (4 ns at
+//! 250 MHz); [`OperatingPoint::fleet_ticks`] converts a core-cycle count
+//! executed at any point into that common timebase with pure integer
+//! arithmetic (exact identity at nominal), which is what keeps DVFS
+//! decisions deterministic across host worker counts.
 //!
 //! TOPS/W for a kernel = `2 · MAC/cycle / E_cycle`, frequency-independent
 //! apart from the leakage share, evaluated at the efficiency corner.
@@ -66,6 +109,129 @@ pub fn phys(v: IsaVariant) -> VariantPhys {
     }
 }
 
+/// Clock period of the nominal (typical, 250 MHz) corner [ps] — the
+/// fleet's common timebase.
+pub const NOMINAL_PERIOD_PS: u64 = 4_000;
+
+/// Supply voltage of the nominal corner [V].
+pub const NOMINAL_VDD: f64 = 0.65;
+
+/// Index of the boost point in [`operating_points`].
+pub const OP_BOOST: usize = 0;
+/// Index of the nominal point in [`operating_points`].
+pub const OP_NOMINAL: usize = 1;
+/// Index of the efficiency point in [`operating_points`].
+pub const OP_EFFICIENCY: usize = 2;
+
+/// One voltage/frequency operating point (see the module docs for the
+/// derivation from the Table II anchors).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPoint {
+    /// Corner name (`boost` / `nominal` / `efficiency`).
+    pub name: &'static str,
+    /// Supply voltage [V].
+    pub vdd: f64,
+    /// Clock period [ps] (integral — the deterministic timebase).
+    pub period_ps: u64,
+}
+
+impl OperatingPoint {
+    /// The nominal 0.65 V / 250 MHz corner (variant-independent).
+    pub fn nominal() -> OperatingPoint {
+        OperatingPoint { name: "nominal", vdd: NOMINAL_VDD, period_ps: NOMINAL_PERIOD_PS }
+    }
+
+    /// Clock frequency [MHz].
+    pub fn f_mhz(&self) -> f64 {
+        1e6 / self.period_ps as f64
+    }
+
+    /// Dynamic-energy scale vs the nominal corner (`(V/V_nom)²`).
+    pub fn dyn_scale(&self) -> f64 {
+        (self.vdd / NOMINAL_VDD).powi(2)
+    }
+
+    /// Leakage-power scale vs the nominal corner (`(V/V_nom)³`).
+    pub fn leak_scale(&self) -> f64 {
+        (self.vdd / NOMINAL_VDD).powi(3)
+    }
+
+    /// Convert `core_cycles` executed at this point into fleet ticks
+    /// (nominal-period cycles), rounding up. Pure integer arithmetic —
+    /// deterministic on every host — and an exact identity at the
+    /// nominal point, so a fleet that never leaves nominal is
+    /// tick-for-tick the fleet that predates DVFS.
+    pub fn fleet_ticks(&self, core_cycles: u64) -> u64 {
+        let ps = core_cycles as u128 * self.period_ps as u128;
+        ps.div_ceil(NOMINAL_PERIOD_PS as u128) as u64
+    }
+}
+
+/// The three operating points of one variant, ordered fastest first
+/// (index with [`OP_BOOST`] / [`OP_NOMINAL`] / [`OP_EFFICIENCY`]).
+pub fn operating_points(v: IsaVariant) -> [OperatingPoint; 3] {
+    let boost_period_ps = (1e6 / phys(v).fmax_mhz).round() as u64;
+    [
+        OperatingPoint { name: "boost", vdd: 0.80, period_ps: boost_period_ps },
+        OperatingPoint::nominal(),
+        OperatingPoint { name: "efficiency", vdd: 0.50, period_ps: 2 * NOMINAL_PERIOD_PS },
+    ]
+}
+
+/// How the serving engine picks operating points (see
+/// [`crate::serve::ServeConfig`]; enforcement happens in the engine's
+/// sequential scheduling step so it is deterministic by construction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DvfsPolicy {
+    /// Highest point that fits under the power cap — finish fast, idle
+    /// long (minimizes latency; leakage favours it when idle power is
+    /// gated away).
+    RaceToIdle,
+    /// Lowest-voltage point — minimal energy per request, longest
+    /// latency (ignores everything but the energy bill).
+    SlowAndSteady,
+    /// Per-SLO-class: high-priority classes get boost, standard runs
+    /// nominal, best-effort runs the efficiency corner; downgraded as
+    /// needed to honour the cap.
+    Slo,
+    /// Pin every dispatch to one operating-point index. The default is
+    /// `Fixed(OP_NOMINAL)`, which reproduces the pre-DVFS fleet exactly.
+    Fixed(usize),
+}
+
+impl Default for DvfsPolicy {
+    fn default() -> Self {
+        DvfsPolicy::Fixed(OP_NOMINAL)
+    }
+}
+
+impl DvfsPolicy {
+    /// Parse a `--dvfs` CLI value.
+    pub fn from_name(s: &str) -> Option<DvfsPolicy> {
+        match s {
+            "race" => Some(DvfsPolicy::RaceToIdle),
+            "steady" => Some(DvfsPolicy::SlowAndSteady),
+            "slo" => Some(DvfsPolicy::Slo),
+            "boost" => Some(DvfsPolicy::Fixed(OP_BOOST)),
+            "nominal" => Some(DvfsPolicy::Fixed(OP_NOMINAL)),
+            "efficiency" => Some(DvfsPolicy::Fixed(OP_EFFICIENCY)),
+            _ => None,
+        }
+    }
+
+    /// CLI name of the policy.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DvfsPolicy::RaceToIdle => "race",
+            DvfsPolicy::SlowAndSteady => "steady",
+            DvfsPolicy::Slo => "slo",
+            DvfsPolicy::Fixed(OP_BOOST) => "boost",
+            DvfsPolicy::Fixed(OP_EFFICIENCY) => "efficiency",
+            DvfsPolicy::Fixed(_) => "nominal",
+        }
+    }
+}
+
 /// Per-instruction-class energies [pJ], cluster-wide shared overheads
 /// included via `shared_pj_per_cycle`. Fitted to the Table II / Table III
 /// anchors (see module docs).
@@ -108,15 +274,28 @@ impl Default for EnergyModel {
 }
 
 impl EnergyModel {
-    /// Energy of one simulated window [pJ], activity-based.
-    pub fn energy_pj(&self, v: IsaVariant, stats: &ClusterStats, dotp_bits: u8) -> f64 {
-        let dotp_pj = match dotp_bits {
+    /// Per-dotp energy for an element width of the supported grid.
+    /// The grid is closed — 2/4/8-bit SIMD plus the 16-bit fallback the
+    /// kernel generators emit — and anything else is a pricing bug, not
+    /// a default: a new precision must be fitted, never silently aliased
+    /// to the 8-bit energy.
+    fn dotp_pj(&self, dotp_bits: u8) -> f64 {
+        match dotp_bits {
             8 => self.dotp8_pj,
             4 => self.dotp4_pj,
             2 => self.dotp2_pj,
             16 => self.dotp8_pj * 1.6,
-            _ => self.dotp8_pj,
-        };
+            other => panic!(
+                "EnergyModel: unsupported dotp width {other} (supported grid: 2|4|8|16) — \
+                 fit an energy for the new precision instead of aliasing it"
+            ),
+        }
+    }
+
+    /// Dynamic (switching) energy of one simulated window [pJ] at the
+    /// nominal voltage — purely activity-based, frequency-independent.
+    pub fn dynamic_energy_pj(&self, stats: &ClusterStats, dotp_bits: u8) -> f64 {
+        let dotp_pj = self.dotp_pj(dotp_bits);
         let mut e = stats.cycles as f64 * self.shared_pj_per_cycle;
         for c in &stats.cores {
             let active = c.cycles.saturating_sub(c.barrier_cycles) as f64;
@@ -126,23 +305,90 @@ impl EnergyModel {
             e += c.tcdm_accesses as f64 * self.mem_pj;
             e += c.macload_instrs as f64 * self.macload_pj;
         }
-        // Leakage share at the 250 MHz typical corner.
-        let leak_pj_per_cycle = phys(v).leak_mw * 1e-3 / 250e6 * 1e12;
-        e += stats.cycles as f64 * leak_pj_per_cycle;
         e
     }
 
-    /// Average cluster power [mW] at frequency `f_mhz` for a window.
-    pub fn power_mw(&self, v: IsaVariant, stats: &ClusterStats, dotp_bits: u8, f_mhz: f64) -> f64 {
-        let e_per_cycle = self.energy_pj(v, stats, dotp_bits) / stats.cycles.max(1) as f64;
-        e_per_cycle * 1e-12 * f_mhz * 1e6 * 1e3
+    /// Energy of one simulated window [pJ] at the nominal operating
+    /// point (0.65 V / 250 MHz): dynamic energy plus the leakage accrued
+    /// over the window's wall time at that corner.
+    pub fn energy_pj(&self, v: IsaVariant, stats: &ClusterStats, dotp_bits: u8) -> f64 {
+        self.energy_pj_at(v, stats, dotp_bits, &OperatingPoint::nominal())
     }
 
-    /// Energy efficiency [TOPS/W] = ops per joule (1 MAC = 2 ops).
-    /// Frequency-independent except the leakage term already folded in.
+    /// Energy of one simulated window [pJ] at an arbitrary operating
+    /// point: dynamic energy scaled by `(V/V_nom)²`, leakage scaled by
+    /// `(V/V_nom)³` and integrated over `cycles × period`.
+    pub fn energy_pj_at(
+        &self,
+        v: IsaVariant,
+        stats: &ClusterStats,
+        dotp_bits: u8,
+        op: &OperatingPoint,
+    ) -> f64 {
+        let dyn_pj = self.dynamic_energy_pj(stats, dotp_bits) * op.dyn_scale();
+        // P_leak[mW] × t[ps] = E[pJ] × 1e3 ⇒ the 1e-3 below.
+        let leak_pj =
+            stats.cycles as f64 * op.period_ps as f64 * phys(v).leak_mw * op.leak_scale() * 1e-3;
+        dyn_pj + leak_pj
+    }
+
+    /// Average cluster power [mW] at frequency `f_mhz` for a window:
+    /// dynamic power (∝ f) plus the frequency-independent Table II
+    /// leakage. Nominal voltage; use [`EnergyModel::power_mw_at`] for
+    /// other corners.
+    pub fn power_mw(&self, v: IsaVariant, stats: &ClusterStats, dotp_bits: u8, f_mhz: f64) -> f64 {
+        let dyn_per_cycle = self.dynamic_energy_pj(stats, dotp_bits) / stats.cycles.max(1) as f64;
+        dyn_per_cycle * 1e-12 * f_mhz * 1e6 * 1e3 + phys(v).leak_mw
+    }
+
+    /// Average cluster power [mW] of a window at an operating point.
+    pub fn power_mw_at(
+        &self,
+        v: IsaVariant,
+        stats: &ClusterStats,
+        dotp_bits: u8,
+        op: &OperatingPoint,
+    ) -> f64 {
+        let dyn_per_cycle = self.dynamic_energy_pj(stats, dotp_bits) * op.dyn_scale()
+            / stats.cycles.max(1) as f64;
+        dyn_per_cycle * 1e-12 * op.f_mhz() * 1e6 * 1e3 + phys(v).leak_mw * op.leak_scale()
+    }
+
+    /// Conservative upper bound on one cluster's power [mW] while busy at
+    /// `op`: every core assumed to retire its most expensive possible mix
+    /// every cycle (a dotp at the widest-element energy, a TCDM access
+    /// and a Mac&Load WB-load — each counter is bounded by `cycles`, so
+    /// no real window can exceed this). The serving engine budgets power
+    /// caps against this bound, which makes "fleet average power ≤ cap"
+    /// hold by construction.
+    pub fn busy_power_bound_mw(&self, v: IsaVariant, n_cores: usize, op: &OperatingPoint) -> f64 {
+        let dyn_per_cycle = self.shared_pj_per_cycle
+            + n_cores as f64
+                * (self.base_pj + self.dotp8_pj * 1.6 + self.mem_pj + self.macload_pj);
+        dyn_per_cycle * op.dyn_scale() * 1e-12 * op.f_mhz() * 1e6 * 1e3
+            + phys(v).leak_mw * op.leak_scale()
+    }
+
+    /// Energy efficiency [TOPS/W] = ops per joule (1 MAC = 2 ops) at the
+    /// nominal operating point.
     pub fn tops_per_watt(&self, v: IsaVariant, stats: &ClusterStats, dotp_bits: u8) -> f64 {
         let ops = 2.0 * stats.total_macs() as f64;
         let e_j = self.energy_pj(v, stats, dotp_bits) * 1e-12;
+        ops / e_j / 1e12
+    }
+
+    /// Energy efficiency [TOPS/W] at an arbitrary operating point — peaks
+    /// at the efficiency corner, where dynamic energy shrinks with `V²`
+    /// faster than the slower clock grows the leakage share.
+    pub fn tops_per_watt_at(
+        &self,
+        v: IsaVariant,
+        stats: &ClusterStats,
+        dotp_bits: u8,
+        op: &OperatingPoint,
+    ) -> f64 {
+        let ops = 2.0 * stats.total_macs() as f64;
+        let e_j = self.energy_pj_at(v, stats, dotp_bits, op) * 1e-12;
         ops / e_j / 1e12
     }
 }
@@ -156,6 +402,7 @@ pub fn gops(stats: &ClusterStats, f_mhz: f64) -> f64 {
 mod tests {
     use super::*;
     use crate::sim::CoreStats;
+    use crate::util::{proptest, Prng};
 
     fn synthetic_stats(dotp_per_core: u64, cycles: u64) -> ClusterStats {
         ClusterStats {
@@ -201,6 +448,197 @@ mod tests {
         // Flex-V draws slightly more than RI5CY (leakage delta)
         let pr = m.power_mw(IsaVariant::Ri5cy, &stats, 8, 250.0);
         assert!(p > pr && (p - pr) / pr < 0.05, "{p} vs {pr}");
+    }
+
+    /// Regression for the static/dynamic split: the old code derived
+    /// `power_mw` from the *total* energy per cycle (leakage folded in at
+    /// 250 MHz) times `f`, so halving the frequency halved the leakage
+    /// power too — `p(125) == p(250)/2` exactly. The split model keeps
+    /// leakage frequency-independent: `p(f) = p_dyn(250)·f/250 + leak`.
+    #[test]
+    fn power_mw_splits_static_and_dynamic_across_125_250_463_mhz() {
+        let stats = synthetic_stats(800, 1000);
+        let m = EnergyModel::default();
+        let leak = phys(IsaVariant::FlexV).leak_mw;
+        // The whole curve is pinned by its f→0 intercept and one slope.
+        assert!((m.power_mw(IsaVariant::FlexV, &stats, 8, 0.0) - leak).abs() < 1e-12);
+        let dyn250 = m.power_mw(IsaVariant::FlexV, &stats, 8, 250.0) - leak;
+        for f in [125.0, 250.0, 463.0] {
+            let p = m.power_mw(IsaVariant::FlexV, &stats, 8, f);
+            let want = dyn250 * f / 250.0 + leak;
+            assert!((p - want).abs() < 1e-9, "p({f}) = {p}, want {want}");
+        }
+        // The old behaviour, explicitly ruled out: scaling the leakage
+        // share along with frequency.
+        let p125 = m.power_mw(IsaVariant::FlexV, &stats, 8, 125.0);
+        let old_p125 = (dyn250 + leak) / 2.0;
+        assert!(
+            (p125 - old_p125).abs() > leak / 4.0,
+            "leakage must not scale with frequency ({p125} vs legacy {old_p125})"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported dotp width")]
+    fn unknown_dotp_width_panics_instead_of_aliasing_to_8bit() {
+        let stats = synthetic_stats(100, 1000);
+        EnergyModel::default().energy_pj(IsaVariant::FlexV, &stats, 3);
+    }
+
+    #[test]
+    fn operating_points_are_physically_consistent() {
+        let m = EnergyModel::default();
+        let stats = synthetic_stats(800, 1000);
+        let [boost, nominal, eff] = operating_points(IsaVariant::FlexV);
+        // Table II fmax for Flex-V is 463 MHz; the ps grid holds it to <1%.
+        assert!((boost.f_mhz() - 463.0).abs() < 1.0, "boost {} MHz", boost.f_mhz());
+        assert!((nominal.f_mhz() - 250.0).abs() < 1e-9);
+        assert!((eff.f_mhz() - 125.0).abs() < 1e-9);
+        // The historical single-corner entry point IS the nominal point.
+        assert_eq!(
+            m.energy_pj(IsaVariant::FlexV, &stats, 8),
+            m.energy_pj_at(IsaVariant::FlexV, &stats, 8, &nominal),
+        );
+        // Faster corners draw more power, slower corners spend less energy.
+        let p: Vec<f64> = [boost, nominal, eff]
+            .iter()
+            .map(|op| m.power_mw_at(IsaVariant::FlexV, &stats, 8, op))
+            .collect();
+        assert!(p[0] > p[1] && p[1] > p[2], "power ordering {p:?}");
+        let e: Vec<f64> = [boost, nominal, eff]
+            .iter()
+            .map(|op| m.energy_pj_at(IsaVariant::FlexV, &stats, 8, op))
+            .collect();
+        assert!(e[0] > e[1] && e[1] > e[2], "energy ordering {e:?}");
+        // … so TOPS/W peaks at the efficiency corner.
+        let tw_eff = m.tops_per_watt_at(IsaVariant::FlexV, &stats, 8, &eff);
+        let tw_nom = m.tops_per_watt_at(IsaVariant::FlexV, &stats, 8, &nominal);
+        assert!(tw_eff > tw_nom);
+        // The busy-power bound dominates any real window at every corner.
+        for op in [boost, nominal, eff] {
+            let bound = m.busy_power_bound_mw(IsaVariant::FlexV, 8, &op);
+            let real = m.power_mw_at(IsaVariant::FlexV, &stats, 8, &op);
+            assert!(bound >= real, "bound {bound} < real {real} at {}", op.name);
+        }
+    }
+
+    #[test]
+    fn fleet_tick_conversion_is_exact_at_nominal_and_rounds_up() {
+        let [boost, nominal, eff] = operating_points(IsaVariant::FlexV);
+        assert_eq!(nominal.fleet_ticks(12_345), 12_345);
+        assert_eq!(eff.fleet_ticks(1_000), 2_000);
+        // boost: 2160 ps period ⇒ 1000 core cycles = 2.16 Mps = 540 ticks.
+        assert_eq!(boost.period_ps, 2_160);
+        assert_eq!(boost.fleet_ticks(1_000), 540);
+        // ceil, never floor: a nonzero window costs at least one tick.
+        assert_eq!(boost.fleet_ticks(1), 1);
+        assert_eq!(boost.fleet_ticks(0), 0);
+    }
+
+    #[test]
+    fn dvfs_policy_names_round_trip() {
+        for p in [
+            DvfsPolicy::RaceToIdle,
+            DvfsPolicy::SlowAndSteady,
+            DvfsPolicy::Slo,
+            DvfsPolicy::Fixed(OP_BOOST),
+            DvfsPolicy::Fixed(OP_NOMINAL),
+            DvfsPolicy::Fixed(OP_EFFICIENCY),
+        ] {
+            assert_eq!(DvfsPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(DvfsPolicy::from_name("warp"), None);
+        assert_eq!(DvfsPolicy::default(), DvfsPolicy::Fixed(OP_NOMINAL));
+    }
+
+    fn random_stats(rng: &mut Prng) -> ClusterStats {
+        let cycles = 1 + rng.below(10_000);
+        let cores = (0..8)
+            .map(|_| {
+                let barrier = rng.below(cycles + 1);
+                CoreStats {
+                    cycles,
+                    instrs: cycles,
+                    macs: rng.below(cycles * 4 + 1),
+                    dotp_instrs: rng.below(cycles + 1),
+                    macload_instrs: rng.below(cycles + 1),
+                    tcdm_accesses: rng.below(cycles + 1),
+                    barrier_cycles: barrier,
+                    ..Default::default()
+                }
+            })
+            .collect();
+        ClusterStats { cycles, cores, ..Default::default() }
+    }
+
+    #[test]
+    fn prop_energy_strictly_positive_for_nonempty_windows() {
+        proptest::check_default(random_stats, |stats| {
+            for op in operating_points(IsaVariant::FlexV) {
+                let e = EnergyModel::default().energy_pj_at(IsaVariant::FlexV, stats, 8, &op);
+                if e <= 0.0 {
+                    return Err(format!("energy {e} not strictly positive at {}", op.name));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_energy_monotone_in_activity_counters() {
+        proptest::check_default(random_stats, |stats| {
+            let m = EnergyModel::default();
+            let base = m.energy_pj(IsaVariant::FlexV, stats, 8);
+            let mut bump = |f: &dyn Fn(&mut CoreStats), what: &str| -> Result<(), String> {
+                let mut s = stats.clone();
+                f(&mut s.cores[0]);
+                let e = m.energy_pj(IsaVariant::FlexV, &s, 8);
+                if e > base {
+                    Ok(())
+                } else {
+                    Err(format!("+1 {what} did not increase energy ({e} <= {base})"))
+                }
+            };
+            bump(&|c| c.dotp_instrs += 1, "dotp")?;
+            bump(&|c| c.tcdm_accesses += 1, "tcdm access")?;
+            bump(&|c| c.macload_instrs += 1, "macload")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tops_per_watt_invariant_under_stats_scaling() {
+        proptest::check_default(
+            |rng| (random_stats(rng), 1 + rng.below(7)),
+            |(stats, k)| {
+                let m = EnergyModel::default();
+                let scaled = ClusterStats {
+                    cycles: stats.cycles * k,
+                    cores: stats
+                        .cores
+                        .iter()
+                        .map(|c| CoreStats {
+                            cycles: c.cycles * k,
+                            instrs: c.instrs * k,
+                            macs: c.macs * k,
+                            dotp_instrs: c.dotp_instrs * k,
+                            macload_instrs: c.macload_instrs * k,
+                            tcdm_accesses: c.tcdm_accesses * k,
+                            barrier_cycles: c.barrier_cycles * k,
+                            ..Default::default()
+                        })
+                        .collect(),
+                    ..Default::default()
+                };
+                let a = m.tops_per_watt(IsaVariant::FlexV, stats, 8);
+                let b = m.tops_per_watt(IsaVariant::FlexV, &scaled, 8);
+                if (a - b).abs() <= 1e-9 * a.abs().max(1.0) {
+                    Ok(())
+                } else {
+                    Err(format!("TOPS/W changed under x{k} scaling: {a} vs {b}"))
+                }
+            },
+        );
     }
 
     #[test]

@@ -290,6 +290,8 @@ impl MetricSource for E2eCellSource {
             MetricRow::exact(format!("{p}/cycles"), self.cell.cycles as f64, "cycles"),
             MetricRow::exact(format!("{p}/macs"), self.cell.macs as f64, "MACs"),
             mac,
+            MetricRow::analog(format!("{p}/energy_uj"), self.cell.energy_pj * 1e-6, "uJ/inf"),
+            MetricRow::analog(format!("{p}/tops_per_watt"), self.cell.tops_per_watt(), "TOPS/W"),
         ]
     }
 }
@@ -444,15 +446,82 @@ pub fn federation_scenario(opts: &BenchOptions) -> crate::serve::FederationMetri
     fed.run_trace(trace)
 }
 
+/// The serve suite's power-capped scenario: the federation shape of
+/// [`federation_scenario`] (minus faults and rollout) under the `slo`
+/// DVFS policy and a fleet power cap sized to fund ~3 of the 4 shards
+/// at the efficiency point — the source of the capped `serve/capped/*`
+/// rows (energy/request, fleet average power ≤ cap, fleet TOPS/W).
+pub fn power_capped_scenario(opts: &BenchOptions) -> crate::serve::FederationMetrics {
+    use crate::power::{operating_points, DvfsPolicy, EnergyModel, OP_EFFICIENCY};
+    use crate::serve::{FaultPlan, Federation, FederationConfig, RouterPolicy};
+    let hw = if opts.full { 224 } else { 96 };
+    let requests = if opts.full { 48 } else { 24 };
+    let isa = ServeConfig::default().isa;
+    let shard_floor_mw = EnergyModel::default().busy_power_bound_mw(
+        isa,
+        ServeConfig::default().n_cores,
+        &operating_points(isa)[OP_EFFICIENCY],
+    );
+    // Fleet cap for 3 of 2x2 shards at the efficiency floor, split
+    // evenly across the two regions (the serve-bench CLI does the same).
+    let cap_per_region = 1.5 * shard_floor_mw;
+    let cfg = ServeConfig {
+        shards: 2,
+        workers: opts.workers,
+        power_cap_mw: Some(cap_per_region),
+        dvfs: DvfsPolicy::Slo,
+        ..ServeConfig::default()
+    };
+    let fed_cfg = FederationConfig {
+        regions: 2,
+        engine: cfg,
+        policy: RouterPolicy::LeastLoaded,
+        faults: FaultPlan::none(),
+        rollout: None,
+    };
+    let mut fed = Federation::new(fed_cfg);
+    for net in standard_mix(hw) {
+        fed.register(net);
+    }
+    let mut spec = WorkloadSpec::new(TraceShape::Bursty, requests, 1_500_000, 3);
+    spec.mix = vec![0.45, 0.30, 0.25];
+    spec.classes = SloClass::standard_tiers(40_000_000);
+    spec.seed = SERVE_SUITE_SEED;
+    let trace = fed.workload_trace(&spec);
+    fed.run_trace(trace)
+}
+
+/// Re-id a source's rows under a prefix (`serve/region0/...` →
+/// `capped/serve/region0/...`) so two scenarios emitting the same row
+/// schema can share one artifact without colliding on ids.
+pub struct PrefixSource<'a> {
+    pub prefix: &'static str,
+    pub inner: &'a dyn MetricSource,
+}
+
+impl MetricSource for PrefixSource<'_> {
+    fn metric_rows(&self) -> Vec<MetricRow> {
+        let mut rows = self.inner.metric_rows();
+        for r in &mut rows {
+            r.id = format!("{}/{}", self.prefix, r.id);
+        }
+        rows
+    }
+}
+
 /// The serve fleet under a bursty SLO workload, serialized through
 /// [`crate::serve::FleetMetrics`]'s [`MetricSource`] impl (simulated
 /// fields only — fast-path counters and wall-clock never appear), plus
 /// the federated scenario's per-region / failure-mode / rollout rows
-/// ([`federation_scenario`]).
+/// ([`federation_scenario`]) and the power-capped DVFS scenario's
+/// energy rows under the `capped/` id prefix
+/// ([`power_capped_scenario`]).
 pub fn serve_suite(opts: &BenchOptions) -> BenchArtifact {
     let m = serve_scenario(opts);
     let mut art = BenchArtifact::new("serve", meta(SERVE_SUITE_SEED, opts));
     art.push_source(&m);
     art.push_source(&federation_scenario(opts));
+    let capped = power_capped_scenario(opts);
+    art.push_source(&PrefixSource { prefix: "capped", inner: &capped });
     art
 }

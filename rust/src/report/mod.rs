@@ -231,11 +231,19 @@ pub struct E2eCell {
     pub cycles: u64,
     /// Total MACs of one inference.
     pub macs: u64,
+    /// Simulated energy of one inference [pJ] at the nominal operating
+    /// point (energy-model output — analog, not exact).
+    pub energy_pj: f64,
 }
 
 impl E2eCell {
     pub fn macs_per_cycle(&self) -> f64 {
         self.macs as f64 / self.cycles.max(1) as f64
+    }
+
+    /// End-to-end efficiency: `2·MACs / energy` [TOPS/W].
+    pub fn tops_per_watt(&self) -> f64 {
+        if self.energy_pj > 0.0 { 2.0 * self.macs as f64 / self.energy_pj } else { 0.0 }
     }
 }
 
@@ -252,8 +260,8 @@ pub fn table4_cells(quick: bool) -> Vec<E2eCell> {
     for model in crate::models::MODEL_NAMES {
         let net = crate::models::by_name(model, hw).expect("registry model");
         for isa in TABLE4_ISAS {
-            let (cycles, macs) = workloads::e2e_stats(isa, &net);
-            out.push(E2eCell { model, isa, cycles, macs });
+            let (cycles, macs, energy_pj) = workloads::e2e_stats(isa, &net);
+            out.push(E2eCell { model, isa, cycles, macs, energy_pj });
         }
     }
     out

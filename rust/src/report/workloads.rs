@@ -147,22 +147,25 @@ pub fn conv_fig7_stats_fid(isa: IsaVariant, prec: Precision, fid: CoreFidelity) 
 }
 
 /// Deploy + run a network end-to-end, returning the total simulated
-/// `(cycles, MACs)` of one inference — the raw Table IV measurement
-/// shared by the rendered table and the `e2e` benchmark artifact.
-pub fn e2e_stats(isa: IsaVariant, net: &Network) -> (u64, u64) {
+/// `(cycles, MACs, energy [pJ])` of one inference — the raw Table IV
+/// measurement shared by the rendered table and the `e2e` benchmark
+/// artifact. Energy is billed at the nominal operating point
+/// ([`crate::power::OperatingPoint::nominal`]).
+pub fn e2e_stats(isa: IsaVariant, net: &Network) -> (u64, u64, f64) {
     let dep = deploy(net, isa, MemBudget::default());
     let mut coord = Coordinator::new(crate::CLUSTER_CORES);
     coord.memoize_tiles = true;
     let mut rng = Prng::new(0xE2E);
     let input = QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng);
     let res = coord.run(&dep, &input);
-    (res.total_cycles(), res.total_macs())
+    let energy_pj = res.energy_pj(isa, &crate::power::EnergyModel::default());
+    (res.total_cycles(), res.total_macs(), energy_pj)
 }
 
 /// Deploy + run a network end-to-end, returning cluster MAC/cycle
 /// (Table IV's metric).
 pub fn e2e_macs_per_cycle(isa: IsaVariant, net: &Network) -> f64 {
-    let (cycles, macs) = e2e_stats(isa, net);
+    let (cycles, macs, _) = e2e_stats(isa, net);
     macs as f64 / cycles.max(1) as f64
 }
 

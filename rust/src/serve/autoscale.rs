@@ -100,13 +100,22 @@ impl Autoscaler {
     /// [`Shard::wake`]/[`Shard::park`] and returns the action taken, if
     /// any. Runs on the engine thread between dispatch rounds — never
     /// concurrently with shard execution.
+    ///
+    /// `max_active` is the power-cap clamp: under a fleet power cap the
+    /// engine passes how many shards the cap can power at the lowest
+    /// operating point, and the scaler never wakes beyond it (waking a
+    /// shard the dispatcher could never feed would only burn leakage).
+    /// It clamps the ceiling, not the floor — dispatch-time admission is
+    /// what actually enforces the cap.
     pub fn step(
         &mut self,
         now: u64,
         queue_len: usize,
         shards: &mut [Shard],
+        max_active: Option<usize>,
     ) -> Option<ScaleAction> {
-        let max = self.cfg.max_shards.min(shards.len());
+        let max =
+            self.cfg.max_shards.min(shards.len()).min(max_active.unwrap_or(usize::MAX)).max(1);
         let min = self.cfg.min_shards.min(max);
         let active = shards.iter().filter(|s| s.active).count();
 
@@ -212,13 +221,13 @@ mod tests {
         let mut shards = fleet(4, 1);
         let mut a = Autoscaler::new(AutoscaleConfig::range(1, 4));
         // 3 queued requests at 1 request/shard => target 3 active
-        assert_eq!(a.step(0, 3, &mut shards), Some(ScaleAction::Up(2)));
+        assert_eq!(a.step(0, 3, &mut shards, None), Some(ScaleAction::Up(2)));
         assert_eq!(active_ids(&shards), vec![0, 1, 2]);
         assert_eq!(a.ups, 2);
         // already at target: no action
-        assert_eq!(a.step(10, 3, &mut shards), None);
+        assert_eq!(a.step(10, 3, &mut shards, None), None);
         // deeper backlog saturates at max
-        assert_eq!(a.step(20, 100, &mut shards), Some(ScaleAction::Up(1)));
+        assert_eq!(a.step(20, 100, &mut shards, None), Some(ScaleAction::Up(1)));
         assert_eq!(active_ids(&shards), vec![0, 1, 2, 3]);
     }
 
@@ -230,16 +239,16 @@ mod tests {
         cfg.cooldown_cycles = 1000;
         let mut a = Autoscaler::new(cfg);
         // not yet idle long enough
-        assert_eq!(a.step(50, 0, &mut shards), None);
+        assert_eq!(a.step(50, 0, &mut shards, None), None);
         // highest-index idle shard parks first
-        assert_eq!(a.step(200, 0, &mut shards), Some(ScaleAction::Down));
+        assert_eq!(a.step(200, 0, &mut shards, None), Some(ScaleAction::Down));
         assert_eq!(active_ids(&shards), vec![0, 1]);
         // cooldown blocks the next park
-        assert_eq!(a.step(300, 0, &mut shards), None);
-        assert_eq!(a.step(1300, 0, &mut shards), Some(ScaleAction::Down));
+        assert_eq!(a.step(300, 0, &mut shards, None), None);
+        assert_eq!(a.step(1300, 0, &mut shards, None), Some(ScaleAction::Down));
         assert_eq!(active_ids(&shards), vec![0]);
         // never below min
-        assert_eq!(a.step(99_999, 0, &mut shards), None);
+        assert_eq!(a.step(99_999, 0, &mut shards, None), None);
         assert_eq!((a.ups, a.downs), (0, 2));
     }
 
@@ -261,12 +270,12 @@ mod tests {
         shards[1].fail(10_000);
         let mut a = Autoscaler::new(AutoscaleConfig::range(1, 3));
         // deep backlog: only the healthy parked shard wakes
-        assert_eq!(a.step(0, 100, &mut shards), Some(ScaleAction::Up(1)));
+        assert_eq!(a.step(0, 100, &mut shards, None), Some(ScaleAction::Up(1)));
         assert_eq!(active_ids(&shards), vec![0, 2]);
         // after recovery the shard is a wake candidate again
         shards[1].recover();
         shards[1].park();
-        assert_eq!(a.step(11_000, 100, &mut shards), Some(ScaleAction::Up(1)));
+        assert_eq!(a.step(11_000, 100, &mut shards, None), Some(ScaleAction::Up(1)));
         assert_eq!(active_ids(&shards), vec![0, 1, 2]);
     }
 
@@ -280,7 +289,28 @@ mod tests {
         let mut a = Autoscaler::new(cfg);
         // shard 1 is busy (idle_cycles == 0); shard 0 is idle => shard 0
         // parks even though higher-index shards are preferred victims
-        assert_eq!(a.step(500_000, 0, &mut shards), Some(ScaleAction::Down));
+        assert_eq!(a.step(500_000, 0, &mut shards, None), Some(ScaleAction::Down));
         assert_eq!(active_ids(&shards), vec![1]);
+    }
+
+    /// A fleet power cap clamps scale-up: the engine passes how many
+    /// shards the cap can power at the lowest operating point, and the
+    /// scaler never wakes beyond it — but a raised cap frees the rest.
+    #[test]
+    fn power_cap_clamps_scale_up() {
+        let mut shards = fleet(4, 1);
+        let mut a = Autoscaler::new(AutoscaleConfig::range(1, 4));
+        // deep backlog, but the cap only powers 2 shards
+        assert_eq!(a.step(0, 100, &mut shards, Some(2)), Some(ScaleAction::Up(1)));
+        assert_eq!(active_ids(&shards), vec![0, 1]);
+        assert_eq!(a.step(10, 100, &mut shards, Some(2)), None);
+        // raising the cap frees the rest of the pool
+        assert_eq!(a.step(20, 100, &mut shards, None), Some(ScaleAction::Up(2)));
+        assert_eq!(active_ids(&shards), vec![0, 1, 2, 3]);
+        // a cap below the floor still keeps one shard serving
+        let mut one = fleet(2, 1);
+        let mut b = Autoscaler::new(AutoscaleConfig::range(1, 2));
+        assert_eq!(b.step(0, 100, &mut one, Some(0)), None);
+        assert_eq!(active_ids(&one), vec![0]);
     }
 }

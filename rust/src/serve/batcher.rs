@@ -23,11 +23,19 @@ pub struct BatchPolicy {
     /// Prefer a lead request matching the shard's resident model (within
     /// the top priority level), avoiding a weight switch.
     pub prefer_resident: bool,
+    /// DVFS-tier filter: when set, the coalesced tail only admits
+    /// requests whose priority maps to the same tier as the lead
+    /// (`tier_of(priority)`). A batch runs at one operating point, so
+    /// under the `slo` DVFS policy this keeps a boost-tier batch from
+    /// dragging interactive requests down to a best-effort corner (or
+    /// burning boost energy on batch-tier fillers). `None` = coalesce
+    /// across tiers (every fixed-point policy).
+    pub tier_of: Option<fn(u8) -> usize>,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, prefer_resident: true }
+        BatchPolicy { max_batch: 8, prefer_resident: true, tier_of: None }
     }
 }
 
@@ -46,9 +54,18 @@ pub fn next_batch(
     assert!(policy.max_batch >= 1);
     let lead = queue.pop_lead(if policy.prefer_resident { resident } else { None })?;
     let model = lead.model;
+    let lead_priority = lead.priority;
     let mut batch = vec![lead];
     if policy.max_batch > 1 {
-        batch.extend(queue.drain_model(model, policy.max_batch - 1));
+        match policy.tier_of {
+            Some(tier) => {
+                let want = tier(lead_priority);
+                batch.extend(queue.drain_model_where(model, policy.max_batch - 1, |r| {
+                    tier(r.priority) == want
+                }));
+            }
+            None => batch.extend(queue.drain_model(model, policy.max_batch - 1)),
+        }
     }
     Some(batch)
 }
@@ -77,7 +94,7 @@ mod tests {
         for (id, m) in [(0, 0), (1, 1), (2, 0), (3, 0), (4, 0)] {
             q.push(req(id, m, 0));
         }
-        let policy = BatchPolicy { max_batch: 3, prefer_resident: false };
+        let policy = BatchPolicy { max_batch: 3, prefer_resident: false, ..BatchPolicy::default() };
         let batch = next_batch(&mut q, None, &policy).unwrap();
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 3]);
         assert!(batch.iter().all(|r| r.model == 0));
@@ -89,7 +106,7 @@ mod tests {
         let mut q = RequestQueue::new(16);
         q.push(req(0, 0, 0));
         q.push(req(1, 1, 0));
-        let policy = BatchPolicy { max_batch: 4, prefer_resident: true };
+        let policy = BatchPolicy { max_batch: 4, prefer_resident: true, ..BatchPolicy::default() };
         let batch = next_batch(&mut q, Some(1), &policy).unwrap();
         assert_eq!(batch[0].model, 1);
     }
@@ -99,7 +116,7 @@ mod tests {
         let mut q = RequestQueue::new(16);
         q.push(req(0, 0, 0));
         q.push(req(1, 0, 0));
-        let policy = BatchPolicy { max_batch: 1, prefer_resident: false };
+        let policy = BatchPolicy { max_batch: 1, prefer_resident: false, ..BatchPolicy::default() };
         assert_eq!(next_batch(&mut q, None, &policy).unwrap().len(), 1);
         assert_eq!(q.len(), 1);
     }
@@ -114,9 +131,29 @@ mod tests {
         q.push(a);
         q.push(b);
         q.push(req(2, 0, 0)); // best-effort goes last
-        let policy = BatchPolicy { max_batch: 4, prefer_resident: false };
+        let policy = BatchPolicy { max_batch: 4, prefer_resident: false, ..BatchPolicy::default() };
         let batch = next_batch(&mut q, None, &policy).unwrap();
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 0, 2]);
+    }
+
+    /// With a DVFS-tier filter installed, same-model requests of a
+    /// different tier stay queued (one batch = one operating point) and
+    /// form their own batch next round — nothing is dropped.
+    #[test]
+    fn tier_filter_keeps_batches_single_operating_point() {
+        fn tier(priority: u8) -> usize {
+            priority.min(2) as usize
+        }
+        let mut q = RequestQueue::new(16);
+        q.push(req(0, 0, 2));
+        q.push(req(1, 0, 2));
+        q.push(req(2, 0, 0)); // same model, lower tier
+        let policy = BatchPolicy { max_batch: 4, prefer_resident: false, tier_of: Some(tier) };
+        let batch = next_batch(&mut q, None, &policy).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let rest = next_batch(&mut q, None, &policy).unwrap();
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert!(q.is_empty());
     }
 
     /// Property: over random queue contents, batches formed until the
@@ -147,7 +184,11 @@ mod tests {
                     r.deadline = dl;
                     q.push(r);
                 }
-                let policy = BatchPolicy { max_batch: *max_batch, prefer_resident: true };
+                let policy = BatchPolicy {
+                    max_batch: *max_batch,
+                    prefer_resident: true,
+                    ..BatchPolicy::default()
+                };
                 let mut seen = vec![false; reqs.len()];
                 let mut resident = None;
                 while let Some(batch) = next_batch(&mut q, resident, &policy) {

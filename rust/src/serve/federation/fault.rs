@@ -8,9 +8,10 @@
 //! from the CLI spec mini-language ([`FaultPlan::parse`]):
 //!
 //! ```text
-//! fail@CYCLE:rR.sS+DUR     shard S of region R fails at CYCLE for DUR cycles
-//! slow@CYCLE:rR.sSxF+DUR   shard S of region R runs F× slower for DUR cycles
-//! auto:K                   K seeded events over the plan span
+//! fail@CYCLE:rR.sS+DUR       shard S of region R fails at CYCLE for DUR cycles
+//! slow@CYCLE:rR.sSxF+DUR     shard S of region R runs F× slower for DUR cycles
+//! throttle@CYCLE:rR.sS+DUR   shard S of region R is thermally throttled for DUR
+//! auto:K                     K seeded events over the plan span
 //! ```
 //!
 //! (comma-separated, e.g. `fail@1000:r0.s1+5000,slow@2000:r1.s0x3+8000`).
@@ -35,6 +36,11 @@ pub enum FaultKind {
     /// slower (timing overlay only — outputs, MACs and energy are
     /// untouched; see [`crate::serve::Shard::slow`]).
     Straggler { region: usize, shard: usize, factor: u64, slow_cycles: u64 },
+    /// The shard hits its thermal limit: batches starting during the
+    /// window are clamped to the efficiency operating point regardless
+    /// of DVFS policy (slower but cooler; see
+    /// [`crate::serve::Engine::throttle_shard`]).
+    ThermalThrottle { region: usize, shard: usize, hot_cycles: u64 },
 }
 
 /// One planned fault at an absolute simulated cycle.
@@ -63,6 +69,7 @@ pub enum FaultAction {
     Fail { until: u64 },
     Recover,
     Slow { factor: u64, until: u64 },
+    Throttle { until: u64 },
 }
 
 /// A deterministic fault-injection schedule.
@@ -86,8 +93,9 @@ impl FaultPlan {
         self.events.len()
     }
 
-    /// Seeded plan: `n` events over `[span/8, 7*span/8)`, alternating
-    /// failures and stragglers by coin flip. Same seed, same plan.
+    /// Seeded plan: `n` events over `[span/8, 7*span/8)`, mixing
+    /// failures, stragglers and thermal throttles by a three-way draw.
+    /// Same seed, same plan.
     pub fn generate(seed: u64, regions: usize, shards: usize, n: usize, span: u64) -> Self {
         assert!(regions >= 1 && shards >= 1, "need at least one region and shard");
         let span = span.max(8);
@@ -98,11 +106,13 @@ impl FaultPlan {
             let region = rng.below(regions as u64) as usize;
             let shard = rng.below(shards as u64) as usize;
             let window = span / 8 + rng.below((span / 4).max(1));
-            let kind = if rng.chance(0.5) {
-                FaultKind::ShardFail { region, shard, down_cycles: window }
-            } else {
-                let factor = 2 + rng.below(3);
-                FaultKind::Straggler { region, shard, factor, slow_cycles: window }
+            let kind = match rng.below(3) {
+                0 => FaultKind::ShardFail { region, shard, down_cycles: window },
+                1 => {
+                    let factor = 2 + rng.below(3);
+                    FaultKind::Straggler { region, shard, factor, slow_cycles: window }
+                }
+                _ => FaultKind::ThermalThrottle { region, shard, hot_cycles: window },
             };
             events.push(FaultEvent { at, kind });
         }
@@ -127,13 +137,16 @@ impl FaultPlan {
                 plan.events.extend(FaultPlan::generate(seed, regions, shards, n, span).events);
                 continue;
             }
-            let (is_fail, rest) = if let Some(r) = token.strip_prefix("fail@") {
-                (true, r)
+            let (tag, rest) = if let Some(r) = token.strip_prefix("fail@") {
+                ('f', r)
             } else if let Some(r) = token.strip_prefix("slow@") {
-                (false, r)
+                ('s', r)
+            } else if let Some(r) = token.strip_prefix("throttle@") {
+                ('t', r)
             } else {
                 return Err(format!(
-                    "bad fault token `{token}` (want fail@C:rR.sS+D, slow@C:rR.sSxF+D, or auto:K)"
+                    "bad fault token `{token}` (want fail@C:rR.sS+D, slow@C:rR.sSxF+D, \
+                     throttle@C:rR.sS+D, or auto:K)"
                 ));
             };
             let (at_s, loc) = rest
@@ -149,21 +162,25 @@ impl FaultPlan {
                 .and_then(|l| l.split_once(".s"))
                 .ok_or_else(|| format!("bad location in `{token}` (want rR.sS)"))?;
             let region: usize = rs.parse().map_err(|_| format!("bad region in `{token}`"))?;
-            let kind = if is_fail {
-                let shard: usize =
-                    rest.parse().map_err(|_| format!("bad shard in `{token}`"))?;
-                FaultKind::ShardFail { region, shard, down_cycles: dur }
-            } else {
+            let kind = if tag == 's' {
                 let (ss, fs) = rest
                     .split_once('x')
                     .ok_or_else(|| format!("missing `xF` in `{token}`"))?;
                 let shard: usize = ss.parse().map_err(|_| format!("bad shard in `{token}`"))?;
                 let factor: u64 = fs.parse().map_err(|_| format!("bad factor in `{token}`"))?;
                 FaultKind::Straggler { region, shard, factor, slow_cycles: dur }
+            } else {
+                let shard: usize = rest.parse().map_err(|_| format!("bad shard in `{token}`"))?;
+                if tag == 'f' {
+                    FaultKind::ShardFail { region, shard, down_cycles: dur }
+                } else {
+                    FaultKind::ThermalThrottle { region, shard, hot_cycles: dur }
+                }
             };
             let (r, s) = match kind {
                 FaultKind::ShardFail { region, shard, .. }
-                | FaultKind::Straggler { region, shard, .. } => (region, shard),
+                | FaultKind::Straggler { region, shard, .. }
+                | FaultKind::ThermalThrottle { region, shard, .. } => (region, shard),
             };
             if r >= regions || s >= shards {
                 return Err(format!(
@@ -204,6 +221,16 @@ impl FaultPlan {
                         },
                     });
                 }
+                FaultKind::ThermalThrottle { region, shard, hot_cycles } => {
+                    out.push(FaultRecord {
+                        at: e.at,
+                        region,
+                        shard,
+                        action: FaultAction::Throttle {
+                            until: e.at.saturating_add(hot_cycles),
+                        },
+                    });
+                }
             }
         }
         out.sort_by_key(|r| r.at);
@@ -231,15 +258,24 @@ mod tests {
                     assert!(region < 2 && shard < 4 && slow_cycles > 0);
                     assert!((2..5).contains(&factor));
                 }
+                FaultKind::ThermalThrottle { region, shard, hot_cycles } => {
+                    assert!(region < 2 && shard < 4 && hot_cycles > 0);
+                }
             }
         }
         assert_ne!(a, FaultPlan::generate(8, 2, 4, 16, 1_000_000), "seed must matter");
     }
 
     #[test]
-    fn parse_round_trips_both_kinds_and_auto() {
-        let plan =
-            FaultPlan::parse("fail@1000:r0.s1+5000, slow@2000:r1.s0x3+8000", 1, 2, 2, 100).unwrap();
+    fn parse_round_trips_all_kinds_and_auto() {
+        let plan = FaultPlan::parse(
+            "fail@1000:r0.s1+5000, slow@2000:r1.s0x3+8000, throttle@3000:r1.s1+4000",
+            1,
+            2,
+            2,
+            100,
+        )
+        .unwrap();
         assert_eq!(
             plan.events,
             vec![
@@ -256,6 +292,10 @@ mod tests {
                         slow_cycles: 8000,
                     },
                 },
+                FaultEvent {
+                    at: 3000,
+                    kind: FaultKind::ThermalThrottle { region: 1, shard: 1, hot_cycles: 4000 },
+                },
             ]
         );
         let auto = FaultPlan::parse("auto:5", 42, 2, 4, 1_000_000).unwrap();
@@ -269,8 +309,10 @@ mod tests {
             "fail@x:r0.s0+10",
             "fail@5:r0.s0",
             "slow@5:r0.s0+10", // missing xF
-            "fail@5:r9.s0+10", // region out of range
-            "fail@5:r0.s9+10", // shard out of range
+            "fail@5:r9.s0+10",     // region out of range
+            "fail@5:r0.s9+10",     // shard out of range
+            "throttle@5:r0.s9+10", // shard out of range
+            "throttle@5:r0.s0x2+10", // throttle takes no factor
         ] {
             assert!(FaultPlan::parse(bad, 0, 2, 2, 100).is_err(), "`{bad}` must not parse");
         }

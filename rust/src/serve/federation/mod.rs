@@ -8,7 +8,8 @@
 //!
 //! 1. apply fault-timeline events due at the clock
 //!    ([`FaultPlan::timeline`] → [`Engine::fail_shard`] /
-//!    [`Engine::recover_shard`] / [`Engine::slow_shard`]);
+//!    [`Engine::recover_shard`] / [`Engine::slow_shard`] /
+//!    [`Engine::throttle_shard`]);
 //! 2. step the rollout controller ([`rollout`]): start draining the
 //!    canary at its cycle, switch it to warm tuned caches the moment it
 //!    is idle;
@@ -87,6 +88,7 @@ pub struct Federation {
     fault_log: Vec<FaultRecord>,
     failovers: u64,
     straggler_windows: u64,
+    throttle_windows: u64,
     /// Global arrival counter — the router's hash key, so routing is
     /// independent of per-region request ids.
     arrivals: u64,
@@ -127,6 +129,7 @@ impl Federation {
             fault_log: Vec::new(),
             failovers: 0,
             straggler_windows: 0,
+            throttle_windows: 0,
             arrivals: 0,
             routed,
             phase: RolloutPhase::Pending,
@@ -243,6 +246,10 @@ impl Federation {
             FaultAction::Slow { factor, until } => {
                 self.regions[rec.region].slow_shard(rec.shard, factor, until);
                 self.straggler_windows += 1;
+            }
+            FaultAction::Throttle { until } => {
+                self.regions[rec.region].throttle_shard(rec.shard, until);
+                self.throttle_windows += 1;
             }
         }
         self.fault_log.push(rec);
@@ -362,6 +369,7 @@ impl Federation {
             faults_injected: self.cfg.faults.len(),
             failovers: self.failovers,
             straggler_windows: self.straggler_windows,
+            throttle_windows: self.throttle_windows,
             requeued: self.regions.iter().map(|e| e.queue.requeued).sum(),
             fault_log: self.fault_log.clone(),
             rollout,
@@ -389,6 +397,7 @@ impl Federation {
                 shards: e.shards().len(),
                 plan_cache: (e.cache.hits, e.cache.misses),
                 tune_cache: (e.tuning().hits, e.tuning().misses),
+                dvfs: e.dvfs_log(),
             })
             .collect();
         let mut faults: Vec<ControlInstant> = Vec::new();
@@ -414,6 +423,18 @@ impl Federation {
                     faults.push(ControlInstant {
                         at: until,
                         name: "straggler_end",
+                        args: vec![("region", r), ("shard", s)],
+                    });
+                }
+                FaultAction::Throttle { until } => {
+                    faults.push(ControlInstant {
+                        at: rec.at,
+                        name: "throttle_start",
+                        args: vec![("region", r), ("shard", s), ("until", until)],
+                    });
+                    faults.push(ControlInstant {
+                        at: until,
+                        name: "throttle_end",
                         args: vec![("region", r), ("shard", s)],
                     });
                 }
@@ -467,6 +488,8 @@ pub struct FederationMetrics {
     pub failovers: u64,
     /// Straggler windows applied.
     pub straggler_windows: u64,
+    /// Thermal-throttle windows applied.
+    pub throttle_windows: u64,
     /// Requests retracted from failed shards and re-queued, fleet-wide.
     pub requeued: u64,
     /// Events applied, in application order.
@@ -479,6 +502,39 @@ impl FederationMetrics {
     /// Requests served fleet-wide.
     pub fn total_served(&self) -> usize {
         self.regions.iter().map(|r| r.served).sum()
+    }
+
+    /// Total simulated energy billed fleet-wide [pJ].
+    pub fn total_energy_pj(&self) -> f64 {
+        self.regions.iter().map(|r| r.total_energy_pj).sum()
+    }
+
+    /// Fleet average power [mW]: total energy over the longest region
+    /// span (regions run concurrently on one simulated clock, so the
+    /// longest span is the fleet's wall-clock window).
+    pub fn fleet_avg_power_mw(&self) -> f64 {
+        let span = self.regions.iter().map(|r| r.span_cycles).max().unwrap_or(0);
+        let span_ps = span as f64 * crate::power::NOMINAL_PERIOD_PS as f64;
+        if span_ps > 0.0 { self.total_energy_pj() / span_ps * 1e3 } else { 0.0 }
+    }
+
+    /// Fleet efficiency over the run: `2·MACs / total energy` [TOPS/W].
+    pub fn fleet_tops_per_watt(&self) -> f64 {
+        let e = self.total_energy_pj();
+        let macs: u64 = self.regions.iter().map(|r| r.total_macs).sum();
+        if e > 0.0 { 2.0 * macs as f64 / e } else { 0.0 }
+    }
+
+    /// Fleet power cap [mW]: the sum of per-region caps (`serve-bench
+    /// --power-cap` splits the fleet cap evenly across regions).
+    pub fn power_cap_mw(&self) -> Option<f64> {
+        let caps: Vec<f64> = self.regions.iter().filter_map(|r| r.power_cap_mw).collect();
+        if caps.is_empty() { None } else { Some(caps.iter().sum()) }
+    }
+
+    /// Operating-point transitions fleet-wide.
+    pub fn dvfs_transitions(&self) -> u64 {
+        self.regions.iter().map(|r| r.dvfs_transitions).sum()
     }
 
     /// Human-readable federation report (regions, routing, faults,
@@ -496,16 +552,32 @@ impl FederationMetrics {
             out.push_str(&format!(" r{r}={n}"));
         }
         out.push('\n');
+        if self.total_energy_pj() > 0.0 {
+            let cap = self.power_cap_mw().map_or(String::new(), |c| format!(" (cap {c:.2} mW)"));
+            out.push_str(&format!(
+                "energy: fleet avg power {:.2} mW{} | {:.2} TOPS/W | {} DVFS transitions\n",
+                self.fleet_avg_power_mw(),
+                cap,
+                self.fleet_tops_per_watt(),
+                self.dvfs_transitions(),
+            ));
+        }
         if self.faults_injected > 0 {
             out.push_str(&format!(
-                "faults: {} injected ({} failovers, {} straggler windows); {} requests re-queued\n",
-                self.faults_injected, self.failovers, self.straggler_windows, self.requeued,
+                "faults: {} injected ({} failovers, {} straggler windows, {} throttle windows); \
+                 {} requests re-queued\n",
+                self.faults_injected,
+                self.failovers,
+                self.straggler_windows,
+                self.throttle_windows,
+                self.requeued,
             ));
             for rec in &self.fault_log {
                 let what = match rec.action {
                     FaultAction::Fail { until } => format!("fail until {until}"),
                     FaultAction::Recover => "recover".to_string(),
                     FaultAction::Slow { factor, until } => format!("slow x{factor} until {until}"),
+                    FaultAction::Throttle { until } => format!("throttle until {until}"),
                 };
                 out.push_str(&format!("  @{} r{}.s{} {}\n", rec.at, rec.region, rec.shard, what));
             }
@@ -553,7 +625,29 @@ impl MetricSource for FederationMetrics {
             self.straggler_windows as f64,
             "events",
         ));
+        rows.push(MetricRow::exact(
+            "serve/faults/throttle_windows",
+            self.throttle_windows as f64,
+            "events",
+        ));
         rows.push(MetricRow::exact("serve/faults/requeued", self.requeued as f64, "requests"));
+        if self.total_energy_pj() > 0.0 {
+            rows.push(MetricRow::analog(
+                "serve/federation/avg_power_mw",
+                self.fleet_avg_power_mw(),
+                "mW",
+            ));
+            rows.push(MetricRow::analog(
+                "serve/federation/tops_per_watt",
+                self.fleet_tops_per_watt(),
+                "TOPS/W",
+            ));
+            rows.push(MetricRow::exact(
+                "serve/federation/dvfs_transitions",
+                self.dvfs_transitions() as f64,
+                "transitions",
+            ));
+        }
         if let Some(ro) = &self.rollout {
             rows.push(MetricRow::exact(
                 "serve/rollout/models_migrated",
@@ -720,6 +814,44 @@ mod tests {
             v
         };
         assert_eq!(sorted(outs_h), sorted(outs_s));
+    }
+
+    #[test]
+    fn thermal_throttle_clamps_the_shard_to_the_efficiency_point() {
+        use crate::power::{DvfsPolicy, OP_BOOST, OP_EFFICIENCY};
+        let run = |faults: FaultPlan| {
+            let engine = ServeConfig { shards: 1, dvfs: DvfsPolicy::RaceToIdle, ..small_engine() };
+            let cfg = FederationConfig {
+                regions: 1,
+                engine,
+                policy: RouterPolicy::ConsistentHash,
+                faults,
+                rollout: None,
+            };
+            let mut fed = Federation::new(cfg);
+            fed.register(tiny("thr-a", 12));
+            let m = fed.run_trace(mixed_trace(1, 6, 50, 13));
+            (fed, m)
+        };
+        let plan = FaultPlan::parse("throttle@0:r0.s0+100000000", 0, 1, 1, 0).unwrap();
+        let (hot_fed, hot) = run(plan);
+        assert_eq!(hot.total_served(), 6);
+        assert_eq!((hot.faults_injected, hot.throttle_windows), (1, 1));
+        assert!(
+            hot_fed.region(0).completions().iter().all(|c| c.op == OP_EFFICIENCY as u8),
+            "throttled shard must run every batch at the efficiency point"
+        );
+        assert!(hot.render().contains("throttle until"), "{}", hot.render());
+        let names: Vec<String> =
+            hot_fed.build_trace().events().iter().map(|e| e.name.clone()).collect();
+        assert!(names.iter().any(|n| n == "throttle_start"));
+        assert!(names.iter().any(|n| n == "throttle_end"));
+        // Control: the same run without the fault boosts (race-to-idle),
+        // and the throttled run costs less energy for identical outputs.
+        let (cool_fed, cool) = run(FaultPlan::none());
+        assert!(cool_fed.region(0).completions().iter().all(|c| c.op == OP_BOOST as u8));
+        assert!(hot.total_energy_pj() < cool.total_energy_pj());
+        assert_eq!(hot.total_served(), cool.total_served());
     }
 
     #[test]

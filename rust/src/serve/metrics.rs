@@ -24,13 +24,16 @@ use super::request::{Completion, ShedEvent};
 use super::shard::Shard;
 use super::workload::SloClass;
 
-/// Nearest-rank percentile over an ascending-sorted slice.
+/// Nearest-rank percentile over an ascending-sorted slice: the value at
+/// 1-based rank `ceil(q·N)`, clamped to `[1, N]`. (An earlier version
+/// indexed `round((N-1)·q)`, which reports the 51st of 100 samples as
+/// the median and understates tail quantiles on small samples.)
 pub fn percentile(sorted: &[u64], q: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
     }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 /// Aggregates for one registered model.
@@ -119,6 +122,10 @@ pub(crate) struct CollectInputs<'a> {
     pub occupancy: &'a [(u64, usize)],
     pub scaler: Option<&'a Autoscaler>,
     pub tuned: TunedSummary,
+    /// Operating-point changes logged by the engine's DVFS governor.
+    pub dvfs_transitions: u64,
+    /// The fleet power cap the engine scheduled under, if any [mW].
+    pub power_cap_mw: Option<f64>,
 }
 
 /// The fleet-level report of one serving run.
@@ -179,6 +186,29 @@ pub struct FleetMetrics {
     /// Autotune tuned-vs-default measured cycle deltas (zeroed without
     /// `ServeConfig::tuned`).
     pub tuned: TunedSummary,
+    /// Σ simulated energy of every completion [pJ] (activity × the
+    /// calibrated per-class energies, billed at each batch's operating
+    /// point).
+    pub total_energy_pj: f64,
+    /// Σ MACs over every completion (the TOPS/W numerator).
+    pub total_macs: u64,
+    /// Mean simulated energy per served request [µJ].
+    pub energy_uj_per_req: f64,
+    /// Fleet average power over the run window [mW]: total energy over
+    /// first arrival → last completion, with the span converted to time
+    /// at the nominal fleet tick ([`crate::power::NOMINAL_PERIOD_PS`]).
+    /// Busy-window power is what the cap governs; this time-average is
+    /// ≤ it, so a capped run always reports `fleet_avg_power_mw ≤ cap`.
+    pub fleet_avg_power_mw: f64,
+    /// Fleet efficiency over the run: `2·MACs / total energy` — the
+    /// paper's headline TOPS/W metric, measured end-to-end over the
+    /// serving window instead of a single kernel.
+    pub fleet_tops_per_watt: f64,
+    /// Operating-point changes the DVFS governor made (0 for a fixed
+    /// operating point).
+    pub dvfs_transitions: u64,
+    /// The fleet power cap the engine scheduled under, if any [mW].
+    pub power_cap_mw: Option<f64>,
     pub rows: Vec<ModelRow>,
     /// Per-SLO-class latency and violation breakdown (single "default"
     /// row when no class table was installed).
@@ -225,6 +255,8 @@ impl FleetMetrics {
             occupancy,
             scaler,
             tuned,
+            dvfs_transitions,
+            power_cap_mw,
         } = inp;
         let served = completions.len();
         let mut latencies: Vec<u64> = completions.iter().map(|c| c.latency_cycles()).collect();
@@ -237,6 +269,13 @@ impl FleetMetrics {
         let total_busy: u64 = shards.iter().map(|s| s.busy_cycles).sum();
         let batches: u64 = shards.iter().map(|s| s.batches).sum();
         let span_secs = span_cycles as f64 / (F_TYP_MHZ * 1e6);
+        let total_energy_pj: f64 = completions.iter().map(|c| c.energy_pj).sum();
+        // 1 pJ/ps = 1 W, so mW = pJ / (ticks · ps/tick) · 1e3.
+        let span_ps = span_cycles as f64 * crate::power::NOMINAL_PERIOD_PS as f64;
+        let fleet_avg_power_mw = if span_ps > 0.0 { total_energy_pj / span_ps * 1e3 } else { 0.0 };
+        // TOPS/W = ops / (J · 1e12) = 2·MACs / (pJ · 1e-12 · 1e12).
+        let fleet_tops_per_watt =
+            if total_energy_pj > 0.0 { 2.0 * total_macs as f64 / total_energy_pj } else { 0.0 };
         let deadline_misses = completions.iter().filter(|c| c.missed_deadline()).count() as u64;
         let deadlined_served = completions.iter().filter(|c| c.deadline.is_some()).count();
         let (mut fp_pure, mut fp_func, mut fp_miss) = (0u64, 0u64, 0u64);
@@ -347,6 +386,13 @@ impl FleetMetrics {
             fastpath_func: fp_func,
             fastpath_miss: fp_miss,
             tuned,
+            total_energy_pj,
+            total_macs,
+            energy_uj_per_req: total_energy_pj * 1e-6 / served.max(1) as f64,
+            fleet_avg_power_mw,
+            fleet_tops_per_watt,
+            dvfs_transitions,
+            power_cap_mw,
             rows,
             class_rows,
         }
@@ -416,6 +462,16 @@ impl FleetMetrics {
             f(self.shard_utilization * 100.0, 0),
             self.peak_queue_depth,
         ));
+        if self.total_energy_pj > 0.0 {
+            out.push_str(&format!(
+                "energy: {} uJ/req | fleet avg power {} mW{} | {} TOPS/W | {} DVFS transitions\n",
+                f(self.energy_uj_per_req, 2),
+                f(self.fleet_avg_power_mw, 2),
+                self.power_cap_mw.map_or(String::new(), |c| format!(" (cap {} mW)", f(c, 1))),
+                f(self.fleet_tops_per_watt, 2),
+                self.dvfs_transitions,
+            ));
+        }
         if self.deadline_misses > 0 || self.shed > 0 {
             out.push_str(&format!(
                 "SLO: {} deadline misses ({}% of deadlined completions), {} shed before simulation\n",
@@ -552,6 +608,14 @@ impl MetricSource for FleetMetrics {
                 self.mean_active_shards(),
                 "shards",
             ),
+            MetricRow::analog("serve/fleet/energy_uj_per_req", self.energy_uj_per_req, "uJ/req"),
+            MetricRow::analog("serve/fleet/avg_power_mw", self.fleet_avg_power_mw, "mW"),
+            MetricRow::analog("serve/fleet/tops_per_watt", self.fleet_tops_per_watt, "TOPS/W"),
+            MetricRow::exact(
+                "serve/fleet/dvfs_transitions",
+                self.dvfs_transitions as f64,
+                "transitions",
+            ),
         ];
         for r in &self.rows {
             let p = format!("serve/model/{}", id_token(&r.name));
@@ -613,15 +677,31 @@ impl MetricSource for FleetMetrics {
 mod tests {
     use super::*;
 
+    /// Regression: true nearest-rank is the value at 1-based rank
+    /// `ceil(q·N)`. The old `round((N-1)·q)` index reported the 51st of
+    /// 100 samples as the median — this test fails on that code.
     #[test]
     fn percentile_nearest_rank() {
         let v: Vec<u64> = (1..=100).collect();
         assert_eq!(percentile(&v, 0.0), 1);
-        assert_eq!(percentile(&v, 0.5), 51); // round(99*0.5)=50 -> v[50]
+        assert_eq!(percentile(&v, 0.5), 50); // ceil(0.5*100) = rank 50, not 51
         assert_eq!(percentile(&v, 0.99), 99);
         assert_eq!(percentile(&v, 1.0), 100);
         assert_eq!(percentile(&[], 0.5), 0);
-        assert_eq!(percentile(&[7], 0.99), 7);
+    }
+
+    /// Nearest-rank degenerate sizes: a singleton answers every
+    /// quantile, and a pair splits at ceil(q·2) = 1 vs 2.
+    #[test]
+    fn percentile_small_samples() {
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&[7], q), 7);
+        }
+        assert_eq!(percentile(&[3, 9], 0.25), 3);
+        assert_eq!(percentile(&[3, 9], 0.5), 3); // ceil(1.0) = rank 1
+        assert_eq!(percentile(&[3, 9], 0.51), 9);
+        assert_eq!(percentile(&[3, 9], 0.99), 9);
+        assert_eq!(percentile(&[3, 9], 1.0), 9);
     }
 
     #[test]

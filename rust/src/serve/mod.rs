@@ -30,14 +30,33 @@
 //!   deadline-miss rates, shed counts, requests/sec, aggregate
 //!   MAC/cycle, energy per request, shard-occupancy timeline.
 //!
+//! # Energy awareness
+//!
+//! Every shard batch runs at a voltage/frequency **operating point**
+//! ([`crate::power::operating_points`]) chosen by the engine's DVFS
+//! governor from [`ServeConfig::dvfs`] (race-to-idle, slow-and-steady,
+//! per-SLO-class, or fixed) and clamped by an optional fleet power cap
+//! ([`ServeConfig::power_cap_mw`]): at dispatch the governor sums a
+//! conservative busy-power bound over the work already in flight and
+//! downgrades the new batch's point — or leaves the shard idle for the
+//! round — until the sum fits under the cap (one busy shard is always
+//! allowed, so a tiny cap degrades to serialized efficiency-point
+//! service instead of deadlock). Shard clocks stay in nominal fleet
+//! ticks ([`crate::power::OperatingPoint::fleet_ticks`]), and energy is
+//! billed at each batch's corner, so `FleetMetrics` can report energy
+//! per request, fleet average power, and fleet TOPS/W.
+//!
 //! # Determinism contract
 //!
 //! Everything the engine reports is a function of the trace alone —
 //! never of the host machine, worker count, or fast-path setting:
 //!
 //! - **Scheduling** (queue pops, shedding, autoscaling, batch formation,
-//!   shard assignment) runs sequentially on the engine thread, in shard
-//!   order, so the decision stream is reproducible by construction.
+//!   shard assignment — and every DVFS/power-cap decision: operating
+//!   points are chosen during sequential batch formation from simulated
+//!   state only, never measured host load) runs sequentially on the
+//!   engine thread, in shard order, so the decision stream is
+//!   reproducible by construction.
 //! - **Execution** of the formed batches is embarrassingly parallel
 //!   (each shard owns its cluster); with `workers != 1` the batches of a
 //!   dispatch round run on a scoped `std::thread` pool. The round's
@@ -88,7 +107,7 @@ use crate::dory::autotune::{self, TuneCache, TuneConfig};
 use crate::dory::deploy::{deploy, deploy_tuned, Deployment};
 use crate::dory::{MemBudget, PlanKey};
 use crate::isa::IsaVariant;
-use crate::power::EnergyModel;
+use crate::power::{operating_points, DvfsPolicy, EnergyModel, OP_BOOST, OP_EFFICIENCY, OP_NOMINAL};
 use crate::qnn::layer::Network;
 use crate::qnn::QTensor;
 use crate::sim::CoreFidelity;
@@ -148,6 +167,18 @@ pub struct ServeConfig {
     /// never fail shards and the clones cost memory. The [`federation`]
     /// layer turns it on.
     pub track_inflight: bool,
+    /// Fleet power cap [mW]: the dispatch-time budget for the sum of
+    /// conservative busy-power bounds
+    /// ([`EnergyModel::busy_power_bound_mw`]) over concurrently busy
+    /// shards. The governor downgrades operating points, then skips
+    /// dispatch, to stay under it; one busy shard is always allowed
+    /// (`serve-bench --power-cap`). `None` = uncapped.
+    pub power_cap_mw: Option<f64>,
+    /// Operating-point selection policy of the DVFS governor
+    /// ([`crate::power::DvfsPolicy`]; `serve-bench --dvfs`). The
+    /// default pins the nominal point, which leaves every cycle number
+    /// exactly as a pre-DVFS fleet reported it.
+    pub dvfs: DvfsPolicy,
     pub isa: IsaVariant,
     pub budget: MemBudget,
 }
@@ -168,6 +199,8 @@ impl Default for ServeConfig {
             autoscale: None,
             tuned: false,
             track_inflight: false,
+            power_cap_mw: None,
+            dvfs: DvfsPolicy::default(),
             isa: IsaVariant::FlexV,
             budget: MemBudget::default(),
         }
@@ -202,6 +235,8 @@ struct Assignment {
     key: PlanKey,
     dep: Arc<Deployment>,
     batch: Vec<Request>,
+    /// Operating-point index the governor chose for this batch.
+    op: u8,
 }
 
 /// One dispatched request awaiting its simulated completion cycle —
@@ -242,7 +277,26 @@ pub struct Engine {
     /// Dispatched-but-not-yet-finished requests (failover retraction
     /// pool); empty unless [`ServeConfig::track_inflight`].
     inflight: Vec<Inflight>,
+    /// Operating point each shard last ran at (transition detection).
+    shard_op: Vec<u8>,
+    /// Busy-power bound [mW] of each shard's last dispatched batch —
+    /// counted against the cap while `busy_until > now`.
+    shard_power: Vec<f64>,
+    /// DVFS transition log: `(cycle, shard, from, to)` operating-point
+    /// indices, in decision order (trace instants + metrics).
+    dvfs_log: Vec<(u64, usize, u8, u8)>,
     next_id: u64,
+}
+
+/// Priority → operating-point tier of the [`DvfsPolicy::Slo`] policy
+/// (must agree with the `Slo` arm of the governor's preferred-point
+/// selection; also the batcher's tier filter under that policy).
+fn slo_tier(priority: u8) -> usize {
+    match priority {
+        0 => OP_EFFICIENCY,
+        1 => OP_NOMINAL,
+        _ => OP_BOOST,
+    }
 }
 
 impl Engine {
@@ -292,6 +346,9 @@ impl Engine {
             occupancy: vec![(0, active)],
             min_exec: Vec::new(),
             inflight: Vec::new(),
+            shard_op: vec![OP_NOMINAL as u8; cfg.shards],
+            shard_power: vec![0.0; cfg.shards],
+            dvfs_log: Vec::new(),
             next_id: 0,
             cfg,
         }
@@ -327,6 +384,13 @@ impl Engine {
     /// decision order (part of the deterministic event stream).
     pub fn shed_events(&self) -> &[ShedEvent] {
         &self.shed_log
+    }
+
+    /// DVFS transition log: `(cycle, shard, from, to)` operating-point
+    /// indices, in decision order (part of the deterministic event
+    /// stream; empty while the governor pins one point).
+    pub fn dvfs_log(&self) -> &[(u64, usize, u8, u8)] {
+        &self.dvfs_log
     }
 
     /// The fleet's autotune cache (empty unless `cfg.tuned`); tunings
@@ -370,6 +434,7 @@ impl Engine {
             shards: self.shards.len(),
             plan_cache: (self.cache.hits, self.cache.misses),
             tune_cache: (self.tune.hits, self.tune.misses),
+            dvfs: &self.dvfs_log,
         });
         rec.canonicalize();
         rec
@@ -451,13 +516,42 @@ impl Engine {
         }
     }
 
+    /// Conservative busy-power bound [mW] of one shard at operating
+    /// point `idx` (the governor's per-shard cost against the cap).
+    fn shard_bound_mw(&self, idx: usize) -> f64 {
+        let op = operating_points(self.cfg.isa)[idx];
+        self.em.busy_power_bound_mw(self.cfg.isa, self.cfg.n_cores, &op)
+    }
+
+    /// How many shards the power cap can fund at the lowest operating
+    /// point — the autoscaler's ceiling (never below 1: one shard always
+    /// serves). `None` without a cap.
+    fn cap_max_active(&self) -> Option<usize> {
+        self.cfg
+            .power_cap_mw
+            .map(|cap| ((cap / self.shard_bound_mw(OP_EFFICIENCY)).floor() as usize).max(1))
+    }
+
+    /// The DVFS policy's preferred operating point for a batch led by a
+    /// request of `lead_priority` (before throttle and cap clamps).
+    fn preferred_op(&self, lead_priority: u8) -> usize {
+        match self.cfg.dvfs {
+            DvfsPolicy::RaceToIdle => OP_BOOST,
+            DvfsPolicy::SlowAndSteady => OP_EFFICIENCY,
+            DvfsPolicy::Slo => slo_tier(lead_priority),
+            DvfsPolicy::Fixed(idx) => idx.min(OP_EFFICIENCY),
+        }
+    }
+
     /// One autoscaler step between dispatch rounds (no-op for a static
-    /// fleet). Decisions see the post-shed queue depth.
+    /// fleet). Decisions see the post-shed queue depth, clamped to the
+    /// shard count the power cap can fund.
     fn autoscale_step(&mut self, now: u64) {
+        let max_active = self.cap_max_active();
         let Some(scaler) = self.scaler.as_mut() else {
             return;
         };
-        if scaler.step(now, self.queue.len(), &mut self.shards).is_some() {
+        if scaler.step(now, self.queue.len(), &mut self.shards, max_active).is_some() {
             let active = self.shards.iter().filter(|s| s.active).count();
             self.occupancy.push((now, active));
         }
@@ -473,11 +567,27 @@ impl Engine {
     /// go through the same reduction — merged by simulated finish cycle,
     /// tie-break (shard id, request id) — so the completion stream is
     /// bit-identical for any worker count.
+    /// DVFS and the power cap are part of the sequential half: the
+    /// operating point of every batch is chosen here from simulated state
+    /// only (queue, shard busy-power bounds, the fault plan's throttle
+    /// windows), so energy numbers and the completion stream stay
+    /// bit-identical for any worker count.
     fn dispatch_free_shards(&mut self, now: u64) {
         let policy = BatchPolicy {
             max_batch: self.cfg.max_batch,
             prefer_resident: self.cfg.prefer_resident,
+            tier_of: matches!(self.cfg.dvfs, DvfsPolicy::Slo)
+                .then_some(slo_tier as fn(u8) -> usize),
         };
+        let cap = self.cfg.power_cap_mw;
+        // Busy-power committed by shards still executing a prior batch.
+        let mut inflight_mw: f64 = self
+            .shards
+            .iter()
+            .filter(|s| s.busy_until > now)
+            .map(|s| self.shard_power[s.id])
+            .sum();
+        let floor_mw = self.shard_bound_mw(OP_EFFICIENCY);
         let mut assignments: Vec<Assignment> = Vec::new();
         for si in 0..self.shards.len() {
             if !self.shards[si].active || !self.shards[si].is_free(now) {
@@ -486,11 +596,22 @@ impl Engine {
             if self.queue.is_empty() {
                 break;
             }
+            // Admission: skip this shard when even the efficiency point
+            // would breach the cap. The floor `inflight_mw > 0` keeps one
+            // shard always eligible (no deadlock under a sub-shard cap),
+            // and a skip implies a busy shard exists, so the event loop
+            // has a wake-up and re-tries at its finish (no livelock).
+            if let Some(cap) = cap {
+                if inflight_mw > 0.0 && inflight_mw + floor_mw > cap {
+                    continue;
+                }
+            }
             let resident = self.shards[si].resident_model;
             let Some(batch) = batcher::next_batch(&mut self.queue, resident, &policy) else {
                 break;
             };
             let model = batch[0].model;
+            let lead_priority = batch[0].priority;
             let (key, dep) = {
                 let entry = &self.models[model];
                 let (isa, budget, n_cores) = (self.cfg.isa, self.cfg.budget, self.cfg.n_cores);
@@ -514,7 +635,25 @@ impl Engine {
                 };
                 (entry.key, dep)
             };
-            assignments.push(Assignment { shard: si, model, key, dep, batch });
+            // Governor: policy preference, clamped by an active thermal
+            // throttle, then downgraded until the batch fits the cap.
+            let mut op = self.preferred_op(lead_priority);
+            if self.shards[si].is_throttled(now) {
+                op = OP_EFFICIENCY;
+            }
+            if let Some(cap) = cap {
+                while op < OP_EFFICIENCY && inflight_mw + self.shard_bound_mw(op) > cap {
+                    op += 1;
+                }
+            }
+            let bound = self.shard_bound_mw(op);
+            inflight_mw += bound;
+            self.shard_power[si] = bound;
+            if self.shard_op[si] != op as u8 {
+                self.dvfs_log.push((now, si, self.shard_op[si], op as u8));
+                self.shard_op[si] = op as u8;
+            }
+            assignments.push(Assignment { shard: si, model, key, dep, batch, op: op as u8 });
         }
         if assignments.is_empty() {
             return;
@@ -533,7 +672,7 @@ impl Engine {
         if workers <= 1 || assignments.len() == 1 {
             for a in assignments {
                 round.extend(
-                    self.shards[a.shard].run_batch(a.model, a.key, &a.dep, a.batch, now, &em),
+                    self.shards[a.shard].run_batch(a.model, a.key, &a.dep, a.batch, now, &em, a.op),
                 );
             }
         } else {
@@ -556,7 +695,7 @@ impl Engine {
                         let shard = &mut one[0];
                         let em = &em;
                         handles.push(scope.spawn(move || {
-                            shard.run_batch(a.model, a.key, &a.dep, a.batch, now, em)
+                            shard.run_batch(a.model, a.key, &a.dep, a.batch, now, em, a.op)
                         }));
                     }
                     handles
@@ -691,6 +830,14 @@ impl Engine {
         self.shards[shard].slow(factor, until);
     }
 
+    /// Thermal-throttle inject: batches starting on `shard` before
+    /// `until` are clamped to the efficiency operating point regardless
+    /// of DVFS policy (the governor's clamp in
+    /// [`Engine::dispatch_free_shards`]; see [`Shard::throttle`]).
+    pub fn throttle_shard(&mut self, shard: usize, until: u64) {
+        self.shards[shard].throttle(until);
+    }
+
     /// Flip the engine's deployment mode (live rollout: the canary
     /// switches to tuned plans). Affects models compiled after the
     /// call; already-cached plans win on their [`PlanKey`], which is
@@ -781,6 +928,8 @@ impl Engine {
             occupancy: &self.occupancy,
             scaler: self.scaler.as_ref(),
             tuned,
+            dvfs_transitions: self.dvfs_log.len() as u64,
+            power_cap_mw: self.cfg.power_cap_mw,
         })
     }
 
@@ -1180,5 +1329,58 @@ mod tests {
         // less recently busy one is parked first) survives the valley
         assert!(eng.completions().iter().any(|c| c.shard == 1));
         assert_eq!(eng.shards().iter().filter(|s| s.active).count(), 1);
+    }
+
+    /// A cap below two boost-point shards forces the race-to-idle
+    /// governor down to the efficiency point and serializes dispatch —
+    /// everything still completes, fleet average power respects the cap,
+    /// and the downgrade shows up in the transition log.
+    #[test]
+    fn power_cap_serializes_dispatch_and_bounds_power() {
+        let mut cfg = small_cfg();
+        cfg.dvfs = DvfsPolicy::RaceToIdle;
+        let cap = 1.5 * Engine::new(cfg).shard_bound_mw(OP_EFFICIENCY);
+        cfg.power_cap_mw = Some(cap);
+        let mut eng = Engine::new(cfg);
+        let a = eng.register(tiny("capped", 31));
+        let mut rng = Prng::new(32);
+        let trace: Vec<TraceItem> = (0..6)
+            .map(|_| item(0, a, 0, QTensor::random(&[8, 8, 8], 8, false, &mut rng)))
+            .collect();
+        let m = eng.run_trace(trace);
+        assert_eq!(m.served, 6);
+        // 1.5× the efficiency bound funds exactly one shard at any point
+        // (even boost), so every batch is clamped to efficiency only when
+        // a second shard wants in — but race-to-idle on an otherwise idle
+        // fleet may still boost the first batch. All ops must be legal.
+        assert!(eng.completions().iter().all(|c| (c.op as usize) <= OP_EFFICIENCY));
+        assert!(m.fleet_avg_power_mw <= cap, "avg {} > cap {}", m.fleet_avg_power_mw, cap);
+        assert!(m.dvfs_transitions >= 1, "boost→downgrade must be logged");
+        assert_eq!(m.power_cap_mw, Some(cap));
+        assert!(m.total_energy_pj > 0.0 && m.fleet_tops_per_watt > 0.0);
+        assert!(m.render().contains("fleet avg power"));
+    }
+
+    /// The `slo` policy maps priority tiers to operating points:
+    /// best-effort rides the efficiency corner, interactive gets boost.
+    #[test]
+    fn slo_policy_assigns_operating_points_by_priority() {
+        let cfg = ServeConfig { shards: 1, dvfs: DvfsPolicy::Slo, ..small_cfg() };
+        let mut eng = Engine::new(cfg);
+        let a = eng.register(tiny("slo", 33));
+        let mut rng = Prng::new(34);
+        let trace: Vec<TraceItem> = (0u64..6)
+            .map(|i| {
+                item(i * 50, a, (i % 3) as u8, QTensor::random(&[8, 8, 8], 8, false, &mut rng))
+            })
+            .collect();
+        let priorities: Vec<u8> = trace.iter().map(|t| t.priority).collect();
+        let m = eng.run_trace(trace);
+        assert_eq!(m.served, 6);
+        for c in eng.completions() {
+            let want = slo_tier(priorities[c.id as usize]) as u8;
+            assert_eq!(c.op, want, "request {} priority {}", c.id, priorities[c.id as usize]);
+        }
+        assert!(m.total_energy_pj > 0.0);
     }
 }

@@ -131,11 +131,24 @@ impl RequestQueue {
     /// members in the returned order, so EDF ordering here is what makes
     /// a coalesced batch respect its members' deadlines.
     pub fn drain_model(&mut self, model: usize, max: usize) -> Vec<Request> {
+        self.drain_model_where(model, max, |_| true)
+    }
+
+    /// [`RequestQueue::drain_model`] restricted to requests satisfying
+    /// `keep` — the batcher's DVFS-tier filter uses it so a coalesced
+    /// batch never mixes SLO tiers that run at different operating
+    /// points (see [`crate::serve::batcher::BatchPolicy::tier_of`]).
+    pub fn drain_model_where(
+        &mut self,
+        model: usize,
+        max: usize,
+        keep: impl Fn(&Request) -> bool,
+    ) -> Vec<Request> {
         let mut picks: Vec<(u64, usize)> = self
             .items
             .iter()
             .enumerate()
-            .filter(|(_, r)| r.model == model)
+            .filter(|(_, r)| r.model == model && keep(r))
             .map(|(pos, r)| (r.deadline_key(), pos))
             .collect();
         picks.sort_unstable();

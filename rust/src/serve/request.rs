@@ -73,8 +73,13 @@ pub struct Completion {
     pub batch_size: usize,
     /// MACs executed.
     pub macs: u64,
-    /// Simulated energy of the inference [pJ] (activity-based model).
+    /// Simulated energy of the inference [pJ] (activity-based model,
+    /// billed at the batch's operating point).
     pub energy_pj: f64,
+    /// Operating-point index the batch ran at (see
+    /// [`crate::power::operating_points`]; [`crate::power::OP_NOMINAL`]
+    /// unless a DVFS policy or power cap moved the shard).
+    pub op: u8,
     /// Per-layer cycle counts, in plan order (determinism checks).
     pub layer_cycles: Vec<u64>,
     /// Raw packed bytes of the network output. Only fully valid when the

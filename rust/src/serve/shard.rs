@@ -26,11 +26,21 @@
 //! the batch's first member, and each completion's execution occupies
 //! the contiguous window `[finish_cycle - exec_cycles, finish_cycle]` —
 //! so `Completion`s alone suffice to rebuild the shard timeline.
+//!
+//! **Time base**: every shard clock is in **fleet ticks** — periods of
+//! the nominal operating point ([`crate::power::NOMINAL_PERIOD_PS`],
+//! i.e. 250 MHz cycles). A batch executed at a non-nominal operating
+//! point has its core cycle counts converted through
+//! [`crate::power::OperatingPoint::fleet_ticks`], so shards running at
+//! different voltage/frequency points share one timeline and the
+//! engine's completion merge stays well-ordered. At the nominal point
+//! the conversion is the identity, which keeps every pre-DVFS cycle
+//! number (and blessed baseline) unchanged.
 
 use crate::coordinator::{execute_deployment, preload_deployment, TileMemo};
 use crate::dory::deploy::Deployment;
 use crate::dory::PlanKey;
-use crate::power::EnergyModel;
+use crate::power::{operating_points, EnergyModel};
 use crate::sim::fastpath::WindowCache;
 use crate::sim::{Cluster, CoreFidelity};
 
@@ -74,6 +84,11 @@ pub struct Shard {
     pub slow_until: u64,
     /// Slowdown multiplier inside the straggler window (≥ 1).
     pub slow_factor: u64,
+    /// Thermal-throttle window: batches dispatched before this tick are
+    /// clamped to the efficiency operating point by the engine's DVFS
+    /// governor (0 = cool). Set by the federation's `ThermalThrottle`
+    /// fault; purely simulated state, so the clamp is deterministic.
+    pub throttle_until: u64,
 }
 
 impl Shard {
@@ -112,6 +127,7 @@ impl Shard {
             failed_until: 0,
             slow_until: 0,
             slow_factor: 1,
+            throttle_until: 0,
         }
     }
 
@@ -171,6 +187,19 @@ impl Shard {
         self.slow_until = until;
     }
 
+    /// Thermal-throttle: batches dispatched before `until` are clamped
+    /// to the efficiency operating point (die-temperature governor
+    /// emulation; see the federation's `ThermalThrottle` fault). A
+    /// timing/energy overlay like [`Shard::slow`] — results untouched.
+    pub fn throttle(&mut self, until: u64) {
+        self.throttle_until = until;
+    }
+
+    /// Whether the thermal-throttle clamp applies at `now`.
+    pub fn is_throttled(&self, now: u64) -> bool {
+        self.throttle_until > now
+    }
+
     /// Enable the fast path's crosscheck mode on this shard's cluster:
     /// every replayed window is re-simulated and compared, panicking on
     /// any divergence (soak tests only — slower than no cache). No-op
@@ -200,7 +229,11 @@ impl Shard {
 
     /// Execute one single-model batch starting at `now` (the engine only
     /// dispatches to free shards). Returns one completion per request, in
-    /// batch order; the shard's clock advances past the batch.
+    /// batch order; the shard's clock advances past the batch. `op_idx`
+    /// selects the operating point (index into
+    /// [`operating_points`]`(dep.isa)`, chosen by the engine's DVFS
+    /// governor): core cycle counts convert to fleet ticks through it,
+    /// and energy is billed at its voltage/frequency corner.
     pub fn run_batch(
         &mut self,
         model: usize,
@@ -209,15 +242,17 @@ impl Shard {
         batch: Vec<Request>,
         now: u64,
         em: &EnergyModel,
+        op_idx: u8,
     ) -> Vec<Completion> {
         debug_assert!(self.is_free(now));
+        let op = operating_points(dep.isa)[op_idx as usize];
         let start = now.max(self.busy_until);
         // Straggler overlay: a batch starting inside the slow window
         // stretches uniformly — a pure function of (start, slow_until,
         // slow_factor), all simulated state, so determinism holds.
         let slow = if start < self.slow_until { self.slow_factor.max(1) } else { 1 };
         let switching = self.resident != Some(key);
-        let switch = if switching { Self::switch_cycles(dep) * slow } else { 0 };
+        let switch = if switching { op.fleet_ticks(Self::switch_cycles(dep) * slow) } else { 0 };
         if switching {
             self.model_switches += 1;
         }
@@ -243,7 +278,7 @@ impl Shard {
                 }
                 execute_deployment(&mut self.cluster, dep, &req.input, Some(&mut self.memo))
             };
-            let exec = res.total_cycles() * slow;
+            let exec = op.fleet_ticks(res.total_cycles() * slow);
             t += exec;
             out.push(Completion {
                 id: req.id,
@@ -258,7 +293,8 @@ impl Shard {
                 switch_cycles: if i == 0 { switch } else { 0 },
                 batch_size,
                 macs: res.total_macs(),
-                energy_pj: res.energy_pj(dep.isa, em),
+                energy_pj: res.energy_pj_at(dep.isa, em, &op),
+                op: op_idx,
                 layer_cycles: res.layer_cycles(),
                 output: res.output,
             });
@@ -279,6 +315,7 @@ mod tests {
     use crate::dory::deploy::deploy;
     use crate::dory::MemBudget;
     use crate::isa::IsaVariant;
+    use crate::power::{OP_EFFICIENCY, OP_NOMINAL};
     use crate::qnn::layer::Network;
     use crate::qnn::{Layer, QTensor};
     use crate::util::Prng;
@@ -310,7 +347,7 @@ mod tests {
             input: QTensor::random(&[8, 8, 8], 8, false, rng),
         };
         let batch = vec![mk(0, &mut rng), mk(1, &mut rng)];
-        let comps = shard.run_batch(0, key, &dep, batch, 0, &em);
+        let comps = shard.run_batch(0, key, &dep, batch, 0, &em, OP_NOMINAL as u8);
         assert_eq!(comps.len(), 2);
         let want_switch = Shard::switch_cycles(&dep);
         assert!(want_switch > 0);
@@ -319,10 +356,43 @@ mod tests {
         assert!(comps[1].finish_cycle > comps[0].finish_cycle);
         assert_eq!(shard.model_switches, 1);
         // same model again: resident, no switch
-        let comps2 = shard.run_batch(0, key, &dep, vec![mk(2, &mut rng)], shard.busy_until, &em);
+        let comps2 =
+            shard.run_batch(0, key, &dep, vec![mk(2, &mut rng)], shard.busy_until, &em, 1);
         assert_eq!(comps2[0].switch_cycles, 0);
         assert_eq!(shard.model_switches, 1);
         assert_eq!(shard.served, 3);
+    }
+
+    /// A batch at the efficiency point takes exactly 2× the fleet ticks
+    /// (8 ns period vs the 4 ns nominal tick), costs less energy at the
+    /// 0.50 V corner, and produces bit-identical outputs — an operating
+    /// point is a timing/energy overlay, never a functional one.
+    #[test]
+    fn efficiency_point_doubles_ticks_and_saves_energy() {
+        let net = tiny("op", 7);
+        let budget = MemBudget::default();
+        let dep = deploy(&net, IsaVariant::FlexV, budget);
+        let key = PlanKey::for_network(&net, IsaVariant::FlexV, budget, 8);
+        let em = EnergyModel::default();
+        let mut rng = Prng::new(8);
+        let r = Request {
+            id: 0,
+            model: 0,
+            class: 0,
+            priority: 0,
+            arrival_cycle: 0,
+            deadline: None,
+            input: QTensor::random(&[8, 8, 8], 8, false, &mut rng),
+        };
+        let mut nom = Shard::new(0, 8, false, Some(WindowCache::default()), CoreFidelity::Fast);
+        let mut eff = Shard::new(1, 8, false, Some(WindowCache::default()), CoreFidelity::Fast);
+        let a = nom.run_batch(0, key, &dep, vec![r.clone()], 0, &em, OP_NOMINAL as u8);
+        let b = eff.run_batch(0, key, &dep, vec![r], 0, &em, OP_EFFICIENCY as u8);
+        assert_eq!(b[0].output, a[0].output, "operating point must not change results");
+        assert_eq!(b[0].exec_cycles, 2 * a[0].exec_cycles);
+        assert_eq!(b[0].switch_cycles, 2 * a[0].switch_cycles);
+        assert!(b[0].energy_pj < a[0].energy_pj, "0.50 V corner must cost less energy");
+        assert_eq!((a[0].op, b[0].op), (OP_NOMINAL as u8, OP_EFFICIENCY as u8));
     }
 
     /// The straggler overlay stretches timing only (outputs, MACs
@@ -349,8 +419,8 @@ mod tests {
         let mut slowed =
             Shard::new(1, 8, false, Some(WindowCache::default()), CoreFidelity::Fast);
         slowed.slow(3, u64::MAX);
-        let a = nominal.run_batch(0, key, &dep, vec![r.clone()], 0, &em);
-        let b = slowed.run_batch(0, key, &dep, vec![r], 0, &em);
+        let a = nominal.run_batch(0, key, &dep, vec![r.clone()], 0, &em, OP_NOMINAL as u8);
+        let b = slowed.run_batch(0, key, &dep, vec![r], 0, &em, OP_NOMINAL as u8);
         assert_eq!(b[0].output, a[0].output, "straggling must not corrupt results");
         assert_eq!(b[0].macs, a[0].macs);
         assert_eq!(b[0].exec_cycles, 3 * a[0].exec_cycles);

@@ -36,6 +36,17 @@
 //! re-execution) instead of being re-simulated cycle by cycle — outputs
 //! and cycle counts stay bit-identical, and a cross-check mode
 //! re-simulates every replayed window in tests.
+//!
+//! Cycles vs. wall time: the simulator counts **core clock cycles**,
+//! which are frequency-independent — a kernel costs the same number of
+//! cycles at every DVFS operating point. Conversion to time (and hence
+//! to power and energy) happens one layer up: [`crate::power`] defines
+//! the GF22FDX operating points (Table II), each with its own clock
+//! period, and [`crate::power::OperatingPoint::fleet_ticks`] rescales a
+//! core-cycle count into ticks of the serving fleet's nominal clock.
+//! Nothing in this module depends on the chosen point, which is what
+//! lets the serving layer change frequency per batch without touching
+//! simulated results.
 
 pub mod cluster;
 pub mod core;

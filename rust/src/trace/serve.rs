@@ -16,7 +16,9 @@
 //!   the queue, shed ones included), tid 2 `sheds` (shed decisions at
 //!   the cycle they were made), tid 3 `autoscale` (park/wake instants
 //!   plus an `active_shards` counter), tid 4 `caches` (plan/tune cache
-//!   hit/miss totals as end-of-run counters).
+//!   hit/miss totals as end-of-run counters), tid 5 `dvfs` (one
+//!   `dvfs_transition` instant per operating-point change the governor
+//!   made, with shard and from/to point indices).
 //! - pid `s+1` `shard{s}` — tid 1 `exec`: one `batch` span per dispatch
 //!   with the `model_switch` span and per-request exec spans nested
 //!   inside it (the batch timeline of [`crate::serve::shard`]: switch
@@ -54,12 +56,16 @@ pub struct FleetTraceInputs<'a> {
     pub plan_cache: (u64, u64),
     /// Tune-cache `(hits, misses)` totals.
     pub tune_cache: (u64, u64),
+    /// DVFS transition log: `(cycle, shard, from, to)` operating-point
+    /// indices, in the governor's decision order.
+    pub dvfs: &'a [(u64, usize, u8, u8)],
 }
 
 const TID_ARRIVALS: u32 = 1;
 const TID_SHEDS: u32 = 2;
 const TID_AUTOSCALE: u32 = 3;
 const TID_CACHES: u32 = 4;
+const TID_DVFS: u32 = 5;
 
 fn model_name(names: &[String], idx: usize) -> &str {
     names.get(idx).map_or("?", |s| s.as_str())
@@ -88,6 +94,7 @@ fn emit_fleet_trace(rec: &mut Recorder, inp: &FleetTraceInputs, pid_base: u32, p
     rec.name_thread(track(pid_base, TID_SHEDS), "sheds");
     rec.name_thread(track(pid_base, TID_AUTOSCALE), "autoscale");
     rec.name_thread(track(pid_base, TID_CACHES), "caches");
+    rec.name_thread(track(pid_base, TID_DVFS), "dvfs");
     for s in 0..inp.shards {
         rec.name_process(pid_base + s as u32 + 1, format!("{prefix}shard{s}"));
         rec.name_thread(track(pid_base + s as u32 + 1, 1), "exec");
@@ -147,6 +154,22 @@ fn emit_fleet_trace(rec: &mut Recorder, inp: &FleetTraceInputs, pid_base: u32, p
                 vec![("from", Arg::U64(from as u64)), ("to", Arg::U64(to as u64))],
             );
         }
+    }
+
+    // DVFS: one instant per operating-point transition, at the dispatch
+    // cycle the governor made the decision.
+    for &(cycle, shard, from, to) in inp.dvfs {
+        rec.instant(
+            Scope::Sim,
+            track(pid_base, TID_DVFS),
+            "dvfs_transition",
+            cycle,
+            vec![
+                ("shard", Arg::U64(shard as u64)),
+                ("from_op", Arg::U64(from as u64)),
+                ("to_op", Arg::U64(to as u64)),
+            ],
+        );
     }
 
     // Cache totals as end-of-run counters (the end of the last batch; 0
@@ -277,6 +300,7 @@ mod tests {
             batch_size: 2,
             macs: 1000,
             energy_pj: 1.0,
+            op: 1,
             layer_cycles: vec![exec],
             output: vec![],
         }
@@ -297,6 +321,7 @@ mod tests {
             shards: 2,
             plan_cache: (3, 1),
             tune_cache: (0, 0),
+            dvfs: &[],
         }
     }
 
@@ -393,5 +418,23 @@ mod tests {
         let counters = names_of(|p| matches!(p, Payload::Counter { .. }));
         assert_eq!(counters.iter().filter(|n| *n == "active_shards").count(), 3);
         assert!(counters.contains(&"plan_cache_hits"));
+    }
+
+    #[test]
+    fn dvfs_transitions_become_instants_on_their_own_track() {
+        let names = vec!["mnv1".to_string()];
+        let dvfs = [(200u64, 1usize, 1u8, 2u8), (900, 1, 2, 0)];
+        let mut inp = inputs(&[], &[], &[(0, 2)], &names);
+        inp.dvfs = &dvfs;
+        let mut rec = build_fleet_trace(&inp);
+        rec.canonicalize();
+        let transitions: Vec<_> = rec
+            .events()
+            .iter()
+            .filter(|e| e.name == "dvfs_transition" && matches!(e.payload, Payload::Instant))
+            .collect();
+        assert_eq!(transitions.len(), 2);
+        assert!(transitions.iter().all(|e| e.track == track(0, TID_DVFS)));
+        assert_eq!(transitions[0].at, 200);
     }
 }

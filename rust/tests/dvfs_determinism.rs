@@ -1,0 +1,164 @@
+//! The energy-aware serving guarantee: under a fleet power cap, an SLO
+//! DVFS governor, and an active fault plan including a thermal-throttle
+//! window, the entire federated fingerprint — per-region completion
+//! streams (operating points and energy included), the DVFS transition
+//! logs, the rendered report, and the exported Chrome-trace JSON bytes
+//! — is identical across host worker counts {1, 4} × sim fast-path
+//! on/off, for every router policy. Every operating-point and
+//! power-cap decision happens in the sequential batch-formation half
+//! from simulated state only, so host parallelism can never move a
+//! joule.
+
+use flexv::power::{operating_points, DvfsPolicy, EnergyModel, OP_EFFICIENCY};
+use flexv::qnn::layer::Network;
+use flexv::qnn::{Layer, QTensor};
+use flexv::serve::{
+    FaultPlan, Federation, FederationConfig, FederationMetrics, RouterPolicy, ServeConfig,
+    TraceItem,
+};
+use flexv::util::Prng;
+
+fn tiny(name: &str, seed: u64) -> Network {
+    let mut rng = Prng::new(seed);
+    let mut net = Network::new(name, [8, 8, 8], 8);
+    net.push(Layer::conv("c1", [8, 8, 8], 8, 3, 3, 1, 1, 8, 4, 8, &mut rng));
+    net.push(Layer::conv("c2", [8, 8, 8], 8, 1, 1, 1, 0, 8, 8, 8, &mut rng));
+    net
+}
+
+fn item(at: u64, model: usize, rng: &mut Prng) -> TraceItem {
+    TraceItem {
+        at,
+        model,
+        class: 0,
+        priority: (at % 3) as u8,
+        deadline: None,
+        input: QTensor::random(&[8, 8, 8], 8, false, rng),
+    }
+}
+
+/// Bursty arrivals: tight intra-burst gaps with long valleys, so the
+/// cap has to arbitrate between simultaneously-free shards.
+fn bursty_trace(models: usize, n: usize, seed: u64) -> Vec<TraceItem> {
+    let mut rng = Prng::new(seed);
+    (0..n)
+        .map(|i| {
+            let at = (i as u64 / 4) * 50_000 + (i as u64 % 4) * 40;
+            item(at, i % models, &mut rng)
+        })
+        .collect()
+}
+
+/// Everything simulated, flattened to one string: per-region completion
+/// tuples (operating point and energy included), the DVFS transition
+/// logs, shed events, the rendered report, and the exported trace
+/// bytes.
+fn fingerprint(fed: &Federation, m: &FederationMetrics) -> String {
+    let mut fp = String::new();
+    for (r, engine) in fed.regions().iter().enumerate() {
+        fp.push_str(&format!("region {r}\n"));
+        for c in engine.completions() {
+            fp.push_str(&format!(
+                "  c id={} model={} shard={} start={} finish={} exec={} switch={} batch={} \
+                 macs={} op={} energy={:?} out={:?}\n",
+                c.id,
+                c.model,
+                c.shard,
+                c.start_cycle,
+                c.finish_cycle,
+                c.exec_cycles,
+                c.switch_cycles,
+                c.batch_size,
+                c.macs,
+                c.op,
+                c.energy_pj,
+                c.output,
+            ));
+        }
+        for t in engine.dvfs_log() {
+            fp.push_str(&format!("  dvfs {t:?}\n"));
+        }
+        for s in engine.shed_events() {
+            fp.push_str(&format!("  shed {s:?}\n"));
+        }
+    }
+    fp.push_str(&m.render());
+    fp.push_str(&flexv::trace::chrome::to_chrome_json(&fed.build_trace()));
+    fp
+}
+
+/// Run the power-capped scenario with the given execution knobs; every
+/// simulated input (cap, governor, fault plan, trace) is fixed. The
+/// per-region cap funds 1.5 shards at the efficiency floor, so capped
+/// rounds must defer or downgrade batches.
+fn run_capped(
+    workers: usize,
+    fastpath: bool,
+    policy: RouterPolicy,
+) -> (String, FederationMetrics) {
+    let mut engine = ServeConfig {
+        shards: 2,
+        n_cores: 4,
+        queue_capacity: 64,
+        max_batch: 4,
+        workers,
+        fastpath,
+        dvfs: DvfsPolicy::Slo,
+        ..ServeConfig::default()
+    };
+    let floor_mw = EnergyModel::default().busy_power_bound_mw(
+        engine.isa,
+        engine.n_cores,
+        &operating_points(engine.isa)[OP_EFFICIENCY],
+    );
+    engine.power_cap_mw = Some(1.5 * floor_mw);
+    // one pinned thermal-throttle window plus two seeded faults
+    let faults = FaultPlan::parse("throttle@1500:r0.s1+60000,auto:2", 0xD7F5, 2, 2, 300_000)
+        .expect("static fault spec parses");
+    let cfg = FederationConfig { regions: 2, engine, policy, faults, rollout: None };
+    let mut fed = Federation::new(cfg);
+    fed.register(tiny("cap-a", 21));
+    fed.register(tiny("cap-b", 22));
+    let m = fed.run_trace(bursty_trace(2, 20, 23));
+    assert_eq!(m.total_served(), 20, "the cap must delay work, never drop it");
+    (fingerprint(&fed, &m), m)
+}
+
+#[test]
+fn capped_fingerprint_is_identical_across_workers_and_fastpath() {
+    for policy in RouterPolicy::ALL {
+        let (reference, _) = run_capped(1, false, policy);
+        for (workers, fastpath) in [(1usize, true), (4, false), (4, true)] {
+            let (fp, _) = run_capped(workers, fastpath, policy);
+            assert!(
+                fp == reference,
+                "capped fingerprint diverged (policy {}, workers {workers}, fastpath {fastpath})",
+                policy.name(),
+            );
+        }
+    }
+}
+
+#[test]
+fn capped_run_respects_the_cap_and_reports_energy() {
+    let (_, m) = run_capped(0, true, RouterPolicy::LeastLoaded);
+    let fleet_cap = m.power_cap_mw().expect("cap is configured");
+    assert!(
+        m.fleet_avg_power_mw() <= fleet_cap,
+        "fleet avg {} mW exceeds cap {} mW",
+        m.fleet_avg_power_mw(),
+        fleet_cap,
+    );
+    for (r, region) in m.regions.iter().enumerate() {
+        let cap = region.power_cap_mw.expect("per-region cap is configured");
+        assert!(
+            region.fleet_avg_power_mw <= cap,
+            "region {r} avg {} mW exceeds its cap {} mW",
+            region.fleet_avg_power_mw,
+            cap,
+        );
+    }
+    assert!(m.total_energy_pj() > 0.0 && m.fleet_tops_per_watt() > 0.0);
+    assert!(m.dvfs_transitions() >= 1, "the SLO governor must move between tiers");
+    assert!(m.render().contains("fleet avg power"), "{}", m.render());
+}

@@ -19,7 +19,7 @@ use crate::dory::deploy::Deployment;
 use crate::dory::{KernelCall, LayerPlan, PlanKey, TileExec};
 use crate::isa::{IsaVariant, Program};
 use crate::kernels::conv::gen_conv;
-use crate::kernels::layers::{gen_add, gen_avgpool, gen_dwconv, gen_linear, gen_maxpool};
+use crate::kernels::layers::{gen_add, gen_avgpool, gen_concat, gen_dwconv, gen_linear, gen_maxpool};
 use crate::power::{EnergyModel, OperatingPoint};
 use crate::qnn::QTensor;
 use crate::sim::{Cluster, ClusterStats};
@@ -105,6 +105,7 @@ pub fn programs_for(isa: IsaVariant, call: &KernelCall, n_cores: usize) -> Vec<P
                 .collect()
         }
         KernelCall::Add(t) => (0..n_cores).map(|c| gen_add(t, c, n_cores)).collect(),
+        KernelCall::Concat(t) => (0..n_cores).map(|c| gen_concat(t, c, n_cores)).collect(),
         KernelCall::AvgPool(t) => (0..n_cores).map(|c| gen_avgpool(t, c, n_cores)).collect(),
         KernelCall::MaxPool(t) => (0..n_cores).map(|c| gen_maxpool(t, c, n_cores)).collect(),
     }

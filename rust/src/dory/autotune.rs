@@ -224,7 +224,8 @@ fn probe_plan(
     let mut l2 = L2Alloc::new(budget);
     let mut preload = vec![];
     let in_l2 = l2.alloc(l.in_bytes().max(4));
-    let in2_l2 = matches!(l.kind, LayerKind::Add { .. }).then(|| l2.alloc(l.in_bytes().max(4)));
+    let in2_l2 = matches!(l.kind, LayerKind::Add { .. } | LayerKind::Concat)
+        .then(|| l2.alloc(l.out_bytes().max(4)));
     let out_l2 = l2.alloc(l.out_bytes().max(4));
     deploy::plan_layer(isa, budget, &mut l2, &mut preload, l, 0, in_l2, in2_l2, out_l2, shape)
 }

@@ -15,7 +15,7 @@ use super::{
 use crate::isa::IsaVariant;
 use crate::kernels::conv::ConvTask;
 use crate::kernels::im2col::ConvGeom;
-use crate::kernels::layers::{AddTask, AvgPoolTask, DwConvTask, MaxPoolTask};
+use crate::kernels::layers::{AddTask, AvgPoolTask, ConcatTask, DwConvTask, MaxPoolTask};
 use crate::kernels::requant::RequantCfg;
 use crate::qnn::layer::{Layer, LayerKind, Network, NET_INPUT};
 use crate::qnn::{Precision, QTensor};
@@ -225,6 +225,10 @@ pub(crate) fn plan_layer(
         LayerKind::Add { m1, m2 } => {
             let in2 = in2_l2.expect("Add layer needs a second input address");
             plan_add(budget, l, id, in_l2, in2, out_l2, *m1, *m2)
+        }
+        LayerKind::Concat => {
+            let in2 = in2_l2.expect("Concat layer needs a second input address");
+            plan_concat(budget, l, id, in_l2, in2, out_l2)
         }
     }
 }
@@ -624,6 +628,60 @@ fn plan_avgpool(
             kernel: KernelCall::AvgPool(task),
             stores: vec![store(lay.out_buf[0], out_l2, out_bytes)],
         }],
+        macs: 0,
+        dotp_bits: 8,
+        exec: None,
+    }
+}
+
+fn plan_concat(
+    budget: &MemBudget,
+    l: &Layer,
+    id: usize,
+    in1_l2: u32,
+    in2_l2: u32,
+    out_l2: u32,
+) -> LayerPlan {
+    let [h, w, c1] = l.in_shape;
+    let c2 = l.out_shape[2] - c1;
+    let bits = l.a_bits as usize;
+    let (b1, b2) = (c1 * bits / 8, c2 * bits / 8);
+    let bo = b1 + b2;
+    let pixels = h * w;
+    // pixel-strip tiles: both inputs and the output are double buffered
+    let max_px = ((budget.l1 - 64) / (4 * bo)).min(pixels).max(1);
+    let lay = l1_layout(max_px * bo, 0, max_px * bo, 0, 0, budget.l1);
+    let mut execs = vec![];
+    let mut p0 = 0usize;
+    let mut i = 0;
+    while p0 < pixels {
+        let pc = max_px.min(pixels - p0);
+        let b = i % 2;
+        let x1_l1 = lay.in_buf[b];
+        let x2_l1 = lay.in_buf[b] + (max_px * b1) as u32;
+        let task = ConcatTask {
+            pixels: pc,
+            b1,
+            b2,
+            x1_base: x1_l1,
+            x2_base: x2_l1,
+            out_base: lay.out_buf[b],
+        };
+        execs.push(TileExec {
+            loads: vec![
+                load(in1_l2 + (p0 * b1) as u32, x1_l1, pc * b1),
+                load(in2_l2 + (p0 * b2) as u32, x2_l1, pc * b2),
+            ],
+            kernel: KernelCall::Concat(task),
+            stores: vec![store(lay.out_buf[b], out_l2 + (p0 * bo) as u32, pc * bo)],
+        });
+        p0 += pc;
+        i += 1;
+    }
+    LayerPlan {
+        name: l.name.clone(),
+        node: id,
+        tiles: execs,
         macs: 0,
         dotp_bits: 8,
         exec: None,

@@ -25,7 +25,7 @@ use std::hash::{Hash, Hasher};
 
 use crate::isa::IsaVariant;
 use crate::kernels::conv::ConvTask;
-use crate::kernels::layers::{AddTask, AvgPoolTask, DwConvTask, MaxPoolTask};
+use crate::kernels::layers::{AddTask, AvgPoolTask, ConcatTask, DwConvTask, MaxPoolTask};
 use crate::kernels::requant::RequantCfg;
 use crate::qnn::layer::{LayerKind, Network};
 use crate::qnn::Precision;
@@ -116,6 +116,7 @@ fn hash_kind<H: Hasher>(kind: &LayerKind, h: &mut H) {
         LayerKind::MaxPool { k, stride } => (3u8, k, stride).hash(h),
         LayerKind::AvgPool { k, stride } => (4u8, k, stride).hash(h),
         LayerKind::Add { m1, m2 } => (5u8, m1, m2).hash(h),
+        LayerKind::Concat => 6u8.hash(h),
     }
 }
 
@@ -152,6 +153,7 @@ pub enum KernelCall {
     Add(AddTask),
     AvgPool(AvgPoolTask),
     MaxPool(MaxPoolTask),
+    Concat(ConcatTask),
 }
 
 /// One tile: loads to issue before compute, the kernel, stores after.

@@ -275,6 +275,61 @@ pub fn gen_add(t: &AddTask, core: usize, n_cores: usize) -> Program {
     p
 }
 
+/// Channel-wise concatenation of two HWC tensors: per output pixel, `b1`
+/// packed bytes from the first input followed by `b2` from the second —
+/// pure data movement (no arithmetic), pixels split across cores. Works for
+/// any element width whose per-pixel channel bytes are whole (the graph IR
+/// enforces channel byte-alignment).
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+pub struct ConcatTask {
+    /// Pixels (H*W) in this tile.
+    pub pixels: usize,
+    /// Packed bytes per pixel of the first input (`c1 * bits / 8`).
+    pub b1: usize,
+    /// Packed bytes per pixel of the second input (`c2 * bits / 8`).
+    pub b2: usize,
+    pub x1_base: u32,
+    pub x2_base: u32,
+    pub out_base: u32,
+}
+
+pub fn gen_concat(t: &ConcatTask, core: usize, n_cores: usize) -> Program {
+    let (lo, hi) = super::matmul::row_range(t.pixels, core, n_cores);
+    let bo = t.b1 + t.b2;
+    let mut p = Program::new(format!("concat-c{core}"));
+    if hi > lo {
+        p.push(Instr::Li { rd: ra::A_PTR[0], imm: (t.x1_base + (lo * t.b1) as u32) as i32 });
+        p.push(Instr::Li { rd: ra::A_PTR[1], imm: (t.x2_base + (lo * t.b2) as u32) as i32 });
+        p.push(Instr::Li { rd: ra::OUT_PTR, imm: (t.out_base + (lo * bo) as u32) as i32 });
+        let body_at = p.len();
+        p.push(Instr::LpSetup { l: 0, count: (hi - lo) as u32, len: 0 });
+        let start = p.len();
+        for i in 0..t.b1 {
+            p.push(Instr::Lbu { rd: ra::TMP[0], base: ra::A_PTR[0], off: i as i32, post_inc: 0 });
+            p.push(Instr::Sb { rs: ra::TMP[0], base: ra::OUT_PTR, off: i as i32, post_inc: 0 });
+        }
+        for i in 0..t.b2 {
+            p.push(Instr::Lbu { rd: ra::TMP[0], base: ra::A_PTR[1], off: i as i32, post_inc: 0 });
+            p.push(Instr::Sb {
+                rs: ra::TMP[0],
+                base: ra::OUT_PTR,
+                off: (t.b1 + i) as i32,
+                post_inc: 0,
+            });
+        }
+        p.push(Instr::AluI { op: AluOp::Add, rd: ra::A_PTR[0], rs1: ra::A_PTR[0], imm: t.b1 as i32 });
+        p.push(Instr::AluI { op: AluOp::Add, rd: ra::A_PTR[1], rs1: ra::A_PTR[1], imm: t.b2 as i32 });
+        p.push(Instr::AluI { op: AluOp::Add, rd: ra::OUT_PTR, rs1: ra::OUT_PTR, imm: bo as i32 });
+        let len = (p.len() - start) as u16;
+        if let Instr::LpSetup { len: l, .. } = &mut p.instrs[body_at] {
+            *l = len;
+        }
+    }
+    p.push(Instr::Barrier);
+    p.push(Instr::Halt);
+    p
+}
+
 /// Average pooling over a full feature map window (global or strided),
 /// requantized. Channels split across cores (channel groups of 4 at 8 bit).
 #[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
@@ -505,6 +560,31 @@ mod tests {
             cl.run();
             let q = QuantParams::scalar(1, shift, 0, bits, 1);
             let want = golden::run_add(&x1, &x2, m1, m2, &q);
+            assert_eq!(cl.mem.read_bytes(t.out_base, want.bytes()), want.data, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn concat_matches_golden() {
+        let mut rng = Prng::new(41);
+        for (bits, c1, c2) in [(8u8, 8usize, 16usize), (4, 4, 8)] {
+            let (h, w) = (3, 5);
+            let x1 = QTensor::random(&[h, w, c1], bits, false, &mut rng);
+            let x2 = QTensor::random(&[h, w, c2], bits, false, &mut rng);
+            let t = ConcatTask {
+                pixels: h * w,
+                b1: c1 * bits as usize / 8,
+                b2: c2 * bits as usize / 8,
+                x1_base: TCDM_BASE,
+                x2_base: TCDM_BASE + 1024,
+                out_base: TCDM_BASE + 2048,
+            };
+            let mut cl = Cluster::new(4);
+            cl.mem.write_bytes(t.x1_base, &x1.data);
+            cl.mem.write_bytes(t.x2_base, &x2.data);
+            cl.load_programs((0..4).map(|i| gen_concat(&t, i, 4)).collect());
+            cl.run();
+            let want = golden::concat(&x1, &x2);
             assert_eq!(cl.mem.read_bytes(t.out_base, want.bytes()), want.data, "bits={bits}");
         }
     }

@@ -25,9 +25,11 @@ COMMANDS:
   run-layer <isa> <aXwY>   run the benchmark conv on one ISA/precision
   dump-kernel <isa> <aXwY> [n]  disassemble the generated MatMul kernel
                            (first n instructions, default 60; cf. Fig. 5)
-  run-net <isa> <mnv1-8b|mnv1-8b4b|resnet20-4b2b> [--quick] [--no-fastpath]
+  run-net <isa> <model> [--quick] [--no-fastpath]
           [--fidelity fast|pipeline] [--trace-out FILE]
-                    run one network end-to-end; --fidelity picks the
+                    run one network end-to-end. <model> is a zoo name
+                    (see `qir` below) or a path to a .qir file
+                    (--model FILE.qir works too); --fidelity picks the
                     core timing tier (pipeline adds Mac&Load write-back
                     port and sub-word realignment stalls; outputs are
                     bit-identical across tiers); --trace-out writes a
@@ -42,6 +44,13 @@ COMMANDS:
                     autotuner and explains each per-layer win (what
                     changed, which stalls went away). <model> may be a
                     unique prefix, e.g. `profile resnet20`
+  qir export <model> [--out FILE]
+                    print (or write) the canonical .qir text of a zoo
+                    model — byte-identical to the committed file under
+                    models/ (CI diffs them)
+  qir check FILE... parse + validate .qir files; exits 1 on the first
+                    malformed file. Zoo names: mnv1-8b | mnv1-8b4b |
+                    resnet20-4b2b | dscnn-8b4b | resdw-8b4b | mixer-8b4b
   tune [<model>|all] [--isa I] [--full] [--fidelity fast|pipeline]
        [--out FILE]
                     simulator-in-the-loop autotuner: per layer, measure
@@ -63,9 +72,12 @@ COMMANDS:
               [--federation N] [--router hash|least-loaded|locality]
               [--faults SPEC] [--rollout [CYCLE]]
               [--power-cap MW] [--dvfs race|steady|slo|fixed-point]
+              [--models a,b,c]
                     replay a mixed 3-model traffic trace on a
                     multi-cluster serving fleet; reports req/s, p50/p99
                     latency, MAC/cycle, energy/request, plan-cache hits.
+                    --models swaps the default paper mix for a
+                    comma-separated list of zoo models (equal weights).
                     --trace picks a generated arrival shape (default:
                     the legacy uniform-gap trace); --slo attaches the
                     standard 3-tier class mix (priorities + deadlines,
@@ -243,12 +255,14 @@ fn main() {
             }
             let isa = parse_isa(&args[1]);
             let hw = if quick { 96 } else { 224 };
-            let net = flexv::models::by_name(&args[2], hw).unwrap_or_else(|| {
-                eprintln!(
-                    "unknown network '{}' (expected one of: {})",
-                    args[2],
-                    flexv::models::MODEL_NAMES.join(" | ")
-                );
+            let model = flag_str(&args, "--model")
+                .or_else(|| args.get(2).filter(|s| !s.starts_with("--")).map(|s| s.as_str()))
+                .unwrap_or_else(|| {
+                    eprintln!("run-net: missing <model>\n");
+                    usage()
+                });
+            let net = flexv::models::by_name(model, hw).unwrap_or_else(|e| {
+                eprintln!("{e}");
                 usage()
             });
             let fastpath = !args.iter().any(|a| a == "--no-fastpath");
@@ -257,6 +271,7 @@ fn main() {
         }
         Some("profile") => run_profile(&args),
         Some("tune") => run_tune(&args),
+        Some("qir") => run_qir(&args),
         Some("bench-report") => run_bench_report(&args),
         Some("regress") => run_regress(&args),
         Some("serve-bench") => {
@@ -320,6 +335,33 @@ fn main() {
                     })
                 });
             use flexv::serve::{standard_mix, Engine, ServeConfig, SloClass, WorkloadSpec};
+            // --models swaps the paper's 3-model mix (45/30/25) for an
+            // equal-weight mix over any zoo subset; the default path is
+            // byte-identical to the pre---models CLI.
+            let nets: Vec<flexv::qnn::Network> = match flag_str(&args, "--models") {
+                None => standard_mix(hw),
+                Some(list) => list
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|m| !m.is_empty())
+                    .map(|m| {
+                        flexv::models::by_name(m, hw).unwrap_or_else(|e| {
+                            eprintln!("{e}");
+                            usage()
+                        })
+                    })
+                    .collect(),
+            };
+            if nets.is_empty() {
+                eprintln!("--models needs at least one model name");
+                usage()
+            }
+            let mix: Vec<f64> = if flag_str(&args, "--models").is_some() {
+                vec![1.0 / nets.len() as f64; nets.len()]
+            } else {
+                vec![0.45, 0.30, 0.25]
+            };
+            let n_models = nets.len();
             let cfg = ServeConfig {
                 shards,
                 max_batch,
@@ -334,15 +376,17 @@ fn main() {
                 ..ServeConfig::default()
             };
             if let Some(regions) = flag_val(&args, "--federation") {
-                run_serve_federation(&args, cfg, regions, hw, requests, mean_gap, seed, shape, slo);
+                run_serve_federation(
+                    &args, cfg, regions, nets, &mix, hw, requests, mean_gap, seed, shape, slo,
+                );
                 return;
             }
             let mut eng = Engine::new(cfg);
-            for net in standard_mix(hw) {
+            for net in nets {
                 eng.register(net);
             }
             println!(
-                "serve-bench: {requests} requests over 3 models on {shards} shards \
+                "serve-bench: {requests} requests over {n_models} models on {shards} shards \
                  (MNV1 input {hw}x{hw}{}, {}, {}, trace {}{}{}{}{}{}) ...",
                 if exact { ", exact mode" } else { "" },
                 match workers {
@@ -366,10 +410,10 @@ fn main() {
                 power_cap_mw.map_or(String::new(), |c| format!(", power cap {c} mW")),
             );
             let trace = match shape {
-                None => eng.synthetic_trace(requests, mean_gap, &[0.45, 0.30, 0.25], seed),
+                None => eng.synthetic_trace(requests, mean_gap, &mix, seed),
                 Some(shape) => {
-                    let mut spec = WorkloadSpec::new(shape, requests, mean_gap, 3);
-                    spec.mix = vec![0.45, 0.30, 0.25];
+                    let mut spec = WorkloadSpec::new(shape, requests, mean_gap, n_models);
+                    spec.mix = mix.clone();
                     spec.seed = seed;
                     if slo {
                         // base deadline: 25x the mean gap — tight enough to
@@ -621,7 +665,7 @@ fn run_tune(args: &[String]) {
         .map(|s| s.as_str())
         .unwrap_or("all");
     let names: Vec<&str> = if which == "all" {
-        flexv::models::MODEL_NAMES.to_vec()
+        flexv::models::ZOO_NAMES.to_vec()
     } else {
         vec![which]
     };
@@ -636,11 +680,8 @@ fn run_tune(args: &[String]) {
     };
     let mut cache = TuneCache::new();
     for name in names {
-        let net = flexv::models::by_name(name, hw).unwrap_or_else(|| {
-            eprintln!(
-                "unknown network '{name}' (expected one of: {} | all)",
-                flexv::models::MODEL_NAMES.join(" | ")
-            );
+        let net = flexv::models::by_name(name, hw).unwrap_or_else(|e| {
+            eprintln!("{e}");
             usage()
         });
         let t0 = std::time::Instant::now();
@@ -694,6 +735,8 @@ fn run_serve_federation(
     args: &[String],
     mut cfg: flexv::serve::ServeConfig,
     regions: usize,
+    nets: Vec<flexv::qnn::Network>,
+    mix: &[f64],
     hw: usize,
     requests: usize,
     mean_gap: u64,
@@ -702,8 +745,7 @@ fn run_serve_federation(
     slo: bool,
 ) {
     use flexv::serve::{
-        standard_mix, FaultPlan, Federation, FederationConfig, RolloutPlan, RouterPolicy, SloClass,
-        WorkloadSpec,
+        FaultPlan, Federation, FederationConfig, RolloutPlan, RouterPolicy, SloClass, WorkloadSpec,
     };
     if regions == 0 {
         eprintln!("--federation needs at least one region");
@@ -736,13 +778,14 @@ fn run_serve_federation(
         RolloutPlan { at, canary: regions - 1 }
     });
     let n_faults = faults.len();
+    let n_models = nets.len();
     let mut fed =
         Federation::new(FederationConfig { regions, engine: cfg, policy, faults, rollout });
-    for net in standard_mix(hw) {
+    for net in nets {
         fed.register(net);
     }
     println!(
-        "serve-bench: {requests} requests over 3 models, federated across {regions} regions x {} \
+        "serve-bench: {requests} requests over {n_models} models, federated across {regions} regions x {} \
          shards (router {}, {} fault events{}{}, MNV1 input {hw}x{hw}) ...",
         cfg.shards,
         policy.name(),
@@ -758,10 +801,10 @@ fn run_serve_federation(
         },
     );
     let trace = match shape {
-        None => fed.region(0).synthetic_trace(requests, mean_gap, &[0.45, 0.30, 0.25], seed),
+        None => fed.region(0).synthetic_trace(requests, mean_gap, mix, seed),
         Some(shape) => {
-            let mut spec = WorkloadSpec::new(shape, requests, mean_gap, 3);
-            spec.mix = vec![0.45, 0.30, 0.25];
+            let mut spec = WorkloadSpec::new(shape, requests, mean_gap, n_models);
+            spec.mix = mix.to_vec();
             spec.seed = seed;
             if slo {
                 spec.classes = SloClass::standard_tiers(mean_gap.saturating_mul(25));
@@ -794,9 +837,9 @@ fn write_trace(path: &str, rec: &flexv::trace::Recorder) {
 }
 
 /// Resolve a model name that may be a unique prefix of one of
-/// [`flexv::models::MODEL_NAMES`] (`resnet20` -> `resnet20-4b2b`).
+/// [`flexv::models::ZOO_NAMES`] (`resnet20` -> `resnet20-4b2b`).
 fn resolve_model(name: &str) -> &'static str {
-    let names = flexv::models::MODEL_NAMES;
+    let names = flexv::models::ZOO_NAMES;
     if let Some(exact) = names.iter().copied().find(|n| *n == name) {
         return exact;
     }
@@ -810,6 +853,78 @@ fn resolve_model(name: &str) -> &'static str {
         }
         many => {
             eprintln!("ambiguous network '{name}' (matches: {})", many.join(" | "));
+            usage()
+        }
+    }
+}
+
+/// The `qir` subcommand: `export` prints a zoo model's canonical `.qir`
+/// text (byte-identical to the committed file under `models/` — CI
+/// diffs the two); `check` parses and validates `.qir` files from disk.
+fn run_qir(args: &[String]) {
+    match args.get(1).map(|s| s.as_str()) {
+        Some("export") => {
+            let name = args
+                .get(2)
+                .filter(|s| !s.starts_with("--"))
+                .map(|s| s.as_str())
+                .unwrap_or_else(|| {
+                    eprintln!("qir export: missing <model>\n");
+                    usage()
+                });
+            let name = resolve_model(name);
+            // Paper networks export at their canonical input resolution
+            // (MobileNet 224x224); the extension models carry fixed inputs.
+            let g = flexv::models::graph_by_name(name, 224).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                usage()
+            });
+            let text = flexv::qnn::qir::print(&g);
+            match flag_str(args, "--out") {
+                None => print!("{text}"),
+                Some(path) => {
+                    if let Err(e) = std::fs::write(path, &text) {
+                        eprintln!("cannot write {path}: {e}");
+                        std::process::exit(1);
+                    }
+                    println!("wrote {path} ({} bytes)", text.len());
+                }
+            }
+        }
+        Some("check") => {
+            let files: Vec<&str> =
+                args[2..].iter().filter(|s| !s.starts_with("--")).map(|s| s.as_str()).collect();
+            if files.is_empty() {
+                eprintln!("qir check: missing FILE...\n");
+                usage()
+            }
+            for path in files {
+                let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                    eprintln!("cannot read {path}: {e}");
+                    std::process::exit(1);
+                });
+                // parse + lower exercises the full validation pipeline:
+                // grammar, shape/precision checks, weight synthesis.
+                let lowered = flexv::qnn::qir::parse(&text)
+                    .map_err(|e| e.to_string())
+                    .and_then(|g| g.lower());
+                match lowered {
+                    Ok(net) => println!(
+                        "ok: {path} — {} ({} nodes, {:.1} MMAC, {:.0} kB weights)",
+                        net.name,
+                        net.nodes.len(),
+                        net.total_macs() as f64 / 1e6,
+                        net.model_bytes() as f64 / 1024.0
+                    ),
+                    Err(e) => {
+                        eprintln!("{path}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
+        _ => {
+            eprintln!("qir: expected `export <model>` or `check FILE...`\n");
             usage()
         }
     }

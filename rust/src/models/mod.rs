@@ -1,10 +1,23 @@
-//! The end-to-end network zoo of the evaluation (§V-C, Table IV):
-//! MobileNetV1 (8-bit and mixed 8b4b) and ResNet-20 (mixed 4b2b).
+//! The end-to-end network zoo of the evaluation (§V-C, Table IV) plus the
+//! extension models documented in `models/README.md`.
+//!
+//! Paper networks: MobileNetV1 (8-bit and mixed 8b4b) and ResNet-20 (mixed
+//! 4b2b). Extension networks (committed as `.qir` files under `models/`,
+//! see `docs/QIR_FORMAT.md`): DS-CNN keyword spotting, a residual
+//! depthwise-separable stack, and a two-branch MLP-mixer-ish block
+//! exercising `Concat`.
 //!
 //! Weights are synthetic (seeded): performance and memory footprint depend
 //! only on topology and per-layer precision, not on learned values
 //! (DESIGN.md §2). Top-1 accuracies in Table IV are therefore *cited* from
 //! the paper, not re-measured.
+//!
+//! Every paper network exists in two forms that are proven bit-identical by
+//! tests (`rust/tests/qir_zoo.rs`): the hand-coded [`Network`] builder
+//! ([`mobilenet_v1`], [`resnet20`]) and a graph-IR twin
+//! ([`mobilenet_v1_graph`], [`resnet20_graph`]) whose [`Graph::lower`]
+//! reproduces the exact same layers, weight streams, deployment plans and
+//! serve fingerprints. Extension models exist only in `.qir` form.
 //!
 //! Precision assignments:
 //! - **MNV1 8b**: a8w8 everywhere.
@@ -16,8 +29,9 @@
 //!   concentrate), 8-bit first conv and classifier — reproducing the
 //!   ~142 kB footprint of Table IV.
 
+use crate::qnn::graph::{Graph, OpKind};
 use crate::qnn::layer::{Layer, LayerKind, Network};
-use crate::qnn::{QTensor, QuantParams};
+use crate::qnn::{qir, QTensor, QuantParams};
 use crate::util::Prng;
 
 /// Precision profile of a network build.
@@ -101,6 +115,24 @@ fn dwconv(
     }
 }
 
+/// The 13 depthwise-separable block configs of MobileNetV1:
+/// (full-width output channels, stride).
+const MNV1_BLOCKS: [(usize, usize); 13] = [
+    (64, 1),
+    (128, 2),
+    (128, 1),
+    (256, 2),
+    (256, 1),
+    (512, 2),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (1024, 2),
+    (1024, 1),
+];
+
 /// MobileNetV1 with width multiplier `alpha` (default 0.75 — the
 /// CMix-NN/STM32H7 comparison point; the paper's 1.9 MB model size points
 /// to a reduced-width variant, see EXPERIMENTS.md).
@@ -122,22 +154,7 @@ pub fn mobilenet_v1(profile: Profile, alpha: f64, input_hw: usize, seed: u64) ->
     shape = stem.out_shape;
     net.push(stem);
     // 13 depthwise-separable blocks.
-    let cfg: [(usize, usize); 13] = [
-        (64, 1),
-        (128, 2),
-        (128, 1),
-        (256, 2),
-        (256, 1),
-        (512, 2),
-        (512, 1),
-        (512, 1),
-        (512, 1),
-        (512, 1),
-        (512, 1),
-        (1024, 2),
-        (1024, 1),
-    ];
-    for (i, &(cout, stride)) in cfg.iter().enumerate() {
+    for (i, &(cout, stride)) in MNV1_BLOCKS.iter().enumerate() {
         let dw = dwconv(
             format!("dw{}", i + 1),
             shape,
@@ -194,6 +211,80 @@ pub fn mobilenet_v1(profile: Profile, alpha: f64, input_hw: usize, seed: u64) ->
         quant: quant_for(c, 8, if w4 { 4 } else { 8 }, 8, classes),
     });
     net
+}
+
+/// The graph-IR twin of [`mobilenet_v1`]: same ops in the same definition
+/// order with the same quantizers, so [`Graph::lower`] reproduces the
+/// hand-coded network bit-for-bit (weights included — the classifier
+/// carries the same `seed ^ 0xFC` stream override as the builder's
+/// dedicated PRNG).
+pub fn mobilenet_v1_graph(profile: Profile, alpha: f64, input_hw: usize, seed: u64) -> Graph {
+    assert!(profile != Profile::Mixed4a2w, "MNV1 profiles are 8b / 8b4b");
+    let wb = if profile == Profile::Mixed8a4w { 4 } else { 8 };
+    let ch = |c: usize| (((c as f64 * alpha) / 8.0).round() as usize * 8).max(8);
+    let mut g = Graph::new(
+        &format!("MobileNetV1-{}(a{alpha})", profile.name()),
+        [input_hw, input_hw, 4],
+        8,
+        seed,
+    );
+    let mut shape = [input_hw, input_hw, 4];
+    let mut t = g.input;
+    let out = [(input_hw - 1) / 2 + 1, (input_hw - 1) / 2 + 1, ch(32)];
+    t = g.op(
+        "conv1",
+        OpKind::Conv2d { kh: 3, kw: 3, stride: 2, pad: 1 },
+        &[t],
+        8,
+        out,
+        quant_for(3 * 3 * shape[2], 8, 8, 8, ch(32)),
+        None,
+    );
+    shape = out;
+    for (i, &(cout, stride)) in MNV1_BLOCKS.iter().enumerate() {
+        let od = [(shape[0] - 1) / stride + 1, (shape[1] - 1) / stride + 1, shape[2]];
+        t = g.op(
+            &format!("dw{}", i + 1),
+            OpKind::DwConv2d { kh: 3, kw: 3, stride, pad: 1 },
+            &[t],
+            wb,
+            od,
+            quant_for(9, 8, wb, 8, shape[2]),
+            None,
+        );
+        shape = od;
+        let op = [shape[0], shape[1], ch(cout)];
+        t = g.op(
+            &format!("pw{}", i + 1),
+            OpKind::Conv2d { kh: 1, kw: 1, stride: 1, pad: 0 },
+            &[t],
+            wb,
+            op,
+            quant_for(shape[2], 8, wb, 8, ch(cout)),
+            None,
+        );
+        shape = op;
+    }
+    let [h, _, c] = shape;
+    t = g.op(
+        "avgpool",
+        OpKind::AvgPool { k: h, stride: h },
+        &[t],
+        8,
+        [1, 1, c],
+        QuantParams::scalar(((1i64 << 16) / (h * h) as i64) as i32, 16, 0, 8, c),
+        None,
+    );
+    g.op(
+        "fc",
+        OpKind::Linear,
+        &[t],
+        wb,
+        [1, 1, 1000],
+        quant_for(c, 8, wb, 8, 1000),
+        Some(seed ^ 0xFC),
+    );
+    g
 }
 
 /// ResNet-20 for CIFAR-10 (32×32 input), HAWQ-style mixed 4b2b profile
@@ -304,25 +395,220 @@ pub fn resnet20(profile: Profile, seed: u64) -> Network {
     net
 }
 
-/// Look up an evaluation network by its CLI name (`mnv1-8b`,
-/// `mnv1-8b4b`, `resnet20-4b2b`). `input_hw` sets the MobileNet input
-/// resolution (ResNet-20 is fixed at 32×32). Seeds match the `run-net`
-/// subcommand and the Table IV generators, so every consumer (CLI,
-/// report, serve engine) builds bit-identical networks — which is what
-/// lets the serve plan cache key them structurally.
-pub fn by_name(name: &str, input_hw: usize) -> Option<Network> {
+/// The graph-IR twin of [`resnet20`]: identical op definition order
+/// (c1, c2, optional projection, add per block) so the shared weight
+/// stream draws in the same sequence as the hand-coded builder.
+pub fn resnet20_graph(profile: Profile, seed: u64) -> Graph {
+    let (a_bits, w_early, w_late): (u8, u8, u8) = match profile {
+        Profile::Uniform8 => (8, 8, 8),
+        Profile::Mixed4a2w => (4, 2, 4),
+        Profile::Mixed8a4w => (8, 4, 4),
+    };
+    let mut g = Graph::new(&format!("ResNet20-{}", profile.name()), [32, 32, 4], 8, seed);
+    let mut t = g.op(
+        "conv1",
+        OpKind::Conv2d { kh: 3, kw: 3, stride: 1, pad: 1 },
+        &[g.input],
+        8,
+        [32, 32, 16],
+        quant_for(3 * 3 * 4, 8, 8, a_bits, 16),
+        None,
+    );
+    let mut shape = [32, 32, 16];
+    let stage_ch = [16usize, 32, 64];
+    for (s, &c) in stage_ch.iter().enumerate() {
+        for b in 0..3 {
+            let wb = if s == 2 && b > 0 { w_late } else { w_early };
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let o = [(shape[0] - 1) / stride + 1, (shape[1] - 1) / stride + 1, c];
+            let id1 = g.op(
+                &format!("s{s}b{b}c1"),
+                OpKind::Conv2d { kh: 3, kw: 3, stride, pad: 1 },
+                &[t],
+                wb,
+                o,
+                quant_for(3 * 3 * shape[2], a_bits, wb, a_bits, c),
+                None,
+            );
+            let id2 = g.op(
+                &format!("s{s}b{b}c2"),
+                OpKind::Conv2d { kh: 3, kw: 3, stride: 1, pad: 1 },
+                &[id1],
+                wb,
+                o,
+                quant_for(3 * 3 * c, a_bits, wb, a_bits, c),
+                None,
+            );
+            let short = if stride != 1 || shape[2] != c {
+                g.op(
+                    &format!("s{s}b{b}proj"),
+                    OpKind::Conv2d { kh: 1, kw: 1, stride, pad: 0 },
+                    &[t],
+                    wb,
+                    o,
+                    quant_for(shape[2], a_bits, wb, a_bits, c),
+                    None,
+                )
+            } else {
+                t
+            };
+            t = g.op(
+                &format!("s{s}b{b}add"),
+                OpKind::Add { m1: 1, m2: 1 },
+                &[id2, short],
+                8,
+                o,
+                QuantParams::scalar(1, 1, 0, a_bits, c),
+                None,
+            );
+            shape = o;
+        }
+    }
+    let [h, _, c] = shape;
+    t = g.op(
+        "avgpool",
+        OpKind::AvgPool { k: h, stride: h },
+        &[t],
+        8,
+        [1, 1, c],
+        QuantParams::scalar(((1i64 << 16) / (h * h) as i64) as i32, 16, 0, 8, c),
+        None,
+    );
+    g.op("fc", OpKind::Linear, &[t], 8, [1, 1, 12], quant_for(c, 8, 8, 8, 12), None);
+    g
+}
+
+/// Why [`by_name`] could not produce a network.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelError {
+    /// Neither a registry name nor a readable `.qir` file.
+    UnknownName { name: String },
+    /// A `.qir` file exists but could not be read.
+    Io { path: String, err: String },
+    /// A `.qir` source was read but failed to parse or lower.
+    Invalid { path: String, err: String },
+}
+
+impl std::fmt::Display for ModelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelError::UnknownName { name } => write!(
+                f,
+                "unknown model '{name}': known models are {}; a `.qir` file name is \
+                 searched at {}",
+                ZOO_NAMES.join(", "),
+                qir_search_paths(name).join(", "),
+            ),
+            ModelError::Io { path, err } => write!(f, "cannot read model '{path}': {err}"),
+            ModelError::Invalid { path, err } => write!(f, "invalid model '{path}': {err}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+/// The three paper workloads (Table IV order — the serve standard mix and
+/// the report generators index this).
+pub const MODEL_NAMES: [&str; 3] = ["mnv1-8b", "mnv1-8b4b", "resnet20-4b2b"];
+
+/// The full zoo: paper workloads first (== [`MODEL_NAMES`]), then the
+/// extension models committed as `models/*.qir`.
+pub const ZOO_NAMES: [&str; 6] = [
+    "mnv1-8b",
+    "mnv1-8b4b",
+    "resnet20-4b2b",
+    "dscnn-8b4b",
+    "resdw-8b4b",
+    "mixer-8b4b",
+];
+
+/// The committed `.qir` source of a zoo model (embedded at build time from
+/// `models/`; paper networks at their canonical 224×224 / 32×32 inputs).
+pub fn committed_qir(name: &str) -> Option<&'static str> {
     match name {
-        "mnv1-8b" => Some(mobilenet_v1(Profile::Uniform8, 0.75, input_hw, 11)),
-        "mnv1-8b4b" => Some(mobilenet_v1(Profile::Mixed8a4w, 0.75, input_hw, 11)),
-        "resnet20-4b2b" => Some(resnet20(Profile::Mixed4a2w, 12)),
+        "mnv1-8b" => Some(include_str!("../../../models/mnv1-8b.qir")),
+        "mnv1-8b4b" => Some(include_str!("../../../models/mnv1-8b4b.qir")),
+        "resnet20-4b2b" => Some(include_str!("../../../models/resnet20-4b2b.qir")),
+        "dscnn-8b4b" => Some(include_str!("../../../models/dscnn-8b4b.qir")),
+        "resdw-8b4b" => Some(include_str!("../../../models/resdw-8b4b.qir")),
+        "mixer-8b4b" => Some(include_str!("../../../models/mixer-8b4b.qir")),
         _ => None,
     }
 }
 
-/// The CLI names accepted by [`by_name`].
-pub const MODEL_NAMES: [&str; 3] = ["mnv1-8b", "mnv1-8b4b", "resnet20-4b2b"];
+/// Paths [`by_name`] tries, in order, for a name routed to the filesystem
+/// (one ending in `.qir` or containing `/`).
+pub fn qir_search_paths(name: &str) -> Vec<String> {
+    let mut out = vec![name.to_string()];
+    if !name.contains('/') {
+        out.push(format!("models/{name}"));
+        if !name.ends_with(".qir") {
+            out.push(format!("models/{name}.qir"));
+        }
+    }
+    out
+}
+
+fn parse_and_lower(text: &str, origin: &str) -> Result<Network, ModelError> {
+    let g = qir::parse(text)
+        .map_err(|e| ModelError::Invalid { path: origin.into(), err: e.to_string() })?;
+    g.lower().map_err(|e| ModelError::Invalid { path: origin.into(), err: e })
+}
+
+fn load_qir_file(name: &str) -> Result<Network, ModelError> {
+    for path in qir_search_paths(name) {
+        match std::fs::read_to_string(&path) {
+            Ok(text) => return parse_and_lower(&text, &path),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+            Err(e) => return Err(ModelError::Io { path, err: e.to_string() }),
+        }
+    }
+    Err(ModelError::UnknownName { name: name.into() })
+}
+
+/// Look up an evaluation network by its CLI name ([`ZOO_NAMES`]) or by a
+/// `.qir` file path. `input_hw` sets the MobileNet input resolution
+/// (every other model has a fixed input). Seeds match the `run-net`
+/// subcommand and the Table IV generators, so every consumer (CLI,
+/// report, serve engine) builds bit-identical networks — which is what
+/// lets the serve plan cache key them structurally.
+///
+/// Names ending in `.qir` (or containing `/`) are read from the
+/// filesystem via [`qir_search_paths`]; registry extension models come
+/// from the embedded committed sources ([`committed_qir`]).
+pub fn by_name(name: &str, input_hw: usize) -> Result<Network, ModelError> {
+    match name {
+        "mnv1-8b" => Ok(mobilenet_v1(Profile::Uniform8, 0.75, input_hw, 11)),
+        "mnv1-8b4b" => Ok(mobilenet_v1(Profile::Mixed8a4w, 0.75, input_hw, 11)),
+        "resnet20-4b2b" => Ok(resnet20(Profile::Mixed4a2w, 12)),
+        "dscnn-8b4b" | "resdw-8b4b" | "mixer-8b4b" => {
+            parse_and_lower(committed_qir(name).expect("registry name"), name)
+        }
+        _ if name.ends_with(".qir") || name.contains('/') => load_qir_file(name),
+        _ => Err(ModelError::UnknownName { name: name.into() }),
+    }
+}
+
+/// The graph-IR form of a registry model: paper networks from their graph
+/// builders (parameterized by `input_hw`), extension networks parsed from
+/// the embedded committed `.qir` source. The `qir export` CLI prints this
+/// graph canonically; CI byte-diffs the export against `models/*.qir`.
+pub fn graph_by_name(name: &str, input_hw: usize) -> Result<Graph, ModelError> {
+    match name {
+        "mnv1-8b" => Ok(mobilenet_v1_graph(Profile::Uniform8, 0.75, input_hw, 11)),
+        "mnv1-8b4b" => Ok(mobilenet_v1_graph(Profile::Mixed8a4w, 0.75, input_hw, 11)),
+        "resnet20-4b2b" => Ok(resnet20_graph(Profile::Mixed4a2w, 12)),
+        _ => {
+            let text = committed_qir(name)
+                .ok_or_else(|| ModelError::UnknownName { name: name.into() })?;
+            qir::parse(text)
+                .map_err(|e| ModelError::Invalid { path: name.into(), err: e.to_string() })
+        }
+    }
+}
 
 /// Table IV's cited accuracies (not re-measured; weights are synthetic).
+/// Extension models have no paper anchor and return `None`.
 pub fn cited_accuracy(net_name: &str) -> Option<f64> {
     if net_name.starts_with("MobileNetV1-8b4b") {
         Some(66.0)
@@ -389,28 +675,78 @@ mod tests {
 
     #[test]
     fn by_name_covers_the_zoo_deterministically() {
-        for name in MODEL_NAMES {
+        for name in ZOO_NAMES {
             let a = by_name(name, 96).expect(name);
             let b = by_name(name, 96).expect(name);
             a.validate().expect(name);
             assert_eq!(a.name, b.name);
             assert_eq!(a.model_bytes(), b.model_bytes());
         }
-        assert!(by_name("nope", 96).is_none());
+    }
+
+    #[test]
+    fn by_name_reports_unknown_names_helpfully() {
+        let e = by_name("nope", 96).unwrap_err();
+        assert!(matches!(e, ModelError::UnknownName { .. }), "{e:?}");
+        let msg = e.to_string();
+        for name in ZOO_NAMES {
+            assert!(msg.contains(name), "error must list {name}: {msg}");
+        }
+        // a `.qir`-suffixed name that resolves nowhere names its search paths
+        let e = by_name("missing.qir", 96).unwrap_err().to_string();
+        assert!(e.contains("models/missing.qir"), "{e}");
+    }
+
+    #[test]
+    fn graph_twins_lower_to_the_hand_coded_networks() {
+        // Debug equality covers every field including the weight bytes.
+        for (g, n) in [
+            (
+                mobilenet_v1_graph(Profile::Uniform8, 0.75, 96, 11),
+                mobilenet_v1(Profile::Uniform8, 0.75, 96, 11),
+            ),
+            (
+                mobilenet_v1_graph(Profile::Mixed8a4w, 0.75, 96, 11),
+                mobilenet_v1(Profile::Mixed8a4w, 0.75, 96, 11),
+            ),
+            (resnet20_graph(Profile::Mixed4a2w, 12), resnet20(Profile::Mixed4a2w, 12)),
+            (resnet20_graph(Profile::Uniform8, 12), resnet20(Profile::Uniform8, 12)),
+        ] {
+            let lowered = g.lower().expect(&n.name);
+            assert_eq!(format!("{lowered:?}"), format!("{n:?}"), "{} twin differs", n.name);
+        }
+    }
+
+    #[test]
+    fn extension_models_load_and_validate() {
+        let dscnn = by_name("dscnn-8b4b", 96).expect("dscnn");
+        assert_eq!(dscnn.input_shape, [48, 12, 4]);
+        assert_eq!(dscnn.nodes.len(), 11);
+        let resdw = by_name("resdw-8b4b", 96).expect("resdw");
+        assert_eq!(resdw.nodes.len(), 17);
+        assert!(resdw
+            .nodes
+            .iter()
+            .any(|n| matches!(n.layer.kind, LayerKind::MaxPool { .. })));
+        let mixer = by_name("mixer-8b4b", 96).expect("mixer");
+        assert_eq!(mixer.nodes.len(), 10);
+        assert!(mixer
+            .nodes
+            .iter()
+            .any(|n| matches!(n.layer.kind, LayerKind::Concat)));
     }
 
     #[test]
     fn channel_counts_stay_byte_aligned() {
-        for net in [
-            mobilenet_v1(Profile::Mixed8a4w, 0.75, 224, 1),
-            resnet20(Profile::Mixed4a2w, 2),
-        ] {
+        for name in ZOO_NAMES {
+            let net = by_name(name, 96).expect(name);
             for node in &net.nodes {
                 let l = &node.layer;
                 assert_eq!(
                     l.out_shape[2] * l.quant.out_bits as usize % 8,
                     0,
-                    "{} misaligned",
+                    "{}/{} misaligned",
+                    net.name,
                     l.name
                 );
             }

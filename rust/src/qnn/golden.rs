@@ -24,6 +24,7 @@ pub fn run_layer(layer: &Layer, input: &QTensor) -> QTensor {
         LayerKind::Add { m1, m2 } => panic!(
             "Add needs two inputs, use run_add (m1={m1}, m2={m2})"
         ),
+        LayerKind::Concat => panic!("Concat needs two inputs, use concat"),
     }
 }
 
@@ -48,6 +49,7 @@ pub fn run_network(net: &Network, input: &QTensor) -> Vec<QTensor> {
                 *m2,
                 &node.layer.quant,
             ),
+            LayerKind::Concat => concat(fetch(node.inputs[0]), fetch(node.inputs[1])),
             _ => run_layer(&node.layer, fetch(node.inputs[0])),
         };
         debug_assert_eq!(
@@ -228,6 +230,31 @@ pub fn run_add(x1: &QTensor, x2: &QTensor, m1: i32, m2: i32, q: &QuantParams) ->
     out
 }
 
+/// Channel-wise concatenation: `out[y][x] = x1[y][x] ++ x2[y][x]`. Both
+/// inputs must share H×W and bit-width; pure data movement, no requant.
+pub fn concat(x1: &QTensor, x2: &QTensor) -> QTensor {
+    assert_eq!(x1.shape[0], x2.shape[0], "concat height mismatch");
+    assert_eq!(x1.shape[1], x2.shape[1], "concat width mismatch");
+    assert_eq!(x1.bits, x2.bits, "concat bit-width mismatch");
+    let (h, w, c1, c2) = (x1.shape[0], x1.shape[1], x1.shape[2], x2.shape[2]);
+    let mut out = QTensor::zeros(&[h, w, c1 + c2], x1.bits, false);
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c1 {
+                let v = x1.get_u(x1.flat(&[y, x, ch]));
+                let idx = out.flat(&[y, x, ch]);
+                out.set_u(idx, v);
+            }
+            for ch in 0..c2 {
+                let v = x2.get_u(x2.flat(&[y, x, ch]));
+                let idx = out.flat(&[y, x, c1 + ch]);
+                out.set_u(idx, v);
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,6 +331,24 @@ mod tests {
         let q = QuantParams::scalar(1, 1, 0, 8, 4);
         let y = run_add(&a, &b, 1, 1, &q);
         assert_eq!(y.to_vec_i32(), vec![7, 200, 0, 255]);
+    }
+
+    #[test]
+    fn concat_interleaves_channels() {
+        let a = QTensor::from_unsigned(&[1, 2, 2], 8, &[1, 2, 3, 4]);
+        let b = QTensor::from_unsigned(&[1, 2, 2], 8, &[5, 6, 7, 8]);
+        let y = concat(&a, &b);
+        assert_eq!(y.shape, vec![1, 2, 4]);
+        assert_eq!(y.to_vec_i32(), vec![1, 2, 5, 6, 3, 4, 7, 8]);
+    }
+
+    #[test]
+    fn concat_asymmetric_channels() {
+        let a = QTensor::from_unsigned(&[1, 1, 2], 4, &[1, 2]);
+        let b = QTensor::from_unsigned(&[1, 1, 4], 4, &[3, 4, 5, 6]);
+        let y = concat(&a, &b);
+        assert_eq!(y.shape, vec![1, 1, 6]);
+        assert_eq!(y.to_vec_i32(), vec![1, 2, 3, 4, 5, 6]);
     }
 
     #[test]

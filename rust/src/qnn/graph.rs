@@ -1,0 +1,581 @@
+//! Explicit graph IR for quantized networks.
+//!
+//! [`Graph`] separates *topology* from *execution order*: nodes are
+//! quantized ops ([`OpNode`]), edges are tensors ([`TensorDef`]) carrying
+//! shape, bit-width and the producing op's [`QuantParams`]. A deterministic
+//! topological scheduler ([`Graph::schedule`]) lowers the graph back to the
+//! linear [`Network`] that `dory::deploy` and the coordinator consume —
+//! for graphs authored in execution order (every builder and every
+//! canonical `.qir` file) the schedule is the identity, so lowering is
+//! bit-identical to hand-constructing the `Network` directly.
+//!
+//! Weights are synthetic and seeded (the determinism contract of
+//! `models/mod.rs` and `docs/QIR_FORMAT.md`): ops with weights draw them in
+//! *definition order* from one shared PRNG stream seeded with
+//! [`Graph::seed`], except where an op carries its own `seed` override,
+//! which starts a fresh stream for that op alone. Lowering the same graph
+//! twice therefore yields byte-identical weight tensors, which is what lets
+//! the serve plan cache and the autotune cache key networks structurally.
+
+use super::layer::{Layer, LayerKind, Network, NET_INPUT};
+use super::{check_bits, QTensor, QuantParams};
+use crate::util::Prng;
+
+/// Index into [`Graph::tensors`].
+pub type TensorId = usize;
+
+/// One edge of the graph: a named activation tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorDef {
+    pub name: String,
+    /// `[H, W, C]`, HWC layout.
+    pub shape: [usize; 3],
+    /// Unsigned element bit-width (2/4/8).
+    pub bits: u8,
+    /// Requantization parameters of the producing op; `None` only for the
+    /// graph input.
+    pub quant: Option<QuantParams>,
+}
+
+/// Operator kind carried by an [`OpNode`]. Mirrors [`LayerKind`] but lives
+/// on the graph side so the IR can evolve independently of the lowered form.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Conv2d { kh: usize, kw: usize, stride: usize, pad: usize },
+    DwConv2d { kh: usize, kw: usize, stride: usize, pad: usize },
+    Linear,
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    Add { m1: i32, m2: i32 },
+    Concat,
+}
+
+impl OpKind {
+    /// The `.qir` keyword for this op.
+    pub fn token(&self) -> &'static str {
+        match self {
+            OpKind::Conv2d { .. } => "conv",
+            OpKind::DwConv2d { .. } => "dwconv",
+            OpKind::Linear => "linear",
+            OpKind::MaxPool { .. } => "maxpool",
+            OpKind::AvgPool { .. } => "avgpool",
+            OpKind::Add { .. } => "add",
+            OpKind::Concat => "concat",
+        }
+    }
+
+    /// True for ops that carry a weight tensor.
+    pub fn weighted(&self) -> bool {
+        matches!(self, OpKind::Conv2d { .. } | OpKind::DwConv2d { .. } | OpKind::Linear)
+    }
+
+    /// Number of input tensors the op consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            OpKind::Add { .. } | OpKind::Concat => 2,
+            _ => 1,
+        }
+    }
+
+    fn to_layer_kind(self) -> LayerKind {
+        match self {
+            OpKind::Conv2d { kh, kw, stride, pad } => LayerKind::Conv2d { kh, kw, stride, pad },
+            OpKind::DwConv2d { kh, kw, stride, pad } => {
+                LayerKind::DwConv2d { kh, kw, stride, pad }
+            }
+            OpKind::Linear => LayerKind::Linear,
+            OpKind::MaxPool { k, stride } => LayerKind::MaxPool { k, stride },
+            OpKind::AvgPool { k, stride } => LayerKind::AvgPool { k, stride },
+            OpKind::Add { m1, m2 } => LayerKind::Add { m1, m2 },
+            OpKind::Concat => LayerKind::Concat,
+        }
+    }
+}
+
+/// One node of the graph: a quantized op reading input tensors and
+/// producing exactly one output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpNode {
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub output: TensorId,
+    /// Signed weight bit-width for weighted ops; 8 (don't-care, matches the
+    /// hand-coded builders) otherwise.
+    pub w_bits: u8,
+    /// Per-op weight stream override: `Some(s)` draws this op's weights
+    /// from a fresh `Prng::new(s)` instead of the graph's shared stream.
+    pub seed: Option<u64>,
+}
+
+/// A quantized network as an explicit DAG.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    /// Seed of the shared synthetic-weight stream.
+    pub seed: u64,
+    /// The network input tensor.
+    pub input: TensorId,
+    pub tensors: Vec<TensorDef>,
+    pub ops: Vec<OpNode>,
+}
+
+impl Graph {
+    /// Fresh graph with a single input tensor named `input`.
+    pub fn new(name: &str, input_shape: [usize; 3], input_bits: u8, seed: u64) -> Graph {
+        Graph {
+            name: name.into(),
+            seed,
+            input: 0,
+            tensors: vec![TensorDef {
+                name: "input".into(),
+                shape: input_shape,
+                bits: input_bits,
+                quant: None,
+            }],
+            ops: vec![],
+        }
+    }
+
+    /// Tensor id by name.
+    pub fn tensor(&self, name: &str) -> Option<TensorId> {
+        self.tensors.iter().position(|t| t.name == name)
+    }
+
+    /// Append an op, creating its output tensor (named after the op) from
+    /// `out_shape` and `quant`. Returns the output tensor id.
+    #[allow(clippy::too_many_arguments)]
+    pub fn op(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        inputs: &[TensorId],
+        w_bits: u8,
+        out_shape: [usize; 3],
+        quant: QuantParams,
+        seed: Option<u64>,
+    ) -> TensorId {
+        let out = self.tensors.len();
+        self.tensors.push(TensorDef {
+            name: name.into(),
+            shape: out_shape,
+            bits: quant.out_bits,
+            quant: Some(quant),
+        });
+        self.ops.push(OpNode {
+            name: name.into(),
+            kind,
+            inputs: inputs.to_vec(),
+            output: out,
+            w_bits,
+            seed,
+        });
+        out
+    }
+
+    /// Shape of the weight tensor an op draws, if any.
+    fn weight_shape(&self, op: &OpNode) -> Option<Vec<usize>> {
+        let in_shape = self.tensors[op.inputs[0]].shape;
+        let out_shape = self.tensors[op.output].shape;
+        match op.kind {
+            OpKind::Conv2d { kh, kw, .. } => Some(vec![out_shape[2], kh, kw, in_shape[2]]),
+            OpKind::DwConv2d { kh, kw, .. } => Some(vec![in_shape[2], kh, kw, 1]),
+            OpKind::Linear => {
+                Some(vec![out_shape[2], in_shape.iter().product()])
+            }
+            _ => None,
+        }
+    }
+
+    /// Structural validation: names, arities, bit-widths, per-op output
+    /// geometry, quantization coverage and byte alignment. Returns a
+    /// description of the first inconsistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.input >= self.tensors.len() {
+            return Err("input tensor id out of range".into());
+        }
+        if self.tensors[self.input].quant.is_some() {
+            return Err("input tensor must not carry quant params".into());
+        }
+        for (i, t) in self.tensors.iter().enumerate() {
+            if t.name.is_empty() || t.name.contains(char::is_whitespace) {
+                return Err(format!("tensor {i} has invalid name {:?}", t.name));
+            }
+            if self.tensors.iter().filter(|o| o.name == t.name).count() != 1 {
+                return Err(format!("duplicate tensor name {:?}", t.name));
+            }
+            if !check_bits(t.bits) {
+                return Err(format!("tensor {} has unsupported bits {}", t.name, t.bits));
+            }
+            if t.shape.iter().any(|&d| d == 0) {
+                return Err(format!("tensor {} has zero dim {:?}", t.name, t.shape));
+            }
+            if t.shape[2] * t.bits as usize % 8 != 0 {
+                return Err(format!(
+                    "tensor {}: {} channels x {} bits not byte-aligned",
+                    t.name, t.shape[2], t.bits
+                ));
+            }
+            if let Some(q) = &t.quant {
+                if q.out_bits != t.bits {
+                    return Err(format!(
+                        "tensor {}: quant out_bits {} != tensor bits {}",
+                        t.name, q.out_bits, t.bits
+                    ));
+                }
+                if q.channels() != t.shape[2] {
+                    return Err(format!(
+                        "tensor {}: quant covers {} channels, tensor has {}",
+                        t.name,
+                        q.channels(),
+                        t.shape[2]
+                    ));
+                }
+            }
+        }
+        let mut producer = vec![usize::MAX; self.tensors.len()];
+        for (i, op) in self.ops.iter().enumerate() {
+            if op.name.is_empty() || op.name.contains(char::is_whitespace) {
+                return Err(format!("op {i} has invalid name {:?}", op.name));
+            }
+            if self.ops.iter().filter(|o| o.name == op.name).count() != 1 {
+                return Err(format!("duplicate op name {:?}", op.name));
+            }
+            if op.output >= self.tensors.len() {
+                return Err(format!("op {} output tensor out of range", op.name));
+            }
+            if op.output == self.input {
+                return Err(format!("op {} writes the graph input", op.name));
+            }
+            if producer[op.output] != usize::MAX {
+                return Err(format!(
+                    "tensor {} produced twice",
+                    self.tensors[op.output].name
+                ));
+            }
+            producer[op.output] = i;
+            if self.tensors[op.output].quant.is_none() {
+                return Err(format!(
+                    "op {} output tensor {} lacks quant params",
+                    op.name, self.tensors[op.output].name
+                ));
+            }
+            if op.inputs.len() != op.kind.arity() {
+                return Err(format!(
+                    "op {} has {} inputs, wants {}",
+                    op.name,
+                    op.inputs.len(),
+                    op.kind.arity()
+                ));
+            }
+            if op.inputs.iter().any(|&t| t >= self.tensors.len()) {
+                return Err(format!("op {} input tensor out of range", op.name));
+            }
+            if op.kind.weighted() && !check_bits(op.w_bits) {
+                return Err(format!("op {}: unsupported w_bits {}", op.name, op.w_bits));
+            }
+            self.check_geometry(op)?;
+        }
+        for (t, &p) in producer.iter().enumerate() {
+            if p == usize::MAX && t != self.input {
+                return Err(format!("tensor {} has no producer", self.tensors[t].name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Output-shape/bits consistency for one op.
+    fn check_geometry(&self, op: &OpNode) -> Result<(), String> {
+        let i0 = &self.tensors[op.inputs[0]];
+        let out = &self.tensors[op.output];
+        let [h, w, c] = i0.shape;
+        let err = |msg: String| Err(format!("op {}: {msg}", op.name));
+        let window = |k: usize, pad: usize, stride: usize, dim: usize| -> Result<usize, String> {
+            if dim + 2 * pad < k {
+                return Err(format!("op {}: window {k} exceeds padded dim {dim}", op.name));
+            }
+            Ok((dim + 2 * pad - k) / stride + 1)
+        };
+        let want = match op.kind {
+            OpKind::Conv2d { kh, kw, stride, pad } => {
+                [window(kh, pad, stride, h)?, window(kw, pad, stride, w)?, out.shape[2]]
+            }
+            OpKind::DwConv2d { kh, kw, stride, pad } => {
+                [window(kh, pad, stride, h)?, window(kw, pad, stride, w)?, c]
+            }
+            OpKind::Linear => [1, 1, out.shape[2]],
+            OpKind::MaxPool { k, stride } | OpKind::AvgPool { k, stride } => {
+                [window(k, 0, stride, h)?, window(k, 0, stride, w)?, c]
+            }
+            OpKind::Add { .. } => {
+                let i1 = &self.tensors[op.inputs[1]];
+                if i1.shape != i0.shape {
+                    return err(format!(
+                        "add inputs differ: {:?} vs {:?}",
+                        i0.shape, i1.shape
+                    ));
+                }
+                i0.shape
+            }
+            OpKind::Concat => {
+                let i1 = &self.tensors[op.inputs[1]];
+                if i1.shape[0] != h || i1.shape[1] != w {
+                    return err(format!(
+                        "concat inputs differ in HxW: {:?} vs {:?}",
+                        i0.shape, i1.shape
+                    ));
+                }
+                if i1.bits != i0.bits || out.bits != i0.bits {
+                    return err("concat must not change bit-width".into());
+                }
+                [h, w, c + i1.shape[2]]
+            }
+        };
+        if out.shape != want {
+            return err(format!("out shape {:?}, geometry wants {:?}", out.shape, want));
+        }
+        if matches!(op.kind, OpKind::MaxPool { .. }) && out.bits != i0.bits {
+            return err("maxpool must not change bit-width".into());
+        }
+        Ok(())
+    }
+
+    /// Deterministic topological schedule (Kahn with min-index tie-break):
+    /// the returned op ids respect data dependencies, and a graph whose
+    /// definition order is already topological schedules as the identity —
+    /// the property that keeps `.qir`-imported networks bit-identical to
+    /// the hand-coded builders.
+    pub fn schedule(&self) -> Result<Vec<usize>, String> {
+        let mut producer = vec![usize::MAX; self.tensors.len()];
+        for (i, op) in self.ops.iter().enumerate() {
+            producer[op.output] = i;
+        }
+        let mut done = vec![false; self.ops.len()];
+        let mut order = Vec::with_capacity(self.ops.len());
+        for _ in 0..self.ops.len() {
+            let next = self.ops.iter().enumerate().position(|(i, op)| {
+                !done[i]
+                    && op.inputs.iter().all(|&t| {
+                        t == self.input || (producer[t] != usize::MAX && done[producer[t]])
+                    })
+            });
+            match next {
+                Some(i) => {
+                    done[i] = true;
+                    order.push(i);
+                }
+                None => {
+                    let stuck: Vec<&str> = self
+                        .ops
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| !done[*i])
+                        .map(|(_, op)| op.name.as_str())
+                        .collect();
+                    return Err(format!("graph has a cycle through {stuck:?}"));
+                }
+            }
+        }
+        Ok(order)
+    }
+
+    /// Materialize seeded synthetic weights for every weighted op, in
+    /// *definition order* (the determinism contract).
+    fn materialize_weights(&self) -> Vec<Option<QTensor>> {
+        let mut shared = Prng::new(self.seed);
+        self.ops
+            .iter()
+            .map(|op| {
+                let shape = self.weight_shape(op)?;
+                Some(match op.seed {
+                    Some(s) => {
+                        let mut own = Prng::new(s);
+                        QTensor::random(&shape, op.w_bits, true, &mut own)
+                    }
+                    None => QTensor::random(&shape, op.w_bits, true, &mut shared),
+                })
+            })
+            .collect()
+    }
+
+    /// Lower to the linear [`Network`] the deployment stack consumes:
+    /// validate, schedule, materialize weights, then emit nodes in schedule
+    /// order with producer indices rewritten to schedule positions.
+    pub fn lower(&self) -> Result<Network, String> {
+        self.validate()?;
+        let order = self.schedule()?;
+        let mut weights = self.materialize_weights();
+        let mut producer = vec![usize::MAX; self.tensors.len()];
+        for (i, op) in self.ops.iter().enumerate() {
+            producer[op.output] = i;
+        }
+        let mut pos = vec![usize::MAX; self.ops.len()];
+        for (p, &i) in order.iter().enumerate() {
+            pos[i] = p;
+        }
+        let input = &self.tensors[self.input];
+        let mut net = Network::new(&self.name, input.shape, input.bits);
+        for &i in &order {
+            let op = &self.ops[i];
+            let out = &self.tensors[op.output];
+            let layer = Layer {
+                name: op.name.clone(),
+                kind: op.kind.to_layer_kind(),
+                in_shape: self.tensors[op.inputs[0]].shape,
+                out_shape: out.shape,
+                a_bits: self.tensors[op.inputs[0]].bits,
+                w_bits: op.w_bits,
+                weights: weights[i].take(),
+                quant: out.quant.clone().expect("validated: non-input tensors carry quant"),
+            };
+            let inputs = op
+                .inputs
+                .iter()
+                .map(|&t| if t == self.input { NET_INPUT } else { pos[producer[t]] })
+                .collect();
+            net.push_with_inputs(layer, inputs);
+        }
+        net.validate().map_err(|e| format!("lowered network invalid: {e}"))?;
+        Ok(net)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny", [8, 8, 8], 8, 7);
+        let c1 = g.op(
+            "c1",
+            OpKind::Conv2d { kh: 3, kw: 3, stride: 1, pad: 1 },
+            &[g.input],
+            8,
+            [8, 8, 16],
+            QuantParams::scalar(1, 10, 0, 8, 16),
+            None,
+        );
+        let gap = g.op(
+            "gap",
+            OpKind::AvgPool { k: 8, stride: 8 },
+            &[c1],
+            8,
+            [1, 1, 16],
+            QuantParams::scalar(1024, 16, 0, 8, 16),
+            None,
+        );
+        g.op(
+            "fc",
+            OpKind::Linear,
+            &[gap],
+            4,
+            [1, 1, 8],
+            QuantParams::scalar(1, 7, 0, 8, 8),
+            None,
+        );
+        g
+    }
+
+    #[test]
+    fn schedule_is_identity_for_ordered_graphs() {
+        let g = tiny();
+        g.validate().expect("tiny graph invalid");
+        assert_eq!(g.schedule().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn schedule_reorders_out_of_order_definitions() {
+        let mut g = tiny();
+        // Swap op definition order (c1 <-> gap): still schedulable.
+        g.ops.swap(0, 1);
+        assert_eq!(g.schedule().unwrap(), vec![1, 0, 2]);
+        let net = g.lower().expect("lower after reorder");
+        assert_eq!(net.nodes[0].layer.name, "c1");
+        assert_eq!(net.nodes[1].layer.name, "gap");
+    }
+
+    #[test]
+    fn schedule_detects_cycles() {
+        let mut g = tiny();
+        // fc pretends to consume its own output.
+        let out = g.ops[2].output;
+        g.ops[2].inputs = vec![out];
+        assert!(g.schedule().unwrap_err().contains("cycle"));
+    }
+
+    #[test]
+    fn lowering_is_deterministic() {
+        let a = tiny().lower().unwrap();
+        let b = tiny().lower().unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(a.nodes.len(), 3);
+        assert!(a.nodes[0].layer.weights.is_some());
+    }
+
+    #[test]
+    fn per_op_seed_forks_the_weight_stream() {
+        let base = tiny().lower().unwrap();
+        let mut g = tiny();
+        g.ops[2].seed = Some(99);
+        let forked = g.lower().unwrap();
+        // conv weights from the shared stream are unchanged...
+        assert_eq!(base.nodes[0].layer.weights, forked.nodes[0].layer.weights);
+        // ...but the reseeded fc draws differently.
+        assert_ne!(base.nodes[2].layer.weights, forked.nodes[2].layer.weights);
+    }
+
+    #[test]
+    fn validate_rejects_bad_geometry() {
+        let mut g = tiny();
+        g.tensors[1].shape = [4, 4, 16]; // conv output cannot be 4x4
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_missing_producer() {
+        let mut g = tiny();
+        g.tensors.push(TensorDef {
+            name: "orphan".into(),
+            shape: [1, 1, 8],
+            bits: 8,
+            quant: Some(QuantParams::scalar(1, 0, 0, 8, 8)),
+        });
+        assert!(g.validate().unwrap_err().contains("no producer"));
+    }
+
+    #[test]
+    fn concat_geometry_sums_channels() {
+        let mut g = Graph::new("cat", [4, 4, 8], 8, 1);
+        let a = g.op(
+            "a",
+            OpKind::Conv2d { kh: 1, kw: 1, stride: 1, pad: 0 },
+            &[g.input],
+            8,
+            [4, 4, 8],
+            QuantParams::scalar(1, 9, 0, 8, 8),
+            None,
+        );
+        let b = g.op(
+            "b",
+            OpKind::Conv2d { kh: 1, kw: 1, stride: 1, pad: 0 },
+            &[g.input],
+            8,
+            [4, 4, 16],
+            QuantParams::scalar(1, 9, 0, 8, 16),
+            None,
+        );
+        g.op(
+            "cat",
+            OpKind::Concat,
+            &[a, b],
+            8,
+            [4, 4, 24],
+            QuantParams::scalar(1, 0, 0, 8, 24),
+            None,
+        );
+        g.validate().expect("concat graph invalid");
+        let net = g.lower().expect("concat lowers");
+        assert_eq!(net.nodes[2].layer.out_shape, [4, 4, 24]);
+        assert_eq!(net.nodes[2].inputs, vec![0, 1]);
+    }
+}

@@ -25,6 +25,12 @@ pub enum LayerKind {
     /// Residual add of two inputs with independent scale factors:
     /// `out = clip((x1*m1 + x2*m2) >> shift)`.
     Add { m1: i32, m2: i32 },
+    /// Channel-wise concatenation of two inputs sharing H×W and bit-width:
+    /// `out[.., ..c1] = x1`, `out[.., c1..] = x2`. Pure data movement — no
+    /// requantization (`quant.out_bits` must equal `a_bits`). `in_shape`
+    /// holds the *first* input; the second contributes the remaining
+    /// `out C - in C` channels.
+    Concat,
 }
 
 /// One node of the network graph.
@@ -59,8 +65,11 @@ impl Layer {
                 let cin: usize = self.in_shape.iter().product();
                 (oc * cin) as u64
             }
-            // pooling/add contribute no MACs in the paper's accounting
-            LayerKind::MaxPool { .. } | LayerKind::AvgPool { .. } | LayerKind::Add { .. } => 0,
+            // pooling/add/concat contribute no MACs in the paper's accounting
+            LayerKind::MaxPool { .. }
+            | LayerKind::AvgPool { .. }
+            | LayerKind::Add { .. }
+            | LayerKind::Concat => 0,
         }
     }
 
@@ -178,7 +187,7 @@ impl Network {
     /// first inconsistency, if any.
     pub fn validate(&self) -> Result<(), String> {
         for (id, node) in self.nodes.iter().enumerate() {
-            for &src in &node.inputs {
+            for (slot, &src) in node.inputs.iter().enumerate() {
                 let (shape, bits) = if src == NET_INPUT {
                     (self.input_shape, self.input_bits)
                 } else {
@@ -187,10 +196,25 @@ impl Network {
                     }
                     (self.nodes[src].layer.out_shape, self.nodes[src].layer.quant.out_bits)
                 };
-                if shape != node.layer.in_shape {
+                // Concat's second input carries the channels missing from
+                // the first; every other slot must match in_shape exactly.
+                let want_shape = if slot == 1 && matches!(node.layer.kind, LayerKind::Concat) {
+                    let [h, w, c1] = node.layer.in_shape;
+                    let oc = node.layer.out_shape[2];
+                    if oc <= c1 {
+                        return Err(format!(
+                            "node {id} ({}) concat out channels {oc} <= first input {c1}",
+                            node.layer.name
+                        ));
+                    }
+                    [h, w, oc - c1]
+                } else {
+                    node.layer.in_shape
+                };
+                if shape != want_shape {
                     return Err(format!(
-                        "node {id} ({}) in_shape {:?} != producer out_shape {:?}",
-                        node.layer.name, node.layer.in_shape, shape
+                        "node {id} ({}) input {slot} shape {:?} != producer out_shape {:?}",
+                        node.layer.name, want_shape, shape
                     ));
                 }
                 if bits != node.layer.a_bits {
@@ -200,8 +224,16 @@ impl Network {
                     ));
                 }
             }
+            if matches!(node.layer.kind, LayerKind::Concat)
+                && node.layer.quant.out_bits != node.layer.a_bits
+            {
+                return Err(format!(
+                    "node {id} ({}) concat must not requantize (out_bits {} != a_bits {})",
+                    node.layer.name, node.layer.quant.out_bits, node.layer.a_bits
+                ));
+            }
             let want_inputs = match node.layer.kind {
-                LayerKind::Add { .. } => 2,
+                LayerKind::Add { .. } | LayerKind::Concat => 2,
                 _ => 1,
             };
             if node.inputs.len() != want_inputs {

@@ -10,11 +10,14 @@
 //! Flex-V Slicer&Router consumes in hardware.
 
 pub mod golden;
+pub mod graph;
 pub mod layer;
 pub mod packing;
+pub mod qir;
 pub mod quant;
 pub mod tensor;
 
+pub use graph::{Graph, OpKind, OpNode, TensorDef};
 pub use layer::{Layer, LayerKind, Network};
 pub use packing::{pack_signed, pack_unsigned, unpack_signed, unpack_unsigned};
 pub use quant::QuantParams;

@@ -1,0 +1,530 @@
+//! QIR: a line-oriented, NNEF-like text format for quantized networks.
+//!
+//! One line per edge (`tensor`) or node (`op`), `#` comments, explicit
+//! per-op precision in the paper's `a8w4` notation, and *seeded* synthetic
+//! weights — a `.qir` file carries no weight payload, only the seed of the
+//! deterministic stream the importer replays (see `docs/QIR_FORMAT.md` for
+//! the full grammar, determinism contract and versioning rules).
+//!
+//! [`print`] is canonical: for any valid [`Graph`] it emits a unique byte
+//! sequence, and `parse ∘ print` is the identity, so committed `.qir` files
+//! can be byte-diffed against re-exports in CI.
+//!
+//! Importing a three-layer network from a string literal:
+//!
+//! ```
+//! use flexv::qnn::qir;
+//!
+//! let text = "\
+//! qir 1
+//! net tiny
+//! seed 7
+//! input input
+//! tensor input 8x8x8 a8
+//! tensor c1 8x8x16 a8 q1:10:0
+//! op conv c1 input -> c1 k3 s1 p1 a8w8
+//! tensor gap 1x1x16 a8 q1024:16:0
+//! op avgpool gap c1 -> gap k8 s8
+//! tensor fc 1x1x8 a8 q1:7:0
+//! op linear fc gap -> fc a8w4
+//! ";
+//! let graph = qir::parse(text).unwrap();
+//! let net = graph.lower().unwrap();
+//! assert_eq!(net.nodes.len(), 3);
+//! assert_eq!(net.total_macs(), 8 * 8 * 16 * 3 * 3 * 8 + 16 * 8);
+//! // print is canonical and parse inverts it exactly
+//! assert_eq!(qir::parse(&qir::print(&graph)).unwrap(), graph);
+//! ```
+
+use super::graph::{Graph, OpKind, OpNode, TensorDef};
+use super::QuantParams;
+
+/// The only format version this importer accepts (see the versioning rules
+/// in `docs/QIR_FORMAT.md`: the major is bumped on any grammar change).
+pub const QIR_VERSION: u32 = 1;
+
+/// A parse failure with the 1-based source line (0 for whole-file errors).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QirError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for QirError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line == 0 {
+            write!(f, "qir: {}", self.msg)
+        } else {
+            write!(f, "qir line {}: {}", self.line, self.msg)
+        }
+    }
+}
+
+impl std::error::Error for QirError {}
+
+/// Render a graph in canonical QIR text: header directives, then — in op
+/// definition order — each op's output `tensor` line followed by its `op`
+/// line. Panics if a quantizer is not scalar-broadcast (QIR v1 carries
+/// per-tensor scalar quant only).
+pub fn print(g: &Graph) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("# flexv QIR v{QIR_VERSION}: {}\n", g.name));
+    s.push_str(&format!("qir {QIR_VERSION}\n"));
+    s.push_str(&format!("net {}\n", g.name));
+    s.push_str(&format!("seed {}\n", g.seed));
+    s.push_str(&format!("input {}\n", g.tensors[g.input].name));
+    s.push_str(&tensor_line(&g.tensors[g.input]));
+    for op in &g.ops {
+        s.push_str(&tensor_line(&g.tensors[op.output]));
+        s.push_str(&op_line(g, op));
+    }
+    s
+}
+
+fn tensor_line(t: &TensorDef) -> String {
+    let mut s = format!(
+        "tensor {} {}x{}x{} a{}",
+        t.name, t.shape[0], t.shape[1], t.shape[2], t.bits
+    );
+    if let Some(q) = &t.quant {
+        let (m, b) = (q.mult[0], q.bias[0]);
+        assert!(
+            q.mult.iter().all(|&x| x == m) && q.bias.iter().all(|&x| x == b),
+            "QIR v1 prints scalar-broadcast quant only (tensor {})",
+            t.name
+        );
+        s.push_str(&format!(" q{m}:{}:{b}", q.shift));
+    }
+    s.push('\n');
+    s
+}
+
+fn op_line(g: &Graph, op: &OpNode) -> String {
+    let ins: Vec<&str> = op.inputs.iter().map(|&t| g.tensors[t].name.as_str()).collect();
+    let mut s = format!(
+        "op {} {} {} -> {}",
+        op.kind.token(),
+        op.name,
+        ins.join(" "),
+        g.tensors[op.output].name
+    );
+    let a = g.tensors[op.inputs[0]].bits;
+    match op.kind {
+        OpKind::Conv2d { kh, kw, stride, pad } | OpKind::DwConv2d { kh, kw, stride, pad } => {
+            if kh == kw {
+                s.push_str(&format!(" k{kh}"));
+            } else {
+                s.push_str(&format!(" k{kh}x{kw}"));
+            }
+            s.push_str(&format!(" s{stride} p{pad} a{a}w{}", op.w_bits));
+        }
+        OpKind::Linear => s.push_str(&format!(" a{a}w{}", op.w_bits)),
+        OpKind::MaxPool { k, stride } | OpKind::AvgPool { k, stride } => {
+            s.push_str(&format!(" k{k} s{stride}"));
+        }
+        OpKind::Add { m1, m2 } => s.push_str(&format!(" m{m1}:{m2}")),
+        OpKind::Concat => {}
+    }
+    if let Some(seed) = op.seed {
+        s.push_str(&format!(" seed={seed}"));
+    }
+    s.push('\n');
+    s
+}
+
+/// Parse QIR text into a validated [`Graph`].
+pub fn parse(text: &str) -> Result<Graph, QirError> {
+    let mut version_seen = false;
+    let mut name: Option<String> = None;
+    let mut seed: Option<u64> = None;
+    let mut input_name: Option<String> = None;
+    let mut tensors: Vec<TensorDef> = vec![];
+    let mut ops: Vec<OpNode> = vec![];
+
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ln = i + 1;
+        let err = |msg: String| QirError { line: ln, msg };
+        let mut toks = line.split_whitespace();
+        let head = toks.next().unwrap();
+        if !version_seen && head != "qir" {
+            return Err(err(format!("first directive must be `qir {QIR_VERSION}`")));
+        }
+        match head {
+            "qir" => {
+                let v = toks.next().ok_or_else(|| err("missing version".into()))?;
+                if v.parse::<u32>() != Ok(QIR_VERSION) {
+                    return Err(err(format!(
+                        "unsupported QIR version {v} (this importer reads v{QIR_VERSION})"
+                    )));
+                }
+                version_seen = true;
+            }
+            "net" => {
+                let n = line["net".len()..].trim();
+                if n.is_empty() {
+                    return Err(err("empty net name".into()));
+                }
+                name = Some(n.to_string());
+            }
+            "seed" => {
+                let t = toks.next().ok_or_else(|| err("missing seed value".into()))?;
+                seed = Some(
+                    t.parse::<u64>().map_err(|_| err(format!("bad seed {t:?}")))?,
+                );
+            }
+            "input" => {
+                let t = toks.next().ok_or_else(|| err("missing input tensor name".into()))?;
+                input_name = Some(t.to_string());
+            }
+            "tensor" => {
+                let t = parse_tensor(&mut toks, &err)?;
+                if tensors.iter().any(|o| o.name == t.name) {
+                    return Err(err(format!("duplicate tensor {:?}", t.name)));
+                }
+                tensors.push(t);
+            }
+            "op" => {
+                let op = parse_op(&mut toks, &tensors, &err)?;
+                if ops.iter().any(|o| o.name == op.name) {
+                    return Err(err(format!("duplicate op {:?}", op.name)));
+                }
+                ops.push(op);
+            }
+            other => return Err(err(format!("unknown directive {other:?}"))),
+        }
+    }
+
+    let whole = |msg: String| QirError { line: 0, msg };
+    if !version_seen {
+        return Err(whole("missing `qir` version directive".into()));
+    }
+    let name = name.ok_or_else(|| whole("missing `net` directive".into()))?;
+    let seed = seed.ok_or_else(|| whole("missing `seed` directive".into()))?;
+    let input_name = input_name.ok_or_else(|| whole("missing `input` directive".into()))?;
+    let input = tensors
+        .iter()
+        .position(|t| t.name == input_name)
+        .ok_or_else(|| whole(format!("input tensor {input_name:?} not defined")))?;
+    if tensors[input].quant.is_some() {
+        return Err(whole(format!(
+            "input tensor {input_name:?} must not carry quant params"
+        )));
+    }
+    let g = Graph { name, seed, input, tensors, ops };
+    g.validate().map_err(whole)?;
+    Ok(g)
+}
+
+fn parse_tensor<'a, I: Iterator<Item = &'a str>>(
+    toks: &mut I,
+    err: &dyn Fn(String) -> QirError,
+) -> Result<TensorDef, QirError> {
+    let name = toks.next().ok_or_else(|| err("missing tensor name".into()))?;
+    let shape_tok = toks.next().ok_or_else(|| err("missing tensor shape".into()))?;
+    let dims: Vec<usize> = shape_tok
+        .split('x')
+        .map(|d| d.parse::<usize>().map_err(|_| err(format!("bad shape {shape_tok:?}"))))
+        .collect::<Result<_, _>>()?;
+    if dims.len() != 3 {
+        return Err(err(format!("shape {shape_tok:?} must be HxWxC")));
+    }
+    let bits_tok = toks.next().ok_or_else(|| err("missing tensor bits (aN)".into()))?;
+    let bits = bits_tok
+        .strip_prefix('a')
+        .and_then(|b| b.parse::<u8>().ok())
+        .ok_or_else(|| err(format!("bad bits token {bits_tok:?} (want e.g. a8)")))?;
+    let quant = match toks.next() {
+        None => None,
+        Some(q_tok) => {
+            let body = q_tok
+                .strip_prefix('q')
+                .ok_or_else(|| err(format!("bad quant token {q_tok:?} (want qM:S:B)")))?;
+            let parts: Vec<&str> = body.split(':').collect();
+            if parts.len() != 3 {
+                return Err(err(format!("bad quant token {q_tok:?} (want qM:S:B)")));
+            }
+            let mult = parts[0]
+                .parse::<i32>()
+                .map_err(|_| err(format!("bad quant mult {:?}", parts[0])))?;
+            let shift = parts[1]
+                .parse::<u8>()
+                .map_err(|_| err(format!("bad quant shift {:?}", parts[1])))?;
+            let bias = parts[2]
+                .parse::<i32>()
+                .map_err(|_| err(format!("bad quant bias {:?}", parts[2])))?;
+            Some(QuantParams::scalar(mult, shift, bias, bits, dims[2]))
+        }
+    };
+    if let Some(extra) = toks.next() {
+        return Err(err(format!("trailing token {extra:?} on tensor line")));
+    }
+    Ok(TensorDef { name: name.to_string(), shape: [dims[0], dims[1], dims[2]], bits, quant })
+}
+
+fn parse_op<'a, I: Iterator<Item = &'a str>>(
+    toks: &mut I,
+    tensors: &[TensorDef],
+    err: &dyn Fn(String) -> QirError,
+) -> Result<OpNode, QirError> {
+    let kind_tok = toks.next().ok_or_else(|| err("missing op kind".into()))?;
+    let name = toks.next().ok_or_else(|| err("missing op name".into()))?;
+    let mut ins: Vec<usize> = vec![];
+    loop {
+        let t = toks
+            .next()
+            .ok_or_else(|| err(format!("op {name}: missing `->` output")))?;
+        if t == "->" {
+            break;
+        }
+        let id = tensors
+            .iter()
+            .position(|d| d.name == t)
+            .ok_or_else(|| err(format!("op {name}: unknown input tensor {t:?}")))?;
+        ins.push(id);
+    }
+    let out_tok = toks.next().ok_or_else(|| err(format!("op {name}: missing output")))?;
+    let output = tensors
+        .iter()
+        .position(|d| d.name == out_tok)
+        .ok_or_else(|| err(format!("op {name}: unknown output tensor {out_tok:?}")))?;
+
+    // Attribute tokens.
+    let (mut kk, mut stride, mut pad, mut prec, mut m, mut op_seed) =
+        (None, None, None, None, None, None);
+    for t in toks {
+        if let Some(v) = t.strip_prefix("seed=") {
+            op_seed =
+                Some(v.parse::<u64>().map_err(|_| err(format!("op {name}: bad seed {v:?}")))?);
+        } else if let Some(v) = t.strip_prefix('k') {
+            let parts: Vec<&str> = v.split('x').collect();
+            let parse_dim = |s: &str| {
+                s.parse::<usize>().map_err(|_| err(format!("op {name}: bad kernel {t:?}")))
+            };
+            kk = Some(match parts.as_slice() {
+                [k] => (parse_dim(k)?, parse_dim(k)?),
+                [kh, kw] => (parse_dim(kh)?, parse_dim(kw)?),
+                _ => return Err(err(format!("op {name}: bad kernel {t:?}"))),
+            });
+        } else if let Some(v) = t.strip_prefix('s') {
+            stride =
+                Some(v.parse::<usize>().map_err(|_| err(format!("op {name}: bad stride {t:?}")))?);
+        } else if let Some(v) = t.strip_prefix('p') {
+            pad = Some(v.parse::<usize>().map_err(|_| err(format!("op {name}: bad pad {t:?}")))?);
+        } else if let Some(v) = t.strip_prefix('a') {
+            let (a_s, w_s) = v
+                .split_once('w')
+                .ok_or_else(|| err(format!("op {name}: bad precision {t:?} (want aNwM)")))?;
+            let a = a_s
+                .parse::<u8>()
+                .map_err(|_| err(format!("op {name}: bad precision {t:?}")))?;
+            let w = w_s
+                .parse::<u8>()
+                .map_err(|_| err(format!("op {name}: bad precision {t:?}")))?;
+            prec = Some((a, w));
+        } else if let Some(v) = t.strip_prefix('m') {
+            let (m1_s, m2_s) = v
+                .split_once(':')
+                .ok_or_else(|| err(format!("op {name}: bad scales {t:?} (want mM1:M2)")))?;
+            let m1 = m1_s
+                .parse::<i32>()
+                .map_err(|_| err(format!("op {name}: bad scales {t:?}")))?;
+            let m2 = m2_s
+                .parse::<i32>()
+                .map_err(|_| err(format!("op {name}: bad scales {t:?}")))?;
+            m = Some((m1, m2));
+        } else {
+            return Err(err(format!("op {name}: unknown attribute {t:?}")));
+        }
+    }
+
+    let need = |opt: Option<(usize, usize)>, what: &str| {
+        opt.ok_or_else(|| err(format!("op {name}: missing {what}")))
+    };
+    let need_s = |opt: Option<usize>, what: &str| {
+        opt.ok_or_else(|| err(format!("op {name}: missing {what}")))
+    };
+    let kind = match kind_tok {
+        "conv" | "dwconv" => {
+            let (kh, kw) = need(kk, "kernel (kN)")?;
+            let stride = need_s(stride, "stride (sN)")?;
+            let pad = need_s(pad, "pad (pN)")?;
+            if kind_tok == "conv" {
+                OpKind::Conv2d { kh, kw, stride, pad }
+            } else {
+                OpKind::DwConv2d { kh, kw, stride, pad }
+            }
+        }
+        "linear" => OpKind::Linear,
+        "maxpool" | "avgpool" => {
+            let (kh, kw) = need(kk, "kernel (kN)")?;
+            if kh != kw {
+                return Err(err(format!("op {name}: pooling window must be square")));
+            }
+            let stride = need_s(stride, "stride (sN)")?;
+            if kind_tok == "maxpool" {
+                OpKind::MaxPool { k: kh, stride }
+            } else {
+                OpKind::AvgPool { k: kh, stride }
+            }
+        }
+        "add" => {
+            let (m1, m2) = m.ok_or_else(|| err(format!("op {name}: missing scales (mM1:M2)")))?;
+            OpKind::Add { m1, m2 }
+        }
+        "concat" => OpKind::Concat,
+        other => return Err(err(format!("unknown op kind {other:?}"))),
+    };
+    if ins.is_empty() {
+        return Err(err(format!("op {name}: no inputs")));
+    }
+    let w_bits = if kind.weighted() {
+        let (a, w) = prec.ok_or_else(|| err(format!("op {name}: missing precision (aNwM)")))?;
+        let in_bits = tensors[ins[0]].bits;
+        if a != in_bits {
+            return Err(err(format!(
+                "op {name}: precision a{a} contradicts input tensor bits a{in_bits}"
+            )));
+        }
+        w
+    } else {
+        if prec.is_some() {
+            return Err(err(format!("op {name}: precision on a weight-less op")));
+        }
+        8
+    };
+    Ok(OpNode { name: name.to_string(), kind, inputs: ins, output, w_bits, seed: op_seed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::graph::Graph;
+
+    fn tiny_text() -> &'static str {
+        "\
+qir 1
+net tiny
+seed 7
+input input
+tensor input 8x8x8 a8
+tensor c1 8x8x16 a8 q1:10:0
+op conv c1 input -> c1 k3 s1 p1 a8w8
+tensor gap 1x1x16 a8 q1024:16:0
+op avgpool gap c1 -> gap k8 s8
+tensor fc 1x1x8 a8 q1:7:0
+op linear fc gap -> fc a8w4
+"
+    }
+
+    #[test]
+    fn parse_print_parse_is_fixed_point() {
+        let g = parse(tiny_text()).expect("tiny parses");
+        let once = print(&g);
+        let twice = print(&parse(&once).expect("canonical text parses"));
+        assert_eq!(once, twice, "print must be byte-stable");
+        assert_eq!(parse(&once).unwrap(), g);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_are_ignored() {
+        let noisy = format!("# leading comment\n\n{}\n# trailing\n", tiny_text());
+        assert_eq!(parse(&noisy).unwrap(), parse(tiny_text()).unwrap());
+        let inline = tiny_text().replace("seed 7", "seed 7   # the weight stream");
+        assert_eq!(parse(&inline).unwrap(), parse(tiny_text()).unwrap());
+    }
+
+    #[test]
+    fn version_gate() {
+        let e = parse(&tiny_text().replace("qir 1", "qir 2")).unwrap_err();
+        assert!(e.msg.contains("unsupported QIR version"), "{e}");
+        let e = parse("net x\nqir 1\n").unwrap_err();
+        assert!(e.msg.contains("first directive"), "{e}");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let bad = tiny_text().replace("op conv c1 input -> c1 k3 s1 p1 a8w8",
+                                      "op conv c1 input -> c1 k3 s1 p1 a4w8");
+        let e = parse(&bad).unwrap_err();
+        assert_eq!(e.line, 7);
+        assert!(e.msg.contains("contradicts input tensor bits"), "{e}");
+    }
+
+    #[test]
+    fn rejects_unknown_tokens() {
+        for (from, to) in [
+            ("op avgpool gap", "op meanpool gap"),
+            ("k8 s8", "k8 s8 z9"),
+            ("tensor gap", "edge gap"),
+        ] {
+            let bad = tiny_text().replace(from, to);
+            assert!(parse(&bad).is_err(), "{from} -> {to} should fail");
+        }
+    }
+
+    #[test]
+    fn missing_header_directives_fail() {
+        for cut in ["net tiny\n", "seed 7\n", "input input\n"] {
+            let bad = tiny_text().replace(cut, "");
+            let e = parse(&bad).unwrap_err();
+            assert_eq!(e.line, 0, "{e}");
+        }
+    }
+
+    #[test]
+    fn seed_override_roundtrips() {
+        let with = tiny_text().replace("-> fc a8w4", "-> fc a8w4 seed=247");
+        let g = parse(&with).expect("seed override parses");
+        assert_eq!(g.ops[2].seed, Some(247));
+        assert_eq!(parse(&print(&g)).unwrap(), g);
+    }
+
+    #[test]
+    fn rectangular_kernels_roundtrip() {
+        let rect = tiny_text().replace("c1 k3 s1 p1", "c1 k3x1 s1 p0");
+        // 3x1 kernel, pad 0: out H = 8-3+1 = 6 -> fix the tensor line too.
+        let rect = rect.replace("tensor c1 8x8x16", "tensor c1 6x8x16");
+        // downstream gap no longer fits; drop those lines for this test
+        let rect: String = rect
+            .lines()
+            .filter(|l| !l.contains("gap") && !l.contains("fc"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let g = parse(&rect).expect("rectangular kernel parses");
+        let printed = print(&g);
+        assert!(printed.contains("k3x1"), "{printed}");
+        assert_eq!(parse(&printed).unwrap(), g);
+    }
+
+    #[test]
+    fn lowered_tiny_matches_hand_built_graph() {
+        let g = parse(tiny_text()).unwrap();
+        let mut h = Graph::new("tiny", [8, 8, 8], 8, 7);
+        let c1 = h.op(
+            "c1",
+            OpKind::Conv2d { kh: 3, kw: 3, stride: 1, pad: 1 },
+            &[h.input],
+            8,
+            [8, 8, 16],
+            QuantParams::scalar(1, 10, 0, 8, 16),
+            None,
+        );
+        let gap = h.op(
+            "gap",
+            OpKind::AvgPool { k: 8, stride: 8 },
+            &[c1],
+            8,
+            [1, 1, 16],
+            QuantParams::scalar(1024, 16, 0, 8, 16),
+            None,
+        );
+        h.op("fc", OpKind::Linear, &[gap], 4, [1, 1, 8], QuantParams::scalar(1, 7, 0, 8, 8), None);
+        assert_eq!(g, h);
+        let (a, b) = (g.lower().unwrap(), h.lower().unwrap());
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+}

@@ -12,7 +12,9 @@
 //!   (analog), with the paper's Flex-V Table III anchors attached;
 //! - **e2e** — Table IV end-to-end networks on RI5CY/XpulpNN/Flex-V:
 //!   per-inference cycles, MACs, MAC/cycle (exact, paper anchors
-//!   attached) plus model footprints;
+//!   attached) plus model footprints, and one Flex-V row per extension
+//!   zoo model (`crate::models::ZOO_NAMES` beyond Table IV — no paper
+//!   anchors);
 //! - **autotune** — the simulator-in-the-loop tuner over the model zoo:
 //!   measured default vs tuned cycle totals and improved-layer counts
 //!   (all exact — tuning is deterministic);
@@ -334,6 +336,20 @@ pub fn e2e_suite(opts: &BenchOptions) -> BenchArtifact {
                     .map(|i| vals[i])
             });
         art.push_source(&E2eCellSource { cell, paper_macs });
+    }
+    // Extension zoo (the committed .qir models beyond Table IV):
+    // footprint plus one Flex-V cell each — there are no paper anchors
+    // for these, so `paper_macs` stays empty and regress treats the
+    // rows as repo-only metrics.
+    for &model in crate::models::ZOO_NAMES.iter() {
+        if crate::models::MODEL_NAMES.contains(&model) {
+            continue;
+        }
+        let net = crate::models::by_name(model, hw).expect("zoo model");
+        art.push_source(&ModelFootprintSource { model, bytes: net.model_bytes() });
+        let (cycles, macs, energy_pj) = super::workloads::e2e_stats(IsaVariant::FlexV, &net);
+        let cell = E2eCell { model, isa: IsaVariant::FlexV, cycles, macs, energy_pj };
+        art.push_source(&E2eCellSource { cell, paper_macs: None });
     }
     art
 }

@@ -1,0 +1,98 @@
+//! Zoo equivalence: the graph-IR twins of the paper networks lower to
+//! bit-identical networks, deployment plans and serving fingerprints as
+//! the hand-coded builders; the committed `.qir` files reproduce the
+//! builders at the canonical input sizes; and every extension model runs
+//! end-to-end bit-exact against the golden executor.
+
+use flexv::coordinator::Coordinator;
+use flexv::dory::deploy::deploy;
+use flexv::dory::{MemBudget, PlanKey};
+use flexv::isa::IsaVariant;
+use flexv::models;
+use flexv::qnn::{golden, qir, QTensor};
+use flexv::util::Prng;
+
+#[test]
+fn paper_twins_lower_bit_identically() {
+    let budget = MemBudget::default();
+    for name in models::MODEL_NAMES {
+        let hand = models::by_name(name, 96).expect("paper model");
+        let twin =
+            models::graph_by_name(name, 96).expect("paper graph").lower().expect("twin lowers");
+        assert_eq!(format!("{twin:?}"), format!("{hand:?}"), "{name}: networks differ");
+        let key_h = PlanKey::for_network(&hand, IsaVariant::FlexV, budget, flexv::CLUSTER_CORES);
+        let key_t = PlanKey::for_network(&twin, IsaVariant::FlexV, budget, flexv::CLUSTER_CORES);
+        assert_eq!(key_h, key_t, "{name}: plan fingerprints differ");
+        let dep_h = deploy(&hand, IsaVariant::FlexV, budget);
+        let dep_t = deploy(&twin, IsaVariant::FlexV, budget);
+        assert_eq!(format!("{dep_t:?}"), format!("{dep_h:?}"), "{name}: deployment plans differ");
+    }
+}
+
+#[test]
+fn committed_paper_files_match_builders_at_canonical_inputs() {
+    // parse(models/<name>.qir) -> lower() == the hand-coded builder at
+    // the canonical input size (224x224 MobileNet, 32x32 ResNet): the
+    // text files are a complete, equivalent description of the paper
+    // networks, weights included (same seeded stream).
+    for name in models::MODEL_NAMES {
+        let text = models::committed_qir(name).expect("paper model has a committed .qir");
+        let from_file = qir::parse(text).expect("committed file parses").lower().expect("lowers");
+        let hand = models::by_name(name, 224).unwrap();
+        assert_eq!(
+            format!("{from_file:?}"),
+            format!("{hand:?}"),
+            "{name}: models/{name}.qir does not reproduce the hand-coded network"
+        );
+    }
+}
+
+#[test]
+fn serve_fingerprints_match_for_twin_networks() {
+    use flexv::serve::{Engine, ServeConfig};
+    let mk = |nets: Vec<flexv::qnn::Network>| {
+        let mut eng = Engine::new(ServeConfig::default());
+        for n in nets {
+            eng.register(n);
+        }
+        eng
+    };
+    let hand =
+        mk(models::MODEL_NAMES.into_iter().map(|n| models::by_name(n, 96).unwrap()).collect());
+    let twins = mk(models::MODEL_NAMES
+        .into_iter()
+        .map(|n| models::graph_by_name(n, 96).unwrap().lower().unwrap())
+        .collect());
+    for m in 0..hand.model_count() {
+        let (_, key_h) = hand.model_entry(m);
+        let (_, key_t) = twins.model_entry(m);
+        assert_eq!(key_h, key_t, "model {m}: serving fingerprint (PlanKey) differs");
+    }
+}
+
+#[test]
+fn extension_models_run_bit_exact_against_golden() {
+    let ext: Vec<&str> = models::ZOO_NAMES
+        .iter()
+        .copied()
+        .filter(|n| !models::MODEL_NAMES.contains(n))
+        .collect();
+    assert_eq!(ext.len(), 3, "three extension models beyond the paper's zoo");
+    for name in ext {
+        let net = models::by_name(name, 96).expect("extension model loads");
+        let mut rng = Prng::new(0xD1FF ^ net.nodes.len() as u64);
+        let input = QTensor::random(&net.input_shape.to_vec(), net.input_bits, false, &mut rng);
+        let golden_outs = golden::run_network(&net, &input);
+        let dep = deploy(&net, IsaVariant::FlexV, MemBudget::default());
+        let mut coord = Coordinator::new(flexv::CLUSTER_CORES);
+        let res = coord.run(&dep, &input);
+        for (i, gold) in golden_outs.iter().enumerate() {
+            assert_eq!(
+                res.node_outputs[i],
+                gold.data,
+                "{name}: node {i} ({}) mismatch",
+                net.nodes[i].layer.name
+            );
+        }
+    }
+}

@@ -1,0 +1,226 @@
+#!/usr/bin/env python3
+"""Regenerate the committed model zoo under models/*.qir.
+
+Mirrors the Rust graph builders (`rust/src/models/mod.rs`) and the
+canonical QIR printer (`rust/src/qnn/qir.rs::print`) byte-for-byte: the
+`qir-zoo` CI job diffs `flexv qir export <model>` against the committed
+files, so this script and the Rust side must stay in lockstep. The paper
+networks are emitted at their canonical inputs (MobileNetV1 at 224x224,
+ResNet-20 at 32x32); the extension models have fixed inputs.
+
+Usage: python3 tools/gen_qir.py   (from the repo root)
+"""
+
+import os
+
+QIR_VERSION = 1
+
+
+def next_pow2_log2(k):
+    """k.max(1).next_power_of_two().trailing_zeros() from the Rust side."""
+    k = max(k, 1)
+    return (k - 1).bit_length() if k > 1 else 0
+
+
+def quant_for(k, a_bits, w_bits, out_bits):
+    """models::quant_for -> (mult, shift, bias) scalar."""
+    acc_bits = (a_bits + w_bits - 1) + next_pow2_log2(k)
+    shift = min(max(acc_bits - out_bits - 1, 0), 31)
+    return (1, shift, 0)
+
+
+def avgpool_quant(window):
+    return ((1 << 16) // window, 16, 0)
+
+
+class Graph:
+    def __init__(self, name, input_shape, input_bits, seed):
+        self.name = name
+        self.seed = seed
+        self.lines = []  # (tensor_line, op_line) pairs, in definition order
+        self.input_line = "tensor input {}x{}x{} a{}".format(*input_shape, input_bits)
+        self.shapes = {"input": tuple(input_shape)}
+        self.bits = {"input": input_bits}
+
+    def op(self, kind, name, inputs, out_shape, out_bits, quant, attrs, seed=None):
+        m, s, b = quant
+        t = "tensor {} {}x{}x{} a{} q{}:{}:{}".format(name, *out_shape, out_bits, m, s, b)
+        o = "op {} {} {} -> {}".format(kind, name, " ".join(inputs), name)
+        if attrs:
+            o += " " + attrs
+        if seed is not None:
+            o += f" seed={seed}"
+        self.lines.append((t, o))
+        self.shapes[name] = tuple(out_shape)
+        self.bits[name] = out_bits
+        return name
+
+    def conv(self, name, src, cout, k, stride, w_bits, out_bits, seed=None):
+        h, w, cin = self.shapes[src]
+        pad = k // 2
+        oh = (h + 2 * pad - k) // stride + 1
+        ow = (w + 2 * pad - k) // stride + 1
+        a = self.bits[src]
+        attrs = f"k{k} s{stride} p{pad} a{a}w{w_bits}"
+        return self.op("conv", name, [src], (oh, ow, cout), out_bits,
+                       quant_for(k * k * cin, a, w_bits, out_bits), attrs, seed)
+
+    def dwconv(self, name, src, stride, w_bits):
+        h, w, c = self.shapes[src]
+        oh = (h + 2 - 3) // stride + 1
+        ow = (w + 2 - 3) // stride + 1
+        a = self.bits[src]
+        attrs = f"k3 s{stride} p1 a{a}w{w_bits}"
+        return self.op("dwconv", name, [src], (oh, ow, c), a,
+                       quant_for(9, a, w_bits, a), attrs)
+
+    def linear(self, name, src, cout, w_bits, seed=None):
+        h, w, c = self.shapes[src]
+        a = self.bits[src]
+        return self.op("linear", name, [src], (1, 1, cout), 8,
+                       quant_for(h * w * c, a, w_bits, 8), f"a{a}w{w_bits}", seed)
+
+    def pool(self, kind, name, src, k, stride, quant, out_bits=None):
+        h, w, c = self.shapes[src]
+        oh = (h - k) // stride + 1
+        ow = (w - k) // stride + 1
+        bits = out_bits if out_bits is not None else self.bits[src]
+        return self.op(kind, name, [src], (oh, ow, c), bits, quant, f"k{k} s{stride}")
+
+    def add(self, name, a, b, m1=1, m2=1):
+        shape = self.shapes[a]
+        bits = self.bits[a]
+        return self.op("add", name, [a, b], shape, bits, (1, 1, 0), f"m{m1}:{m2}")
+
+    def concat(self, name, a, b):
+        h, w, c1 = self.shapes[a]
+        c2 = self.shapes[b][2]
+        return self.op("concat", name, [a, b], (h, w, c1 + c2), self.bits[a],
+                       (1, 0, 0), "")
+
+    def render(self):
+        out = [f"# flexv QIR v{QIR_VERSION}: {self.name}",
+               f"qir {QIR_VERSION}",
+               f"net {self.name}",
+               f"seed {self.seed}",
+               "input input",
+               self.input_line]
+        for t, o in self.lines:
+            out.append(t)
+            out.append(o)
+        return "\n".join(out) + "\n"
+
+
+MNV1_BLOCKS = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+               (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2),
+               (1024, 1)]
+
+
+def mobilenet_v1(profile, alpha=0.75, input_hw=224, seed=11):
+    w4 = profile == "8b4b"
+    wb = 4 if w4 else 8
+    ch = lambda c: max(round(c * alpha / 8.0) * 8, 8)
+    g = Graph(f"MobileNetV1-{profile}(a{alpha})", (input_hw, input_hw, 4), 8, seed)
+    t = g.conv("conv1", "input", ch(32), 3, 2, 8, 8)
+    for i, (cout, stride) in enumerate(MNV1_BLOCKS):
+        t = g.dwconv(f"dw{i + 1}", t, stride, wb)
+        t = g.conv(f"pw{i + 1}", t, ch(cout), 1, 1, wb, 8)
+    h = g.shapes[t][0]
+    t = g.pool("avgpool", "avgpool", t, h, h, avgpool_quant(h * h), out_bits=8)
+    g.linear("fc", t, 1000, wb, seed=seed ^ 0xFC)
+    return g
+
+
+def resnet20(profile="4b2b", seed=12):
+    a_bits, w_early, w_late = (4, 2, 4) if profile == "4b2b" else (8, 8, 8)
+    g = Graph(f"ResNet20-{profile}", (32, 32, 4), 8, seed)
+    t = g.conv("conv1", "input", 16, 3, 1, 8, a_bits)
+    for s, c in enumerate([16, 32, 64]):
+        for b in range(3):
+            wb = w_late if (s == 2 and b > 0) else w_early
+            stride = 2 if (s > 0 and b == 0) else 1
+            entry = t
+            id1 = g.conv(f"s{s}b{b}c1", entry, c, 3, stride, wb, a_bits)
+            id2 = g.conv(f"s{s}b{b}c2", id1, c, 3, 1, wb, a_bits)
+            if stride != 1 or g.shapes[entry][2] != c:
+                short = g.conv(f"s{s}b{b}proj", entry, c, 1, stride, wb, a_bits)
+            else:
+                short = entry
+            t = g.add(f"s{s}b{b}add", id2, short)
+    h = g.shapes[t][0]
+    t = g.pool("avgpool", "avgpool", t, h, h, avgpool_quant(h * h), out_bits=8)
+    g.linear("fc", t, 12, 8)
+    return g
+
+
+def dscnn():
+    """DS-CNN keyword spotting: 48x12 MFCC map, 4 ds-blocks at 64ch, a8w4."""
+    g = Graph("DSCNN-8b4b", (48, 12, 4), 8, 21)
+    t = g.conv("conv1", "input", 64, 3, 2, 8, 8)
+    for i in range(1, 5):
+        t = g.dwconv(f"dw{i}", t, 1, 4)
+        t = g.conv(f"pw{i}", t, 64, 1, 1, 4, 8)
+    t = g.pool("avgpool", "avgpool", t, 6, 6, avgpool_quant(36), out_bits=8)
+    g.linear("fc", t, 12, 4)
+    return g
+
+
+def resdw():
+    """Residual depthwise-separable stack: two ds-residual blocks per
+    width, a maxpool + pointwise transition between them, a8w4 body."""
+    g = Graph("ResDW-8b4b", (32, 32, 8), 8, 22)
+    t = g.conv("conv1", "input", 32, 3, 1, 8, 8)
+    for i in (1, 2):
+        d = g.dwconv(f"b{i}dw", t, 1, 4)
+        p = g.conv(f"b{i}pw", d, 32, 1, 1, 4, 8)
+        t = g.add(f"b{i}add", p, t)
+    t = g.pool("maxpool", "pool", t, 2, 2, (1, 0, 0))
+    t = g.conv("trans", t, 64, 1, 1, 4, 8)
+    for i in (3, 4):
+        d = g.dwconv(f"b{i}dw", t, 1, 4)
+        p = g.conv(f"b{i}pw", d, 64, 1, 1, 4, 8)
+        t = g.add(f"b{i}add", p, t)
+    t = g.pool("avgpool", "avgpool", t, 16, 16, avgpool_quant(256), out_bits=8)
+    g.linear("fc", t, 16, 8)
+    return g
+
+
+def mixer():
+    """Tiny attention-ish mixer block: a depthwise spatial branch and a
+    pointwise channel branch concatenated, residual add to the input,
+    then a 2-layer pointwise MLP with a second residual."""
+    g = Graph("Mixer-8b4b", (8, 8, 32), 8, 23)
+    da = g.dwconv("dwa", "input", 1, 4)
+    pa = g.conv("pwa", da, 16, 1, 1, 4, 8)
+    pb = g.conv("pwb", "input", 16, 1, 1, 8, 8)
+    cat = g.concat("cat", pa, pb)
+    res = g.add("res", cat, "input")
+    m1 = g.conv("mlp1", res, 64, 1, 1, 4, 8)
+    m2 = g.conv("mlp2", m1, 32, 1, 1, 4, 8)
+    res2 = g.add("res2", res, m2)
+    t = g.pool("avgpool", "avgpool", res2, 8, 8, avgpool_quant(64), out_bits=8)
+    g.linear("fc", t, 8, 4)
+    return g
+
+
+def main():
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    out_dir = os.path.join(root, "models")
+    os.makedirs(out_dir, exist_ok=True)
+    zoo = {
+        "mnv1-8b.qir": mobilenet_v1("8b"),
+        "mnv1-8b4b.qir": mobilenet_v1("8b4b"),
+        "resnet20-4b2b.qir": resnet20(),
+        "dscnn-8b4b.qir": dscnn(),
+        "resdw-8b4b.qir": resdw(),
+        "mixer-8b4b.qir": mixer(),
+    }
+    for fname, g in zoo.items():
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(g.render())
+        print(f"wrote {path} ({len(g.lines)} ops)")
+
+
+if __name__ == "__main__":
+    main()
